@@ -1,0 +1,27 @@
+//! Quickstart: run the MPC scheduler on a short bursty workload and print
+//! the end-to-end latency/resource summary next to the OpenWhisk baseline.
+//!
+//!     cargo run --release --example quickstart
+
+use mpc_serverless::config::{secs, ExperimentConfig, Policy, TraceKind};
+use mpc_serverless::experiments::run_experiment;
+use mpc_serverless::workload::synthetic::{generate, SyntheticConfig};
+
+fn main() {
+    let cfg = ExperimentConfig {
+        trace: TraceKind::SyntheticBursty,
+        duration: secs(1200.0),
+        seed: 7,
+        ..Default::default()
+    };
+    let trace = generate(&SyntheticConfig::default(), cfg.duration, cfg.seed);
+    println!("workload: {} requests over {:.0} s\n", trace.len(), 1200.0);
+    for policy in [Policy::OpenWhisk, Policy::Mpc] {
+        let r = run_experiment(&cfg, policy, &trace);
+        println!(
+            "{:<10} mean {:>8.0} ms | p90 {:>8.0} ms | p95 {:>8.0} ms | cold starts {:>3} | mean warm {:>5.1} | keep-alive {:>7.0} s",
+            r.policy, r.mean_ms, r.p90_ms, r.p95_ms, r.counters.cold_starts, r.mean_warm, r.keepalive_total_s
+        );
+    }
+    println!("\n(see examples/trace_replay.rs for the full HLO-backed pipeline)");
+}

@@ -1,0 +1,35 @@
+//! Ablation: predictive request shaping on/off (the paper's key insight,
+//! Sec. V-B) plus horizon and alpha sweeps.
+//!
+//!     cargo run --release --example shaping_ablation
+
+use mpc_serverless::experiments::ablations;
+use mpc_serverless::util::bench::Table;
+
+fn main() {
+    let (with, without) = ablations::shaping_ablation(1800.0, 17);
+    println!("== request shaping ablation (bursty workload, 30 min) ==");
+    let mut t = Table::new(&["variant", "mean ms", "p90 ms", "p95 ms", "cold requests"]);
+    for (name, r) in [("with shaping", &with), ("no shaping", &without)] {
+        t.row(&[name.to_string(), format!("{:.0}", r.mean_ms),
+                format!("{:.0}", r.p90_ms), format!("{:.0}", r.p95_ms),
+                format!("{}", r.cold_requests)]);
+    }
+    t.print();
+
+    println!("\n== horizon sweep ==");
+    let mut t = Table::new(&["H", "mean ms", "p95 ms", "mean warm"]);
+    for (h, r) in ablations::horizon_sweep(1200.0, 19, &[8, 16, 24]) {
+        t.row(&[h.to_string(), format!("{:.0}", r.mean_ms),
+                format!("{:.0}", r.p95_ms), format!("{:.1}", r.mean_warm)]);
+    }
+    t.print();
+
+    println!("\n== cold-delay weight (alpha) sweep ==");
+    let mut t = Table::new(&["alpha", "mean ms", "cold requests", "mean warm"]);
+    for (a, r) in ablations::alpha_sweep(1200.0, 23, &[1.0, 4.0, 8.0, 16.0]) {
+        t.row(&[a.to_string(), format!("{:.0}", r.mean_ms),
+                format!("{}", r.cold_requests), format!("{:.1}", r.mean_warm)]);
+    }
+    t.print();
+}

@@ -1,0 +1,110 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once per constants change (``make artifacts``); the Rust binary is
+self-contained afterwards. Usage:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import constants as C
+from .model import EXPORTS, example_inputs
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps uniformly with to_tuple1/tuple accessors)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the detector's baked weights (and any
+    # fitted tables) must survive the text round-trip — the default elides
+    # them to "constant({...})", which the Rust-side parser reads as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_all():
+    specs = example_inputs()
+    return {name: to_hlo_text(jax.jit(fn).lower(*specs[name]))
+            for name, fn in EXPORTS.items()}
+
+
+def meta() -> dict:
+    """Machine-readable artifact contract for the Rust runtime
+    (rust/src/runtime/artifacts.rs parses this)."""
+    return {
+        "version": 1,
+        "dt_s": C.DT_S,
+        "window": C.WINDOW,
+        "horizon": C.HORIZON,
+        "cold_steps": C.COLD_STEPS,
+        "harmonics": C.HARMONICS,
+        "recent": C.RECENT,
+        "pgd_iters": C.PGD_ITERS,
+        "l_warm_s": C.L_WARM_S,
+        "l_cold_s": C.L_COLD_S,
+        "w_max": C.W_MAX,
+        "img_size": C.IMG_SIZE,
+        "det_classes": C.DET_CLASSES,
+        "param_names": C.PARAM_NAMES,
+        "state_names": C.STATE_NAMES,
+        "default_params": C.default_params_vec(),
+        "modules": {
+            "forecast": {
+                "file": "forecast.hlo.txt",
+                "inputs": [["history", [C.WINDOW]], ["gamma_clip", []]],
+                "outputs": [["lambda_hat", [C.HORIZON]]],
+            },
+            "mpc": {
+                "file": "mpc.hlo.txt",
+                "inputs": [["z0", [3 * C.HORIZON]], ["lambda_hat", [C.HORIZON]],
+                           ["ready", [C.HORIZON]], ["state", [C.N_STATE]],
+                           ["params", [C.N_PARAMS]]],
+                "outputs": [["z", [3 * C.HORIZON]], ["cost", [1]]],
+            },
+            "detector": {
+                "file": "detector.hlo.txt",
+                "inputs": [["img", [1, C.IMG_SIZE, C.IMG_SIZE, 3]]],
+                "outputs": [["scores", [1, C.DET_CLASSES]]],
+            },
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single module")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    specs = example_inputs()
+    for name, fn in EXPORTS.items():
+        if args.only and name != args.only:
+            continue
+        text = to_hlo_text(jax.jit(fn).lower(*specs[name]))
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta(), f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles."""
+
+from .fourier import fourier_synth
+from .qp import pgd_step
+
+__all__ = ["fourier_synth", "pgd_step"]

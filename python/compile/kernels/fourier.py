@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: Fourier harmonic synthesis (Eq. 1).
+
+Reconstructs the forecast lambda_hat(t) = a t^2 + b t + c
++ sum_i A_i cos(2 pi f_i t + phi_i) on an H-point future time grid from K
+harmonics extracted by the L2 forecast graph.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): instead of a per-thread
+loop over harmonics (the GPU formulation), the kernel materializes the
+(H x K) phase matrix in VMEM, applies cos on the VPU, and contracts with
+the amplitude vector as an MXU-shaped (H x K) @ (K x 1) product. For the
+deployed sizes (H = 24, K = 8) the whole problem is a single block:
+VMEM footprint = (H*K + 3K + 2H + 3) * 4 B < 1 KiB.
+
+``interpret=True`` is mandatory here: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TWO_PI = 6.283185307179586
+
+
+def _synth_kernel(coeffs_ref, amps_ref, freqs_ref, phases_ref, tvec_ref, out_ref):
+    """Single-block kernel body: out[h] = trend(t_h) + cos-row(h) . amps."""
+    t = tvec_ref[...]                                   # [H]
+    c = coeffs_ref[...]                                 # [3] ascending powers
+    trend = c[0] + c[1] * t + c[2] * t * t              # VPU elementwise
+    # (H x K) phase matrix resident in VMEM
+    ang = TWO_PI * t[:, None] * freqs_ref[...][None, :] + phases_ref[...][None, :]
+    basis = jnp.cos(ang)                                # VPU transcendental
+    # MXU-shaped contraction: (H,K) @ (K,) with f32 accumulation
+    harm = jnp.dot(basis, amps_ref[...], preferred_element_type=jnp.float32)
+    out_ref[...] = trend + harm
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fourier_synth(coeffs, amps, freqs, phases, tvec):
+    """Evaluate the harmonic forecast model on a time grid.
+
+    Args:
+      coeffs: f32[3] quadratic trend coefficients (c, b, a) ascending.
+      amps / freqs / phases: f32[K] harmonic parameters (zero-amp padding ok).
+      tvec: f32[H] evaluation times (absolute sample indices).
+
+    Returns:
+      f32[H] raw (unclipped) forecast.
+    """
+    horizon = tvec.shape[0]
+    return pl.pallas_call(
+        _synth_kernel,
+        out_shape=jax.ShapeDtypeStruct((horizon,), jnp.float32),
+        interpret=True,
+    )(coeffs.astype(jnp.float32), amps.astype(jnp.float32),
+      freqs.astype(jnp.float32), phases.astype(jnp.float32),
+      tvec.astype(jnp.float32))

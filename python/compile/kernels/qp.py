@@ -1,0 +1,190 @@
+"""L1 Pallas kernel: one Adam step of the MPC horizon QP.
+
+This is the optimizer's hot spot: the L2 solver (model.mpc_solve) runs N of
+these steps per control step inside a lax.scan. The kernel evaluates the
+objective (Eq. 9 with quadratic penalties for the coupled constraints
+Eq. 12-18), its *hand-derived* gradient, an Adam moment update with bias
+correction, and the box projection — all fused in a single block.
+
+Adam (rather than plain projected gradient) matters here: the decision
+blocks have wildly different gradient scales (serving pressure grows with
+queue length; prewarm pressure arrives only through the penalty coupling),
+and the per-coordinate step normalization is what lets backlog-drain
+scenarios converge within the 300-iteration budget (see DESIGN.md §Perf).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the horizon rollout
+q = q0 + Lsum (lam - s), w = w0 + Lsum (ready - r) is a prefix sum. A GPU
+port would use a parallel scan; here the prefix sum and its adjoint are
+expressed as matmuls with a strictly-lower-triangular ones matrix built
+from ``broadcasted_iota`` directly in VMEM — an O(H^2) contraction the MXU
+executes in a handful of passes for H <= 128, cheaper than a serialized
+scan. The hinge masks and penalty gradients are VPU elementwise ops fused
+into the same invocation. For the deployed H = 24 everything (a few H x H
+f32 matrices) is ~7 KiB of VMEM — a single block, no HBM double-buffering.
+
+``interpret=True`` is mandatory (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+DT_S = 30.0        # control interval, baked like cold_steps (see ref.py)
+UTIL_TARGET = 0.8  # steady-flow utilization target for capacity sizing
+
+
+def _adam_kernel(cold_steps, z_ref, m_ref, v_ref, it_ref, lam_ref, rdy_ref,
+                 state_ref, params_ref, z_out, m_out, v_out, cost_out):
+    horizon = lam_ref.shape[0]
+    z = z_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    it = it_ref[...][0]  # 1-based iteration number (bias correction)
+    lam = lam_ref[...]
+    rdy = rdy_ref[...]
+    state = state_ref[...]
+    p = params_ref[...]
+    (alpha, beta, gamma, delta, eta, rho1, rho2, rho_me, kappa, mu,
+     l_cold, l_warm, w_max, lr, b1, grad_clip) = [p[i] for i in range(16)]
+    q0, w0, x_prev = state[0], state[1], state[2]
+
+    x = z[:horizon]
+    r = z[horizon:2 * horizon]
+    s = z[2 * horizon:]
+
+    # --- triangular / shift operators built in VMEM from iota ---------------
+    row = jax.lax.broadcasted_iota(jnp.int32, (horizon, horizon), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (horizon, horizon), 1)
+    lsum = (row > col).astype(jnp.float32)          # strict lower: prefix sum
+    shift_d = (row - col == cold_steps).astype(jnp.float32)  # readyCold shift
+
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+
+    # --- rollout (Eq. 10-11): MXU prefix-sum matmuls -------------------------
+    ready = rdy + dot(shift_d, x)
+    u = ready - r                                    # w_{k+1} - w_k
+    q = q0 + dot(lsum, lam - s)
+    w = w0 + dot(lsum, u)
+
+    relu = lambda t: jnp.maximum(t, 0.0)
+    # effective demand = utilization-normalized forecast flow + backlog
+    # amortized over the cold window (see ref.cost_ref for the derivation)
+    inv_dd = 1.0 / (cold_steps + 1.0)
+    flow_scale = mu * l_warm / (UTIL_TARGET * DT_S)
+    demand = lam * flow_scale + relu(q - lam) * inv_dd  # excess backlog only
+    # serving uses the TRUE per-step throughput; mu (drain target) only
+    # shapes provisioning — see ref.cost_ref
+    mu_full = DT_S / l_warm
+    # hinges (objective) and penalty residuals (constraints)
+    h_cold = relu(demand - mu * w)                   # Eq. 3
+    h_over = relu(mu * w - demand)                   # Eq. 6
+    v_sq = relu(s - q)                               # Eq. 12a
+    v_sw = relu(s - mu_full * w)                     # Eq. 12b
+    v_rw = relu(r - w)                               # Eq. 13/15
+    v_wmax = relu(w - w_max)                         # Eq. 16 upper
+    v_qneg = relu(-q)                                # Eq. 17
+    v_wneg = relu(-w)                                # Eq. 16 lower
+
+    # smoothness deltas (Eq. 8): dw_k = u_{k-1} (dw_0 = 0), dx vs x_prev
+    tail_mask = (jax.lax.iota(jnp.float32, horizon) < horizon - 1).astype(jnp.float32)
+    x_shift = jnp.concatenate([x_prev[None], x[:-1]])
+    dx = x - x_shift
+
+    # --- objective value (Eq. 9 + penalties) --------------------------------
+    cost = (
+        alpha * (l_cold + l_warm) * jnp.sum(h_cold)
+        + beta * l_warm * jnp.sum(q)
+        + delta * jnp.sum(x)
+        + gamma * jnp.sum(h_over)
+        - eta * jnp.sum(r)
+        + rho1 * jnp.sum(tail_mask * u * u)
+        + rho2 * jnp.sum(dx * dx)
+        + rho_me * jnp.sum(x * r)
+        + kappa * jnp.sum(v_sq**2 + v_sw**2 + v_rw**2
+                          + v_wmax**2 + v_qneg**2 + v_wneg**2)
+    )
+
+    # --- hand-derived gradient ----------------------------------------------
+    m_cold = (h_cold > 0.0).astype(jnp.float32)
+    m_over = (h_over > 0.0).astype(jnp.float32)
+    g_w = (-alpha * (l_cold + l_warm) * mu * m_cold
+           + gamma * mu * m_over
+           + kappa * (-2.0 * mu_full * v_sw - 2.0 * v_rw
+                      + 2.0 * v_wmax - 2.0 * v_wneg))
+    # demand depends on q (backlog term): chain rule through both hinges
+    m_qpos = (q - lam > 0.0).astype(jnp.float32)
+    g_q = (beta * l_warm
+           + alpha * (l_cold + l_warm) * m_cold * m_qpos * inv_dd
+           - gamma * m_over * m_qpos * inv_dd
+           + kappa * (-2.0 * v_sq - 2.0 * v_qneg))
+
+    # adjoints of the prefix sums: transpose = strictly-upper matmul
+    g_u = dot(lsum.T, g_w) + 2.0 * rho1 * tail_mask * u
+    ddx = dx - jnp.concatenate([dx[1:], jnp.zeros((1,), jnp.float32)])
+    g_x = dot(shift_d.T, g_u) + delta + rho_me * r + 2.0 * rho2 * ddx
+    g_r = -g_u - eta + rho_me * x + kappa * 2.0 * v_rw
+    g_s = -dot(lsum.T, g_q * jnp.ones((horizon,), jnp.float32)) \
+        + kappa * (2.0 * v_sq + 2.0 * v_sw)
+    grad = jnp.concatenate([g_x, g_r, g_s])
+    # per-coordinate clip: penalty gradients scale with kappa * violation * H
+    grad = jnp.clip(grad, -grad_clip, grad_clip)
+
+    # --- Adam moment update + box projection (Eq. 14-17) ---------------------
+    m_next = b1 * m + (1.0 - b1) * grad
+    v_next = ADAM_B2 * v + (1.0 - ADAM_B2) * grad * grad
+    m_hat = m_next / (1.0 - b1**it)
+    v_hat = v_next / (1.0 - ADAM_B2**it)
+    # per-block step scale: the serving block ranges over [0, mu_full*w_max]
+    # — ~10x the prewarm/reclaim blocks — and Adam's normalized step would
+    # otherwise cap its movement at lr*iters (see DESIGN.md §Perf)
+    ones = jnp.ones((horizon,), jnp.float32)
+    lr_vec = jnp.concatenate([ones, ones, ones * (mu_full / mu)]) * lr
+    step = lr_vec * m_hat / (jnp.sqrt(v_hat) + ADAM_EPS)
+    ub = jnp.concatenate([
+        jnp.full((horizon,), w_max, jnp.float32),
+        jnp.full((horizon,), w_max, jnp.float32),
+        jnp.full((horizon,), mu_full * w_max, jnp.float32),
+    ])
+    z_next = jnp.clip(z - step, 0.0, ub)
+
+    z_out[...] = z_next
+    m_out[...] = m_next
+    v_out[...] = v_next
+    cost_out[...] = cost[None]
+
+
+@functools.partial(jax.jit, static_argnames=("cold_steps",))
+def pgd_step(z, m, v, it, lam, rdy, state, params, *, cold_steps):
+    """One fused Adam step. Mirrors ref.pgd_step_ref (jax.grad oracle).
+
+    Args:
+      z: f32[3H] decision vector concat(x, r, s).
+      m, v: f32[3H] Adam first/second moments.
+      it: f32[1] 1-based iteration number (bias correction).
+      lam: f32[H] forecasted arrivals per step.
+      rdy: f32[H] pre-horizon cold starts completing at step k (k < D).
+      state: f32[4] = (q0, w0, x_prev, reserved).
+      params: f32[16] weight vector (constants.PARAM_NAMES layout).
+      cold_steps: static D = ceil(L_cold / dt).
+
+    Returns:
+      (z_next, m_next, v_next, cost at the *input* z) — f32[3H] x3 + f32[1].
+    """
+    horizon = lam.shape[0]
+    kernel = functools.partial(_adam_kernel, cold_steps)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((3 * horizon,), jnp.float32),
+            jax.ShapeDtypeStruct((3 * horizon,), jnp.float32),
+            jax.ShapeDtypeStruct((3 * horizon,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ),
+        interpret=True,
+    )(z.astype(jnp.float32), m.astype(jnp.float32), v.astype(jnp.float32),
+      it.astype(jnp.float32), lam.astype(jnp.float32), rdy.astype(jnp.float32),
+      state.astype(jnp.float32), params.astype(jnp.float32))

@@ -1,0 +1,177 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is written *independently* of the kernels (cumulative sums
+and ``jax.grad`` instead of triangular matmuls and hand gradients) so that a
+kernel bug cannot be mirrored by an oracle bug. pytest + hypothesis compare
+the two implementations across shapes and regimes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Control interval (baked, like cold_steps): see constants.DT_S.
+DT_S = 30.0
+# Target utilization for steady-flow capacity sizing (Little's law with
+# headroom): a container serves dt/l_warm requests per step at 100%.
+UTIL_TARGET = 0.8
+
+# ---------------------------------------------------------------------------
+# MPC horizon rollout and cost (Eq. 3-18)
+# ---------------------------------------------------------------------------
+
+
+def split_z(z, horizon):
+    """z = concat(x, r, s) -> (x, r, s)."""
+    x = z[:horizon]
+    r = z[horizon : 2 * horizon]
+    s = z[2 * horizon :]
+    return x, r, s
+
+
+def rollout_ref(z, lam, rdy, state, cold_steps):
+    """System dynamics (Eq. 10-11) via cumulative sums.
+
+    Returns (q, w): queue length and warm-container count at the *start* of
+    each step k = 0..H-1. ``rdy[k]`` counts cold starts issued before the
+    horizon that finish at step k (readyCold for k < D); cold starts issued
+    inside the horizon contribute x[k - D] for k >= D.
+    """
+    horizon = lam.shape[0]
+    x, r, s = split_z(z, horizon)
+    q0, w0 = state[0], state[1]
+    if cold_steps > 0:
+        shifted = jnp.roll(x, cold_steps).at[:cold_steps].set(0.0)
+    else:
+        shifted = x
+    ready = rdy + shifted
+    # state at start of step k: cumulative effect of steps 0..k-1
+    dq = lam - s
+    dw = ready - r
+    q = q0 + jnp.concatenate([jnp.zeros(1), jnp.cumsum(dq)[:-1]])
+    w = w0 + jnp.concatenate([jnp.zeros(1), jnp.cumsum(dw)[:-1]])
+    return q, w
+
+
+def cost_ref(z, lam, rdy, state, params, cold_steps):
+    """Total MPC objective (Eq. 9) + quadratic penalties for the coupled
+    constraints (Eq. 12-18). Scalar."""
+    horizon = lam.shape[0]
+    x, r, s = split_z(z, horizon)
+    (alpha, beta, gamma, delta, eta, rho1, rho2, rho_me, kappa, mu,
+     l_cold, l_warm, w_max) = [params[i] for i in range(13)]
+    q, w = rollout_ref(z, lam, rdy, state, cold_steps)
+    relu = jax.nn.relu
+
+    # Effective demand: forecast arrivals plus the queued backlog amortized
+    # over the cold-start window. Eq. 3's lambda_k counts "incoming
+    # requests"; a standing queue is exactly unserved incoming work, and
+    # without this term the penalty-relaxed solver has no first-order
+    # pressure to provision for backlog drain (cvxpy's exact coupled
+    # constraints gave the paper this pressure for free).
+    # Steady flow is normalized by achievable per-step throughput at the
+    # target utilization, while backlog is normalized by the drain-target
+    # rate (mu): mu = drain_target / l_warm, so lam's scale factor is
+    # drain_target / (UTIL * dt) = mu * l_warm / (UTIL * dt). This sizes the
+    # pool by Little's law under steady load and by fast-drain capacity
+    # under backlog, with a single mu * w capacity axis.
+    flow_scale = mu * l_warm / (UTIL_TARGET * DT_S)
+    # only the backlog in EXCESS of one step's natural flow counts: the
+    # Eq. 10 convention stores each step's arrivals in q for one step, so
+    # steady state has q ~= lam without any true backlog
+    demand = lam * flow_scale + relu(q - lam) / (cold_steps + 1.0)
+    # True per-step serving throughput (Eq. 12's capacity): a warm container
+    # completes dt / l_warm requests per step. The drain-target mu only
+    # shapes *provisioning* (Eq. 3/6); using it for serving would create
+    # phantom in-model queues that re-inflate the pool.
+    mu_full = DT_S / l_warm
+    cold_delay = alpha * jnp.sum(relu(demand - mu * w)) * (l_cold + l_warm)  # Eq. 3
+    wait_cost = beta * jnp.sum(q) * l_warm                                # Eq. 4
+    cold_start = delta * jnp.sum(x)                                       # Eq. 5
+    overprov = gamma * jnp.sum(relu(mu * w - demand))                     # Eq. 6
+    reclaim = -eta * jnp.sum(r)                                           # Eq. 7
+    w_ext = jnp.concatenate([state[1:2], w])                              # w_{-1} = w0
+    x_ext = jnp.concatenate([state[2:3], x])                              # x_{-1} = x_prev
+    smooth = rho1 * jnp.sum(jnp.diff(w_ext) ** 2) + rho2 * jnp.sum(jnp.diff(x_ext) ** 2)  # Eq. 8
+    excl = rho_me * jnp.sum(x * r)                                        # Eq. 18 relaxed
+
+    pen = (
+        jnp.sum(relu(s - q) ** 2)          # Eq. 12: s_k <= q_k
+        + jnp.sum(relu(s - mu_full * w) ** 2)  # Eq. 12: s_k <= serving capacity
+        + jnp.sum(relu(r - w) ** 2)        # Eq. 13/15
+        + jnp.sum(relu(w - w_max) ** 2)    # Eq. 16
+        + jnp.sum(relu(-q) ** 2)           # Eq. 17
+        + jnp.sum(relu(-w) ** 2)           # Eq. 16 lower
+    )
+    return (cold_delay + wait_cost + cold_start + overprov + reclaim
+            + smooth + excl + kappa * pen)
+
+
+def bounds_ref(params, horizon):
+    """Per-coordinate box upper bounds for z (lower bounds are all 0)."""
+    w_max, l_warm = params[12], params[11]
+    mu_full = DT_S / l_warm
+    ub_x = jnp.full((horizon,), w_max)            # Eq. 14
+    ub_r = jnp.full((horizon,), w_max)            # Eq. 15
+    ub_s = jnp.full((horizon,), mu_full * w_max)  # true serving ceiling
+    return jnp.concatenate([ub_x, ub_r, ub_s])
+
+
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def pgd_step_ref(z, m, v, it, lam, rdy, state, params, cold_steps):
+    """One projected Adam step, gradient via jax.grad (the kernel oracle).
+
+    `it` is the 1-based iteration count (f32[1]) for bias correction.
+    Returns (z_next, m_next, v_next, cost_at_z).
+    """
+    lr, b1, grad_clip = params[13], params[14], params[15]
+    cost, grad = jax.value_and_grad(cost_ref)(z, lam, rdy, state, params, cold_steps)
+    grad = jnp.clip(grad, -grad_clip, grad_clip)
+    m_next = b1 * m + (1.0 - b1) * grad
+    v_next = ADAM_B2 * v + (1.0 - ADAM_B2) * grad * grad
+    t = it[0]
+    m_hat = m_next / (1.0 - b1**t)
+    v_hat = v_next / (1.0 - ADAM_B2**t)
+    # per-block step scale (see the kernel): serving block moves ~10x faster
+    h = lam.shape[0]
+    mu, l_warm = params[9], params[11]
+    ones = jnp.ones((h,))
+    lr_vec = jnp.concatenate([ones, ones, ones * ((DT_S / l_warm) / mu)]) * lr
+    z_next = jnp.clip(z - lr_vec * m_hat / (jnp.sqrt(v_hat) + ADAM_EPS),
+                      0.0, bounds_ref(params, lam.shape[0]))
+    return z_next, m_next, v_next, cost
+
+
+# ---------------------------------------------------------------------------
+# Fourier harmonic synthesis (Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def fourier_synth_ref(coeffs, amps, freqs, phases, tvec):
+    """lambda_hat(t) = a t^2 + b t + c + sum_i A_i cos(2 pi f_i t + phi_i).
+
+    coeffs = (c, b, a) ascending powers; amps/freqs/phases are K-vectors
+    (zero-amplitude padding is harmless); tvec is the evaluation grid.
+    """
+    trend = coeffs[0] + coeffs[1] * tvec + coeffs[2] * tvec**2
+    harm = jnp.sum(
+        amps[None, :] * jnp.cos(2.0 * jnp.pi * freqs[None, :] * tvec[:, None]
+                                + phases[None, :]),
+        axis=1,
+    )
+    return trend + harm
+
+
+def dft_ref(resid):
+    """Real DFT via explicit projection (no jnp.fft, to match the portable
+    matmul lowering): returns (re, im) of X_j = sum_t resid_t e^{-i 2pi j t / W}
+    for j = 0..W//2."""
+    w = resid.shape[0]
+    j = jnp.arange(w // 2 + 1, dtype=jnp.float32)
+    t = jnp.arange(w, dtype=jnp.float32)
+    ang = 2.0 * jnp.pi * j[:, None] * t[None, :] / w
+    re = jnp.cos(ang) @ resid
+    im = -(jnp.sin(ang) @ resid)
+    return re, im

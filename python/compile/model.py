@@ -1,0 +1,229 @@
+"""L2: the controller's JAX compute graphs, calling the L1 Pallas kernels.
+
+Three graphs are AOT-lowered by ``aot.py`` and executed from the Rust
+coordinator through PJRT (Python is never on the request path):
+
+* ``forecast``      — Fourier-harmonic invocation forecast (Eq. 1-2).
+* ``mpc_solve``     — N projected-gradient steps of the horizon QP (Eq. 9-18).
+* ``detector``      — small conv-net standing in for the EfficientDet
+                      function payload (DESIGN.md substitution table).
+
+Portability constraints (xla_extension 0.5.1 CPU on the Rust side):
+no ``jnp.linalg`` (would lower to LAPACK custom-calls), no ``jnp.fft``
+(DFT is an explicit matmul projection instead), no ``lax.top_k``
+(descending ``lax.sort_key_val`` + slice). Everything lowers to vanilla
+HLO ops: dot/cos/sin/atan2/sort/while.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import constants as C
+from .kernels import fourier_synth, pgd_step
+
+TWO_PI = 2.0 * jnp.pi
+
+
+# ---------------------------------------------------------------------------
+# Invocation forecast (Sec. III-A)
+# ---------------------------------------------------------------------------
+
+
+def _quadratic_trend(history):
+    """Least-squares fit of a t^2 + b t + c over t = 0..W-1.
+
+    Closed-form 3x3 normal equations with a cofactor inverse (no
+    jnp.linalg.solve: that would emit a LAPACK custom-call the Rust PJRT
+    client cannot execute). t is normalized to [0, 1] for conditioning and
+    coefficients are mapped back to sample units.
+    """
+    w = history.shape[0]
+    t = jnp.arange(w, dtype=jnp.float32) / w
+    v = jnp.stack([jnp.ones_like(t), t, t * t], axis=1)      # Vandermonde [W,3]
+    a = v.T @ v                                              # [3,3]
+    b = v.T @ history                                        # [3]
+    # cofactor inverse of the symmetric 3x3
+    c00 = a[1, 1] * a[2, 2] - a[1, 2] * a[2, 1]
+    c01 = a[0, 2] * a[2, 1] - a[0, 1] * a[2, 2]
+    c02 = a[0, 1] * a[1, 2] - a[0, 2] * a[1, 1]
+    c11 = a[0, 0] * a[2, 2] - a[0, 2] * a[2, 0]
+    c12 = a[0, 2] * a[1, 0] - a[0, 0] * a[1, 2]
+    c22 = a[0, 0] * a[1, 1] - a[0, 1] * a[1, 0]
+    det = a[0, 0] * c00 + a[0, 1] * (a[1, 2] * a[2, 0] - a[1, 0] * a[2, 2]) \
+        + a[0, 2] * (a[1, 0] * a[2, 1] - a[1, 1] * a[2, 0])
+    inv = jnp.array([[c00, c01, c02], [c01, c11, c12], [c02, c12, c22]]) / det
+    coeffs_norm = inv @ b                                    # (c, b, a) in t/W units
+    # map back: trend(t) = c + (b/W) t + (a/W^2) t^2 with t in samples
+    return jnp.array([coeffs_norm[0], coeffs_norm[1] / w, coeffs_norm[2] / (w * w)])
+
+
+def _dft_matmul(resid):
+    """Real DFT by explicit projection: X_j = sum_t resid_t e^{-2pi i j t/W}.
+
+    A (W/2+1 x W) cos/sin matmul — O(W^2) but W = 240, and it lowers to two
+    plain HLO dots that run anywhere (DESIGN.md §Hardware-Adaptation).
+    """
+    w = resid.shape[0]
+    j = jnp.arange(w // 2 + 1, dtype=jnp.float32)
+    t = jnp.arange(w, dtype=jnp.float32)
+    ang = TWO_PI * j[:, None] * t[None, :] / w
+    re = jnp.cos(ang) @ resid
+    im = -(jnp.sin(ang) @ resid)
+    return re, im
+
+
+def forecast(history, gamma_clip):
+    """Clipped Fourier forecast over the next H steps (Eq. 1-2).
+
+    Args:
+      history: f32[W] per-interval arrival counts (most recent last).
+      gamma_clip: f32[] confidence multiplier for statistical clipping.
+
+    Returns:
+      f32[H] forecast lambda_hat for steps t = W .. W+H-1, elementwise in
+      [0, mean_recent + gamma_clip * std_recent].
+    """
+    w = history.shape[0]
+    coeffs = _quadratic_trend(history)
+    t = jnp.arange(w, dtype=jnp.float32)
+    trend = coeffs[0] + coeffs[1] * t + coeffs[2] * t * t
+    resid = history - trend
+
+    re, im = _dft_matmul(resid)
+    nbins = re.shape[0]
+    power = re * re + im * im
+    # exclude DC; select the K strongest harmonics by power via a
+    # descending sort (lax.top_k is avoided for HLO portability)
+    power = power.at[0].set(-1.0)
+    neg_power, order = jax.lax.sort_key_val(-power, jnp.arange(nbins))
+    top = order[: C.HARMONICS]
+    amps = 2.0 * jnp.sqrt(-neg_power[: C.HARMONICS] + 1e-12) / w
+    freqs = top.astype(jnp.float32) / w
+    phases = jnp.arctan2(im[top], re[top])
+
+    tfut = w + jnp.arange(C.HORIZON, dtype=jnp.float32)
+    raw = fourier_synth(coeffs, amps, freqs, phases, tfut)   # L1 kernel
+
+    recent = history[-C.RECENT:]
+    mean_r = jnp.mean(recent)
+    std_r = jnp.std(recent)
+    return jnp.clip(raw, 0.0, mean_r + gamma_clip * std_r)   # Eq. 2
+
+
+# ---------------------------------------------------------------------------
+# MPC solve (Sec. III-B)
+# ---------------------------------------------------------------------------
+
+
+def mpc_solve(z0, lam, rdy, state, params):
+    """Run PGD_ITERS fused kernel steps; return (z*, cost trace tail).
+
+    Args:
+      z0: f32[3H] warm-start decision vector (previous plan, shifted).
+      lam: f32[H] forecast; rdy: f32[H] pre-horizon readyCold schedule.
+      state: f32[4] (q0, w0, x_prev, -); params: f32[16] weights.
+
+    Returns:
+      (z f32[3H], cost f32[1]) — cost is the objective at the final iterate.
+    """
+    # feasible serving seed: start the s-block at the forecast level so the
+    # relaxed rollout does not fabricate a transient backlog (whose demand
+    # pressure would inflate prewarming) while Adam ramps s from zero
+    h = C.HORIZON
+    z0 = z0.at[2 * h:].set(jnp.maximum(z0[2 * h:], lam))
+    m0 = jnp.zeros_like(z0)
+    v0 = jnp.zeros_like(z0)
+
+    def body(carry, it):
+        z, m, v = carry
+        z_next, m_next, v_next, cost = pgd_step(z, m, v, it[None], lam, rdy,
+                                                state, params,
+                                                cold_steps=C.COLD_STEPS)
+        return (z_next, m_next, v_next), cost
+
+    (z, m, v), costs = jax.lax.scan(
+        body, (z0, m0, v0),
+        jnp.arange(1, C.PGD_ITERS + 1, dtype=jnp.float32))
+    # one extra evaluation to report the cost at the *final* iterate
+    _, _, _, final_cost = pgd_step(z, m, v,
+                                   jnp.array([C.PGD_ITERS + 1.0], jnp.float32),
+                                   lam, rdy, state, params,
+                                   cold_steps=C.COLD_STEPS)
+    return z, final_cost
+
+
+# ---------------------------------------------------------------------------
+# Detector payload (Sec. IV "Function")
+# ---------------------------------------------------------------------------
+
+
+def _detector_weights():
+    """Fixed seeded weights, baked into the artifact as HLO constants."""
+    rng = np.random.default_rng(C.DET_SEED)
+
+    def he(shape, fan_in):
+        return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+    return {
+        "conv1": he((3, 3, 3, 16), 3 * 9),
+        "conv2": he((3, 3, 16, 32), 16 * 9),
+        "dense": he((32 * (C.IMG_SIZE // 4) ** 2, C.DET_CLASSES), 32 * 64),
+        "bias": np.zeros((C.DET_CLASSES,), np.float32),
+    }
+
+
+def detector(img):
+    """Object-detection stand-in: conv-relu-pool x2 + dense scores.
+
+    Args:
+      img: f32[1, IMG, IMG, 3] NHWC frame.
+    Returns:
+      f32[1, DET_CLASSES] detection scores.
+    """
+    wts = _detector_weights()
+    dn = jax.lax.conv_dimension_numbers(img.shape, wts["conv1"].shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+
+    def block(x, kernel):
+        x = jax.lax.conv_general_dilated(x, kernel, (1, 1), "SAME",
+                                         dimension_numbers=dn)
+        x = jax.nn.relu(x)
+        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+    x = block(img, wts["conv1"])
+    dn = jax.lax.conv_dimension_numbers(x.shape, wts["conv2"].shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    x = block(x, wts["conv2"])
+    x = x.reshape((1, -1))
+    return x @ wts["dense"] + wts["bias"]
+
+
+# ---------------------------------------------------------------------------
+# Example-input builders shared by aot.py and the tests
+# ---------------------------------------------------------------------------
+
+
+def example_inputs():
+    """ShapeDtypeStructs for each exported graph, in argument order."""
+    f32 = jnp.float32
+    return {
+        "forecast": (jax.ShapeDtypeStruct((C.WINDOW,), f32),
+                     jax.ShapeDtypeStruct((), f32)),
+        "mpc": (jax.ShapeDtypeStruct((3 * C.HORIZON,), f32),
+                jax.ShapeDtypeStruct((C.HORIZON,), f32),
+                jax.ShapeDtypeStruct((C.HORIZON,), f32),
+                jax.ShapeDtypeStruct((C.N_STATE,), f32),
+                jax.ShapeDtypeStruct((C.N_PARAMS,), f32)),
+        "detector": (jax.ShapeDtypeStruct((1, C.IMG_SIZE, C.IMG_SIZE, 3), f32),),
+    }
+
+
+EXPORTS = {
+    "forecast": forecast,
+    "mpc": mpc_solve,
+    "detector": detector,
+}

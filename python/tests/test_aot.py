@@ -1,0 +1,72 @@
+"""AOT artifact contract: HLO text is portable and meta.json is consistent."""
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import constants as C
+from compile import model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_meta_matches_constants():
+    m = aot.meta()
+    assert m["window"] == C.WINDOW
+    assert m["horizon"] == C.HORIZON
+    assert m["cold_steps"] == C.COLD_STEPS
+    assert m["param_names"] == C.PARAM_NAMES
+    assert len(m["default_params"]) == C.N_PARAMS
+    mods = m["modules"]
+    assert mods["forecast"]["inputs"][0][1] == [C.WINDOW]
+    assert mods["mpc"]["inputs"][0][1] == [3 * C.HORIZON]
+    assert mods["mpc"]["outputs"][0][1] == [3 * C.HORIZON]
+
+
+def test_lowered_hlo_has_no_elided_constants():
+    """Elided constants ('constant({...})') silently become zeros on the
+    Rust side — the regression behind the detector all-zeros bug."""
+    for name, text in aot.lower_all().items():
+        assert "{...}" not in text, f"{name}: elided constant in HLO text"
+
+
+def test_lowered_hlo_has_no_custom_calls():
+    """xla_extension 0.5.1 CPU can't run jaxlib custom-calls (LAPACK/FFT
+    handlers are not registered there) — the graphs must lower clean."""
+    for name, text in aot.lower_all().items():
+        assert "custom-call" not in text, f"{name}: custom-call in HLO"
+
+
+def test_entry_layouts():
+    lowered = aot.lower_all()
+    assert f"f32[{C.WINDOW}]" in lowered["forecast"]
+    assert f"f32[{3 * C.HORIZON}]" in lowered["mpc"]
+    assert f"f32[1,{C.IMG_SIZE},{C.IMG_SIZE},3]" in lowered["detector"]
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "meta.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_artifacts_on_disk_are_current():
+    with open(os.path.join(ART, "meta.json")) as f:
+        disk = json.load(f)
+    assert disk == aot.meta(), "artifacts stale: run `make artifacts`"
+    for mod in disk["modules"].values():
+        assert os.path.exists(os.path.join(ART, mod["file"]))
+
+
+def test_detector_deterministic_and_finite():
+    img = jnp.full((1, C.IMG_SIZE, C.IMG_SIZE, 3), 0.25, jnp.float32)
+    a = np.asarray(model.detector(img))
+    b = np.asarray(model.detector(img))
+    assert a.shape == (1, C.DET_CLASSES)
+    assert np.isfinite(a).all()
+    np.testing.assert_array_equal(a, b)
+    # different inputs -> different scores (weights are not degenerate)
+    c = np.asarray(model.detector(img * 2.0))
+    assert not np.allclose(a, c)

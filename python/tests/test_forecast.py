@@ -1,0 +1,80 @@
+"""L2 forecast graph: trend fit, DFT, harmonic selection, clipping (Eq. 1-2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import constants as C
+from compile import model
+from compile.kernels.ref import dft_ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def test_quadratic_trend_exact_recovery():
+    """Fitting an exact quadratic must recover it to f32 precision."""
+    t = np.arange(C.WINDOW, dtype=np.float32)
+    y = 3.0 + 0.05 * t - 1e-4 * t * t
+    coeffs = np.asarray(model._quadratic_trend(jnp.array(y)))
+    fit = coeffs[0] + coeffs[1] * t + coeffs[2] * t * t
+    np.testing.assert_allclose(fit, y, rtol=1e-4, atol=1e-2)
+
+
+def test_dft_matmul_matches_numpy_rfft():
+    rng = np.random.default_rng(11)
+    y = rng.standard_normal(C.WINDOW).astype(np.float32)
+    re, im = model._dft_matmul(jnp.array(y))
+    want = np.fft.rfft(y)
+    np.testing.assert_allclose(np.asarray(re), want.real, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(im), want.imag, rtol=1e-3, atol=1e-3)
+
+
+def test_dft_ref_agrees_with_model_dft():
+    rng = np.random.default_rng(12)
+    y = rng.standard_normal(64).astype(np.float32)
+    re_m, im_m = model._dft_matmul(jnp.array(y))
+    re_r, im_r = dft_ref(jnp.array(y))
+    np.testing.assert_allclose(np.asarray(re_m), np.asarray(re_r), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(im_m), np.asarray(im_r), atol=1e-3)
+
+
+def test_pure_harmonic_extrapolation():
+    """A noiseless periodic signal on the DFT grid extrapolates ~exactly."""
+    t = np.arange(C.WINDOW, dtype=np.float32)
+    period = 24.0  # 120/24 = 5 cycles -> exactly on-grid
+    y = 20.0 + 6.0 * np.cos(2 * np.pi * t / period + 0.7)
+    lam = np.asarray(model.forecast(jnp.array(y.astype(np.float32)),
+                                    jnp.float32(6.0)))
+    tf = C.WINDOW + np.arange(C.HORIZON, dtype=np.float32)
+    want = 20.0 + 6.0 * np.cos(2 * np.pi * tf / period + 0.7)
+        # tolerance: trend-fit leakage across 5 cycles + f32; the shape match
+    # (phase + amplitude) is what matters for the controller
+    np.testing.assert_allclose(lam, want, atol=2.5)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.5, 5.0, width=32))
+def test_clipping_bounds_hold(seed, gamma_clip):
+    """Eq. 2: every forecast value lies in [0, mean + gamma * std]."""
+    rng = np.random.default_rng(seed)
+    y = np.maximum(0.0, rng.normal(30, 15, C.WINDOW)).astype(np.float32)
+    lam = np.asarray(model.forecast(jnp.array(y), jnp.float32(gamma_clip)))
+    recent = y[-C.RECENT:]
+    hi = recent.mean() + gamma_clip * recent.std() + 1e-3
+    assert (lam >= 0.0).all()
+    assert (lam <= hi).all(), (lam.max(), hi)
+
+
+def test_constant_history_predicts_constant():
+    y = np.full(C.WINDOW, 12.0, np.float32)
+    lam = np.asarray(model.forecast(jnp.array(y), jnp.float32(3.0)))
+    # std of recent is 0 -> clip ceiling is exactly the mean
+    np.testing.assert_allclose(lam, 12.0, atol=0.2)
+
+
+def test_forecast_shape_dtype():
+    y = jnp.zeros(C.WINDOW, jnp.float32)
+    lam = model.forecast(y, jnp.float32(3.0))
+    assert lam.shape == (C.HORIZON,)
+    assert lam.dtype == jnp.float32

@@ -1,0 +1,77 @@
+"""L1 fourier_synth kernel vs pure-jnp oracle (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fourier_synth
+from compile.kernels.ref import fourier_synth_ref
+
+settings.register_profile("ci", max_examples=60, deadline=None)
+settings.load_profile("ci")
+
+finite = st.floats(-50.0, 50.0, allow_nan=False, width=32)
+
+
+@st.composite
+def synth_case(draw):
+    horizon = draw(st.integers(1, 96))
+    k = draw(st.integers(1, 32))
+    coeffs = draw(st.lists(st.floats(-2.0, 2.0, width=32), min_size=3, max_size=3))
+    amps = draw(st.lists(st.floats(0.0, 30.0, width=32), min_size=k, max_size=k))
+    freqs = draw(st.lists(st.floats(0.0, 0.5, width=32), min_size=k, max_size=k))
+    phases = draw(st.lists(st.floats(-3.25, 3.25, width=32), min_size=k, max_size=k))
+    t0 = draw(st.integers(0, 2000))
+    return coeffs, amps, freqs, phases, t0, horizon
+
+
+@given(synth_case())
+def test_kernel_matches_ref(case):
+    coeffs, amps, freqs, phases, t0, horizon = case
+    c = jnp.array(coeffs, jnp.float32)
+    a = jnp.array(amps, jnp.float32)
+    f = jnp.array(freqs, jnp.float32)
+    p = jnp.array(phases, jnp.float32)
+    t = jnp.arange(t0, t0 + horizon, dtype=jnp.float32)
+    got = fourier_synth(c, a, f, p, t)
+    want = fourier_synth_ref(c, a, f, p, t)
+    assert got.shape == (horizon,)
+    # f32 tolerance: the phase product 2*pi*f*t reaches ~3e3 rad, so f32
+    # argument-reduction error alone is ~2e-4 rad * sum(amps) of amplitude
+    atol = 0.01 + 3e-4 * float(jnp.sum(a))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=atol)
+
+
+def test_zero_amplitude_padding_is_identity():
+    """Zero-amp harmonics must not perturb the trend (padding contract)."""
+    c = jnp.array([1.0, 0.5, -0.01], jnp.float32)
+    t = jnp.arange(16, dtype=jnp.float32)
+    a = jnp.zeros(8, jnp.float32)
+    f = jnp.linspace(0.0, 0.4, 8).astype(jnp.float32)
+    p = jnp.ones(8, jnp.float32)
+    got = fourier_synth(c, a, f, p, t)
+    want = c[0] + c[1] * t + c[2] * t * t
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_single_harmonic_exact():
+    """One pure harmonic: kernel must reproduce cos exactly (f32)."""
+    c = jnp.zeros(3, jnp.float32)
+    t = jnp.arange(48, dtype=jnp.float32)
+    got = fourier_synth(c, jnp.array([2.0], jnp.float32),
+                        jnp.array([0.125], jnp.float32),
+                        jnp.array([0.5], jnp.float32), t)
+    want = 2.0 * np.cos(2 * np.pi * 0.125 * np.asarray(t) + 0.5)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("horizon", [1, 24, 128])
+def test_output_dtype_and_shape(horizon):
+    c = jnp.zeros(3, jnp.float32)
+    k = 4
+    out = fourier_synth(c, jnp.ones(k), jnp.full(k, 0.1), jnp.zeros(k),
+                        jnp.arange(horizon, dtype=jnp.float32))
+    assert out.dtype == jnp.float32
+    assert out.shape == (horizon,)

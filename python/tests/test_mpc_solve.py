@@ -1,0 +1,110 @@
+"""L2 mpc_solve graph: convergence, feasibility, and control behaviour.
+
+Scenarios use the deployed scale: dt = 30 s steps, so lam is requests per
+30-second bin (a 300 req/s burst is a 900-request bin) and mu is the
+drain-target service rate (~10.7 requests/step/container).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import constants as C
+from compile import model
+from compile.kernels import ref
+
+
+def params_vec(**over):
+    d = dict(C.DEFAULT_WEIGHTS)
+    d.update(over)
+    return jnp.array([d[n] for n in C.PARAM_NAMES], jnp.float32)
+
+
+def solve(lam, q0=0.0, w0=0.0, x_prev=0.0, rdy=None, **weights):
+    horizon = C.HORIZON
+    lam = jnp.array(lam, jnp.float32)
+    rdy = jnp.zeros(horizon, jnp.float32) if rdy is None else jnp.array(rdy, jnp.float32)
+    state = jnp.array([q0, w0, x_prev, 0.0], jnp.float32)
+    params = params_vec(**weights)
+    z0 = jnp.zeros(3 * horizon, jnp.float32)
+    z, cost = model.mpc_solve(z0, lam, rdy, state, params)
+    x = np.asarray(z[:horizon])
+    r = np.asarray(z[horizon:2 * horizon])
+    s = np.asarray(z[2 * horizon:])
+    return x, r, s, float(cost[0]), (lam, rdy, state, params, z)
+
+
+def test_solver_descends_from_cold_start():
+    lam = np.full(C.HORIZON, 200.0, np.float32)
+    _, _, _, cost, (lamv, rdy, state, params, z) = solve(lam, q0=100.0)
+    z0 = jnp.zeros_like(z)
+    c0 = float(ref.cost_ref(z0, lamv, rdy, state, params, C.COLD_STEPS))
+    assert cost < c0
+
+
+def test_burst_forecast_triggers_prewarming():
+    """A predicted 900-request bin must trigger cold starts ahead of it."""
+    lam = np.zeros(C.HORIZON, np.float32)
+    burst_at = 14
+    lam[burst_at:burst_at + 2] = 900.0
+    x, r, s, _, _ = solve(lam)
+    assert x[:burst_at].sum() > 3.0, x
+    # and the plan does not reclaim away the pool it is building
+    assert r[:burst_at].sum() < x[:burst_at].sum()
+
+
+def test_backlog_drives_scale_out():
+    """A standing 900-deep queue with a tiny pool must prewarm and serve."""
+    lam = np.full(C.HORIZON, 30.0, np.float32)
+    x, r, s, _, _ = solve(lam, q0=900.0, w0=2.0)
+    assert x[0] >= 1.0, x
+    assert s[0] > 10.0, s
+
+
+def test_idle_forecast_reclaims_warm_pool():
+    """Zero forecast + large warm pool: step 0 reclaims, never prewarms."""
+    lam = np.zeros(C.HORIZON, np.float32)
+    x, r, s, _, _ = solve(lam, w0=20.0, gamma=0.05, eta=0.2)
+    assert r[:4].sum() > 1.0, r
+    assert x[0] < r[0], (x[0], r[0])  # actuated step reclaims (repair zeroes x)
+
+
+def test_queue_drain_serves_requests():
+    """A standing queue with warm capacity available is served."""
+    lam = np.zeros(C.HORIZON, np.float32)
+    x, r, s, _, _ = solve(lam, q0=100.0, w0=10.0)
+    assert s[:4].sum() > 40.0, s
+
+
+def test_mutual_exclusivity_first_step():
+    """The actuated step never both prewarms and reclaims materially."""
+    rng = np.random.default_rng(9)
+    lam = rng.uniform(0, 300, C.HORIZON).astype(np.float32)
+    x, r, _, _, _ = solve(lam, q0=50.0, w0=8.0)
+    overlap0 = min(x[0], r[0])
+    assert overlap0 < 1.0, (x[0], r[0])
+
+
+def test_warm_start_converges_no_worse():
+    lam = np.full(C.HORIZON, 250.0, np.float32)
+    horizon = C.HORIZON
+    lamv = jnp.array(lam)
+    rdy = jnp.zeros(horizon, jnp.float32)
+    state = jnp.array([50.0, 5.0, 0.0, 0.0], jnp.float32)
+    params = params_vec()
+    z_cold, c_cold = model.mpc_solve(jnp.zeros(3 * horizon, jnp.float32),
+                                     lamv, rdy, state, params)
+    z_warm, c_warm = model.mpc_solve(z_cold, lamv, rdy, state, params)
+    assert float(c_warm[0]) <= float(c_cold[0]) * 1.05 + 1.0
+
+
+def test_flow_normalization_sizes_steady_pool():
+    """Steady 360 req/step from an established pool must stay near
+    Little's-law capacity (~5 containers at 80% util), not balloon to the
+    drain-target sizing (~34) or the cap (64)."""
+    lam = np.full(C.HORIZON, 360.0, np.float32)
+    x, r, s, _, (lamv, rdy, state, params, z) = solve(lam, q0=0.0, w0=6.0)
+    q, w = ref.rollout_ref(z, lamv, rdy, state, C.COLD_STEPS)
+    # judge the actuated (near) region: receding horizon never executes the
+    # tail, where the relaxed transient accumulates extra pool
+    w_near = float(np.asarray(w)[:8].mean())
+    assert 2.0 <= w_near <= 30.0, f"steady pool {w_near} mis-sized"

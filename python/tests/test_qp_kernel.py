@@ -1,0 +1,148 @@
+"""L1 pgd_step kernel vs the jax.grad oracle (hypothesis sweeps).
+
+The oracle computes the gradient of ref.cost_ref with jax.grad; the kernel
+uses a hand-derived fused gradient. Agreement across random problems is the
+core correctness signal for the optimizer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import constants as C
+from compile.kernels import pgd_step
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+def params_vec(**over):
+    d = dict(C.DEFAULT_WEIGHTS)
+    d.update(over)
+    return jnp.array([d[n] for n in C.PARAM_NAMES], jnp.float32)
+
+
+@st.composite
+def problem(draw):
+    horizon = draw(st.sampled_from([4, 8, 24, 48]))
+    cold_steps = draw(st.integers(0, horizon - 1))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    z = rng.uniform(0, 20, 3 * horizon).astype(np.float32)
+    vel = rng.uniform(-5, 5, 3 * horizon).astype(np.float32)
+    lam = rng.uniform(0, 100, horizon).astype(np.float32)
+    rdy = np.zeros(horizon, np.float32)
+    if cold_steps > 0:
+        rdy[:cold_steps] = rng.integers(0, 4, cold_steps)
+    state = np.array([rng.uniform(0, 50), rng.uniform(0, 30),
+                      rng.uniform(0, 10), 0.0], np.float32)
+    weights = {
+        "alpha": draw(st.floats(0.0, 5.0, width=32)),
+        "beta": draw(st.floats(0.0, 5.0, width=32)),
+        "gamma": draw(st.floats(0.0, 1.0, width=32)),
+        "delta": draw(st.floats(0.0, 5.0, width=32)),
+        "eta": draw(st.floats(0.0, 1.0, width=32)),
+        "rho1": draw(st.floats(0.0, 0.5, width=32)),
+        "rho2": draw(st.floats(0.0, 0.5, width=32)),
+        "rho_me": draw(st.floats(0.0, 2.0, width=32)),
+        "kappa": draw(st.floats(0.125, 50.0, width=32)),
+    }
+    return horizon, cold_steps, z, vel, lam, rdy, state, params_vec(**weights)
+
+
+@given(problem(), st.integers(1, 500))
+def test_kernel_matches_grad_oracle(case, it):
+    horizon, cold_steps, z, vel, lam, rdy, state, params = case
+    m = jnp.zeros(3 * horizon, jnp.float32)
+    v = jnp.abs(jnp.array(vel))  # second moment must be nonnegative
+    itv = jnp.array([float(it)], jnp.float32)
+    zk, mk, vk, ck = pgd_step(jnp.array(z), m, v, itv, jnp.array(lam),
+                              jnp.array(rdy), jnp.array(state), params,
+                              cold_steps=cold_steps)
+    zr, mr, vr, cr = ref.pgd_step_ref(jnp.array(z), m, v, itv, jnp.array(lam),
+                                      jnp.array(rdy), jnp.array(state), params,
+                                      cold_steps)
+    np.testing.assert_allclose(float(ck[0]), float(cr), rtol=2e-5, atol=1e-3)
+    scale = max(1.0, float(jnp.max(jnp.abs(mr))))
+    np.testing.assert_allclose(np.asarray(mk), np.asarray(mr),
+                               rtol=1e-4, atol=2e-4 * scale)
+    np.testing.assert_allclose(np.asarray(vk), np.asarray(vr),
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(zk), np.asarray(zr),
+                               rtol=1e-4, atol=2e-3)
+
+
+def test_projection_respects_bounds():
+    """Iterates always stay inside the box (Eq. 14-17) even with a huge lr."""
+    horizon = C.HORIZON
+    rng = np.random.default_rng(7)
+    z = jnp.array(rng.uniform(0, 60, 3 * horizon), jnp.float32)
+    vel = jnp.zeros(3 * horizon, jnp.float32)
+    lam = jnp.array(rng.uniform(0, 300, horizon), jnp.float32)
+    rdy = jnp.zeros(horizon, jnp.float32)
+    state = jnp.array([100.0, 0.0, 0.0, 0.0], jnp.float32)
+    params = params_vec(lr=10.0)
+    zk, _, _, _ = pgd_step(z, vel, vel, jnp.ones(1), lam, rdy, state, params,
+                           cold_steps=C.COLD_STEPS)
+    zk = np.asarray(zk)
+    w_max, mu = C.W_MAX, C.MU
+    assert (zk >= 0.0).all()
+    assert (zk[:horizon] <= w_max + 1e-4).all()
+    assert (zk[horizon:2 * horizon] <= w_max + 1e-4).all()
+    assert (zk[2 * horizon:] <= mu * w_max + 1e-3).all()
+
+
+def test_gradient_descends():
+    """A small step from a random point must not increase the cost."""
+    horizon = 24
+    rng = np.random.default_rng(3)
+    z = jnp.array(rng.uniform(0, 10, 3 * horizon), jnp.float32)
+    lam = jnp.array(rng.uniform(0, 50, horizon), jnp.float32)
+    rdy = jnp.zeros(horizon, jnp.float32)
+    state = jnp.array([5.0, 3.0, 1.0, 0.0], jnp.float32)
+    params = params_vec(lr=1e-5, momentum=0.0)
+    zero = jnp.zeros(3 * horizon, jnp.float32)
+    one = jnp.ones(1, jnp.float32)
+    z1, m1, v1, c0 = pgd_step(z, zero, zero, one, lam, rdy, state, params,
+                              cold_steps=11)
+    _, _, _, c1 = pgd_step(z1, m1, v1, one + 1.0, lam, rdy, state, params,
+                           cold_steps=11)
+    assert float(c1[0]) <= float(c0[0]) + 1e-3
+
+
+def test_zero_weights_zero_gradient():
+    """With every weight zero the objective is identically 0 and z is fixed
+    (up to projection into the box)."""
+    horizon = 8
+    z = jnp.array(np.linspace(0, 5, 3 * horizon), jnp.float32)
+    vel = jnp.zeros(3 * horizon, jnp.float32)
+    lam = jnp.full((horizon,), 10.0, jnp.float32)
+    rdy = jnp.zeros(horizon, jnp.float32)
+    state = jnp.array([1.0, 1.0, 1.0, 0.0], jnp.float32)
+    zeros = {n: 0.0 for n in C.PARAM_NAMES
+             if n not in ("mu", "l_cold", "l_warm", "w_max", "lr", "momentum", "grad_clip")}
+    params = params_vec(**zeros)
+    z1, m1, v1, c = pgd_step(z, vel, vel, jnp.ones(1), lam, rdy, state,
+                             params, cold_steps=2)
+    assert float(c[0]) == 0.0
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(m1), 0.0, atol=1e-7)
+
+
+@pytest.mark.parametrize("cold_steps", [0, 1, 11, 23])
+def test_ready_shift_boundaries(cold_steps):
+    """readyCold windowing: cold starts contribute exactly D steps later."""
+    horizon = 24
+    x = np.zeros(horizon, np.float32)
+    x[0] = 4.0
+    z = jnp.array(np.concatenate([x, np.zeros(2 * horizon)]), jnp.float32)
+    lam = jnp.zeros(horizon, jnp.float32)
+    rdy = jnp.zeros(horizon, jnp.float32)
+    state = jnp.array([0.0, 0.0, 0.0, 0.0], jnp.float32)
+    q, w = ref.rollout_ref(z, lam, rdy, state, cold_steps)
+    w = np.asarray(w)
+    for k in range(horizon):
+        expect = 4.0 if k > cold_steps else 0.0
+        assert w[k] == expect, (k, w[k], expect)

@@ -1,0 +1,42 @@
+//! Ablation benches: shaping on/off, horizon, clipping gamma, alpha —
+//! the sensitivity analysis Sec. V-E calls for.
+
+use mpc_serverless::experiments::ablations;
+use mpc_serverless::util::bench::Table;
+
+fn main() {
+    println!("=== Ablations (bursty workload) ===");
+
+    let (with, without) = ablations::shaping_ablation(1800.0, 17);
+    println!("\n-- request shaping --");
+    let mut t = Table::new(&["variant", "mean ms", "p95 ms", "cold requests", "forced"]);
+    t.row(&["with shaping".into(), format!("{:.0}", with.mean_ms),
+            format!("{:.0}", with.p95_ms), with.cold_requests.to_string(), "-".into()]);
+    t.row(&["no shaping".into(), format!("{:.0}", without.mean_ms),
+            format!("{:.0}", without.p95_ms), without.cold_requests.to_string(), "-".into()]);
+    t.print();
+
+    println!("\n-- horizon H --");
+    let mut t = Table::new(&["H", "mean ms", "p95 ms", "mean warm"]);
+    for (h, r) in ablations::horizon_sweep(1800.0, 19, &[8, 16, 24]) {
+        t.row(&[h.to_string(), format!("{:.0}", r.mean_ms),
+                format!("{:.0}", r.p95_ms), format!("{:.1}", r.mean_warm)]);
+    }
+    t.print();
+
+    println!("\n-- clipping confidence gamma (Eq. 2) --");
+    let mut t = Table::new(&["gamma", "mean ms", "p95 ms", "mean warm"]);
+    for (g, r) in ablations::gamma_sweep(1800.0, 21, &[1.0, 3.0, 5.0]) {
+        t.row(&[g.to_string(), format!("{:.0}", r.mean_ms),
+                format!("{:.0}", r.p95_ms), format!("{:.1}", r.mean_warm)]);
+    }
+    t.print();
+
+    println!("\n-- cold-delay weight alpha (Eq. 3) --");
+    let mut t = Table::new(&["alpha", "mean ms", "cold requests", "mean warm"]);
+    for (a, r) in ablations::alpha_sweep(1800.0, 23, &[1.0, 4.0, 8.0, 16.0]) {
+        t.row(&[a.to_string(), format!("{:.0}", r.mean_ms),
+                r.cold_requests.to_string(), format!("{:.1}", r.mean_warm)]);
+    }
+    t.print();
+}

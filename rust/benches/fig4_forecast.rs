@@ -1,0 +1,20 @@
+//! Fig. 4: forecast accuracy + runtime, Fourier vs ARIMA, on the
+//! Azure-like and synthetic bursty traces.
+
+use mpc_serverless::experiments::fig4;
+use mpc_serverless::util::bench::Table;
+
+fn main() {
+    println!("=== Fig. 4: forecast error, Fourier vs ARIMA (4 h rolling, horizon eval) ===");
+    let evals = fig4::run(14400.0, 11);
+    let mut t = Table::new(&["trace", "predictor", "accuracy %", "WAPE", "sMAPE", "RMSE", "ms/call"]);
+    for e in &evals {
+        t.row(&[e.trace.clone(), e.predictor.clone(),
+                format!("{:.1}", e.accuracy_pct), format!("{:.3}", e.wape),
+                format!("{:.3}", e.smape), format!("{:.2}", e.rmse),
+                format!("{:.3}", e.mean_runtime_ms)]);
+    }
+    t.print();
+    println!("\npaper: azure 86.2% (fourier) vs 82.5% (arima); synthetic ~95% both;");
+    println!("       runtime 0.1 ms vs 10 ms (their ARIMA = statsmodels MLE refit)");
+}

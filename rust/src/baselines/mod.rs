@@ -1,0 +1,9 @@
+//! Baseline policies the paper compares against (Sec. IV):
+//! the OpenWhisk default reactive policy and IceBreaker adapted to a
+//! homogeneous single node.
+
+pub mod icebreaker;
+pub mod openwhisk;
+
+pub use icebreaker::IceBreaker;
+pub use openwhisk::OpenWhiskDefault;

@@ -1,0 +1,53 @@
+//! OpenWhisk default policy (Sec. IV "Baseline Approaches"): purely
+//! reactive — every arrival is forwarded immediately; a cold start is
+//! triggered whenever no warm container is available; idle containers are
+//! kept warm for a fixed 10-minute window (enforced by the platform's
+//! keep-alive machinery, which the runner schedules).
+
+use crate::cluster::RequestId;
+use crate::coordinator::{Ctx, Scheduler};
+
+#[derive(Debug, Default)]
+pub struct OpenWhiskDefault;
+
+impl Scheduler for OpenWhiskDefault {
+    fn on_arrival(&mut self, req: RequestId, ctx: &mut Ctx) {
+        ctx.dispatch(req);
+    }
+
+    fn name(&self) -> &'static str {
+        "openwhisk"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Platform;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::Ev;
+    use crate::metrics::Recorder;
+    use crate::simulator::EventQueue;
+
+    #[test]
+    fn forwards_immediately_and_cold_starts() {
+        let cfg = ExperimentConfig::default();
+        let mut platform = Platform::new(cfg.platform.clone(), 3);
+        let mut events = EventQueue::new();
+        let mut rec = Recorder::new(4);
+        let mut sched = OpenWhiskDefault;
+        let mut ctx = Ctx {
+            now: 0,
+            platform: &mut platform,
+            events: &mut events,
+            recorder: &mut rec,
+            cfg: &cfg,
+        };
+        ctx.recorder.on_arrival(0, 0);
+        sched.on_arrival(0, &mut ctx);
+        assert_eq!(ctx.platform.counters.cold_starts, 1);
+        assert_eq!(ctx.events.len(), 1); // Ready event scheduled
+        assert_eq!(sched.queue_len(), 0); // nothing held back
+        assert!(sched.tick_interval().is_none());
+    }
+}

@@ -1,0 +1,131 @@
+//! Activation-completion log — the Grafana Loki analog.
+//!
+//! The paper's reclaim actuator (Algorithm 2) refuses to drain a container
+//! until Loki shows a `[MessagingActiveAck] posted completion of activation`
+//! record for every activation assigned to it. This module reproduces that
+//! protocol: the platform appends an assignment record when an activation
+//! starts and an ack when it completes; the safety check compares the two.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::container::ContainerId;
+use crate::cluster::RequestId;
+use crate::config::Micros;
+
+/// One `[MessagingActiveAck]`-style log line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AckRecord {
+    pub container: ContainerId,
+    pub activation: RequestId,
+    pub time: Micros,
+}
+
+#[derive(Debug, Default)]
+pub struct ActivationLog {
+    /// assigned[c] = activations ever dispatched to container c.
+    assigned: BTreeMap<ContainerId, u64>,
+    /// acked[c] = completion acks observed for container c.
+    acked: BTreeMap<ContainerId, u64>,
+    /// Ring of recent ack lines (bounded, like a log retention window).
+    recent: Vec<AckRecord>,
+    cap: usize,
+}
+
+impl ActivationLog {
+    pub fn new() -> Self {
+        ActivationLog {
+            cap: 4096,
+            ..Default::default()
+        }
+    }
+
+    /// Record an activation being assigned to a container.
+    pub fn record_assignment(&mut self, container: ContainerId, _activation: RequestId) {
+        *self.assigned.entry(container).or_insert(0) += 1;
+    }
+
+    /// Record a `[MessagingActiveAck] posted completion of activation` line.
+    pub fn record_ack(&mut self, container: ContainerId, activation: RequestId, time: Micros) {
+        *self.acked.entry(container).or_insert(0) += 1;
+        if self.recent.len() == self.cap {
+            self.recent.remove(0);
+        }
+        self.recent.push(AckRecord {
+            container,
+            activation,
+            time,
+        });
+    }
+
+    /// Algorithm 2 line 5-6: has this container completed *all* assigned
+    /// in-flight activations? (True also for never-used prewarmed pods.)
+    pub fn all_completed(&self, container: ContainerId) -> bool {
+        let assigned = self.assigned.get(&container).copied().unwrap_or(0);
+        let acked = self.acked.get(&container).copied().unwrap_or(0);
+        acked >= assigned
+    }
+
+    /// Most recent ack lines (for debugging / the CLI `logs` command).
+    pub fn recent(&self) -> &[AckRecord] {
+        &self.recent
+    }
+
+    /// Drop per-container counters on reclaim (log hygiene).
+    pub fn forget(&mut self, container: ContainerId) {
+        self.assigned.remove(&container);
+        self.acked.remove(&container);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unused_container_is_safe() {
+        let log = ActivationLog::new();
+        assert!(log.all_completed(7));
+    }
+
+    #[test]
+    fn inflight_blocks_until_ack() {
+        let mut log = ActivationLog::new();
+        log.record_assignment(1, 100);
+        assert!(!log.all_completed(1));
+        log.record_ack(1, 100, 500);
+        assert!(log.all_completed(1));
+    }
+
+    #[test]
+    fn multiple_inflight_all_must_ack() {
+        let mut log = ActivationLog::new();
+        for req in 0..5 {
+            log.record_assignment(2, req);
+        }
+        for req in 0..4 {
+            log.record_ack(2, req, req * 10);
+        }
+        assert!(!log.all_completed(2));
+        log.record_ack(2, 4, 100);
+        assert!(log.all_completed(2));
+    }
+
+    #[test]
+    fn forget_clears_state() {
+        let mut log = ActivationLog::new();
+        log.record_assignment(3, 1);
+        log.forget(3);
+        assert!(log.all_completed(3));
+    }
+
+    #[test]
+    fn recent_ring_is_bounded() {
+        let mut log = ActivationLog::new();
+        log.cap = 4;
+        for i in 0..10 {
+            log.record_ack(1, i, i);
+        }
+        assert_eq!(log.recent().len(), 4);
+        assert_eq!(log.recent()[0].activation, 6);
+    }
+}

@@ -1,0 +1,179 @@
+//! Container lifecycle FSM (the unit the whole paper schedules around).
+//!
+//! States: `ColdStarting` (initializing for `L_cold`; optionally carrying
+//! the request that triggered it) → `Idle` (warm, ready) ⇄ `Busy`
+//! (executing for `L_warm`) → removed (reclaim or keep-alive expiry).
+
+use crate::cluster::RequestId;
+use crate::config::Micros;
+
+pub type ContainerId = u64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerState {
+    /// Initializing; ready at `ready_at`. `pending` is the request that
+    /// triggered this cold start (None for controller prewarms).
+    ColdStarting {
+        ready_at: Micros,
+        pending: Option<RequestId>,
+    },
+    /// Warm and unoccupied since `since`.
+    Idle { since: Micros },
+    /// Executing `request`; completes at `until`.
+    Busy { request: RequestId, until: Micros },
+}
+
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: ContainerId,
+    pub state: ContainerState,
+    pub created_at: Micros,
+    /// End of the most recent activation (== created_at before first use).
+    pub last_used: Micros,
+    /// Completed activations on this container.
+    pub activations: u32,
+    /// Accumulated idle (warm-but-unused) time, for keep-alive accounting.
+    pub idle_accum: Micros,
+}
+
+impl Container {
+    pub fn cold(id: ContainerId, now: Micros, ready_at: Micros, pending: Option<RequestId>) -> Self {
+        Container {
+            id,
+            state: ContainerState::ColdStarting { ready_at, pending },
+            created_at: now,
+            last_used: now,
+            activations: 0,
+            idle_accum: 0,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        matches!(self.state, ContainerState::Idle { .. })
+    }
+
+    pub fn is_busy(&self) -> bool {
+        matches!(self.state, ContainerState::Busy { .. })
+    }
+
+    pub fn is_cold_starting(&self) -> bool {
+        matches!(self.state, ContainerState::ColdStarting { .. })
+    }
+
+    /// Warm = initialized (idle or busy); the gauge Fig. 1b/6 plot.
+    pub fn is_warm(&self) -> bool {
+        self.is_idle() || self.is_busy()
+    }
+
+    /// Idle duration as of `now` (0 unless idle).
+    pub fn idle_for(&self, now: Micros) -> Micros {
+        match self.state {
+            ContainerState::Idle { since } => now.saturating_sub(since),
+            _ => 0,
+        }
+    }
+
+    /// Transition: cold init finished → idle.
+    /// Returns the request bound to this container, if any.
+    pub fn finish_cold_start(&mut self, now: Micros) -> Option<RequestId> {
+        match self.state {
+            ContainerState::ColdStarting { pending, .. } => {
+                self.state = ContainerState::Idle { since: now };
+                // a fresh container's keep-alive clock starts when it is
+                // ready, not when initialization began
+                self.last_used = now;
+                pending
+            }
+            _ => panic!("finish_cold_start on non-cold container {}", self.id),
+        }
+    }
+
+    /// Transition: idle → busy on `request`, until `until`.
+    pub fn start_execution(&mut self, request: RequestId, now: Micros, until: Micros) {
+        match self.state {
+            ContainerState::Idle { since } => {
+                self.idle_accum += now.saturating_sub(since);
+                self.state = ContainerState::Busy { request, until };
+            }
+            _ => panic!("start_execution on non-idle container {}", self.id),
+        }
+    }
+
+    /// Transition: busy → idle; returns the completed request.
+    pub fn finish_execution(&mut self, now: Micros) -> RequestId {
+        match self.state {
+            ContainerState::Busy { request, .. } => {
+                self.state = ContainerState::Idle { since: now };
+                self.last_used = now;
+                self.activations += 1;
+                request
+            }
+            _ => panic!("finish_execution on non-busy container {}", self.id),
+        }
+    }
+
+    /// Composite reclaim-ranking score (Algorithm 2, line 1): prioritize
+    /// long-idle, little-used containers. Higher = better reclaim candidate.
+    pub fn reclaim_score(&self, now: Micros) -> f64 {
+        let idle_s = self.idle_for(now) as f64 / 1e6;
+        // activation count proxies CPU/memory pressure in the paper's
+        // composite (heavily used containers are likely needed again)
+        idle_s - 0.1 * self.activations as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_roundtrip() {
+        let mut c = Container::cold(1, 0, 10_500_000, Some(99));
+        assert!(c.is_cold_starting());
+        assert!(!c.is_warm());
+        let pending = c.finish_cold_start(10_500_000);
+        assert_eq!(pending, Some(99));
+        assert!(c.is_idle());
+        assert!(c.is_warm());
+        c.start_execution(99, 10_500_000, 10_780_000);
+        assert!(c.is_busy());
+        let done = c.finish_execution(10_780_000);
+        assert_eq!(done, 99);
+        assert_eq!(c.activations, 1);
+        assert_eq!(c.last_used, 10_780_000);
+    }
+
+    #[test]
+    fn idle_accounting_accumulates() {
+        let mut c = Container::cold(1, 0, 100, None);
+        c.finish_cold_start(100);
+        c.start_execution(1, 600, 880); // idle 100..600 = 500
+        c.finish_execution(880);
+        c.start_execution(2, 1000, 1280); // idle 880..1000 = 120
+        c.finish_execution(1280);
+        assert_eq!(c.idle_accum, 620);
+        assert_eq!(c.idle_for(2000), 720); // still idle since 1280
+    }
+
+    #[test]
+    fn reclaim_score_prefers_long_idle_low_use() {
+        let mut fresh = Container::cold(1, 0, 0, None);
+        fresh.finish_cold_start(0);
+        let mut veteran = Container::cold(2, 0, 0, None);
+        veteran.finish_cold_start(0);
+        for i in 0..50 {
+            veteran.start_execution(i, i * 1000, i * 1000 + 1);
+            veteran.finish_execution(i * 1000 + 1);
+        }
+        // same idle-since time for both → veteran scores lower
+        let now = 100_000_000;
+        assert!(fresh.reclaim_score(now) > veteran.reclaim_score(now));
+    }
+
+    #[test]
+    #[should_panic(expected = "non-idle")]
+    fn cannot_execute_on_cold_container() {
+        let mut c = Container::cold(1, 0, 100, None);
+        c.start_execution(1, 0, 10);
+    }
+}

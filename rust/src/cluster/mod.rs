@@ -1,0 +1,19 @@
+//! OpenWhisk/Kubernetes cluster substrate (DESIGN.md substitution table).
+//!
+//! - [`container`]: container lifecycle FSM
+//! - [`platform`]: the platform semantics (invoke / prewarm / reclaim /
+//!   keep-alive / capacity)
+//! - [`activation_log`]: Grafana Loki analog (reclaim-safety protocol)
+//! - [`telemetry`]: Prometheus analog (gauges + counters)
+
+pub mod activation_log;
+pub mod container;
+pub mod platform;
+pub mod telemetry;
+
+/// Request (activation) identifier, assigned by the workload in arrival order.
+pub type RequestId = u64;
+
+pub use container::{Container, ContainerId, ContainerState};
+pub use platform::{CompleteOutcome, InvokeOutcome, KeepAliveVerdict, Platform, ReadyOutcome};
+pub use telemetry::{Counters, GaugeSample, Telemetry};

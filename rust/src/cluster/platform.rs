@@ -1,0 +1,515 @@
+//! The serverless platform substrate — OpenWhisk-on-Kubernetes analog.
+//!
+//! Reproduces the scheduling semantics the paper's results depend on
+//! (DESIGN.md substitution table): cold start on warm-miss, bounded replica
+//! pool (64 = 32 vCPU / 0.5), FCFS backlog at capacity, keep-alive expiry,
+//! and the reclaim-safety protocol of Algorithm 2 (activation-log check).
+//!
+//! The platform is event-driven but owns no clock: methods take `now` and
+//! return outcomes carrying future timestamps; the experiment runner turns
+//! those into simulator events (or real timers in real-time mode).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::cluster::activation_log::ActivationLog;
+use crate::cluster::container::{Container, ContainerId};
+use crate::cluster::telemetry::{Counters, GaugeSample};
+use crate::cluster::RequestId;
+use crate::config::{Micros, PlatformConfig};
+use crate::util::rng::Rng;
+
+/// Result of an invocation request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InvokeOutcome {
+    /// Bound to an idle warm container; execution completes at `done_at`.
+    WarmStart { cid: ContainerId, done_at: Micros },
+    /// Triggered a cold start; container ready (and execution starts) at
+    /// `ready_at`.
+    ColdStart { cid: ContainerId, ready_at: Micros },
+    /// Replica pool exhausted; queued in the platform's FCFS backlog.
+    AtCapacity,
+}
+
+/// Result of a cold container finishing initialization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadyOutcome {
+    /// Went idle (controller prewarm with no waiting work).
+    Idle,
+    /// Immediately started executing `request`; completes at `done_at`.
+    Started { request: RequestId, done_at: Micros },
+}
+
+/// Result of an execution completing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompleteOutcome {
+    pub completed: RequestId,
+    /// FCFS backlog request that immediately reused the container.
+    pub next: Option<(RequestId, Micros)>,
+}
+
+/// Keep-alive check verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeepAliveVerdict {
+    /// Container removed (idle past the keep-alive window).
+    Expired,
+    /// Container was reused since the check was scheduled; re-check then.
+    Recheck(Micros),
+    /// Container already gone or currently busy/cold-starting.
+    NotApplicable,
+}
+
+#[derive(Debug)]
+pub struct Platform {
+    pub cfg: PlatformConfig,
+    containers: BTreeMap<ContainerId, Container>,
+    next_cid: ContainerId,
+    fcfs: VecDeque<RequestId>,
+    rng: Rng,
+    pub counters: Counters,
+    pub log: ActivationLog,
+    /// keep-alive durations (last activation → removal) of removed containers
+    removed_keepalive: Vec<Micros>,
+    /// total idle (warm-unused) time of removed containers
+    removed_idle_total: Vec<Micros>,
+    /// containers ever created (for conservation checks)
+    pub spawned: u64,
+    pub removed: u64,
+}
+
+impl Platform {
+    pub fn new(cfg: PlatformConfig, seed: u64) -> Self {
+        Platform {
+            cfg,
+            containers: BTreeMap::new(),
+            next_cid: 1,
+            fcfs: VecDeque::new(),
+            rng: Rng::new(seed),
+            counters: Counters::default(),
+            log: ActivationLog::new(),
+            removed_keepalive: Vec::new(),
+            removed_idle_total: Vec::new(),
+            spawned: 0,
+            removed: 0,
+        }
+    }
+
+    fn jitter(&mut self, base: Micros) -> Micros {
+        let j = self.cfg.latency_jitter;
+        if j <= 0.0 {
+            return base;
+        }
+        let f = self.rng.range_f64(1.0 - j, 1.0 + j);
+        (base as f64 * f).round().max(1.0) as Micros
+    }
+
+    // ---- gauges -------------------------------------------------------------
+
+    pub fn total(&self) -> u32 {
+        self.containers.len() as u32
+    }
+    pub fn idle_count(&self) -> u32 {
+        self.containers.values().filter(|c| c.is_idle()).count() as u32
+    }
+    pub fn busy_count(&self) -> u32 {
+        self.containers.values().filter(|c| c.is_busy()).count() as u32
+    }
+    pub fn warm_count(&self) -> u32 {
+        self.containers.values().filter(|c| c.is_warm()).count() as u32
+    }
+    pub fn cold_starting_count(&self) -> u32 {
+        self.containers.values().filter(|c| c.is_cold_starting()).count() as u32
+    }
+    pub fn fcfs_len(&self) -> usize {
+        self.fcfs.len()
+    }
+
+    /// Idle containers unused for at least `min_idle` (IceBreaker's
+    /// retention-aware release eligibility).
+    pub fn idle_containers_older_than(&self, min_idle: Micros, now: Micros) -> u32 {
+        self.containers
+            .values()
+            .filter(|c| c.idle_for(now) >= min_idle)
+            .count() as u32
+    }
+
+    pub fn gauge(&self, now: Micros, queue_len: u32) -> GaugeSample {
+        GaugeSample {
+            time: now,
+            warm: self.warm_count(),
+            idle: self.idle_count(),
+            busy: self.busy_count(),
+            cold_starting: self.cold_starting_count(),
+            queue_len,
+        }
+    }
+
+    /// Ready times of in-flight cold starts (the MPC's readyCold input).
+    pub fn cold_ready_times(&self) -> Vec<Micros> {
+        self.containers
+            .values()
+            .filter_map(|c| match c.state {
+                crate::cluster::container::ContainerState::ColdStarting { ready_at, .. } => {
+                    Some(ready_at)
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    // ---- invocation path ----------------------------------------------------
+
+    /// Invoke `req` now. OpenWhisk semantics: bind to a warm idle container
+    /// if any (most-recently-used first, matching OpenWhisk's reuse
+    /// affinity), otherwise cold start, otherwise FCFS-queue at capacity.
+    pub fn invoke(&mut self, req: RequestId, now: Micros) -> InvokeOutcome {
+        self.counters.invocations += 1;
+        // MRU idle container: OpenWhisk reuses the warmest replica
+        let pick = self
+            .containers
+            .values()
+            .filter(|c| c.is_idle())
+            .max_by_key(|c| (c.last_used, c.id))
+            .map(|c| c.id);
+        if let Some(cid) = pick {
+            let done_at = now + self.jitter(self.cfg.l_warm);
+            let c = self.containers.get_mut(&cid).unwrap();
+            c.start_execution(req, now, done_at);
+            self.log.record_assignment(cid, req);
+            return InvokeOutcome::WarmStart { cid, done_at };
+        }
+        if self.total() < self.cfg.resource_cap() {
+            let ready_at = now + self.jitter(self.cfg.l_cold);
+            let cid = self.spawn(now, ready_at, Some(req));
+            self.counters.cold_starts += 1;
+            return InvokeOutcome::ColdStart { cid, ready_at };
+        }
+        self.counters.capacity_queued += 1;
+        self.fcfs.push_back(req);
+        InvokeOutcome::AtCapacity
+    }
+
+    fn spawn(&mut self, now: Micros, ready_at: Micros, pending: Option<RequestId>) -> ContainerId {
+        let cid = self.next_cid;
+        self.next_cid += 1;
+        self.spawned += 1;
+        self.containers
+            .insert(cid, Container::cold(cid, now, ready_at, pending));
+        cid
+    }
+
+    /// Controller prewarm (Listing 1, forcePrewarm=true): start one unbound
+    /// cold container. Returns None (and counts the rejection) at capacity.
+    pub fn prewarm_one(&mut self, now: Micros) -> Option<(ContainerId, Micros)> {
+        if self.total() >= self.cfg.resource_cap() {
+            self.counters.prewarms_rejected += 1;
+            return None;
+        }
+        let ready_at = now + self.jitter(self.cfg.l_cold);
+        let cid = self.spawn(now, ready_at, None);
+        self.counters.prewarms_started += 1;
+        Some((cid, ready_at))
+    }
+
+    /// Cold init finished (ContainerReady event). Binds the triggering
+    /// request, else the FCFS backlog head, else goes idle.
+    pub fn container_ready(&mut self, cid: ContainerId, now: Micros) -> ReadyOutcome {
+        let pending = {
+            let c = self
+                .containers
+                .get_mut(&cid)
+                .expect("ready event for unknown container");
+            c.finish_cold_start(now)
+        };
+        let next = pending.or_else(|| self.fcfs.pop_front());
+        match next {
+            Some(request) => {
+                let done_at = now + self.jitter(self.cfg.l_warm);
+                let c = self.containers.get_mut(&cid).unwrap();
+                c.start_execution(request, now, done_at);
+                self.log.record_assignment(cid, request);
+                ReadyOutcome::Started { request, done_at }
+            }
+            None => ReadyOutcome::Idle,
+        }
+    }
+
+    /// Execution finished (ExecDone event). Acks the activation and lets the
+    /// FCFS backlog immediately reuse the now-idle container.
+    pub fn exec_complete(&mut self, cid: ContainerId, now: Micros) -> CompleteOutcome {
+        let completed = {
+            let c = self
+                .containers
+                .get_mut(&cid)
+                .expect("completion for unknown container");
+            c.finish_execution(now)
+        };
+        self.log.record_ack(cid, completed, now);
+        let next = self.fcfs.pop_front().map(|req| {
+            let done_at = now + self.jitter(self.cfg.l_warm);
+            let c = self.containers.get_mut(&cid).unwrap();
+            c.start_execution(req, now, done_at);
+            self.log.record_assignment(cid, req);
+            (req, done_at)
+        });
+        CompleteOutcome { completed, next }
+    }
+
+    // ---- reclaim (Algorithm 2) ----------------------------------------------
+
+    /// Reclaim up to `n` idle containers. Ranking by composite score
+    /// (line 1), safety via the activation log (lines 5-6), then drain
+    /// (lines 7-9). Returns the reclaimed ids.
+    pub fn try_reclaim(&mut self, n: u32, now: Micros) -> Vec<ContainerId> {
+        if n == 0 {
+            return Vec::new();
+        }
+        // rankPods: idle candidates by descending reclaim score
+        let mut candidates: Vec<(f64, ContainerId)> = self
+            .containers
+            .values()
+            .filter(|c| c.is_idle())
+            .map(|c| (c.reclaim_score(now), c.id))
+            .collect();
+        candidates.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut reclaimed = Vec::new();
+        for (_, cid) in candidates.into_iter().take(n as usize) {
+            // safety: the log must show completion for all assigned work
+            if !self.log.all_completed(cid) {
+                continue;
+            }
+            self.remove(cid, now);
+            self.counters.reclaims += 1;
+            reclaimed.push(cid);
+        }
+        reclaimed
+    }
+
+    /// Keep-alive check for one container (scheduled at last_used+keep_alive).
+    pub fn keepalive_check(&mut self, cid: ContainerId, now: Micros) -> KeepAliveVerdict {
+        let Some(c) = self.containers.get(&cid) else {
+            return KeepAliveVerdict::NotApplicable;
+        };
+        if !c.is_idle() {
+            return KeepAliveVerdict::NotApplicable;
+        }
+        let due = c.last_used + self.cfg.keep_alive;
+        if now >= due {
+            self.remove(cid, now);
+            self.counters.keepalive_expiries += 1;
+            KeepAliveVerdict::Expired
+        } else {
+            KeepAliveVerdict::Recheck(due)
+        }
+    }
+
+    fn remove(&mut self, cid: ContainerId, now: Micros) {
+        if let Some(c) = self.containers.remove(&cid) {
+            debug_assert!(c.is_idle(), "removing non-idle container {cid}");
+            // paper metric: duration from last activation to reclamation
+            self.removed_keepalive.push(now.saturating_sub(c.last_used));
+            self.removed_idle_total
+                .push(c.idle_accum + c.idle_for(now));
+            self.log.forget(cid);
+            self.removed += 1;
+        }
+    }
+
+    /// End-of-run accounting: treat still-alive idle containers as kept
+    /// warm until `now`. Returns (keepalive durations, total idle times).
+    pub fn finalize(&mut self, now: Micros) -> (Vec<Micros>, Vec<Micros>) {
+        let ids: Vec<ContainerId> = self.containers.keys().copied().collect();
+        for cid in ids {
+            let c = &self.containers[&cid];
+            if c.is_idle() {
+                self.remove(cid, now);
+            }
+        }
+        (
+            std::mem::take(&mut self.removed_keepalive),
+            std::mem::take(&mut self.removed_idle_total),
+        )
+    }
+
+    /// Direct read of accumulated keep-alive records (without finalize).
+    pub fn keepalive_records(&self) -> &[Micros] {
+        &self.removed_keepalive
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn platform() -> Platform {
+        let cfg = PlatformConfig {
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        Platform::new(cfg, 1)
+    }
+
+    #[test]
+    fn cold_start_when_no_warm_container() {
+        let mut p = platform();
+        match p.invoke(1, 0) {
+            InvokeOutcome::ColdStart { ready_at, .. } => assert_eq!(ready_at, 10_500_000),
+            o => panic!("expected cold start, got {o:?}"),
+        }
+        assert_eq!(p.counters.cold_starts, 1);
+        assert_eq!(p.cold_starting_count(), 1);
+    }
+
+    #[test]
+    fn warm_reuse_after_completion() {
+        let mut p = platform();
+        let InvokeOutcome::ColdStart { cid, ready_at } = p.invoke(1, 0) else {
+            panic!()
+        };
+        let ReadyOutcome::Started { done_at, .. } = p.container_ready(cid, ready_at) else {
+            panic!()
+        };
+        assert_eq!(done_at, ready_at + 280_000);
+        let out = p.exec_complete(cid, done_at);
+        assert_eq!(out.completed, 1);
+        // second request reuses the warm container
+        match p.invoke(2, done_at + 1000) {
+            InvokeOutcome::WarmStart { cid: c2, done_at: d2 } => {
+                assert_eq!(c2, cid);
+                assert_eq!(d2, done_at + 1000 + 280_000);
+            }
+            o => panic!("expected warm start, got {o:?}"),
+        }
+        assert_eq!(p.counters.cold_starts, 1);
+    }
+
+    #[test]
+    fn capacity_bound_enforced_and_fcfs_drains() {
+        let cfg = PlatformConfig {
+            max_containers: 2,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let mut p = Platform::new(cfg, 1);
+        assert!(matches!(p.invoke(1, 0), InvokeOutcome::ColdStart { .. }));
+        assert!(matches!(p.invoke(2, 0), InvokeOutcome::ColdStart { .. }));
+        assert!(matches!(p.invoke(3, 0), InvokeOutcome::AtCapacity));
+        assert_eq!(p.fcfs_len(), 1);
+        // first container ready: serves its own bound request (req 1)
+        let ReadyOutcome::Started { request, done_at } = p.container_ready(1, 10_500_000)
+        else {
+            panic!()
+        };
+        assert_eq!(request, 1);
+        // completion hands the container to the FCFS backlog (req 3)
+        let out = p.exec_complete(1, done_at);
+        assert_eq!(out.completed, 1);
+        assert_eq!(out.next.unwrap().0, 3);
+        assert_eq!(p.fcfs_len(), 0);
+    }
+
+    #[test]
+    fn prewarm_goes_idle_and_respects_capacity() {
+        let cfg = PlatformConfig {
+            max_containers: 1,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let mut p = Platform::new(cfg, 1);
+        let (cid, ready_at) = p.prewarm_one(0).unwrap();
+        assert!(p.prewarm_one(0).is_none());
+        assert_eq!(p.counters.prewarms_rejected, 1);
+        assert_eq!(p.container_ready(cid, ready_at), ReadyOutcome::Idle);
+        assert_eq!(p.idle_count(), 1);
+        // warm hit now
+        assert!(matches!(
+            p.invoke(1, ready_at + 10),
+            InvokeOutcome::WarmStart { .. }
+        ));
+    }
+
+    #[test]
+    fn reclaim_only_idle_and_respects_log() {
+        let mut p = platform();
+        // two prewarmed idle containers + one busy
+        let (c1, r1) = p.prewarm_one(0).unwrap();
+        let (c2, r2) = p.prewarm_one(0).unwrap();
+        p.container_ready(c1, r1);
+        p.container_ready(c2, r2);
+        let InvokeOutcome::WarmStart { cid: busy, .. } = p.invoke(9, r2 + 1) else {
+            panic!()
+        };
+        let got = p.try_reclaim(10, r2 + 2);
+        assert_eq!(got.len(), 1); // only the remaining idle one
+        assert!(!got.contains(&busy));
+        assert_eq!(p.warm_count(), 1); // busy survives
+    }
+
+    #[test]
+    fn keepalive_expiry_and_recheck() {
+        let mut p = platform();
+        let (cid, ready_at) = p.prewarm_one(0).unwrap();
+        p.container_ready(cid, ready_at);
+        // too early: due at last_used + 600 s
+        let due = ready_at + 600_000_000;
+        match p.keepalive_check(cid, due - 5) {
+            KeepAliveVerdict::Recheck(t) => assert_eq!(t, due),
+            v => panic!("{v:?}"),
+        }
+        assert_eq!(p.keepalive_check(cid, due), KeepAliveVerdict::Expired);
+        assert_eq!(p.total(), 0);
+        assert_eq!(p.keepalive_check(cid, due), KeepAliveVerdict::NotApplicable);
+    }
+
+    #[test]
+    fn keepalive_metric_records_last_use_to_removal() {
+        let mut p = platform();
+        let (cid, ready_at) = p.prewarm_one(0).unwrap();
+        p.container_ready(cid, ready_at);
+        let reclaim_at = ready_at + 42_000_000;
+        p.try_reclaim(1, reclaim_at);
+        // last_used for a never-executed prewarm is its ready time
+        assert_eq!(p.keepalive_records(), &[42_000_000]);
+    }
+
+    #[test]
+    fn mru_reuse_prefers_warmest() {
+        let mut p = platform();
+        let (c1, r1) = p.prewarm_one(0).unwrap();
+        let (c2, r2) = p.prewarm_one(0).unwrap();
+        p.container_ready(c1, r1);
+        p.container_ready(c2, r2);
+        // execute once on c2 so it is most recently used
+        let InvokeOutcome::WarmStart { cid, done_at } = p.invoke(1, r2 + 1) else {
+            panic!()
+        };
+        p.exec_complete(cid, done_at);
+        let InvokeOutcome::WarmStart { cid: again, .. } = p.invoke(2, done_at + 5) else {
+            panic!()
+        };
+        assert_eq!(again, cid);
+        let _ = c1;
+    }
+
+    #[test]
+    fn conservation_spawned_equals_removed_plus_live() {
+        let mut p = platform();
+        for i in 0..5 {
+            let _ = p.invoke(i, i * 1000);
+        }
+        let ready: Vec<_> = p.cold_ready_times();
+        assert_eq!(ready.len(), 5);
+        assert_eq!(p.spawned, p.removed + p.total() as u64);
+    }
+
+    #[test]
+    fn finalize_accounts_for_survivors() {
+        let mut p = platform();
+        let (cid, ready_at) = p.prewarm_one(0).unwrap();
+        p.container_ready(cid, ready_at);
+        let (ka, idle) = p.finalize(ready_at + 1_000_000);
+        assert_eq!(ka.len(), 1);
+        assert_eq!(idle.len(), 1);
+        assert_eq!(idle[0], 1_000_000);
+        assert_eq!(p.total(), 0);
+    }
+}

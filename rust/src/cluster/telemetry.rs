@@ -1,0 +1,98 @@
+//! Metrics registry — the Prometheus analog.
+//!
+//! The controller reads exactly what the paper scrapes from Prometheus:
+//! the per-interval invocation rate (forecast history) and the warm /
+//! cold-starting container gauges. Counters accumulate platform totals
+//! for the experiment reports.
+
+use crate::config::Micros;
+
+/// Monotonic platform counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Counters {
+    pub invocations: u64,
+    pub cold_starts: u64,
+    pub prewarms_started: u64,
+    pub prewarms_rejected: u64,
+    pub reclaims: u64,
+    pub keepalive_expiries: u64,
+    pub capacity_queued: u64,
+}
+
+/// One gauge sample (scrape).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GaugeSample {
+    pub time: Micros,
+    pub warm: u32,
+    pub idle: u32,
+    pub busy: u32,
+    pub cold_starting: u32,
+    pub queue_len: u32,
+}
+
+/// Time-series store for gauge scrapes + counters.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    pub counters: Counters,
+    samples: Vec<GaugeSample>,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn scrape(&mut self, sample: GaugeSample) {
+        self.samples.push(sample);
+    }
+
+    pub fn samples(&self) -> &[GaugeSample] {
+        &self.samples
+    }
+
+    /// Mean warm-container gauge over all scrapes (Fig. 6's quantity).
+    pub fn mean_warm(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|s| s.warm as f64).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Warm-container series (time, count) at the scrape cadence.
+    pub fn warm_series(&self) -> Vec<(Micros, u32)> {
+        self.samples.iter().map(|s| (s.time, s.warm)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(time: Micros, warm: u32) -> GaugeSample {
+        GaugeSample {
+            time,
+            warm,
+            idle: 0,
+            busy: warm,
+            cold_starting: 0,
+            queue_len: 0,
+        }
+    }
+
+    #[test]
+    fn mean_warm_over_scrapes() {
+        let mut t = Telemetry::new();
+        t.scrape(sample(0, 2));
+        t.scrape(sample(60, 4));
+        t.scrape(sample(120, 6));
+        assert_eq!(t.mean_warm(), 4.0);
+        assert_eq!(t.warm_series(), vec![(0, 2), (60, 4), (120, 6)]);
+    }
+
+    #[test]
+    fn empty_telemetry_is_zero() {
+        let t = Telemetry::new();
+        assert_eq!(t.mean_warm(), 0.0);
+        assert!(t.samples().is_empty());
+    }
+}

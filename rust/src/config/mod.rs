@@ -1,0 +1,343 @@
+//! Typed configuration for the platform, the controller, and experiments.
+//!
+//! Defaults mirror the paper's testbed (Sec. IV) and the artifact constants
+//! baked by `python/compile/constants.py` (cross-checked at runtime against
+//! `artifacts/meta.json` by `runtime::artifacts`).
+
+use crate::util::json::Json;
+
+/// Microseconds — the simulator's native time unit.
+pub type Micros = u64;
+
+pub const MICROS_PER_SEC: u64 = 1_000_000;
+
+pub fn secs(s: f64) -> Micros {
+    (s * MICROS_PER_SEC as f64).round() as Micros
+}
+
+pub fn to_secs(us: Micros) -> f64 {
+    us as f64 / MICROS_PER_SEC as f64
+}
+
+/// Serverless platform substrate parameters (OpenWhisk-on-k3s analog).
+#[derive(Debug, Clone)]
+pub struct PlatformConfig {
+    /// Warm execution latency L_warm (paper: 280 ms for EfficientDet).
+    pub l_warm: Micros,
+    /// Cold start initialization latency L_cold (paper: 10.5 s).
+    pub l_cold: Micros,
+    /// Max concurrent replicas (paper: 64, CPU-bound: 32 vCPU / 0.5 each).
+    pub max_containers: u32,
+    /// Node CPU capacity in milli-vCPU (paper: 32 vCPU).
+    pub node_cpu_millis: u32,
+    /// Node memory capacity in MiB (paper: 48 GB).
+    pub node_mem_mib: u32,
+    /// Per-container CPU request in milli-vCPU (paper: 0.5 vCPU).
+    pub container_cpu_millis: u32,
+    /// Per-container memory limit in MiB (paper: 256 MB).
+    pub container_mem_mib: u32,
+    /// Default keep-alive for idle containers (OpenWhisk: 10 minutes).
+    pub keep_alive: Micros,
+    /// Jitter fraction applied to execution/init latencies (0 = exact).
+    pub latency_jitter: f64,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        PlatformConfig {
+            l_warm: secs(0.280),
+            l_cold: secs(10.5),
+            max_containers: 64,
+            node_cpu_millis: 32_000,
+            node_mem_mib: 48 * 1024,
+            container_cpu_millis: 500,
+            container_mem_mib: 256,
+            keep_alive: secs(600.0),
+            latency_jitter: 0.05,
+        }
+    }
+}
+
+impl PlatformConfig {
+    /// Replica cap implied by node resources (the binding constraint is CPU
+    /// in the paper's testbed: 32 vCPU / 0.5 = 64).
+    pub fn resource_cap(&self) -> u32 {
+        let by_cpu = self.node_cpu_millis / self.container_cpu_millis.max(1);
+        let by_mem = self.node_mem_mib / self.container_mem_mib.max(1);
+        by_cpu.min(by_mem).min(self.max_containers)
+    }
+}
+
+/// MPC controller parameters (Sec. III; Table I weights).
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Control interval Δt.
+    pub dt: Micros,
+    /// Forecast window W (samples of length Δt).
+    pub window: usize,
+    /// Prediction horizon H (steps).
+    pub horizon: usize,
+    /// Cold start delay in steps D = ceil(L_cold / Δt).
+    pub cold_steps: usize,
+    /// Statistical-clipping confidence γ (Eq. 2).
+    pub gamma_clip: f64,
+    /// Cost weights in PARAM_NAMES order (alpha..grad_clip).
+    pub weights: Weights,
+    /// PGD iterations (must match the artifact when using the HLO solver).
+    pub pgd_iters: u32,
+    /// Force-dispatch guard: max time a request may be shaped/queued before
+    /// it is dispatched unconditionally (even onto a cold container).
+    pub max_shaping_delay: Micros,
+}
+
+/// MPC objective weights (Table I). Layout mirrors
+/// `python/compile/constants.PARAM_NAMES`.
+#[derive(Debug, Clone, Copy)]
+pub struct Weights {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+    pub delta: f64,
+    pub eta: f64,
+    pub rho1: f64,
+    pub rho2: f64,
+    pub rho_me: f64,
+    pub kappa: f64,
+    pub mu: f64,
+    pub l_cold: f64,
+    pub l_warm: f64,
+    pub w_max: f64,
+    pub lr: f64,
+    pub momentum: f64,
+    pub grad_clip: f64,
+}
+
+impl Default for Weights {
+    fn default() -> Self {
+        Weights {
+            // tuned on the bursty workload (EXPERIMENTS.md §Tuning):
+            // strong cold-delay aversion, slow reclaim (rho1) so the pool
+            // decays gradually between bursts rather than collapsing
+            alpha: 16.0,
+            // waiting one step costs ~dt user-seconds: beta * l_warm ~= dt
+            beta: 107.0,
+            gamma: 0.0002,
+            delta: 2.0,
+            eta: 0.005,
+            rho1: 0.2,
+            rho2: 0.02,
+            rho_me: 2.0,
+            kappa: 0.5,
+            // planning-model service rate: per-container budget per step
+            // sized for a 1.5 s drain target (DESIGN.md §Timescale), keeping
+            // sub-step queueing delay visible to the step-granular planner
+            mu: 1.5 / 0.280,
+            l_cold: 10.5,
+            l_warm: 0.280,
+            w_max: 64.0,
+            lr: 0.5,
+            momentum: 0.9, // Adam beta1
+            grad_clip: 5000.0,
+        }
+    }
+}
+
+impl Weights {
+    pub fn to_params_vec(&self) -> [f32; 16] {
+        [
+            self.alpha as f32,
+            self.beta as f32,
+            self.gamma as f32,
+            self.delta as f32,
+            self.eta as f32,
+            self.rho1 as f32,
+            self.rho2 as f32,
+            self.rho_me as f32,
+            self.kappa as f32,
+            self.mu as f32,
+            self.l_cold as f32,
+            self.l_warm as f32,
+            self.w_max as f32,
+            self.lr as f32,
+            self.momentum as f32,
+            self.grad_clip as f32,
+        ]
+    }
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            // coarse enough that H * dt spans the inter-burst gaps the
+            // predictor must anticipate (DESIGN.md §Timescale)
+            dt: secs(30.0),
+            window: 120,
+            horizon: 24,
+            cold_steps: 1,
+            gamma_clip: 6.0,
+            weights: Weights::default(),
+            pgd_iters: 300,
+            // force-dispatch guard: a request never shapes longer than
+            // slightly over L_cold — beyond that a cold start wins anyway
+            max_shaping_delay: secs(12.0),
+        }
+    }
+}
+
+/// Which scheduling policy an experiment runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// OpenWhisk default: reactive cold starts + fixed keep-alive.
+    OpenWhisk,
+    /// IceBreaker adapted to a homogeneous single node.
+    IceBreaker,
+    /// This paper's MPC scheduler.
+    Mpc,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::OpenWhisk => "openwhisk",
+            Policy::IceBreaker => "icebreaker",
+            Policy::Mpc => "mpc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "openwhisk" | "default" => Some(Policy::OpenWhisk),
+            "icebreaker" => Some(Policy::IceBreaker),
+            "mpc" | "mpc-scheduler" => Some(Policy::Mpc),
+            _ => None,
+        }
+    }
+}
+
+/// Workload selection for experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Azure-Functions-like steady periodic trace (Sec. IV "Workload").
+    AzureLike,
+    /// Synthetic bursty trace (bursts 1-5 s at 5-300 req/s, idle 50-800 s).
+    SyntheticBursty,
+}
+
+impl TraceKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::AzureLike => "azure",
+            TraceKind::SyntheticBursty => "synthetic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TraceKind> {
+        match s {
+            "azure" | "azure-like" => Some(TraceKind::AzureLike),
+            "synthetic" | "bursty" => Some(TraceKind::SyntheticBursty),
+            _ => None,
+        }
+    }
+}
+
+/// A full experiment description (policy x workload x duration).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub platform: PlatformConfig,
+    pub controller: ControllerConfig,
+    pub trace: TraceKind,
+    pub duration: Micros,
+    pub seed: u64,
+    /// Sampling interval for container-usage metrics (paper: 1 minute).
+    pub sample_interval: Micros,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            platform: PlatformConfig::default(),
+            controller: ControllerConfig::default(),
+            trace: TraceKind::AzureLike,
+            duration: secs(3600.0), // paper: 60-minute runs
+            seed: 42,
+            sample_interval: secs(60.0),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace", Json::Str(self.trace.name().into())),
+            ("duration_s", Json::Num(to_secs(self.duration))),
+            ("seed", Json::Num(self.seed as f64)),
+            ("dt_s", Json::Num(to_secs(self.controller.dt))),
+            ("horizon", Json::Num(self.controller.horizon as f64)),
+            ("window", Json::Num(self.controller.window as f64)),
+            ("l_warm_s", Json::Num(to_secs(self.platform.l_warm))),
+            ("l_cold_s", Json::Num(to_secs(self.platform.l_cold))),
+            ("max_containers", Json::Num(self.platform.max_containers as f64)),
+            ("keep_alive_s", Json::Num(to_secs(self.platform.keep_alive))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants() {
+        let p = PlatformConfig::default();
+        assert_eq!(p.l_warm, 280_000);
+        assert_eq!(p.l_cold, 10_500_000);
+        assert_eq!(p.resource_cap(), 64); // 32 vCPU / 0.5
+        let c = ControllerConfig::default();
+        assert_eq!(c.cold_steps, 1); // ceil(10.5 / 30.0)
+        assert_eq!(c.dt, secs(30.0));
+        assert_eq!(c.horizon, 24);
+    }
+
+    #[test]
+    fn resource_cap_respects_memory() {
+        let p = PlatformConfig {
+            node_mem_mib: 1024,
+            container_mem_mib: 256,
+            ..Default::default()
+        };
+        assert_eq!(p.resource_cap(), 4);
+    }
+
+    #[test]
+    fn weights_vec_layout_matches_meta_order() {
+        let w = Weights::default();
+        let v = w.to_params_vec();
+        assert_eq!(v[0], 16.0); // alpha
+        assert_eq!(v[9], (1.5f64 / 0.280) as f32); // mu (1.5 s drain target)
+        assert_eq!(v[12], 64.0); // w_max
+        assert_eq!(v[15], 5000.0); // grad_clip
+    }
+
+    #[test]
+    fn policy_and_trace_parse() {
+        assert_eq!(Policy::parse("mpc"), Some(Policy::Mpc));
+        assert_eq!(Policy::parse("default"), Some(Policy::OpenWhisk));
+        assert_eq!(Policy::parse("nope"), None);
+        assert_eq!(TraceKind::parse("bursty"), Some(TraceKind::SyntheticBursty));
+    }
+
+    #[test]
+    fn time_conversions_roundtrip() {
+        assert_eq!(secs(1.0), MICROS_PER_SEC);
+        assert_eq!(secs(0.280), 280_000);
+        assert!((to_secs(secs(123.456)) - 123.456).abs() < 1e-6);
+    }
+
+    #[test]
+    fn experiment_json_has_core_fields() {
+        let e = ExperimentConfig::default();
+        let j = e.to_json();
+        assert_eq!(j.path("trace").unwrap().as_str(), Some("azure"));
+        assert_eq!(j.path("duration_s").unwrap().as_f64(), Some(3600.0));
+    }
+}

@@ -1,0 +1,332 @@
+//! The paper's MPC scheduler (Sec. III): forecast → optimize → actuate at
+//! every control interval, with predictive request shaping.
+//!
+//! Requests are *not* forwarded on arrival: they enter the request queue
+//! (Redis analog) and the dispatch actuator releases them in warm-capacity
+//! batches (Algorithm 1), guided by the optimized plan. A force-dispatch
+//! guard bounds worst-case shaping delay so a mispredicted lull can never
+//! strand requests.
+
+use std::time::Instant;
+
+use crate::cluster::RequestId;
+use crate::config::{ControllerConfig, Micros};
+use crate::coordinator::queue::RequestQueue;
+use crate::coordinator::{Ctx, Scheduler};
+use crate::forecast::Forecaster;
+use crate::mpc::{repair, MpcInput, MpcSolver, Plan};
+use crate::util::timeseries::RingBuffer;
+
+pub struct MpcScheduler {
+    cc: ControllerConfig,
+    queue: RequestQueue,
+    history: RingBuffer,
+    arrivals_this_interval: u32,
+    forecaster: Box<dyn Forecaster>,
+    solver: Box<dyn MpcSolver>,
+    warm_start: Vec<f64>,
+    x_prev: f64,
+    /// Last optimized plan (observability / tests).
+    pub last_plan: Option<Plan>,
+    /// Total force-dispatches (guard activations).
+    pub forced_dispatches: u64,
+    /// Event-triggered replans (unforecasted load spikes).
+    pub emergency_replans: u64,
+    last_solve_at: Option<Micros>,
+}
+
+impl MpcScheduler {
+    pub fn new(
+        cc: ControllerConfig,
+        forecaster: Box<dyn Forecaster>,
+        solver: Box<dyn MpcSolver>,
+    ) -> Self {
+        let window = cc.window;
+        let horizon = cc.horizon;
+        MpcScheduler {
+            cc,
+            queue: RequestQueue::new(),
+            history: RingBuffer::new(window),
+            arrivals_this_interval: 0,
+            forecaster,
+            solver,
+            warm_start: vec![0.0; 3 * horizon],
+            x_prev: 0.0,
+            last_plan: None,
+            forced_dispatches: 0,
+            emergency_replans: 0,
+            last_solve_at: None,
+        }
+    }
+
+    /// Bucket in-flight cold-start ready times into readyCold[k] (k < H).
+    fn ready_schedule(&self, ctx: &Ctx) -> Vec<f64> {
+        let mut rdy = vec![0.0; self.cc.horizon];
+        for ready_at in ctx.platform.cold_ready_times() {
+            let delta = ready_at.saturating_sub(ctx.now);
+            let k = (delta / self.cc.dt) as usize;
+            if k < rdy.len() {
+                rdy[k] += 1.0;
+            }
+        }
+        rdy
+    }
+
+    /// Algorithm 1, work-conserving form: release queued requests in
+    /// batches bounded by idle warm capacity. Holding a request while a
+    /// warm container sits idle is never optimal under the paper's
+    /// objective (WaitCost and OverProvision are both positive), so the
+    /// dispatcher drains whenever warm capacity frees up; the plan's s_k
+    /// shapes *cold-start avoidance*, not warm serving.
+    fn try_dispatch(&mut self, ctx: &mut Ctx) {
+        while !self.queue.is_empty() && ctx.platform.idle_count() > 0 {
+            let (req, _) = self.queue.pop().unwrap();
+            ctx.dispatch(req);
+        }
+    }
+
+    /// Unforecasted load spike: the queue exceeds what the provisioned pool
+    /// (warm + in-flight cold) can absorb within one interval. Re-plan
+    /// immediately instead of waiting for the next tick (rate-limited).
+    fn needs_emergency_replan(&self, ctx: &Ctx) -> bool {
+        let capacity_per_step = (ctx.platform.warm_count()
+            + ctx.platform.cold_starting_count()) as f64
+            * self.cc.weights.mu;
+        // re-plans are cheap (sub-ms solve); during a burst the demand
+        // estimate must escalate faster than the burst itself
+        let recent = self
+            .last_solve_at
+            .is_some_and(|t| ctx.now.saturating_sub(t) < crate::config::secs(1.0));
+        self.queue.len() as f64 > capacity_per_step && !recent
+    }
+
+    /// Force-dispatch guard: requests older than `max_shaping_delay` go out
+    /// unconditionally (a cold start now beats unbounded queueing) — unless
+    /// an in-flight prewarm is about to land, in which case waiting the
+    /// last couple of seconds strictly dominates starting a fresh cold
+    /// container (which would take the full L_cold again).
+    fn force_stale(&mut self, ctx: &mut Ctx) {
+        let imminent = ctx
+            .platform
+            .cold_ready_times()
+            .into_iter()
+            .min()
+            .is_some_and(|t| t.saturating_sub(ctx.now) < crate::config::secs(3.0));
+        if imminent {
+            return;
+        }
+        while self
+            .queue
+            .oldest_age(ctx.now)
+            .is_some_and(|age| age > self.cc.max_shaping_delay)
+        {
+            let (req, _) = self.queue.pop().unwrap();
+            self.forced_dispatches += 1;
+            ctx.dispatch(req);
+        }
+    }
+
+    /// The control cycle (Fig. 3): forecast → optimize → actuate step 0.
+    fn replan(&mut self, ctx: &mut Ctx) {
+        self.last_solve_at = Some(ctx.now);
+        // 1. forecast over the horizon
+        let pad = self.history.recent_mean(self.cc.window);
+        let hist = self.history.to_padded_vec(pad);
+        let t0 = Instant::now();
+        let mut lam = self.forecaster.forecast(&hist, self.cc.horizon);
+        // the open interval's arrivals are demand the closed-bin history
+        // cannot see yet — fold them into the first forecast step
+        lam[0] += self.arrivals_this_interval as f64;
+        let forecast_ns = t0.elapsed().as_nanos() as f64;
+
+        // 2. optimize
+        let input = MpcInput {
+            lam,
+            rdy: self.ready_schedule(ctx),
+            q0: self.queue.len() as f64,
+            w0: ctx.platform.warm_count() as f64,
+            x_prev: self.x_prev,
+        };
+        let t1 = Instant::now();
+        let (z, _cost) = self.solver.solve(&self.warm_start, &input);
+        let solve_ns = t1.elapsed().as_nanos() as f64;
+        ctx.recorder.on_control_overhead(forecast_ns, solve_ns);
+
+        let plan = repair(
+            &z,
+            &input,
+            &self.cc.weights,
+            self.cc.cold_steps,
+            ctx.platform.cfg.resource_cap(),
+            ctx.platform.cold_starting_count(),
+        );
+        let (x0, r0, _s0) = plan.first();
+        self.warm_start = plan.shifted_warm_start();
+        self.x_prev = x0 as f64;
+
+        // 3. actuate only the first step (receding horizon)
+        if x0 > 0 {
+            ctx.prewarm(x0);
+        } else if r0 > 0 {
+            ctx.reclaim(r0);
+        }
+        self.last_plan = Some(plan);
+
+        self.try_dispatch(ctx);
+        self.force_stale(ctx);
+    }
+}
+
+impl Scheduler for MpcScheduler {
+    fn on_arrival(&mut self, req: RequestId, ctx: &mut Ctx) {
+        self.arrivals_this_interval += 1;
+        self.queue.push(req, ctx.now);
+        // serve immediately if a warm container is free — shaping never
+        // delays needlessly
+        self.try_dispatch(ctx);
+        if self.needs_emergency_replan(ctx) {
+            self.emergency_replans += 1;
+            self.replan(ctx);
+        }
+    }
+
+    fn on_control_tick(&mut self, ctx: &mut Ctx) {
+        // close the interval's arrival bin, then run the control cycle
+        self.history.push(self.arrivals_this_interval as f64);
+        self.arrivals_this_interval = 0;
+        self.replan(ctx);
+    }
+    fn on_idle_capacity(&mut self, ctx: &mut Ctx) {
+        self.try_dispatch(ctx);
+    }
+
+    fn tick_interval(&self) -> Option<Micros> {
+        Some(self.cc.dt)
+    }
+
+    fn queue_len(&self) -> u32 {
+        self.queue.len() as u32
+    }
+
+    fn name(&self) -> &'static str {
+        "mpc"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Platform;
+    use crate::config::{ExperimentConfig, Weights};
+    use crate::coordinator::Ev;
+    use crate::forecast::FourierForecaster;
+    use crate::metrics::Recorder;
+    use crate::mpc::RustSolver;
+    use crate::simulator::EventQueue;
+
+    fn make() -> (MpcScheduler, Platform, EventQueue<Ev>, Recorder, ExperimentConfig) {
+        let cfg = ExperimentConfig::default();
+        let cc = cfg.controller.clone();
+        let sched = MpcScheduler::new(
+            cc.clone(),
+            Box::new(FourierForecaster::default()),
+            Box::new(RustSolver::new(Weights::default(), 60, cc.cold_steps)),
+        );
+        let platform = Platform::new(cfg.platform.clone(), 7);
+        (sched, platform, EventQueue::new(), Recorder::new(64), cfg)
+    }
+
+    #[test]
+    fn arrivals_are_queued_not_forwarded_when_cold() {
+        let (mut sched, mut platform, mut events, mut rec, cfg) = make();
+        let mut ctx = Ctx {
+            now: 0,
+            platform: &mut platform,
+            events: &mut events,
+            recorder: &mut rec,
+            cfg: &cfg,
+        };
+        rec_arrival(&mut ctx, &mut sched, 0);
+        // shaped, not forwarded: no cold start bound to the request —
+        // the emergency replan may prewarm (unbound) containers instead
+        assert_eq!(sched.queue_len(), 1);
+        assert_eq!(ctx.platform.counters.cold_starts, 0);
+        assert!(sched.emergency_replans <= 1);
+    }
+
+    fn rec_arrival(ctx: &mut Ctx, sched: &mut MpcScheduler, req: RequestId) {
+        ctx.recorder.on_arrival(req, ctx.now);
+        sched.on_arrival(req, ctx);
+    }
+
+    #[test]
+    fn control_tick_produces_feasible_actions() {
+        let (mut sched, mut platform, mut events, mut rec, cfg) = make();
+        // queue a burst then tick
+        {
+            let mut ctx = Ctx {
+                now: 0,
+                platform: &mut platform,
+                events: &mut events,
+                recorder: &mut rec,
+                cfg: &cfg,
+            };
+            for req in 0..20 {
+                rec_arrival(&mut ctx, &mut sched, req);
+            }
+        }
+        let mut ctx = Ctx {
+            now: 30_000_000,
+            platform: &mut platform,
+            events: &mut events,
+            recorder: &mut rec,
+            cfg: &cfg,
+        };
+        sched.on_control_tick(&mut ctx);
+        // standing queue + zero warm pool must have triggered prewarming
+        // (either via the arrival-time emergency replan or this tick)
+        assert!(ctx.platform.cold_starting_count() > 0);
+        // overhead recorded for every solve
+        assert!(!rec.forecast_ns.is_empty());
+        assert_eq!(rec.forecast_ns.len(), rec.solve_ns.len());
+    }
+
+    #[test]
+    fn force_dispatch_guard_fires() {
+        // a platform that cannot host containers at all: prewarms fail, so
+        // the shaped request has nothing to wait for and must be forced
+        let mut cfg = ExperimentConfig::default();
+        cfg.platform.max_containers = 0;
+        let cc = cfg.controller.clone();
+        let mut sched = MpcScheduler::new(
+            cc.clone(),
+            Box::new(FourierForecaster::default()),
+            Box::new(RustSolver::new(Weights::default(), 60, cc.cold_steps)),
+        );
+        let mut platform = Platform::new(cfg.platform.clone(), 7);
+        let mut events = EventQueue::new();
+        let mut rec = Recorder::new(4);
+        {
+            let mut ctx = Ctx {
+                now: 0,
+                platform: &mut platform,
+                events: &mut events,
+                recorder: &mut rec,
+                cfg: &cfg,
+            };
+            rec_arrival(&mut ctx, &mut sched, 0);
+        }
+        // long after max_shaping_delay, a tick must force it out
+        let mut ctx = Ctx {
+            now: cfg.controller.max_shaping_delay + 2_000_000,
+            platform: &mut platform,
+            events: &mut events,
+            recorder: &mut rec,
+            cfg: &cfg,
+        };
+        sched.on_control_tick(&mut ctx);
+        assert_eq!(sched.queue_len(), 0);
+        assert!(sched.forced_dispatches >= 1);
+        assert_eq!(ctx.platform.counters.invocations, 1);
+    }
+}

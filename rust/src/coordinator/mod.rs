@@ -1,0 +1,117 @@
+//! The scheduling coordinator: the `Scheduler` policy interface, the
+//! actuation context shared by all policies, and the paper's MPC
+//! controller ([`controller::MpcScheduler`]).
+
+pub mod controller;
+pub mod queue;
+
+use crate::cluster::container::ContainerId;
+use crate::cluster::platform::{InvokeOutcome, Platform};
+use crate::cluster::RequestId;
+use crate::config::{ExperimentConfig, Micros};
+use crate::metrics::Recorder;
+use crate::simulator::EventQueue;
+
+/// Simulation events shared by the runner and the policies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ev {
+    /// A request arrives from the workload.
+    Arrival(RequestId),
+    /// A cold-starting container finishes initialization.
+    Ready(ContainerId),
+    /// An execution completes on a container.
+    Done(ContainerId),
+    /// Policy control tick (every Δt for MPC / IceBreaker).
+    Control,
+    /// Telemetry scrape (paper: 1-minute cadence).
+    Sample,
+    /// Keep-alive expiry check for a container.
+    KeepAlive(ContainerId),
+}
+
+/// Everything a policy may touch while handling an event. Provides the
+/// actuator primitives (dispatch / prewarm / reclaim) so policies cannot
+/// bypass metrics or event bookkeeping.
+pub struct Ctx<'a> {
+    pub now: Micros,
+    pub platform: &'a mut Platform,
+    pub events: &'a mut EventQueue<Ev>,
+    pub recorder: &'a mut Recorder,
+    pub cfg: &'a ExperimentConfig,
+}
+
+impl Ctx<'_> {
+    /// Dispatch actuator: submit `req` to the platform (Algorithm 1's
+    /// `submitRequestAsync`). Schedules the follow-up events and records
+    /// dispatch/cold metadata.
+    pub fn dispatch(&mut self, req: RequestId) {
+        self.recorder.on_dispatch(req, self.now);
+        match self.platform.invoke(req, self.now) {
+            InvokeOutcome::WarmStart { cid, done_at } => {
+                self.events.push(done_at, Ev::Done(cid));
+            }
+            InvokeOutcome::ColdStart { cid, ready_at } => {
+                self.recorder.on_cold(req);
+                self.events.push(ready_at, Ev::Ready(cid));
+            }
+            InvokeOutcome::AtCapacity => {
+                // platform FCFS backlog; completion events flow from the
+                // container that eventually picks it up
+            }
+        }
+    }
+
+    /// Prewarm actuator (Listing 1): launch up to `n` unbound cold
+    /// containers; returns how many actually started.
+    pub fn prewarm(&mut self, n: u32) -> u32 {
+        let mut started = 0;
+        for _ in 0..n {
+            match self.platform.prewarm_one(self.now) {
+                Some((cid, ready_at)) => {
+                    self.events.push(ready_at, Ev::Ready(cid));
+                    started += 1;
+                }
+                None => break,
+            }
+        }
+        started
+    }
+
+    /// Reclaim actuator (Algorithm 2): drain up to `n` idle containers,
+    /// honoring the activation-log safety check. Returns the count.
+    pub fn reclaim(&mut self, n: u32) -> u32 {
+        self.platform.try_reclaim(n, self.now).len() as u32
+    }
+
+    /// Schedule the keep-alive check for a container that just went idle.
+    pub fn schedule_keepalive(&mut self, cid: ContainerId) {
+        self.events
+            .push(self.now + self.cfg.platform.keep_alive, Ev::KeepAlive(cid));
+    }
+}
+
+/// A scheduling policy (OpenWhisk default, IceBreaker, MPC).
+pub trait Scheduler {
+    /// A request arrived.
+    fn on_arrival(&mut self, req: RequestId, ctx: &mut Ctx);
+
+    /// Control tick (only delivered if `tick_interval` is Some).
+    fn on_control_tick(&mut self, _ctx: &mut Ctx) {}
+
+    /// A container just became idle (execution finished or prewarm ready
+    /// with no backlog) — a dispatch opportunity for shaping policies.
+    fn on_idle_capacity(&mut self, _ctx: &mut Ctx) {}
+
+    /// Δt for control ticks; None = purely reactive policy.
+    fn tick_interval(&self) -> Option<Micros> {
+        None
+    }
+
+    /// Requests currently shaped/held by the policy (not yet dispatched).
+    fn queue_len(&self) -> u32 {
+        0
+    }
+
+    /// Policy name for reports.
+    fn name(&self) -> &'static str;
+}

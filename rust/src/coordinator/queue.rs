@@ -1,0 +1,98 @@
+//! Request queue — the Redis-queue analog (Algorithm 1's source).
+//!
+//! FIFO of pending requests with arrival timestamps, supporting the batch
+//! pop of the dispatch actuator and the age query of the force-dispatch
+//! guard.
+
+use std::collections::VecDeque;
+
+use crate::cluster::RequestId;
+use crate::config::Micros;
+
+#[derive(Debug, Default)]
+pub struct RequestQueue {
+    q: VecDeque<(RequestId, Micros)>,
+    /// Total requests ever enqueued (for conservation checks).
+    pub enqueued: u64,
+    /// Total requests ever popped.
+    pub popped: u64,
+}
+
+impl RequestQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, req: RequestId, arrival: Micros) {
+        self.q.push_back((req, arrival));
+        self.enqueued += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Pop the oldest request (Algorithm 1, line 3).
+    pub fn pop(&mut self) -> Option<(RequestId, Micros)> {
+        let item = self.q.pop_front();
+        if item.is_some() {
+            self.popped += 1;
+        }
+        item
+    }
+
+    /// Pop up to `n` oldest requests.
+    pub fn pop_batch(&mut self, n: usize) -> Vec<(RequestId, Micros)> {
+        let take = n.min(self.q.len());
+        (0..take).filter_map(|_| self.pop()).collect()
+    }
+
+    /// Age of the oldest queued request.
+    pub fn oldest_age(&self, now: Micros) -> Option<Micros> {
+        self.q.front().map(|&(_, a)| now.saturating_sub(a))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut q = RequestQueue::new();
+        q.push(1, 10);
+        q.push(2, 20);
+        q.push(3, 30);
+        assert_eq!(q.pop(), Some((1, 10)));
+        assert_eq!(q.pop_batch(5), vec![(2, 20), (3, 30)]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn conservation_counters() {
+        let mut q = RequestQueue::new();
+        for i in 0..10 {
+            q.push(i, i);
+        }
+        q.pop_batch(4);
+        assert_eq!(q.enqueued, 10);
+        assert_eq!(q.popped, 4);
+        assert_eq!(q.len(), 6);
+        assert_eq!(q.enqueued - q.popped, q.len() as u64);
+    }
+
+    #[test]
+    fn oldest_age() {
+        let mut q = RequestQueue::new();
+        assert_eq!(q.oldest_age(100), None);
+        q.push(1, 40);
+        q.push(2, 90);
+        assert_eq!(q.oldest_age(100), Some(60));
+        q.pop();
+        assert_eq!(q.oldest_age(100), Some(10));
+    }
+}

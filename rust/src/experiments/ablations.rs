@@ -1,0 +1,113 @@
+//! Ablations for the design choices DESIGN.md calls out (Sec. V-E
+//! discusses the sensitivity): request shaping on/off, horizon length,
+//! clipping confidence γ, and cost-weight sensitivity.
+
+use crate::config::{secs, ExperimentConfig, Policy, TraceKind};
+use crate::experiments::runner::{make_scheduler, run_experiment, run_with_scheduler};
+use crate::metrics::RunReport;
+use crate::workload::synthetic::{self, SyntheticConfig};
+use crate::workload::Trace;
+
+fn bursty_trace(duration_s: f64, seed: u64) -> Trace {
+    synthetic::generate(
+        &SyntheticConfig {
+            idle_scale: 0.15,
+            ..Default::default()
+        },
+        secs(duration_s),
+        seed,
+    )
+}
+
+fn base_cfg(duration_s: f64, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        trace: TraceKind::SyntheticBursty,
+        duration: secs(duration_s),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Shaping ablation: MPC vs "MPC without shaping" (β very high would
+/// also work, but the honest ablation is structural: dispatch immediately
+/// like IceBreaker while keeping MPC prewarming). Implemented by setting
+/// the shaping guard to zero so every queued request is force-dispatched
+/// at the next tick.
+pub fn shaping_ablation(duration_s: f64, seed: u64) -> (RunReport, RunReport) {
+    let trace = bursty_trace(duration_s, seed);
+    let cfg = base_cfg(duration_s, seed);
+    let with_shaping = run_experiment(&cfg, Policy::Mpc, &trace);
+
+    let mut cfg_no = cfg.clone();
+    cfg_no.controller.max_shaping_delay = 0;
+    let sched = make_scheduler(&cfg_no, Policy::Mpc);
+    let without_shaping = run_with_scheduler(&cfg_no, sched, &trace);
+    (with_shaping, without_shaping)
+}
+
+/// Horizon sweep: solve quality/latency trade-off (Sec. V-E tuning).
+pub fn horizon_sweep(duration_s: f64, seed: u64, horizons: &[usize]) -> Vec<(usize, RunReport)> {
+    let trace = bursty_trace(duration_s, seed);
+    horizons
+        .iter()
+        .map(|&h| {
+            let mut cfg = base_cfg(duration_s, seed);
+            cfg.controller.horizon = h.max(cfg.controller.cold_steps + 2);
+            let r = run_experiment(&cfg, Policy::Mpc, &trace);
+            (cfg.controller.horizon, r)
+        })
+        .collect()
+}
+
+/// Clipping-confidence sweep (Eq. 2's γ).
+pub fn gamma_sweep(duration_s: f64, seed: u64, gammas: &[f64]) -> Vec<(f64, RunReport)> {
+    let trace = bursty_trace(duration_s, seed);
+    gammas
+        .iter()
+        .map(|&g| {
+            let mut cfg = base_cfg(duration_s, seed);
+            cfg.controller.gamma_clip = g;
+            (g, run_experiment(&cfg, Policy::Mpc, &trace))
+        })
+        .collect()
+}
+
+/// Cold-start weight sweep (α): higher α should mean fewer cold requests.
+pub fn alpha_sweep(duration_s: f64, seed: u64, alphas: &[f64]) -> Vec<(f64, RunReport)> {
+    let trace = bursty_trace(duration_s, seed);
+    alphas
+        .iter()
+        .map(|&a| {
+            let mut cfg = base_cfg(duration_s, seed);
+            cfg.controller.weights.alpha = a;
+            (a, run_experiment(&cfg, Policy::Mpc, &trace))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shaping_reduces_cold_requests() {
+        let (with, without) = shaping_ablation(600.0, 17);
+        assert_eq!(with.dropped, 0);
+        assert_eq!(without.dropped, 0);
+        assert!(
+            with.cold_requests <= without.cold_requests,
+            "shaping did not help: with={} without={}",
+            with.cold_requests,
+            without.cold_requests
+        );
+    }
+
+    #[test]
+    fn horizon_sweep_runs() {
+        let rows = horizon_sweep(300.0, 19, &[16, 24]);
+        assert_eq!(rows.len(), 2);
+        for (_, r) in rows {
+            assert_eq!(r.dropped, 0);
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Fig. 4 reproduction: rolling forecast accuracy of the Fourier predictor
+//! vs the ARIMA baseline on (a) the Azure-like trace and (b) the synthetic
+//! bursty trace, plus the per-call runtime comparison the paper highlights
+//! (Fourier ~0.1 ms vs ARIMA ~10 ms).
+
+use std::time::Instant;
+
+use crate::config::{secs, Micros, TraceKind};
+use crate::forecast::{accuracy, ArimaForecaster, Forecaster, FourierForecaster};
+use crate::workload::{azure, synthetic, Trace};
+
+#[derive(Debug, Clone)]
+pub struct ForecastEval {
+    pub predictor: String,
+    pub trace: String,
+    pub accuracy_pct: f64,
+    pub wape: f64,
+    pub smape: f64,
+    pub rmse: f64,
+    pub mean_runtime_ms: f64,
+    pub evaluations: usize,
+}
+
+/// Rolling horizon evaluation: at each step feed the last `window` bins and
+/// score the full `horizon`-step prediction against the truth — the
+/// quantity the MPC actually consumes (one-step scores flatter ARIMA,
+/// which mean-reverts over the horizon the controller plans on).
+pub fn rolling_eval(
+    f: &mut dyn Forecaster,
+    bins: &[f64],
+    window: usize,
+    trace_name: &str,
+) -> ForecastEval {
+    rolling_eval_h(f, bins, window, 24, trace_name)
+}
+
+pub fn rolling_eval_h(
+    f: &mut dyn Forecaster,
+    bins: &[f64],
+    window: usize,
+    horizon: usize,
+    trace_name: &str,
+) -> ForecastEval {
+    let mut preds = Vec::new();
+    let mut actuals = Vec::new();
+    let mut runtime_ns = 0.0;
+    let mut n = 0usize;
+    let start = window;
+    let stride = (horizon / 2).max(1);
+    let mut t = start;
+    while t + horizon <= bins.len() {
+        let hist = &bins[t - window..t];
+        let t0 = Instant::now();
+        let p = f.forecast(hist, horizon);
+        runtime_ns += t0.elapsed().as_nanos() as f64;
+        n += 1;
+        preds.extend_from_slice(&p);
+        actuals.extend_from_slice(&bins[t..t + horizon]);
+        t += stride;
+    }
+    ForecastEval {
+        predictor: f.name().to_string(),
+        trace: trace_name.to_string(),
+        accuracy_pct: accuracy::accuracy_pct(&preds, &actuals),
+        wape: accuracy::wape(&preds, &actuals),
+        smape: accuracy::smape(&preds, &actuals),
+        rmse: accuracy::rmse(&preds, &actuals),
+        mean_runtime_ms: runtime_ns / n.max(1) as f64 / 1e6,
+        evaluations: n,
+    }
+}
+
+pub fn trace_for(kind: TraceKind, duration: Micros, seed: u64) -> Trace {
+    match kind {
+        TraceKind::AzureLike => azure::generate(&azure::AzureLikeConfig::default(), duration, seed),
+        TraceKind::SyntheticBursty => {
+            synthetic::generate(&synthetic::SyntheticConfig::default(), duration, seed)
+        }
+    }
+}
+
+/// Run the full Fig. 4 comparison (both predictors on both traces).
+pub fn run(duration_s: f64, seed: u64) -> Vec<ForecastEval> {
+    let window = 120; // matches the controller/artifact forecast window
+    let mut out = Vec::new();
+    for kind in [TraceKind::AzureLike, TraceKind::SyntheticBursty] {
+        let trace = trace_for(kind, secs(duration_s), seed);
+        let bins: Vec<f64> = trace
+            .binned(secs(30.0)) // the controller's dt
+            .iter()
+            .map(|&b| b as f64)
+            .collect();
+        let mut fourier = FourierForecaster::default();
+        let mut arima = ArimaForecaster::default();
+        out.push(rolling_eval(&mut fourier, &bins, window, kind.name()));
+        out.push(rolling_eval(&mut arima, &bins, window, kind.name()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fourier_beats_arima_on_periodic_azure_like_load() {
+        let evals = run(14400.0, 11); // 4 h -> 360 rolling evals at 30 s bins
+        let get = |pred: &str, trace: &str| {
+            evals
+                .iter()
+                .find(|e| e.predictor == pred && e.trace == trace)
+                .unwrap()
+                .clone()
+        };
+        let f_az = get("fourier", "azure");
+        let a_az = get("arima", "azure");
+        // paper: Fourier 86.2% vs ARIMA 82.5% — shape: fourier >= arima
+        assert!(
+            f_az.accuracy_pct >= a_az.accuracy_pct - 1.0,
+            "fourier {:.1}% < arima {:.1}%",
+            f_az.accuracy_pct,
+            a_az.accuracy_pct
+        );
+        assert!(f_az.accuracy_pct > 60.0, "fourier too weak: {f_az:?}");
+        // runtime: both predictors must be far below the control interval.
+        // (The paper's 100x runtime gap reflects statsmodels' MLE ARIMA;
+        // our Hannan-Rissanen CLS fit is itself fast, so the gap here is
+        // small — see EXPERIMENTS.md Fig. 4 notes.)
+        assert!(f_az.mean_runtime_ms < 5.0, "fourier too slow: {f_az:?}");
+        assert!(a_az.mean_runtime_ms < 50.0, "arima too slow: {a_az:?}");
+    }
+
+    #[test]
+    fn rolling_eval_counts() {
+        let bins: Vec<f64> = (0..300).map(|t| 10.0 + (t % 5) as f64).collect();
+        let mut f = FourierForecaster::default();
+        let e = rolling_eval(&mut f, &bins, 120, "unit");
+        assert_eq!(e.evaluations, 14); // stride H/2 over 300 bins
+        assert!(e.accuracy_pct > 50.0);
+    }
+}

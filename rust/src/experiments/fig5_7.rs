@@ -1,0 +1,169 @@
+//! Figs. 5-7 reproduction: the policy × workload matrix.
+//!
+//! One 60-minute run per (policy, trace) pair from a cold platform, then:
+//! * Fig. 5 — % improvement in mean/p90/p95 response time over OpenWhisk;
+//! * Fig. 6 — % reduction in warm-container usage (1-minute samples);
+//! * Fig. 7 — % reduction in keep-alive duration.
+
+use crate::config::{secs, ExperimentConfig, Policy, TraceKind};
+use crate::experiments::fig4::trace_for;
+use crate::experiments::runner::run_experiment;
+use crate::metrics::RunReport;
+
+#[derive(Debug, Clone)]
+pub struct MatrixResult {
+    pub trace: TraceKind,
+    pub openwhisk: RunReport,
+    pub icebreaker: RunReport,
+    pub mpc: RunReport,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Improvement {
+    pub mean_pct: f64,
+    pub p90_pct: f64,
+    pub p95_pct: f64,
+    pub warm_usage_pct: f64,
+    pub keepalive_pct: f64,
+}
+
+impl MatrixResult {
+    pub fn improvement(&self, which: Policy) -> Improvement {
+        let r = match which {
+            Policy::IceBreaker => &self.icebreaker,
+            Policy::Mpc => &self.mpc,
+            Policy::OpenWhisk => &self.openwhisk,
+        };
+        let b = &self.openwhisk;
+        let imp = RunReport::improvement_pct;
+        Improvement {
+            mean_pct: imp(r.mean_ms, b.mean_ms),
+            p90_pct: imp(r.p90_ms, b.p90_ms),
+            p95_pct: imp(r.p95_ms, b.p95_ms),
+            warm_usage_pct: imp(r.mean_warm, b.mean_warm),
+            keepalive_pct: imp(r.keepalive_total_s, b.keepalive_total_s),
+        }
+    }
+}
+
+/// Run the full matrix for one trace kind.
+pub fn run_matrix(trace: TraceKind, duration_s: f64, seed: u64) -> MatrixResult {
+    let cfg = ExperimentConfig {
+        trace,
+        duration: secs(duration_s),
+        seed,
+        ..Default::default()
+    };
+    let arrivals = trace_for(trace, cfg.duration, seed);
+    MatrixResult {
+        trace,
+        openwhisk: run_experiment(&cfg, Policy::OpenWhisk, &arrivals),
+        icebreaker: run_experiment(&cfg, Policy::IceBreaker, &arrivals),
+        mpc: run_experiment(&cfg, Policy::Mpc, &arrivals),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Manual tuning probe: `cargo test --lib tuning_sweep -- --ignored --nocapture`
+    #[test]
+    #[ignore]
+    fn tuning_sweep() {
+        let cfg0 = ExperimentConfig {
+            trace: TraceKind::SyntheticBursty,
+            duration: secs(3600.0),
+            seed: 3,
+            ..Default::default()
+        };
+        let arrivals = crate::workload::synthetic::generate(
+            &crate::workload::synthetic::SyntheticConfig::default(),
+            cfg0.duration,
+            cfg0.seed,
+        );
+        println!("requests: {}", arrivals.len());
+        let ow = run_experiment(&cfg0, Policy::OpenWhisk, &arrivals);
+        let ib = run_experiment(&cfg0, Policy::IceBreaker, &arrivals);
+        println!(
+            "IB   mean={:.0} p90={:.0} p95={:.0} cold={} warm={:.1} ka={:.0}",
+            ib.mean_ms, ib.p90_ms, ib.p95_ms, ib.counters.cold_starts, ib.mean_warm, ib.keepalive_total_s
+        );
+        println!(
+            "OW   mean={:.0} p90={:.0} p95={:.0} cold={} warm={:.1} ka={:.0}",
+            ow.mean_ms, ow.p90_ms, ow.p95_ms, ow.counters.cold_starts, ow.mean_warm, ow.keepalive_total_s
+        );
+        for (alpha, gamma, rho1, eta, gclip, drain_s) in [
+            (8.0, 0.0002, 0.1, 0.01, 5.0, 3.0),
+            (8.0, 0.0002, 0.1, 0.01, 5.0, 1.5),
+            (16.0, 0.0002, 0.1, 0.01, 5.0, 3.0),
+            (16.0, 0.0002, 0.2, 0.005, 6.0, 1.5),
+            (32.0, 0.0001, 0.2, 0.005, 6.0, 1.5),
+        ] {
+            let (beta, guard_s) = (107.0, 12.0);
+            let mut cfg = cfg0.clone();
+            cfg.controller.weights.mu = drain_s / 0.280;
+            let _ = &mut cfg;
+            cfg.controller.weights.alpha = alpha;
+            cfg.controller.weights.beta = beta;
+            cfg.controller.weights.gamma = gamma;
+            cfg.controller.weights.rho1 = rho1;
+            cfg.controller.weights.eta = eta;
+            cfg.controller.max_shaping_delay = secs(guard_s);
+            cfg.controller.gamma_clip = gclip;
+            let r = run_experiment(&cfg, Policy::Mpc, &arrivals);
+            println!(
+                "MPC a={alpha} g={gamma} r1={rho1} e={eta} clip={gclip} dr={drain_s} b={beta} gd={guard_s}: mean={:.0} p90={:.0} p95={:.0} cold={} warm={:.1} ka={:.0}",
+                r.mean_ms, r.p90_ms, r.p95_ms, r.counters.cold_starts, r.mean_warm, r.keepalive_total_s
+            );
+        }
+    }
+
+    /// The paper's headline ordering on the bursty workload (Fig. 5b/6b/7b
+    /// shape): MPC beats OpenWhisk on tail latency (p90), cold starts, and
+    /// resource usage. Where measured shape deviates from the paper's
+    /// magnitudes, EXPERIMENTS.md discusses it; these are the robust subset.
+    #[test]
+    fn bursty_workload_ordering_holds() {
+        let cfg = ExperimentConfig {
+            trace: TraceKind::SyntheticBursty,
+            duration: secs(3600.0),
+            seed: 3,
+            ..Default::default()
+        };
+        let arrivals = crate::workload::synthetic::generate(
+            &crate::workload::synthetic::SyntheticConfig::default(),
+            cfg.duration,
+            cfg.seed,
+        );
+        assert!(arrivals.len() > 500, "workload too sparse: {}", arrivals.len());
+        let ow = run_experiment(&cfg, Policy::OpenWhisk, &arrivals);
+        let mpc = run_experiment(&cfg, Policy::Mpc, &arrivals);
+        assert_eq!(ow.dropped, 0);
+        assert_eq!(mpc.dropped, 0);
+        assert!(
+            mpc.p90_ms < ow.p90_ms,
+            "MPC p90 {:.0} ms !< OpenWhisk p90 {:.0} ms",
+            mpc.p90_ms,
+            ow.p90_ms
+        );
+        assert!(
+            mpc.counters.cold_starts < ow.counters.cold_starts,
+            "MPC cold starts {} !< OW {}",
+            mpc.counters.cold_starts,
+            ow.counters.cold_starts
+        );
+        assert!(
+            mpc.mean_warm < ow.mean_warm,
+            "MPC warm usage {:.1} !< OW {:.1}",
+            mpc.mean_warm,
+            ow.mean_warm
+        );
+        assert!(
+            mpc.keepalive_total_s < ow.keepalive_total_s,
+            "MPC keep-alive {:.0} !< OW {:.0}",
+            mpc.keepalive_total_s,
+            ow.keepalive_total_s
+        );
+    }
+}

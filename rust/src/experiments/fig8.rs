@@ -1,0 +1,85 @@
+//! Fig. 8 reproduction: per-control-step overhead breakdown — forecast
+//! time vs optimizer time — measured on both the in-process mirror and
+//! (when artifacts are available) the deployed HLO runtime.
+
+use std::time::Instant;
+
+use crate::config::Weights;
+use crate::forecast::{Forecaster, FourierForecaster};
+use crate::mpc::{MpcInput, MpcSolver, RustSolver};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+#[derive(Debug)]
+pub struct OverheadResult {
+    pub backend: String,
+    pub forecast_ms: Summary,
+    pub solve_ms: Summary,
+}
+
+/// Measure `iters` control steps on arbitrary forecaster/solver backends.
+pub fn measure(
+    backend: &str,
+    forecaster: &mut dyn Forecaster,
+    solver: &mut dyn MpcSolver,
+    horizon: usize,
+    window: usize,
+    iters: u32,
+    seed: u64,
+) -> OverheadResult {
+    let mut rng = Rng::new(seed);
+    let mut forecast_ms = Summary::new();
+    let mut solve_ms = Summary::new();
+    let mut warm = vec![0.0; 3 * horizon];
+    for _ in 0..iters {
+        let hist: Vec<f64> = (0..window)
+            .map(|t| 15.0 + 5.0 * (t as f64 / 30.0).sin() + rng.normal(0.0, 1.0))
+            .collect();
+        let t0 = Instant::now();
+        let lam = forecaster.forecast(&hist, horizon);
+        forecast_ms.add(t0.elapsed().as_nanos() as f64 / 1e6);
+
+        let input = MpcInput {
+            lam,
+            rdy: vec![0.0; horizon],
+            q0: rng.range_f64(0.0, 20.0),
+            w0: rng.range_f64(0.0, 20.0),
+            x_prev: 0.0,
+        };
+        let t1 = Instant::now();
+        let (z, _) = solver.solve(&warm, &input);
+        solve_ms.add(t1.elapsed().as_nanos() as f64 / 1e6);
+        warm = z;
+    }
+    OverheadResult {
+        backend: backend.to_string(),
+        forecast_ms,
+        solve_ms,
+    }
+}
+
+/// Fig. 8 with the in-process backends.
+pub fn run_rust(iters: u32) -> OverheadResult {
+    let mut f = FourierForecaster::default();
+    let mut s = RustSolver::new(Weights::default(), 300, 1);
+    measure("rust-mirror", &mut f, &mut s, 24, 120, iters, 99)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_step_fits_the_interval() {
+        let mut r = run_rust(10);
+        // paper: forecast 0.1 ms, optimizer 38 ms, against a 1 s interval.
+        // the shape constraint: forecast << solve << dt
+        assert!(r.forecast_ms.mean() < r.solve_ms.mean() * 2.0 + 1.0);
+        assert!(
+            r.solve_ms.mean() < 1000.0,
+            "solve {} ms exceeds the control interval",
+            r.solve_ms.mean()
+        );
+        assert!(r.forecast_ms.p95() < 50.0, "forecast too slow");
+    }
+}

@@ -1,0 +1,12 @@
+//! Experiment drivers — one per figure of the paper's evaluation section
+//! (see DESIGN.md per-experiment index). Shared by the `cargo bench`
+//! targets, the examples, and the CLI.
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig4;
+pub mod fig5_7;
+pub mod fig8;
+pub mod runner;
+
+pub use runner::{make_scheduler, run_experiment, run_with_scheduler};

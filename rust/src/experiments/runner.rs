@@ -1,0 +1,237 @@
+//! Discrete-event experiment runner: drives a [`Scheduler`] policy against
+//! a workload trace on the platform substrate and produces a [`RunReport`].
+//!
+//! Event flow (all times virtual): Arrival → policy (dispatch or shape) →
+//! platform outcomes → Ready/Done events → completions + idle-capacity
+//! callbacks → keep-alive checks. Control and Sample ticks fire at their
+//! configured cadences until the trace duration elapses; a grace window
+//! lets in-flight work drain before the books close.
+
+use crate::baselines::{IceBreaker, OpenWhiskDefault};
+use crate::cluster::platform::{CompleteOutcome, KeepAliveVerdict, Platform, ReadyOutcome};
+use crate::config::{secs, ExperimentConfig, Micros, Policy};
+use crate::coordinator::controller::MpcScheduler;
+use crate::coordinator::{Ctx, Ev, Scheduler};
+use crate::forecast::FourierForecaster;
+use crate::metrics::{Recorder, RunReport};
+use crate::mpc::RustSolver;
+use crate::simulator::EventQueue;
+use crate::workload::Trace;
+
+/// Post-duration grace for in-flight work (forced dispatch + cold start +
+/// execution all fit comfortably).
+pub fn grace() -> Micros {
+    secs(60.0)
+}
+
+/// Build the default (in-process solver) scheduler for a policy.
+pub fn make_scheduler(cfg: &ExperimentConfig, policy: Policy) -> Box<dyn Scheduler> {
+    match policy {
+        Policy::OpenWhisk => Box::new(OpenWhiskDefault),
+        Policy::IceBreaker => Box::new(IceBreaker::new(
+            cfg.controller.clone(),
+            Box::new(FourierForecaster {
+                gamma_clip: cfg.controller.gamma_clip,
+                ..Default::default()
+            }),
+        )),
+        Policy::Mpc => Box::new(MpcScheduler::new(
+            cfg.controller.clone(),
+            Box::new(FourierForecaster {
+                gamma_clip: cfg.controller.gamma_clip,
+                ..Default::default()
+            }),
+            Box::new(RustSolver::new(
+                cfg.controller.weights,
+                cfg.controller.pgd_iters,
+                cfg.controller.cold_steps,
+            )),
+        )),
+    }
+}
+
+/// Run `policy` (by name) on `trace` under `cfg`.
+pub fn run_experiment(cfg: &ExperimentConfig, policy: Policy, trace: &Trace) -> RunReport {
+    run_with_scheduler(cfg, make_scheduler(cfg, policy), trace)
+}
+
+/// Run an explicit scheduler instance (e.g. HLO-backed) on `trace`.
+pub fn run_with_scheduler(
+    cfg: &ExperimentConfig,
+    mut sched: Box<dyn Scheduler>,
+    trace: &Trace,
+) -> RunReport {
+    let mut platform = Platform::new(cfg.platform.clone(), cfg.seed ^ 0x9_1A7F0);
+    let mut events: EventQueue<Ev> = EventQueue::new();
+    let mut recorder = Recorder::new(trace.len());
+
+    for (i, &t) in trace.arrivals.iter().enumerate() {
+        events.push(t, Ev::Arrival(i as u64));
+    }
+    if let Some(dt) = sched.tick_interval() {
+        events.push(dt, Ev::Control);
+    }
+    events.push(cfg.sample_interval, Ev::Sample);
+
+    let cutoff = cfg.duration + grace();
+
+    while let Some(s) = events.pop_until(cutoff) {
+        let now = s.time;
+        match s.event {
+            Ev::Arrival(req) => {
+                recorder.on_arrival(req, now);
+                let mut ctx = Ctx {
+                    now,
+                    platform: &mut platform,
+                    events: &mut events,
+                    recorder: &mut recorder,
+                    cfg,
+                };
+                sched.on_arrival(req, &mut ctx);
+            }
+            Ev::Ready(cid) => match platform.container_ready(cid, now) {
+                ReadyOutcome::Started { done_at, .. } => {
+                    events.push(done_at, Ev::Done(cid));
+                }
+                ReadyOutcome::Idle => {
+                    let mut ctx = Ctx {
+                        now,
+                        platform: &mut platform,
+                        events: &mut events,
+                        recorder: &mut recorder,
+                        cfg,
+                    };
+                    ctx.schedule_keepalive(cid);
+                    sched.on_idle_capacity(&mut ctx);
+                }
+            },
+            Ev::Done(cid) => {
+                let CompleteOutcome { completed, next } = platform.exec_complete(cid, now);
+                recorder.on_complete(completed, now);
+                match next {
+                    Some((_req, done_at)) => events.push(done_at, Ev::Done(cid)),
+                    None => {
+                        let mut ctx = Ctx {
+                            now,
+                            platform: &mut platform,
+                            events: &mut events,
+                            recorder: &mut recorder,
+                            cfg,
+                        };
+                        ctx.schedule_keepalive(cid);
+                        sched.on_idle_capacity(&mut ctx);
+                    }
+                }
+            }
+            Ev::Control => {
+                let mut ctx = Ctx {
+                    now,
+                    platform: &mut platform,
+                    events: &mut events,
+                    recorder: &mut recorder,
+                    cfg,
+                };
+                sched.on_control_tick(&mut ctx);
+                // keep ticking through the grace window while work remains
+                let dt = sched.tick_interval().unwrap_or(cfg.controller.dt);
+                if now < cfg.duration || sched.queue_len() > 0 {
+                    events.push(now + dt, Ev::Control);
+                }
+            }
+            Ev::Sample => {
+                recorder.on_gauge(platform.gauge(now, sched.queue_len()));
+                if now < cfg.duration {
+                    events.push(now + cfg.sample_interval, Ev::Sample);
+                }
+            }
+            Ev::KeepAlive(cid) => match platform.keepalive_check(cid, now) {
+                KeepAliveVerdict::Recheck(t) => events.push(t, Ev::KeepAlive(cid)),
+                KeepAliveVerdict::Expired | KeepAliveVerdict::NotApplicable => {}
+            },
+        }
+    }
+
+    let end = cutoff.max(events.now());
+    let (keepalive, idle_totals) = platform.finalize(end);
+    RunReport::from_recorder(
+        sched.name(),
+        cfg.trace.name(),
+        cfg.duration,
+        &recorder,
+        platform.counters,
+        &keepalive,
+        &idle_totals,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Trace;
+
+    fn quick_cfg(duration_s: f64) -> ExperimentConfig {
+        ExperimentConfig {
+            duration: secs(duration_s),
+            ..Default::default()
+        }
+    }
+
+    /// A steady 4 req/s trace for 120 s.
+    fn steady_trace() -> Trace {
+        Trace::new((0..480).map(|i| i as u64 * 250_000).collect())
+    }
+
+    #[test]
+    fn openwhisk_completes_all_requests() {
+        let cfg = quick_cfg(120.0);
+        let report = run_experiment(&cfg, Policy::OpenWhisk, &steady_trace());
+        assert_eq!(report.dropped, 0, "{report:?}");
+        assert_eq!(report.completed, 480);
+        assert!(report.counters.cold_starts >= 1);
+        // steady load at 4 req/s: a handful of containers absorb it after
+        // the initial cold-start wave
+        assert!(report.mean_warm >= 1.0);
+    }
+
+    #[test]
+    fn mpc_completes_all_requests() {
+        let cfg = quick_cfg(120.0);
+        let report = run_experiment(&cfg, Policy::Mpc, &steady_trace());
+        assert_eq!(report.dropped, 0, "{report:?}");
+        assert_eq!(report.completed, 480);
+        // control overhead recorded every tick
+        assert!(report.solve_overhead_ms > 0.0);
+    }
+
+    #[test]
+    fn icebreaker_completes_all_requests() {
+        let cfg = quick_cfg(120.0);
+        let report = run_experiment(&cfg, Policy::IceBreaker, &steady_trace());
+        assert_eq!(report.dropped, 0, "{report:?}");
+        assert_eq!(report.completed, 480);
+    }
+
+    #[test]
+    fn empty_trace_is_fine() {
+        let cfg = quick_cfg(10.0);
+        let report = run_experiment(&cfg, Policy::Mpc, &Trace::default());
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.counters.cold_starts, 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = quick_cfg(60.0);
+        let a = run_experiment(&cfg, Policy::OpenWhisk, &steady_trace());
+        let b = run_experiment(&cfg, Policy::OpenWhisk, &steady_trace());
+        assert_eq!(a.mean_ms, b.mean_ms);
+        assert_eq!(a.counters.cold_starts, b.counters.cold_starts);
+    }
+
+    #[test]
+    fn gauges_sampled_at_one_minute_cadence() {
+        let cfg = quick_cfg(180.0);
+        let report = run_experiment(&cfg, Policy::OpenWhisk, &steady_trace());
+        assert!(report.warm_series.len() >= 3, "{:?}", report.warm_series);
+    }
+}

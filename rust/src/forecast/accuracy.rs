@@ -1,0 +1,101 @@
+//! Forecast error metrics for the Fig. 4 reproduction.
+//!
+//! The paper reports a scalar "accuracy %" (e.g. Fourier 86.2% on Azure).
+//! We define accuracy = 100 x (1 - WAPE) clamped to [0, 100], with
+//! WAPE = sum|pred - actual| / sum|actual| — the standard weighted absolute
+//! percentage error, well-behaved on rate series that touch zero (where
+//! per-point MAPE blows up). sMAPE is also provided for reference.
+
+/// Weighted absolute percentage error in [0, inf).
+pub fn wape(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    let denom: f64 = actual.iter().map(|a| a.abs()).sum();
+    if denom < 1e-12 {
+        return if pred.iter().all(|p| p.abs() < 1e-12) {
+            0.0
+        } else {
+            f64::INFINITY
+        };
+    }
+    let num: f64 = pred
+        .iter()
+        .zip(actual)
+        .map(|(p, a)| (p - a).abs())
+        .sum();
+    num / denom
+}
+
+/// Symmetric MAPE in [0, 2].
+pub fn smape(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for (p, a) in pred.iter().zip(actual) {
+        let denom = (p.abs() + a.abs()) / 2.0;
+        if denom > 1e-12 {
+            acc += (p - a).abs() / denom;
+        }
+    }
+    acc / pred.len() as f64
+}
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], actual: &[f64]) -> f64 {
+    assert_eq!(pred.len(), actual.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = pred
+        .iter()
+        .zip(actual)
+        .map(|(p, a)| (p - a).powi(2))
+        .sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+/// The paper's headline number: accuracy % = 100 (1 - WAPE), clamped.
+pub fn accuracy_pct(pred: &[f64], actual: &[f64]) -> f64 {
+    (100.0 * (1.0 - wape(pred, actual))).clamp(0.0, 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_forecast_is_100() {
+        let a = [3.0, 5.0, 7.0];
+        assert_eq!(accuracy_pct(&a, &a), 100.0);
+        assert_eq!(wape(&a, &a), 0.0);
+        assert_eq!(rmse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn wape_known_value() {
+        // |1| + |1| over |10| + |10| = 0.1 -> 90%
+        let pred = [11.0, 9.0];
+        let actual = [10.0, 10.0];
+        assert!((wape(&pred, &actual) - 0.1).abs() < 1e-12);
+        assert!((accuracy_pct(&pred, &actual) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_actuals_handled() {
+        assert_eq!(wape(&[0.0, 0.0], &[0.0, 0.0]), 0.0);
+        assert!(wape(&[1.0, 0.0], &[0.0, 0.0]).is_infinite());
+        assert_eq!(accuracy_pct(&[1.0], &[0.0]), 0.0); // clamped
+    }
+
+    #[test]
+    fn smape_bounds() {
+        assert!((smape(&[1.0], &[-1.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(smape(&[2.0], &[2.0]), 0.0);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,255 @@
+//! Pure-Rust mirror of the L2 Fourier forecast graph (Eq. 1-2).
+//!
+//! Semantically identical to `python/compile/model.py::forecast` — same
+//! quadratic-trend normal equations, same explicit-projection DFT, same
+//! stable top-K harmonic selection, same statistical clipping — so the
+//! HLO artifact and this mirror can be differentially tested (tolerance
+//! reflects f32 vs f64 arithmetic). Used as the fast in-process fallback
+//! for the big simulation sweeps; the HLO path is the deployed one.
+
+use std::f64::consts::TAU;
+
+use crate::forecast::Forecaster;
+
+#[derive(Debug, Clone)]
+pub struct FourierForecaster {
+    /// K harmonics kept (paper reuses IceBreaker's predictor).
+    pub harmonics: usize,
+    /// Statistical-clipping confidence γ (Eq. 2).
+    pub gamma_clip: f64,
+    /// Trailing samples for the clipping mean/std (M).
+    pub recent: usize,
+}
+
+impl Default for FourierForecaster {
+    fn default() -> Self {
+        FourierForecaster {
+            harmonics: 8,
+            gamma_clip: 3.0,
+            recent: 60,
+        }
+    }
+}
+
+/// Quadratic trend coefficients (c, b, a) in sample units, via the same
+/// normalized-t normal equations as the L2 graph.
+pub fn quadratic_trend(history: &[f64]) -> [f64; 3] {
+    let w = history.len();
+    let wf = w as f64;
+    // normal equations for V = [1, t, t^2] with t in [0,1)
+    let mut a = [[0.0f64; 3]; 3];
+    let mut b = [0.0f64; 3];
+    for (i, &y) in history.iter().enumerate() {
+        let t = i as f64 / wf;
+        let row = [1.0, t, t * t];
+        for p in 0..3 {
+            b[p] += row[p] * y;
+            for q in 0..3 {
+                a[p][q] += row[p] * row[q];
+            }
+        }
+    }
+    let flat: Vec<f64> = a.iter().flatten().copied().collect();
+    let c = crate::forecast::linalg::solve(&flat, &b, 3)
+        .unwrap_or_else(|| vec![b[0] / a[0][0].max(1e-12), 0.0, 0.0]);
+    [c[0], c[1] / wf, c[2] / (wf * wf)]
+}
+
+/// Explicit-projection real DFT: X_j for j = 0..W/2 (matches `_dft_matmul`).
+pub fn dft(resid: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let w = resid.len();
+    let nbins = w / 2 + 1;
+    let mut re = vec![0.0; nbins];
+    let mut im = vec![0.0; nbins];
+    for j in 0..nbins {
+        let mut cr = 0.0;
+        let mut ci = 0.0;
+        for (t, &y) in resid.iter().enumerate() {
+            let ang = TAU * j as f64 * t as f64 / w as f64;
+            cr += ang.cos() * y;
+            ci -= ang.sin() * y;
+        }
+        re[j] = cr;
+        im[j] = ci;
+    }
+    (re, im)
+}
+
+/// Extracted harmonic model.
+#[derive(Debug, Clone)]
+pub struct HarmonicModel {
+    pub coeffs: [f64; 3],
+    pub amps: Vec<f64>,
+    pub freqs: Vec<f64>,
+    pub phases: Vec<f64>,
+    pub window: usize,
+}
+
+impl HarmonicModel {
+    /// Fit Eq. 1 to a full history window.
+    pub fn fit(history: &[f64], harmonics: usize) -> HarmonicModel {
+        let w = history.len();
+        let coeffs = quadratic_trend(history);
+        let resid: Vec<f64> = history
+            .iter()
+            .enumerate()
+            .map(|(i, &y)| {
+                let t = i as f64;
+                y - (coeffs[0] + coeffs[1] * t + coeffs[2] * t * t)
+            })
+            .collect();
+        let (re, im) = dft(&resid);
+        let mut power: Vec<f64> = re
+            .iter()
+            .zip(&im)
+            .map(|(r, i)| r * r + i * i)
+            .collect();
+        power[0] = -1.0; // exclude DC, as the L2 graph does
+        // stable descending sort by power (ties keep lower bin first)
+        let mut order: Vec<usize> = (0..power.len()).collect();
+        order.sort_by(|&a, &b| power[b].partial_cmp(&power[a]).unwrap().then(a.cmp(&b)));
+        let k = harmonics.min(order.len());
+        let top = &order[..k];
+        HarmonicModel {
+            coeffs,
+            amps: top
+                .iter()
+                .map(|&j| 2.0 * (power[j].max(0.0) + 1e-12).sqrt() / w as f64)
+                .collect(),
+            freqs: top.iter().map(|&j| j as f64 / w as f64).collect(),
+            phases: top.iter().map(|&j| im[j].atan2(re[j])).collect(),
+            window: w,
+        }
+    }
+
+    /// Evaluate Eq. 1 at absolute sample index `t` (kernel mirror).
+    pub fn eval(&self, t: f64) -> f64 {
+        let mut y = self.coeffs[0] + self.coeffs[1] * t + self.coeffs[2] * t * t;
+        for i in 0..self.amps.len() {
+            y += self.amps[i] * (TAU * self.freqs[i] * t + self.phases[i]).cos();
+        }
+        y
+    }
+}
+
+impl FourierForecaster {
+    /// Raw (unclipped) forecast — for Fig. 4 error analysis.
+    pub fn forecast_raw(&self, history: &[f64], horizon: usize) -> Vec<f64> {
+        let model = HarmonicModel::fit(history, self.harmonics);
+        (0..horizon)
+            .map(|h| model.eval((history.len() + h) as f64))
+            .collect()
+    }
+}
+
+impl Forecaster for FourierForecaster {
+    fn forecast(&mut self, history: &[f64], horizon: usize) -> Vec<f64> {
+        let raw = self.forecast_raw(history, horizon);
+        // Eq. 2: statistical clipping to [0, mean + gamma * std]
+        let m = self.recent.min(history.len());
+        let recent = &history[history.len() - m..];
+        let mean = recent.iter().sum::<f64>() / m.max(1) as f64;
+        let var = recent.iter().map(|y| (y - mean).powi(2)).sum::<f64>() / m.max(1) as f64;
+        let hi = mean + self.gamma_clip * var.sqrt();
+        raw.into_iter().map(|y| y.clamp(0.0, hi)).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "fourier"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trend_recovers_quadratic() {
+        let w = 240;
+        let y: Vec<f64> = (0..w)
+            .map(|t| 3.0 + 0.05 * t as f64 - 1e-4 * (t as f64).powi(2))
+            .collect();
+        let c = quadratic_trend(&y);
+        assert!((c[0] - 3.0).abs() < 1e-6, "{c:?}");
+        assert!((c[1] - 0.05).abs() < 1e-7);
+        assert!((c[2] + 1e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dft_parseval() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(4);
+        let y: Vec<f64> = (0..64).map(|_| rng.normal(0.0, 1.0)).collect();
+        let (re, im) = dft(&y);
+        // Parseval for the real DFT: sum y^2 = (1/W)(X0^2 + 2 sum |Xj|^2 + XN^2)
+        let w = y.len() as f64;
+        let time_e: f64 = y.iter().map(|v| v * v).sum();
+        let mut freq_e = re[0] * re[0] + im[0] * im[0];
+        for j in 1..re.len() - 1 {
+            freq_e += 2.0 * (re[j] * re[j] + im[j] * im[j]);
+        }
+        let last = re.len() - 1;
+        freq_e += re[last] * re[last] + im[last] * im[last];
+        assert!((time_e - freq_e / w).abs() < 1e-6 * time_e.max(1.0));
+    }
+
+    #[test]
+    fn pure_harmonic_extrapolates() {
+        let w = 240;
+        let period = 40.0;
+        let y: Vec<f64> = (0..w)
+            .map(|t| 20.0 + 6.0 * (TAU * t as f64 / period + 0.7).cos())
+            .collect();
+        let f = FourierForecaster::default();
+        let pred = f.forecast_raw(&y, 24);
+        for (h, p) in pred.iter().enumerate() {
+            let t = (w + h) as f64;
+            let want = 20.0 + 6.0 * (TAU * t / period + 0.7).cos();
+            assert!((p - want).abs() < 1.5, "h={h}: {p} vs {want}"); // small leakage from trend-absorbed energy
+        }
+    }
+
+    #[test]
+    fn clipping_bounds_hold() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let y: Vec<f64> = (0..240).map(|_| rng.normal(30.0, 15.0).max(0.0)).collect();
+        let mut f = FourierForecaster {
+            gamma_clip: 2.0,
+            ..Default::default()
+        };
+        let pred = f.forecast(&y, 24);
+        let recent = &y[180..];
+        let mean = recent.iter().sum::<f64>() / 60.0;
+        let var = recent.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / 60.0;
+        let hi = mean + 2.0 * var.sqrt() + 1e-9;
+        for p in pred {
+            assert!((0.0..=hi).contains(&p), "{p} outside [0, {hi}]");
+        }
+    }
+
+    #[test]
+    fn constant_history_predicts_constant() {
+        let y = vec![12.0; 240];
+        let mut f = FourierForecaster::default();
+        let pred = f.forecast(&y, 24);
+        for p in pred {
+            assert!((p - 12.0).abs() < 0.3, "{p}");
+        }
+    }
+
+    #[test]
+    fn matches_python_reference_case() {
+        // same case as the python smoke: 20 + 5 cos(2 pi t / 60) + 0.01 t
+        // python (f32) produced [27.3726, 27.3599, 27.2946, 27.1776, ...]
+        let y: Vec<f64> = (0..240)
+            .map(|t| 20.0 + 5.0 * (TAU * t as f64 / 60.0).cos() + 0.01 * t as f64)
+            .collect();
+        let mut f = FourierForecaster::default();
+        let pred = f.forecast(&y, 24);
+        let want = [27.3727, 27.3601, 27.2948, 27.1779];
+        for (p, w) in pred.iter().zip(want) {
+            assert!((p - w).abs() < 0.05, "{p} vs {w}");
+        }
+    }
+}

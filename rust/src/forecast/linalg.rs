@@ -1,0 +1,148 @@
+//! Small dense linear algebra for the forecasters (normal equations, OLS).
+
+/// Solve A x = b by Gaussian elimination with partial pivoting.
+/// A is row-major n x n. Returns None if singular to working precision.
+pub fn solve(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut m = a.to_vec();
+    let mut rhs = b.to_vec();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        let mut best = m[col * n + col].abs();
+        for row in col + 1..n {
+            let v = m[row * n + col].abs();
+            if v > best {
+                best = v;
+                piv = row;
+            }
+        }
+        if best < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for k in 0..n {
+                m.swap(col * n + k, piv * n + k);
+            }
+            rhs.swap(col, piv);
+        }
+        // eliminate below
+        for row in col + 1..n {
+            let f = m[row * n + col] / m[col * n + col];
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                m[row * n + k] -= f * m[col * n + k];
+            }
+            rhs[row] -= f * rhs[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = rhs[row];
+        for k in row + 1..n {
+            acc -= m[row * n + k] * x[k];
+        }
+        x[row] = acc / m[row * n + row];
+    }
+    Some(x)
+}
+
+/// Ordinary least squares: minimize ||X beta - y||^2 via normal equations.
+/// X is row-major rows x cols. Returns None if X'X is singular.
+pub fn ols(x: &[f64], y: &[f64], rows: usize, cols: usize) -> Option<Vec<f64>> {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(y.len(), rows);
+    let mut xtx = vec![0.0; cols * cols];
+    let mut xty = vec![0.0; cols];
+    for r in 0..rows {
+        for i in 0..cols {
+            let xi = x[r * cols + i];
+            xty[i] += xi * y[r];
+            for j in i..cols {
+                xtx[i * cols + j] += xi * x[r * cols + j];
+            }
+        }
+    }
+    // mirror the upper triangle
+    for i in 0..cols {
+        for j in 0..i {
+            xtx[i * cols + j] = xtx[j * cols + i];
+        }
+    }
+    // tiny ridge for numerical safety on near-collinear designs
+    for i in 0..cols {
+        xtx[i * cols + i] += 1e-9;
+    }
+    solve(&xtx, &xty, cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_known_system() {
+        // [2 1; 1 3] x = [3; 5] -> x = [4/5, 7/5]
+        let x = solve(&[2.0, 1.0, 1.0, 3.0], &[3.0, 5.0], 2).unwrap();
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        // [0 1; 1 0] x = [2; 3]
+        let x = solve(&[0.0, 1.0, 1.0, 0.0], &[2.0, 3.0], 2).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        assert!(solve(&[1.0, 2.0, 2.0, 4.0], &[1.0, 2.0], 2).is_none());
+    }
+
+    #[test]
+    fn ols_recovers_line() {
+        // y = 3 + 2 t
+        let rows = 50;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for t in 0..rows {
+            x.push(1.0);
+            x.push(t as f64);
+            y.push(3.0 + 2.0 * t as f64);
+        }
+        let beta = ols(&x, &y, rows, 2).unwrap();
+        assert!((beta[0] - 3.0).abs() < 1e-6);
+        assert!((beta[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ols_random_residual_orthogonality() {
+        use crate::prop_assert;
+        use crate::util::prop::prop_check;
+        prop_check("ols residual orthogonal to design", 50, |g| {
+            let rows = g.usize(8, 40);
+            let cols = g.usize(1, 4);
+            let x: Vec<f64> = (0..rows * cols).map(|_| g.f64(-2.0, 2.0)).collect();
+            let y: Vec<f64> = (0..rows).map(|_| g.f64(-2.0, 2.0)).collect();
+            let Some(beta) = ols(&x, &y, rows, cols) else {
+                return Ok(()); // singular design: nothing to check
+            };
+            // X'(y - X beta) ~ 0
+            for j in 0..cols {
+                let mut dot = 0.0;
+                for r in 0..rows {
+                    let pred: f64 =
+                        (0..cols).map(|k| x[r * cols + k] * beta[k]).sum();
+                    dot += x[r * cols + j] * (y[r] - pred);
+                }
+                prop_assert!(dot.abs() < 1e-5, "residual not orthogonal: {dot}");
+            }
+            Ok(())
+        });
+    }
+}

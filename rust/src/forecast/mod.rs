@@ -1,0 +1,44 @@
+//! Invocation forecasting (Sec. III-A): the Fourier predictor (Eq. 1-2),
+//! the ARIMA baseline (Fig. 4), and error metrics.
+//!
+//! The deployed forecast path executes the AOT HLO artifact through
+//! `runtime::modules::ForecastModule`; [`fourier::FourierForecaster`] is
+//! the bit-level Rust mirror used for fast simulation sweeps and
+//! differential testing.
+
+pub mod accuracy;
+pub mod arima;
+pub mod fourier;
+pub mod linalg;
+
+/// A rolling-horizon forecaster of per-interval arrival counts.
+pub trait Forecaster {
+    /// Predict the next `horizon` per-interval arrival counts given the
+    /// most recent `history` (oldest first). Implementations must return
+    /// exactly `horizon` finite values.
+    fn forecast(&mut self, history: &[f64], horizon: usize) -> Vec<f64>;
+
+    fn name(&self) -> &str;
+}
+
+pub use arima::ArimaForecaster;
+pub use fourier::FourierForecaster;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trait_objects_work() {
+        let mut fs: Vec<Box<dyn Forecaster>> = vec![
+            Box::new(FourierForecaster::default()),
+            Box::new(ArimaForecaster::default()),
+        ];
+        let hist: Vec<f64> = (0..240).map(|t| 10.0 + (t % 7) as f64).collect();
+        for f in fs.iter_mut() {
+            let out = f.forecast(&hist, 24);
+            assert_eq!(out.len(), 24, "{}", f.name());
+            assert!(out.iter().all(|v| v.is_finite()), "{}", f.name());
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! # mpc-serverless
+//!
+//! Reproduction of *"Taming Cold Starts: Proactive Serverless Scheduling
+//! with Model Predictive Control"* (MASCOTS 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the MPC scheduler and every substrate it needs:
+//!   an OpenWhisk/Kubernetes cluster analog, workload generators, the
+//!   request-shaping coordinator, baselines (OpenWhisk default policy,
+//!   IceBreaker), metrics, and the experiment drivers for every figure in
+//!   the paper's evaluation.
+//! * **L2/L1 (python/, build-time only)** — the controller's compute
+//!   graphs (Fourier forecast, horizon-QP projected-gradient solver,
+//!   detector payload) authored in JAX with Pallas kernels and AOT-lowered
+//!   to HLO text artifacts.
+//! * **runtime** — loads `artifacts/*.hlo.txt` through the PJRT C API
+//!   (`xla` crate) so Python is never on the request path.
+//!
+//! See DESIGN.md for the full system inventory and the per-experiment
+//! index, and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod forecast;
+pub mod metrics;
+pub mod mpc;
+pub mod runtime;
+pub mod simulator;
+pub mod util;
+pub mod workload;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,138 @@
+//! `mpc-serverless` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   simulate   run one policy on one trace, print the run report
+//!   matrix     run the full Fig. 5-7 policy x trace matrix
+//!   forecast   Fig. 4 forecast comparison
+//!   overhead   Fig. 8 control overhead (rust mirror + HLO if available)
+//!   fig1       the 50-request motivation scenario
+//!   gen-trace  emit a workload trace as CSV to stdout
+
+use mpc_serverless::config::{secs, ExperimentConfig, Policy, TraceKind};
+use mpc_serverless::experiments::{fig1, fig4, fig5_7, fig8, run_experiment};
+use mpc_serverless::util::cli::{Cli, CliError};
+
+fn main() {
+    mpc_serverless::util::logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if argv.is_empty() { vec![] } else { argv[1..].to_vec() };
+    let code = match cmd {
+        "simulate" => simulate(&rest),
+        "matrix" => matrix(&rest),
+        "forecast" => forecast(&rest),
+        "overhead" => overhead(),
+        "fig1" => {
+            let r = fig1::run(42);
+            println!("cold starts: {} | warm mean {:.3} s | cold mean {:.2} s",
+                     r.cold_starts, r.warm_exec_mean_s, r.cold_response_mean_s);
+            0
+        }
+        "gen-trace" => gen_trace(&rest),
+        _ => {
+            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
+                      mpc_serverless::version());
+            if cmd == "help" { 0 } else { 2 }
+        }
+    };
+    std::process::exit(code);
+}
+
+fn common_cli(name: &str, about: &str) -> Cli {
+    Cli::new(name, about)
+        .flag("policy", "mpc", "openwhisk | icebreaker | mpc")
+        .flag("trace", "synthetic", "azure | synthetic")
+        .flag("duration-s", "3600", "experiment duration (seconds)")
+        .flag("seed", "42", "rng seed")
+}
+
+fn parse_or_exit(cli: &Cli, rest: &[String]) -> mpc_serverless::util::cli::Args {
+    match cli.parse(rest) {
+        Ok(a) => a,
+        Err(CliError::Help) => {
+            println!("{}", cli.usage());
+            std::process::exit(0);
+        }
+        Err(e) => {
+            eprintln!("{e}\n{}", cli.usage());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn simulate(rest: &[String]) -> i32 {
+    let cli = common_cli("simulate", "run one policy on one workload");
+    let a = parse_or_exit(&cli, rest);
+    let policy = match Policy::parse(a.get("policy")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown policy '{}'", a.get("policy"));
+            return 2;
+        }
+    };
+    let trace_kind = match TraceKind::parse(a.get("trace")) {
+        Some(t) => t,
+        None => {
+            eprintln!("unknown trace '{}'", a.get("trace"));
+            return 2;
+        }
+    };
+    let cfg = ExperimentConfig {
+        trace: trace_kind,
+        duration: secs(a.get_f64("duration-s").unwrap_or(3600.0)),
+        seed: a.get_u64("seed").unwrap_or(42),
+        ..Default::default()
+    };
+    let trace = fig4::trace_for(trace_kind, cfg.duration, cfg.seed);
+    let r = run_experiment(&cfg, policy, &trace);
+    println!("{}", r.to_json());
+    0
+}
+
+fn matrix(rest: &[String]) -> i32 {
+    let cli = Cli::new("matrix", "full policy x trace matrix (Figs. 5-7)")
+        .flag("duration-s", "3600", "experiment duration (seconds)")
+        .flag("seed", "42", "rng seed");
+    let a = parse_or_exit(&cli, rest);
+    let d = a.get_f64("duration-s").unwrap_or(3600.0);
+    let seed = a.get_u64("seed").unwrap_or(42);
+    for kind in [TraceKind::AzureLike, TraceKind::SyntheticBursty] {
+        let m = fig5_7::run_matrix(kind, d, seed);
+        for r in [&m.openwhisk, &m.icebreaker, &m.mpc] {
+            println!("{}", r.to_json());
+        }
+    }
+    0
+}
+
+fn forecast(rest: &[String]) -> i32 {
+    let cli = Cli::new("forecast", "Fig. 4 forecast comparison")
+        .flag("duration-s", "14400", "trace duration (seconds)")
+        .flag("seed", "11", "rng seed");
+    let a = parse_or_exit(&cli, rest);
+    for e in fig4::run(a.get_f64("duration-s").unwrap_or(14400.0), a.get_u64("seed").unwrap_or(11)) {
+        println!("{:<10} {:<9} accuracy {:>5.1}% wape {:.3} {:.3} ms/call",
+                 e.trace, e.predictor, e.accuracy_pct, e.wape, e.mean_runtime_ms);
+    }
+    0
+}
+
+fn overhead() -> i32 {
+    let r = fig8::run_rust(30);
+    println!("rust-mirror: forecast {:.3} ms, optimizer {:.3} ms",
+             r.forecast_ms.mean(), r.solve_ms.mean());
+    0
+}
+
+fn gen_trace(rest: &[String]) -> i32 {
+    let cli = Cli::new("gen-trace", "emit a workload trace as CSV")
+        .flag("trace", "synthetic", "azure | synthetic")
+        .flag("duration-s", "3600", "trace duration (seconds)")
+        .flag("seed", "42", "rng seed");
+    let a = parse_or_exit(&cli, rest);
+    let kind = TraceKind::parse(a.get("trace")).unwrap_or(TraceKind::SyntheticBursty);
+    let t = fig4::trace_for(kind, secs(a.get_f64("duration-s").unwrap_or(3600.0)),
+                            a.get_u64("seed").unwrap_or(42));
+    print!("{}", t.to_csv());
+    0
+}

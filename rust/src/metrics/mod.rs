@@ -1,0 +1,299 @@
+//! Experiment metrics: per-request records, container-usage samples,
+//! keep-alive accounting, control overhead — everything the paper's
+//! evaluation section (Figs. 1, 5-8) reports.
+
+use crate::cluster::telemetry::{Counters, GaugeSample};
+use crate::cluster::RequestId;
+use crate::config::{to_secs, Micros};
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Per-request lifecycle timestamps.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestRecord {
+    pub arrival: Micros,
+    pub dispatched: Option<Micros>,
+    pub completed: Option<Micros>,
+    /// Whether this request's execution waited on a cold start.
+    pub cold: bool,
+}
+
+impl RequestRecord {
+    /// End-to-end response time (queueing + cold start + execution).
+    pub fn response_time(&self) -> Option<Micros> {
+        self.completed.map(|c| c - self.arrival)
+    }
+
+    /// Shaping/queueing delay before dispatch.
+    pub fn queue_delay(&self) -> Option<Micros> {
+        self.dispatched.map(|d| d - self.arrival)
+    }
+}
+
+/// Event sink driven by the experiment runner.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    requests: Vec<RequestRecord>,
+    samples: Vec<GaugeSample>,
+    pub forecast_ns: Vec<f64>,
+    pub solve_ns: Vec<f64>,
+}
+
+impl Recorder {
+    pub fn new(expected_requests: usize) -> Self {
+        Recorder {
+            requests: Vec::with_capacity(expected_requests),
+            ..Default::default()
+        }
+    }
+
+    pub fn on_arrival(&mut self, req: RequestId, t: Micros) {
+        let idx = req as usize;
+        if self.requests.len() <= idx {
+            self.requests.resize(idx + 1, RequestRecord::default());
+        }
+        self.requests[idx].arrival = t;
+    }
+
+    pub fn on_dispatch(&mut self, req: RequestId, t: Micros) {
+        self.requests[req as usize].dispatched = Some(t);
+    }
+
+    pub fn on_cold(&mut self, req: RequestId) {
+        self.requests[req as usize].cold = true;
+    }
+
+    pub fn on_complete(&mut self, req: RequestId, t: Micros) {
+        self.requests[req as usize].completed = Some(t);
+    }
+
+    pub fn on_gauge(&mut self, s: GaugeSample) {
+        self.samples.push(s);
+    }
+
+    pub fn on_control_overhead(&mut self, forecast_ns: f64, solve_ns: f64) {
+        self.forecast_ns.push(forecast_ns);
+        self.solve_ns.push(solve_ns);
+    }
+
+    pub fn requests(&self) -> &[RequestRecord] {
+        &self.requests
+    }
+
+    pub fn samples(&self) -> &[GaugeSample] {
+        &self.samples
+    }
+}
+
+/// Aggregated results of one experiment run (one policy, one trace).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub policy: String,
+    pub trace: String,
+    pub duration_s: f64,
+    pub completed: usize,
+    pub dropped: usize,
+    pub cold_requests: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub mean_queue_delay_ms: f64,
+    /// Mean warm-container gauge over the 1-minute samples (Fig. 6).
+    pub mean_warm: f64,
+    pub warm_series: Vec<(Micros, u32)>,
+    /// Total keep-alive duration in container-seconds (Fig. 7).
+    pub keepalive_total_s: f64,
+    /// Total idle (warm-unused) container-seconds.
+    pub idle_total_s: f64,
+    pub counters: Counters,
+    pub forecast_overhead_ms: f64,
+    pub solve_overhead_ms: f64,
+    /// Per-request response times in seconds (for downstream analysis).
+    pub response_times_s: Vec<f64>,
+}
+
+impl RunReport {
+    pub fn from_recorder(
+        policy: &str,
+        trace: &str,
+        duration: Micros,
+        rec: &Recorder,
+        counters: Counters,
+        keepalive: &[Micros],
+        idle_totals: &[Micros],
+    ) -> RunReport {
+        let mut rt = Summary::new();
+        let mut qd = Summary::new();
+        let mut cold_requests = 0;
+        let mut dropped = 0;
+        for r in rec.requests() {
+            match r.response_time() {
+                Some(t) => {
+                    rt.add(to_secs(t));
+                    if r.cold {
+                        cold_requests += 1;
+                    }
+                    if let Some(d) = r.queue_delay() {
+                        qd.add(to_secs(d));
+                    }
+                }
+                None => dropped += 1,
+            }
+        }
+        let mean_warm = if rec.samples().is_empty() {
+            0.0
+        } else {
+            rec.samples().iter().map(|s| s.warm as f64).sum::<f64>()
+                / rec.samples().len() as f64
+        };
+        RunReport {
+            policy: policy.to_string(),
+            trace: trace.to_string(),
+            duration_s: to_secs(duration),
+            completed: rt.len(),
+            dropped,
+            cold_requests,
+            mean_ms: rt.mean() * 1e3,
+            p50_ms: rt.p50() * 1e3,
+            p90_ms: rt.p90() * 1e3,
+            p95_ms: rt.p95() * 1e3,
+            p99_ms: rt.p99() * 1e3,
+            max_ms: if rt.is_empty() { 0.0 } else { rt.max() * 1e3 },
+            mean_queue_delay_ms: qd.mean() * 1e3,
+            mean_warm,
+            warm_series: rec.samples().iter().map(|s| (s.time, s.warm)).collect(),
+            keepalive_total_s: keepalive.iter().map(|&k| to_secs(k)).sum(),
+            idle_total_s: idle_totals.iter().map(|&k| to_secs(k)).sum(),
+            counters,
+            forecast_overhead_ms: mean(&rec.forecast_ns) / 1e6,
+            solve_overhead_ms: mean(&rec.solve_ns) / 1e6,
+            response_times_s: rt.samples().to_vec(),
+        }
+    }
+
+    /// Percentage improvement of a latency/usage metric over a baseline
+    /// (positive = improvement). The Fig. 5/6/7 quantity.
+    pub fn improvement_pct(metric_self: f64, metric_base: f64) -> f64 {
+        if metric_base <= 0.0 {
+            return 0.0;
+        }
+        100.0 * (metric_base - metric_self) / metric_base
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::Str(self.policy.clone())),
+            ("trace", Json::Str(self.trace.clone())),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("cold_requests", Json::Num(self.cold_requests as f64)),
+            ("cold_starts", Json::Num(self.counters.cold_starts as f64)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p90_ms", Json::Num(self.p90_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("mean_queue_delay_ms", Json::Num(self.mean_queue_delay_ms)),
+            ("mean_warm", Json::Num(self.mean_warm)),
+            ("keepalive_total_s", Json::Num(self.keepalive_total_s)),
+            ("idle_total_s", Json::Num(self.idle_total_s)),
+            ("forecast_overhead_ms", Json::Num(self.forecast_overhead_ms)),
+            ("solve_overhead_ms", Json::Num(self.solve_overhead_ms)),
+        ])
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::secs;
+
+    #[test]
+    fn request_record_timing() {
+        let r = RequestRecord {
+            arrival: secs(1.0),
+            dispatched: Some(secs(1.5)),
+            completed: Some(secs(2.0)),
+            cold: false,
+        };
+        assert_eq!(r.response_time(), Some(secs(1.0)));
+        assert_eq!(r.queue_delay(), Some(secs(0.5)));
+    }
+
+    #[test]
+    fn recorder_to_report() {
+        let mut rec = Recorder::new(4);
+        for (i, (a, d, c, cold)) in [
+            (0.0, 0.0, 0.28, false),
+            (1.0, 1.0, 11.78, true),
+            (2.0, 2.5, 2.78, false),
+            (3.0, 3.0, f64::NAN, false), // never completes -> dropped
+        ]
+        .iter()
+        .enumerate()
+        {
+            let req = i as RequestId;
+            rec.on_arrival(req, secs(*a));
+            rec.on_dispatch(req, secs(*d));
+            if *cold {
+                rec.on_cold(req);
+            }
+            if !c.is_nan() {
+                rec.on_complete(req, secs(*c));
+            }
+        }
+        let report = RunReport::from_recorder(
+            "test",
+            "unit",
+            secs(60.0),
+            &rec,
+            Counters::default(),
+            &[secs(30.0), secs(10.0)],
+            &[secs(40.0)],
+        );
+        assert_eq!(report.completed, 3);
+        assert_eq!(report.dropped, 1);
+        assert_eq!(report.cold_requests, 1);
+        assert!((report.mean_ms - (280.0 + 10_780.0 + 780.0) / 3.0).abs() < 0.1);
+        assert_eq!(report.keepalive_total_s, 40.0);
+        assert_eq!(report.idle_total_s, 40.0);
+        // queue delays: 0, 0, 0.5 s -> mean 166.67 ms
+        assert!((report.mean_queue_delay_ms - 500.0 / 3.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn improvement_pct_signs() {
+        assert_eq!(RunReport::improvement_pct(50.0, 100.0), 50.0);
+        assert_eq!(RunReport::improvement_pct(150.0, 100.0), -50.0);
+        assert_eq!(RunReport::improvement_pct(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn report_json_fields() {
+        let rec = Recorder::new(0);
+        let report = RunReport::from_recorder(
+            "mpc",
+            "azure",
+            secs(1.0),
+            &rec,
+            Counters::default(),
+            &[],
+            &[],
+        );
+        let j = report.to_json();
+        assert_eq!(j.path("policy").unwrap().as_str(), Some("mpc"));
+        assert_eq!(j.path("completed").unwrap().as_f64(), Some(0.0));
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's optimizer (Sec. III-B): horizon problem, PGD solver, and
+//! feasibility repair. The deployed solve path runs the AOT HLO artifact
+//! (`runtime::modules::HloSolver`); [`solver::RustSolver`] is the
+//! in-process mirror for sweeps and differential tests.
+
+pub mod problem;
+pub mod repair;
+pub mod solver;
+
+pub use problem::MpcInput;
+pub use repair::{repair, verify, Plan};
+pub use solver::{MpcSolver, RustSolver, ADAM_B2, ADAM_EPS};

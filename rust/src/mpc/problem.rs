@@ -1,0 +1,315 @@
+//! The MPC horizon problem (Sec. III-B, Eq. 3-18): decision layout,
+//! system dynamics rollout, objective, and the hand-derived gradient.
+//!
+//! This is the bit-level Rust mirror of the L1 Pallas kernel
+//! (`python/compile/kernels/qp.py`) — same cost terms, same penalty
+//! relaxation, same gradient — kept in lockstep for differential testing
+//! against the HLO artifact and used as the fast in-process solver for
+//! large simulation sweeps.
+
+use crate::config::Weights;
+
+/// Control interval in seconds, baked like `cold_steps` (kernel mirror).
+pub const DT_S: f64 = 30.0;
+/// Steady-flow utilization target for capacity sizing (kernel mirror).
+pub const UTIL_TARGET: f64 = 0.8;
+
+/// Inputs to one MPC solve (state + forecast at a control step).
+#[derive(Debug, Clone)]
+pub struct MpcInput {
+    /// Forecasted arrivals per step, λ̂ (length H).
+    pub lam: Vec<f64>,
+    /// Pre-horizon cold starts completing at step k (readyCold, k < D).
+    pub rdy: Vec<f64>,
+    /// Queue length now (Eq. 10 initial state).
+    pub q0: f64,
+    /// Warm containers now (Eq. 11 initial state).
+    pub w0: f64,
+    /// Cold starts issued at the previous step (smoothness anchor, Eq. 8).
+    pub x_prev: f64,
+}
+
+impl MpcInput {
+    pub fn horizon(&self) -> usize {
+        self.lam.len()
+    }
+}
+
+/// Split the decision vector z = concat(x, r, s).
+pub fn split(z: &[f64], h: usize) -> (&[f64], &[f64], &[f64]) {
+    (&z[..h], &z[h..2 * h], &z[2 * h..])
+}
+
+/// System dynamics (Eq. 10-11): state at the *start* of each step.
+pub fn rollout(z: &[f64], input: &MpcInput, cold_steps: usize) -> (Vec<f64>, Vec<f64>) {
+    let h = input.horizon();
+    let (x, r, s) = split(z, h);
+    let mut q = vec![0.0; h];
+    let mut w = vec![0.0; h];
+    q[0] = input.q0;
+    w[0] = input.w0;
+    for k in 0..h - 1 {
+        let ready = input.rdy[k] + if k >= cold_steps { x[k - cold_steps] } else { 0.0 };
+        q[k + 1] = q[k] + input.lam[k] - s[k];
+        w[k + 1] = w[k] + ready - r[k];
+    }
+    (q, w)
+}
+
+#[inline]
+fn relu(v: f64) -> f64 {
+    v.max(0.0)
+}
+
+/// Objective (Eq. 9) + quadratic penalties for the coupled constraints.
+pub fn cost(z: &[f64], input: &MpcInput, wts: &Weights, cold_steps: usize) -> f64 {
+    let h = input.horizon();
+    let (x, r, s) = split(z, h);
+    let (q, w) = rollout(z, input, cold_steps);
+    // effective demand = utilization-normalized forecast flow + backlog
+    // amortized over the cold window; without the backlog term the penalty
+    // relaxation has no first-order pressure to provision for queue drain,
+    // and without the flow normalization the drain-target mu over-sizes the
+    // pool ~10x on steady load (see the kernel docstring)
+    let inv_dd = 1.0 / (cold_steps as f64 + 1.0);
+    let flow_scale = wts.mu * wts.l_warm / (UTIL_TARGET * DT_S);
+    // true per-step serving throughput (Eq. 12's capacity); the drain-
+    // target mu only shapes provisioning (Eq. 3/6)
+    let mu_full = DT_S / wts.l_warm;
+    let mut j = 0.0;
+    for k in 0..h {
+        let ready = input.rdy[k] + if k >= cold_steps { x[k - cold_steps] } else { 0.0 };
+        // excess backlog only: steady state carries one step of flow in q
+        let demand = input.lam[k] * flow_scale + relu(q[k] - input.lam[k]) * inv_dd;
+        j += wts.alpha * relu(demand - wts.mu * w[k]) * (wts.l_cold + wts.l_warm); // Eq. 3
+        j += wts.beta * q[k] * wts.l_warm; // Eq. 4
+        j += wts.delta * x[k]; // Eq. 5
+        j += wts.gamma * relu(wts.mu * w[k] - demand); // Eq. 6
+        j -= wts.eta * r[k]; // Eq. 7
+        // Eq. 8 smoothness: dw_{k+1} = ready_k - r_k covers k=0..H-2
+        if k < h - 1 {
+            j += wts.rho1 * (ready - r[k]).powi(2);
+        }
+        let dx = x[k] - if k == 0 { input.x_prev } else { x[k - 1] };
+        j += wts.rho2 * dx * dx;
+        j += wts.rho_me * x[k] * r[k]; // Eq. 18 relaxed
+        // penalties (Eq. 12-17)
+        let pen = relu(s[k] - q[k]).powi(2)
+            + relu(s[k] - mu_full * w[k]).powi(2)
+            + relu(r[k] - w[k]).powi(2)
+            + relu(w[k] - wts.w_max).powi(2)
+            + relu(-q[k]).powi(2)
+            + relu(-w[k]).powi(2);
+        j += wts.kappa * pen;
+    }
+    j
+}
+
+/// Hand-derived gradient of [`cost`] (mirrors the Pallas kernel exactly).
+pub fn grad(z: &[f64], input: &MpcInput, wts: &Weights, cold_steps: usize) -> Vec<f64> {
+    let h = input.horizon();
+    let (x, r, s) = split(z, h);
+    let (q, w) = rollout(z, input, cold_steps);
+
+    // per-state partials
+    let inv_dd = 1.0 / (cold_steps as f64 + 1.0);
+    let flow_scale = wts.mu * wts.l_warm / (UTIL_TARGET * DT_S);
+    let mu_full = DT_S / wts.l_warm;
+    let mut g_w = vec![0.0; h];
+    let mut g_q = vec![0.0; h];
+    for k in 0..h {
+        let demand = input.lam[k] * flow_scale + relu(q[k] - input.lam[k]) * inv_dd;
+        let h_cold = relu(demand - wts.mu * w[k]);
+        let h_over = relu(wts.mu * w[k] - demand);
+        let v_sw = relu(s[k] - mu_full * w[k]);
+        let v_rw = relu(r[k] - w[k]);
+        let v_wmax = relu(w[k] - wts.w_max);
+        let v_wneg = relu(-w[k]);
+        let v_sq = relu(s[k] - q[k]);
+        let v_qneg = relu(-q[k]);
+        let m_qpos = f64::from(q[k] - input.lam[k] > 0.0);
+        g_w[k] = -wts.alpha * (wts.l_cold + wts.l_warm) * wts.mu * f64::from(h_cold > 0.0)
+            + wts.gamma * wts.mu * f64::from(h_over > 0.0)
+            + wts.kappa * (-2.0 * mu_full * v_sw - 2.0 * v_rw + 2.0 * v_wmax - 2.0 * v_wneg);
+        g_q[k] = wts.beta * wts.l_warm
+            + wts.alpha * (wts.l_cold + wts.l_warm) * f64::from(h_cold > 0.0) * m_qpos * inv_dd
+            - wts.gamma * f64::from(h_over > 0.0) * m_qpos * inv_dd
+            + wts.kappa * (-2.0 * v_sq - 2.0 * v_qneg);
+    }
+
+    // adjoint of the prefix sums: g_u[k] = sum_{i > k} g_w[i]
+    let mut g_u = vec![0.0; h];
+    let mut acc = 0.0;
+    for k in (0..h).rev() {
+        g_u[k] = acc; // strictly-upper: excludes i == k
+        acc += g_w[k];
+    }
+    // smoothness contribution in u-space (u_k enters dw_{k+1}, k <= H-2)
+    for (k, gu) in g_u.iter_mut().enumerate().take(h.saturating_sub(1)) {
+        let ready = input.rdy[k] + if k >= cold_steps { x[k - cold_steps] } else { 0.0 };
+        *gu += 2.0 * wts.rho1 * (ready - r[k]);
+    }
+    let mut g_qs = vec![0.0; h];
+    let mut accq = 0.0;
+    for k in (0..h).rev() {
+        g_qs[k] = accq;
+        accq += g_q[k];
+    }
+
+    let mut g = vec![0.0; 3 * h];
+    for k in 0..h {
+        // x: shift-transpose of g_u + direct terms
+        let from_w = if k + cold_steps < h { g_u[k + cold_steps] } else { 0.0 };
+        let dx_k = x[k] - if k == 0 { input.x_prev } else { x[k - 1] };
+        let dx_next = if k + 1 < h { x[k + 1] - x[k] } else { 0.0 };
+        g[k] = from_w + wts.delta + wts.rho_me * r[k] + 2.0 * wts.rho2 * (dx_k - dx_next);
+        // r
+        let v_rw = relu(r[k] - w[k]);
+        g[h + k] = -g_u[k] - wts.eta + wts.rho_me * x[k] + wts.kappa * 2.0 * v_rw;
+        // s
+        let v_sq = relu(s[k] - q[k]);
+        let v_sw = relu(s[k] - mu_full * w[k]);
+        g[2 * h + k] = -g_qs[k] + wts.kappa * (2.0 * v_sq + 2.0 * v_sw);
+    }
+    g
+}
+
+/// Box upper bounds for z (Eq. 14-17; lower bounds are all zero).
+pub fn upper_bounds(wts: &Weights, h: usize) -> Vec<f64> {
+    let mu_full = DT_S / wts.l_warm;
+    let mut ub = vec![wts.w_max; 2 * h];
+    ub.extend(std::iter::repeat(mu_full * wts.w_max).take(h));
+    ub
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    fn numeric_grad(z: &[f64], input: &MpcInput, wts: &Weights, d: usize) -> Vec<f64> {
+        let eps = 1e-5;
+        (0..z.len())
+            .map(|i| {
+                let mut zp = z.to_vec();
+                let mut zm = z.to_vec();
+                zp[i] += eps;
+                zm[i] -= eps;
+                (cost(&zp, input, wts, d) - cost(&zm, input, wts, d)) / (2.0 * eps)
+            })
+            .collect()
+    }
+
+    fn random_input(g: &mut crate::util::prop::Gen, h: usize) -> MpcInput {
+        MpcInput {
+            lam: g.vec_f64(h, 0.0, 60.0),
+            rdy: g.vec_f64(h, 0.0, 3.0),
+            q0: g.f64(0.0, 40.0),
+            w0: g.f64(0.0, 30.0),
+            x_prev: g.f64(0.0, 8.0),
+        }
+    }
+
+    #[test]
+    fn analytic_gradient_matches_numeric() {
+        prop_check("mpc gradient vs finite differences", 60, |g| {
+            let h = *g.pick(&[4usize, 8, 16, 24]);
+            let d = g.usize(0, h - 1);
+            let input = random_input(g, h);
+            let wts = Weights::default();
+            // avoid kink points by nudging off hinge boundaries
+            let z: Vec<f64> = (0..3 * h).map(|_| g.f64(0.05, 15.0)).collect();
+            let ga = grad(&z, &input, &wts, d);
+            let gn = numeric_grad(&z, &input, &wts, d);
+            for i in 0..z.len() {
+                let scale = 1.0 + ga[i].abs().max(gn[i].abs());
+                prop_assert!(
+                    (ga[i] - gn[i]).abs() / scale < 2e-3,
+                    "grad[{i}] analytic {} vs numeric {} (h={h} d={d})",
+                    ga[i],
+                    gn[i]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rollout_conservation() {
+        prop_check("rollout queue/warm conservation", 100, |g| {
+            let h = g.usize(2, 32);
+            let d = g.usize(0, h - 1);
+            let input = random_input(g, h);
+            let z: Vec<f64> = g.vec_f64(3 * h, 0.0, 10.0);
+            let (q, w) = rollout(&z, &input, d);
+            let (x, r, s) = split(&z, h);
+            // telescoping sums must match endpoint state
+            let mut q_sum = input.q0;
+            let mut w_sum = input.w0;
+            for k in 0..h - 1 {
+                q_sum += input.lam[k] - s[k];
+                let ready = input.rdy[k] + if k >= d { x[k - d] } else { 0.0 };
+                w_sum += ready - r[k];
+            }
+            prop_assert!((q[h - 1] - q_sum).abs() < 1e-9, "q endpoint mismatch");
+            prop_assert!((w[h - 1] - w_sum).abs() < 1e-9, "w endpoint mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cost_zero_when_weights_zero() {
+        let wts = Weights {
+            alpha: 0.0,
+            beta: 0.0,
+            gamma: 0.0,
+            delta: 0.0,
+            eta: 0.0,
+            rho1: 0.0,
+            rho2: 0.0,
+            rho_me: 0.0,
+            kappa: 0.0,
+            ..Weights::default()
+        };
+        let input = MpcInput {
+            lam: vec![10.0; 8],
+            rdy: vec![0.0; 8],
+            q0: 3.0,
+            w0: 2.0,
+            x_prev: 1.0,
+        };
+        let z = vec![1.5; 24];
+        assert_eq!(cost(&z, &input, &wts, 2), 0.0);
+        assert!(grad(&z, &input, &wts, 2).iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn cold_delay_drives_prewarm_gradient_negative() {
+        // demand far above capacity after step D: gradient wrt x[0] must be
+        // negative (increasing x reduces cost)
+        let h = 24;
+        let d = 11;
+        let input = MpcInput {
+            lam: vec![50.0; h],
+            rdy: vec![0.0; h],
+            q0: 0.0,
+            w0: 0.0,
+            x_prev: 0.0,
+        };
+        let wts = Weights::default();
+        let z = vec![0.0; 3 * h];
+        let g = grad(&z, &input, &wts, d);
+        assert!(g[0] < 0.0, "g_x[0] = {} should favour prewarming", g[0]);
+    }
+
+    #[test]
+    fn upper_bounds_layout() {
+        let wts = Weights::default();
+        let ub = upper_bounds(&wts, 4);
+        assert_eq!(ub.len(), 12);
+        assert_eq!(ub[0], 64.0);
+        assert_eq!(ub[7], 64.0);
+        assert!((ub[8] - 64.0 * (30.0 / 0.280)).abs() < 1e-9); // true throughput ceiling
+    }
+}

@@ -1,0 +1,265 @@
+//! Feasibility repair: turn the relaxed continuous PGD solution into an
+//! integer plan that satisfies Eq. 12-18 *exactly*.
+//!
+//! The penalty relaxation leaves small residuals (and the bilinear
+//! exclusivity constraint r_k · x_k = 0 is only softly enforced); this
+//! stage rounds and then walks the horizon forward, clamping each decision
+//! against the true integer dynamics. Only step 0 actuates (receding
+//! horizon), but the full repaired plan seeds the next warm start.
+
+use crate::config::Weights;
+use crate::mpc::problem::{split, MpcInput};
+
+/// A feasible integer plan over the horizon.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub x: Vec<u32>,
+    pub r: Vec<u32>,
+    pub s: Vec<u32>,
+    /// The repaired plan re-encoded as a decision vector (warm-start seed).
+    pub z: Vec<f64>,
+}
+
+impl Plan {
+    pub fn horizon(&self) -> usize {
+        self.x.len()
+    }
+
+    /// First-step actions (the only ones actuated).
+    pub fn first(&self) -> (u32, u32, u32) {
+        (self.x[0], self.r[0], self.s[0])
+    }
+
+    /// Shift one step forward (drop step 0, duplicate the tail) — the
+    /// receding-horizon warm start for the next control step.
+    pub fn shifted_warm_start(&self) -> Vec<f64> {
+        let h = self.horizon();
+        let mut z = vec![0.0; 3 * h];
+        for (block, series) in [(0, &self.x), (1, &self.r), (2, &self.s)] {
+            for k in 0..h {
+                let src = (k + 1).min(h - 1);
+                z[block * h + k] = series[src] as f64;
+            }
+        }
+        z
+    }
+}
+
+/// Repair a relaxed solution `z` into a feasible integer [`Plan`].
+///
+/// `total_cap` is the platform's replica cap (warm + cold-starting ≤ cap);
+/// `inflight_cold` is the number of cold starts already in flight now.
+pub fn repair(
+    z: &[f64],
+    input: &MpcInput,
+    wts: &Weights,
+    cold_steps: usize,
+    total_cap: u32,
+    inflight_cold: u32,
+) -> Plan {
+    let h = input.horizon();
+    let (xf, rf, sf) = split(z, h);
+    let mut x = vec![0u32; h];
+    let mut r = vec![0u32; h];
+    let mut s = vec![0u32; h];
+
+    let mut q = input.q0.max(0.0);
+    let mut w = input.w0.max(0.0);
+    // two cold pools: pre-horizon launches (consumed by rdy, robust to an
+    // inconsistent rdy schedule) and exact in-horizon launches
+    let mut pre_inflight = inflight_cold as f64;
+    let mut hor_inflight = 0.0f64;
+
+    for k in 0..h {
+        let mut xk = xf[k].round().max(0.0) as u32;
+        let mut rk = rf[k].round().max(0.0) as u32;
+
+        // Eq. 18: mutual exclusivity — keep the larger intent
+        if xk > 0 && rk > 0 {
+            if xk >= rk {
+                rk = 0;
+            } else {
+                xk = 0;
+            }
+        }
+
+        // Eq. 14 + capacity: cannot exceed the replica pool
+        let headroom = (total_cap as f64 - w - pre_inflight - hor_inflight).max(0.0) as u32;
+        xk = xk.min(headroom).min(wts.w_max as u32);
+
+        // Eq. 13/15: reclaim bounded by current warm pool
+        rk = rk.min(w.floor().max(0.0) as u32);
+
+        // Eq. 12: serving bounded by queue content and true warm throughput
+        let cap_serve = (crate::mpc::problem::DT_S / wts.l_warm * w).floor().max(0.0);
+        let sk = sf[k]
+            .round()
+            .max(0.0)
+            .min(q.floor())
+            .min(cap_serve)
+            .max(0.0) as u32;
+
+        x[k] = xk;
+        r[k] = rk;
+        s[k] = sk;
+        hor_inflight += xk as f64;
+
+        // integer dynamics forward: cold containers maturing this step
+        let ready_pre = input.rdy[k].min(pre_inflight);
+        pre_inflight -= ready_pre;
+        let ready_hor = if k >= cold_steps { x[k - cold_steps] as f64 } else { 0.0 };
+        hor_inflight = (hor_inflight - ready_hor).max(0.0);
+        q = (q + input.lam[k] - sk as f64).max(0.0);
+        w = (w + ready_pre + ready_hor - rk as f64).clamp(0.0, wts.w_max);
+    }
+
+    let mut zr = vec![0.0; 3 * h];
+    for k in 0..h {
+        zr[k] = x[k] as f64;
+        zr[h + k] = r[k] as f64;
+        zr[2 * h + k] = s[k] as f64;
+    }
+    Plan { x, r, s, z: zr }
+}
+
+/// Verify that a plan satisfies every hard constraint when rolled through
+/// the integer dynamics. Returns the first violation as a string.
+pub fn verify(plan: &Plan, input: &MpcInput, wts: &Weights, cold_steps: usize,
+              total_cap: u32, inflight_cold: u32) -> Result<(), String> {
+    let h = plan.horizon();
+    let mut q = input.q0.max(0.0);
+    let mut w = input.w0.max(0.0);
+    let mut pre_inflight = inflight_cold as f64;
+    let mut hor_inflight = 0.0f64;
+    for k in 0..h {
+        if plan.x[k] > 0 && plan.r[k] > 0 {
+            return Err(format!("step {k}: x and r both nonzero (Eq. 18)"));
+        }
+        // launches must fit the remaining headroom (the inherited state may
+        // itself exceed an arbitrary cap; only new launches are checkable)
+        let headroom = (total_cap as f64 - w - pre_inflight - hor_inflight).max(0.0);
+        if plan.x[k] as f64 > headroom + 1e-9 {
+            return Err(format!("step {k}: capacity exceeded"));
+        }
+        if plan.r[k] as f64 > w + 1e-9 {
+            return Err(format!("step {k}: reclaim {} > warm {w}", plan.r[k]));
+        }
+        if plan.s[k] as f64 > q + 1e-9 {
+            return Err(format!("step {k}: serve {} > queue {q}", plan.s[k]));
+        }
+        let cap = crate::mpc::problem::DT_S / wts.l_warm * w;
+        if plan.s[k] as f64 > cap + 1e-9 {
+            return Err(format!("step {k}: serve {} > capacity {cap}", plan.s[k]));
+        }
+        hor_inflight += plan.x[k] as f64;
+        let ready_pre = input.rdy[k].min(pre_inflight);
+        pre_inflight -= ready_pre;
+        let ready_hor = if k >= cold_steps {
+            plan.x[k - cold_steps] as f64
+        } else {
+            0.0
+        };
+        hor_inflight = (hor_inflight - ready_hor).max(0.0);
+        q = (q + input.lam[k] - plan.s[k] as f64).max(0.0);
+        w = (w + ready_pre + ready_hor - plan.r[k] as f64).clamp(0.0, wts.w_max);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn repaired_plans_always_feasible() {
+        prop_check("repair yields feasible integer plans", 200, |g| {
+            let h = *g.pick(&[8usize, 16, 24]);
+            let d = g.usize(0, h - 1);
+            let input = MpcInput {
+                lam: g.vec_f64(h, 0.0, 80.0),
+                rdy: g.vec_f64(h, 0.0, 4.0).iter().map(|v| v.round()).collect(),
+                q0: g.f64(0.0, 50.0).round(),
+                w0: g.f64(0.0, 30.0).round(),
+                x_prev: 0.0,
+            };
+            let wts = crate::config::Weights::default();
+            let z: Vec<f64> = g.vec_f64(3 * h, -5.0, 80.0);
+            let cap = g.u64(8, 64) as u32;
+            let inflight = g.u64(0, 4) as u32;
+            let plan = repair(&z, &input, &wts, d, cap, inflight);
+            verify(&plan, &input, &wts, d, cap, inflight).map_err(|e| {
+                format!("{e}\n z={z:?}\n plan={plan:?} cap={cap} inflight={inflight}")
+            })
+        });
+    }
+
+    #[test]
+    fn exclusivity_keeps_larger_intent() {
+        let h = 4;
+        let input = MpcInput {
+            lam: vec![0.0; h],
+            rdy: vec![0.0; h],
+            q0: 0.0,
+            w0: 10.0,
+            x_prev: 0.0,
+        };
+        let wts = crate::config::Weights::default();
+        let mut z = vec![0.0; 3 * h];
+        z[0] = 5.0; // x0
+        z[h] = 2.0; // r0: smaller -> zeroed
+        let plan = repair(&z, &input, &wts, 2, 64, 0);
+        assert_eq!(plan.x[0], 5);
+        assert_eq!(plan.r[0], 0);
+    }
+
+    #[test]
+    fn serving_respects_queue_and_capacity() {
+        let h = 4;
+        let input = MpcInput {
+            lam: vec![0.0; h],
+            rdy: vec![0.0; h],
+            q0: 3.0,
+            w0: 1.0,
+            x_prev: 0.0,
+        };
+        let wts = crate::config::Weights::default();
+        let mut z = vec![0.0; 3 * h];
+        z[2 * h] = 50.0; // wants to serve 50
+        let plan = repair(&z, &input, &wts, 2, 64, 0);
+        // min(queue 3, floor(mu * 1) = 3) = 3
+        assert_eq!(plan.s[0], 3);
+    }
+
+    #[test]
+    fn shifted_warm_start_layout() {
+        let plan = Plan {
+            x: vec![1, 2, 3],
+            r: vec![0, 0, 1],
+            s: vec![4, 5, 6],
+            z: vec![],
+        };
+        let z = plan.shifted_warm_start();
+        assert_eq!(&z[0..3], &[2.0, 3.0, 3.0]); // x shifted, tail duplicated
+        assert_eq!(&z[3..6], &[0.0, 1.0, 1.0]);
+        assert_eq!(&z[6..9], &[5.0, 6.0, 6.0]);
+    }
+
+    #[test]
+    fn capacity_headroom_counts_inflight() {
+        let h = 2;
+        let input = MpcInput {
+            lam: vec![100.0; h],
+            rdy: vec![0.0; h],
+            q0: 0.0,
+            w0: 60.0,
+            x_prev: 0.0,
+        };
+        let wts = crate::config::Weights::default();
+        let mut z = vec![0.0; 3 * h];
+        z[0] = 50.0;
+        let plan = repair(&z, &input, &wts, 1, 64, 2);
+        assert_eq!(plan.x[0], 2); // 64 - 60 warm - 2 inflight
+    }
+}

@@ -1,0 +1,179 @@
+//! Projected-Adam MPC solver (mirror of `model.mpc_solve`): per-coordinate
+//! moment normalization with bias correction, gradient clipping, box
+//! projection — identical hyperparameters to the AOT artifact so the two
+//! backends are interchangeable (and differentially tested). Adam rather
+//! than plain PGD is what lets backlog-drain states (huge queue, small
+//! warm pool) converge inside the 300-iteration budget: the serving and
+//! prewarming blocks have gradient scales two orders of magnitude apart.
+
+use crate::config::Weights;
+use crate::mpc::problem::{cost, grad, upper_bounds, MpcInput};
+
+/// Adam second-moment decay — must match constants.ADAM_B2.
+pub const ADAM_B2: f64 = 0.999;
+pub const ADAM_EPS: f64 = 1e-8;
+
+/// A solver for the horizon QP. Implementations: [`RustSolver`] (in-process
+/// mirror) and `runtime::modules::HloSolver` (the deployed AOT artifact).
+pub trait MpcSolver {
+    /// Solve from warm start `z0`; returns (z*, final objective value).
+    fn solve(&mut self, z0: &[f64], input: &MpcInput) -> (Vec<f64>, f64);
+    fn name(&self) -> &str;
+}
+
+/// In-process PGD solver.
+#[derive(Debug, Clone)]
+pub struct RustSolver {
+    pub weights: Weights,
+    pub iters: u32,
+    pub cold_steps: usize,
+}
+
+impl RustSolver {
+    pub fn new(weights: Weights, iters: u32, cold_steps: usize) -> Self {
+        RustSolver {
+            weights,
+            iters,
+            cold_steps,
+        }
+    }
+}
+
+impl MpcSolver for RustSolver {
+    fn solve(&mut self, z0: &[f64], input: &MpcInput) -> (Vec<f64>, f64) {
+        let h = input.horizon();
+        assert_eq!(z0.len(), 3 * h, "warm start has wrong shape");
+        let wts = &self.weights;
+        let ub = upper_bounds(wts, h);
+        let mut z = z0.to_vec();
+        // feasible serving seed (mirror of model.mpc_solve): avoids phantom
+        // in-model backlog while the s-block ramps from zero
+        for k in 0..h {
+            z[2 * h + k] = z[2 * h + k].max(input.lam[k]);
+        }
+        let mut m = vec![0.0; 3 * h];
+        let mut v = vec![0.0; 3 * h];
+        let b1 = wts.momentum;
+        // per-block step scale: serving block ranges ~10x wider (see kernel)
+        let s_scale = (crate::mpc::problem::DT_S / wts.l_warm) / wts.mu;
+        for i in 1..=self.iters {
+            let mut g = grad(&z, input, wts, self.cold_steps);
+            for gi in g.iter_mut() {
+                *gi = gi.clamp(-wts.grad_clip, wts.grad_clip);
+            }
+            let bc1 = 1.0 - b1.powi(i as i32);
+            let bc2 = 1.0 - ADAM_B2.powi(i as i32);
+            for j in 0..z.len() {
+                m[j] = b1 * m[j] + (1.0 - b1) * g[j];
+                v[j] = ADAM_B2 * v[j] + (1.0 - ADAM_B2) * g[j] * g[j];
+                let block_lr = if j >= 2 * h { wts.lr * s_scale } else { wts.lr };
+                let step = block_lr * (m[j] / bc1) / ((v[j] / bc2).sqrt() + ADAM_EPS);
+                z[j] = (z[j] - step).clamp(0.0, ub[j]);
+            }
+        }
+        let c = cost(&z, input, wts, self.cold_steps);
+        (z, c)
+    }
+
+    fn name(&self) -> &str {
+        "rust-pgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::problem::split;
+
+    fn solver() -> RustSolver {
+        RustSolver::new(Weights::default(), 300, 1)
+    }
+
+    fn input(lam: Vec<f64>, q0: f64, w0: f64) -> MpcInput {
+        let h = lam.len();
+        MpcInput {
+            lam,
+            rdy: vec![0.0; h],
+            q0,
+            w0,
+            x_prev: 0.0,
+        }
+    }
+
+    #[test]
+    fn descends_from_cold_start() {
+        let mut s = solver();
+        let inp = input(vec![200.0; 24], 100.0, 0.0);
+        let z0 = vec![0.0; 72];
+        let c0 = cost(&z0, &inp, &s.weights, 1);
+        let (_, c) = s.solve(&z0, &inp);
+        assert!(c < c0, "{c} !< {c0}");
+    }
+
+    #[test]
+    fn burst_triggers_early_prewarming() {
+        // predicted burst of 900 requests/step at steps 14-15 (D = 1)
+        let mut lam = vec![0.0; 24];
+        for k in 14..16 {
+            lam[k] = 900.0;
+        }
+        let mut s = solver();
+        let (z, _) = s.solve(&vec![0.0; 72], &input(lam, 0.0, 0.0));
+        let (x, _, _) = split(&z, 24);
+        let early: f64 = x[..14].iter().sum();
+        assert!(early > 3.0, "no early prewarm: {x:?}");
+    }
+
+    #[test]
+    fn idle_pool_is_reclaimed_not_grown() {
+        let mut s = RustSolver::new(
+            Weights {
+                gamma: 0.05,
+                eta: 0.2,
+                ..Weights::default()
+            },
+            300,
+            1,
+        );
+        let inp = input(vec![0.0; 24], 0.0, 20.0);
+        let (z, _) = s.solve(&vec![0.0; 72], &inp);
+        // judge the *repaired* plan — the relaxed iterate carries x/r churn
+        // that the exclusivity projection removes (Eq. 18)
+        let plan = crate::mpc::repair(&z, &inp, &s.weights, 1, 64, 0);
+        // receding horizon: only step 0 actuates — it must reclaim, not
+        // prewarm (tail steps carry relaxation churn that is never acted on)
+        let (x0, r0, _) = plan.first();
+        assert_eq!(x0, 0, "prewarming an idle pool: {plan:?}");
+        assert!(r0 >= 1, "not reclaiming an idle pool: {plan:?}");
+    }
+
+    #[test]
+    fn iterates_stay_in_box() {
+        let mut s = solver();
+        let inp = input(vec![3000.0; 24], 1000.0, 0.0);
+        let (z, _) = s.solve(&vec![10.0; 72], &inp);
+        let ub = upper_bounds(&s.weights, 24);
+        for (i, v) in z.iter().enumerate() {
+            assert!(*v >= 0.0 && *v <= ub[i] + 1e-9, "z[{i}]={v}");
+        }
+    }
+
+    #[test]
+    fn warm_start_no_worse_than_cold() {
+        let mut s = solver();
+        let inp = input(vec![250.0; 24], 50.0, 5.0);
+        let (z1, c1) = s.solve(&vec![0.0; 72], &inp);
+        let (_, c2) = s.solve(&z1, &inp);
+        assert!(c2 <= c1 * 1.05 + 1.0, "warm start regressed: {c2} vs {c1}");
+    }
+
+    #[test]
+    fn backlog_drives_prewarming() {
+        // standing queue with a tiny pool: the plan must scale out hard
+        let mut s = solver();
+        let (z, _) = s.solve(&vec![0.0; 72], &input(vec![30.0; 24], 900.0, 2.0));
+        let (x, _, s_) = split(&z, 24);
+        assert!(x[0] >= 2.0, "x0={} too timid for a 900-deep queue", x[0]);
+        assert!(s_[0] > 10.0, "s0={} not serving the backlog", s_[0]);
+    }
+}

@@ -1,0 +1,149 @@
+//! Artifact contract: parses `artifacts/meta.json` (written by
+//! `python/compile/aot.py`) and cross-checks it against the crate's
+//! compile-time constants so a stale artifact set fails loudly.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed artifact metadata (shapes + baked constants).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub dir: PathBuf,
+    pub window: usize,
+    pub horizon: usize,
+    pub cold_steps: usize,
+    pub harmonics: usize,
+    pub pgd_iters: u32,
+    pub l_warm_s: f64,
+    pub l_cold_s: f64,
+    pub w_max: f64,
+    pub img_size: usize,
+    pub det_classes: usize,
+    pub param_names: Vec<String>,
+    pub default_params: Vec<f64>,
+}
+
+impl ArtifactMeta {
+    /// Load and validate `<dir>/meta.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let num = |k: &str| -> Result<f64> {
+            j.path(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("meta.json missing numeric '{k}'"))
+        };
+        let meta = ArtifactMeta {
+            dir: dir.to_path_buf(),
+            window: num("window")? as usize,
+            horizon: num("horizon")? as usize,
+            cold_steps: num("cold_steps")? as usize,
+            harmonics: num("harmonics")? as usize,
+            pgd_iters: num("pgd_iters")? as u32,
+            l_warm_s: num("l_warm_s")?,
+            l_cold_s: num("l_cold_s")?,
+            w_max: num("w_max")?,
+            img_size: num("img_size")? as usize,
+            det_classes: num("det_classes")? as usize,
+            param_names: j
+                .path("param_names")
+                .and_then(Json::as_arr)
+                .context("param_names")?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect(),
+            default_params: j
+                .path("default_params")
+                .and_then(Json::as_arr)
+                .context("default_params")?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect(),
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    /// The default artifact directory: `$MPC_ARTIFACTS` or `artifacts/`
+    /// relative to the crate root (works from `cargo run`/`cargo test`).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(p) = std::env::var("MPC_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Whether the artifact set exists on disk (tests skip HLO paths if not).
+    pub fn available() -> bool {
+        Self::default_dir().join("meta.json").exists()
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.param_names.len() != 16 || self.default_params.len() != 16 {
+            bail!("params vector must have 16 entries (got {})", self.param_names.len());
+        }
+        // cross-check against the constants the Rust mirrors assume
+        let expect = [
+            ("window", self.window, 120usize),
+            ("horizon", self.horizon, 24),
+            ("cold_steps", self.cold_steps, 1),
+        ];
+        for (name, got, want) in expect {
+            if got != want {
+                bail!("artifact {name}={got} but this build expects {want}; re-run `make artifacts`");
+            }
+        }
+        if (self.l_warm_s - 0.280).abs() > 1e-9 || (self.l_cold_s - 10.5).abs() > 1e-9 {
+            bail!("artifact latency constants diverge from PlatformConfig defaults");
+        }
+        Ok(())
+    }
+
+    pub fn module_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_meta_when_available() {
+        if !ArtifactMeta::available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let meta = ArtifactMeta::load(&ArtifactMeta::default_dir()).unwrap();
+        assert_eq!(meta.window, 120);
+        assert_eq!(meta.horizon, 24);
+        assert_eq!(meta.param_names[0], "alpha");
+        assert_eq!(meta.param_names[15], "grad_clip");
+        assert!(meta.module_path("forecast").exists());
+        assert!(meta.module_path("mpc").exists());
+        assert!(meta.module_path("detector").exists());
+    }
+
+    #[test]
+    fn rejects_stale_meta() {
+        let dir = std::env::temp_dir().join(format!("mpc-meta-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.json"),
+            r#"{"window": 99, "horizon": 24, "cold_steps": 1, "harmonics": 8,
+                "pgd_iters": 300, "l_warm_s": 0.28, "l_cold_s": 10.5, "w_max": 64,
+                "img_size": 32, "det_classes": 8,
+                "param_names": ["a","b","c","d","e","f","g","h","i","j","k","l","m","n","o","p"],
+                "default_params": [0,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0]}"#,
+        )
+        .unwrap();
+        let err = ArtifactMeta::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("window"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

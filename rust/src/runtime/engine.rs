@@ -1,0 +1,108 @@
+//! PJRT engine: one CPU client + compiled executables per artifact.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Wraps the PJRT CPU client. One engine per process; modules share it.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT engine up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { client })
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load(&self, path: &Path) -> Result<LoadedModule> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(LoadedModule {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled executable. All our artifacts are lowered with
+/// `return_tuple=True`, so outputs decompose uniformly into a literal list.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl LoadedModule {
+    /// Execute with f32 inputs of the given shapes; returns each output
+    /// as a flat f32 vector (row-major).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| -> Result<xla::Literal> {
+                let lit = xla::Literal::vec1(data);
+                if dims.is_empty() {
+                    // scalar input: reshape to rank-0
+                    Ok(lit.reshape(&[])?)
+                } else {
+                    Ok(lit.reshape(dims)?)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing module '{}'", self.name))?;
+        let mut root = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = root.decompose_tuple().context("decomposing output tuple")?;
+        parts
+            .iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::ArtifactMeta;
+
+    #[test]
+    fn engine_loads_and_runs_forecast_artifact() {
+        if !ArtifactMeta::available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let meta = ArtifactMeta::load(&ArtifactMeta::default_dir()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        let module = engine.load(&meta.module_path("forecast")).unwrap();
+        let hist = vec![10.0f32; meta.window];
+        let gamma = [3.0f32];
+        let out = module
+            .run_f32(&[(&hist, &[meta.window as i64]), (&gamma, &[])])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), meta.horizon);
+        // constant history -> ~constant forecast
+        for v in &out[0] {
+            assert!((*v - 10.0).abs() < 0.5, "{v}");
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT HLO artifacts and exposes them as typed
+//! modules callable from the L3 control loop. Python never runs here —
+//! the artifacts are self-contained HLO text compiled once at startup.
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+pub mod artifacts;
+pub mod engine;
+pub mod modules;
+
+pub use artifacts::ArtifactMeta;
+pub use engine::{Engine, LoadedModule};
+pub use modules::{DetectorModule, ForecastModule, HloSolver, HloForecaster, MpcModule};

@@ -1,0 +1,248 @@
+//! Typed wrappers over the three AOT artifacts + adapters implementing the
+//! `Forecaster` / `MpcSolver` traits so the control loop can run on the
+//! deployed HLO path interchangeably with the Rust mirrors.
+
+
+use anyhow::{ensure, Result};
+
+use crate::config::Weights;
+use crate::forecast::Forecaster;
+use crate::mpc::{MpcInput, MpcSolver};
+use crate::runtime::artifacts::ArtifactMeta;
+use crate::runtime::engine::{Engine, LoadedModule};
+
+/// The Fourier forecast artifact (Eq. 1-2 as HLO).
+pub struct ForecastModule {
+    module: LoadedModule,
+    pub window: usize,
+    pub horizon: usize,
+}
+
+impl ForecastModule {
+    pub fn load(engine: &Engine, meta: &ArtifactMeta) -> Result<Self> {
+        Ok(ForecastModule {
+            module: engine.load(&meta.module_path("forecast"))?,
+            window: meta.window,
+            horizon: meta.horizon,
+        })
+    }
+
+    pub fn forecast(&self, history: &[f32], gamma_clip: f32) -> Result<Vec<f32>> {
+        ensure!(
+            history.len() == self.window,
+            "history must have exactly W={} samples (got {})",
+            self.window,
+            history.len()
+        );
+        let out = self.module.run_f32(&[
+            (history, &[self.window as i64]),
+            (&[gamma_clip], &[]),
+        ])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+}
+
+/// The MPC solver artifact (Eq. 3-18 PGD as HLO).
+pub struct MpcModule {
+    module: LoadedModule,
+    pub horizon: usize,
+}
+
+impl MpcModule {
+    pub fn load(engine: &Engine, meta: &ArtifactMeta) -> Result<Self> {
+        Ok(MpcModule {
+            module: engine.load(&meta.module_path("mpc"))?,
+            horizon: meta.horizon,
+        })
+    }
+
+    /// One full solve; returns (z*, final cost).
+    pub fn solve(
+        &self,
+        z0: &[f32],
+        lam: &[f32],
+        rdy: &[f32],
+        state: &[f32; 4],
+        params: &[f32; 16],
+    ) -> Result<(Vec<f32>, f32)> {
+        let h = self.horizon as i64;
+        ensure!(z0.len() == 3 * self.horizon, "z0 shape");
+        ensure!(lam.len() == self.horizon, "lam shape");
+        ensure!(rdy.len() == self.horizon, "rdy shape");
+        let out = self.module.run_f32(&[
+            (z0, &[3 * h]),
+            (lam, &[h]),
+            (rdy, &[h]),
+            (&state[..], &[4]),
+            (&params[..], &[16]),
+        ])?;
+        let mut it = out.into_iter();
+        let z = it.next().unwrap();
+        let cost = it.next().unwrap()[0];
+        Ok((z, cost))
+    }
+}
+
+/// The detector payload artifact (the serverless function's real compute).
+pub struct DetectorModule {
+    module: LoadedModule,
+    pub img_size: usize,
+    pub classes: usize,
+}
+
+impl DetectorModule {
+    pub fn load(engine: &Engine, meta: &ArtifactMeta) -> Result<Self> {
+        Ok(DetectorModule {
+            module: engine.load(&meta.module_path("detector"))?,
+            img_size: meta.img_size,
+            classes: meta.det_classes,
+        })
+    }
+
+    /// Run detection on one NHWC frame (flattened), returning class scores.
+    pub fn detect(&self, img: &[f32]) -> Result<Vec<f32>> {
+        let s = self.img_size as i64;
+        ensure!(
+            img.len() == (s * s * 3) as usize,
+            "image must be {s}x{s}x3 flattened"
+        );
+        let out = self.module.run_f32(&[(img, &[1, s, s, 3])])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// trait adapters: drop-in replacements for the Rust mirrors
+// ---------------------------------------------------------------------------
+
+/// `Forecaster` backed by the HLO artifact.
+pub struct HloForecaster {
+    module: ForecastModule,
+    pub gamma_clip: f32,
+}
+
+impl HloForecaster {
+    pub fn new(module: ForecastModule, gamma_clip: f32) -> Self {
+        HloForecaster { module, gamma_clip }
+    }
+}
+
+impl Forecaster for HloForecaster {
+    fn forecast(&mut self, history: &[f64], horizon: usize) -> Vec<f64> {
+        assert_eq!(horizon, self.module.horizon, "artifact horizon is baked");
+        let hist: Vec<f32> = history.iter().map(|&v| v as f32).collect();
+        self.module
+            .forecast(&hist, self.gamma_clip)
+            .expect("HLO forecast failed")
+            .into_iter()
+            .map(|v| v as f64)
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "fourier-hlo"
+    }
+}
+
+/// `MpcSolver` backed by the HLO artifact.
+pub struct HloSolver {
+    module: MpcModule,
+    pub weights: Weights,
+}
+
+impl HloSolver {
+    pub fn new(module: MpcModule, weights: Weights) -> Self {
+        HloSolver { module, weights }
+    }
+}
+
+impl MpcSolver for HloSolver {
+    fn solve(&mut self, z0: &[f64], input: &MpcInput) -> (Vec<f64>, f64) {
+        let to32 = |xs: &[f64]| xs.iter().map(|&v| v as f32).collect::<Vec<f32>>();
+        let state = [
+            input.q0 as f32,
+            input.w0 as f32,
+            input.x_prev as f32,
+            0.0f32,
+        ];
+        let params = self.weights.to_params_vec();
+        let (z, cost) = self
+            .module
+            .solve(&to32(z0), &to32(&input.lam), &to32(&input.rdy), &state, &params)
+            .expect("HLO MPC solve failed");
+        (z.into_iter().map(|v| v as f64).collect(), cost as f64)
+    }
+
+    fn name(&self) -> &'static str {
+        "mpc-hlo"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::{MpcSolver as _, RustSolver};
+
+    fn load_all() -> Option<(ArtifactMeta, Engine)> {
+        if !ArtifactMeta::available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let meta = ArtifactMeta::load(&ArtifactMeta::default_dir()).unwrap();
+        let engine = Engine::cpu().unwrap();
+        Some((meta, engine))
+    }
+
+    #[test]
+    fn hlo_forecast_matches_rust_mirror() {
+        let Some((meta, engine)) = load_all() else { return };
+        let module = ForecastModule::load(&engine, &meta).unwrap();
+        let mut hlo = HloForecaster::new(module, 3.0);
+        let mut rust = crate::forecast::FourierForecaster::default();
+        let hist: Vec<f64> = (0..120)
+            .map(|t| 200.0 + 50.0 * (t as f64 / 20.0 * std::f64::consts::TAU).cos() + 0.1 * t as f64)
+            .collect();
+        let a = hlo.forecast(&hist, 24);
+        let b = rust.forecast(&hist, 24);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 0.5, "hlo {x} vs rust {y}");
+        }
+    }
+
+    #[test]
+    fn hlo_solver_matches_rust_mirror() {
+        let Some((meta, engine)) = load_all() else { return };
+        let module = MpcModule::load(&engine, &meta).unwrap();
+        let weights = Weights::default();
+        let mut hlo = HloSolver::new(module, weights);
+        let mut rust = RustSolver::new(weights, meta.pgd_iters, meta.cold_steps);
+        let input = MpcInput {
+            lam: vec![150.0; 24],
+            rdy: vec![0.0; 24],
+            q0: 40.0,
+            w0: 2.0,
+            x_prev: 0.0,
+        };
+        let z0 = vec![0.0; 72];
+        let (za, ca) = hlo.solve(&z0, &input);
+        let (zb, cb) = rust.solve(&z0, &input);
+        // f32 vs f64 over 300 iterations: loose elementwise agreement, but
+        // the repaired integer plans must match
+        let rel = (ca - cb).abs() / cb.abs().max(1.0);
+        assert!(rel < 0.05, "cost hlo {ca} vs rust {cb}");
+        let wts = weights;
+        let pa = crate::mpc::repair(&za, &input, &wts, 1, 64, 0);
+        let pb = crate::mpc::repair(&zb, &input, &wts, 1, 64, 0);
+        assert_eq!(pa.first(), pb.first(), "first-step actions diverge");
+    }
+
+    #[test]
+    fn detector_runs() {
+        let Some((meta, engine)) = load_all() else { return };
+        let module = DetectorModule::load(&engine, &meta).unwrap();
+        let img = vec![0.5f32; meta.img_size * meta.img_size * 3];
+        let scores = module.detect(&img).unwrap();
+        assert_eq!(scores.len(), meta.det_classes);
+        assert!(scores.iter().any(|s| s.abs() > 1e-3), "degenerate scores");
+    }
+}

@@ -1,0 +1,208 @@
+//! Discrete-event simulation core.
+//!
+//! A binary-heap event queue over microsecond virtual time with FIFO
+//! tie-breaking (events scheduled earlier pop first at equal timestamps),
+//! so runs are fully deterministic. 60-minute experiments execute in
+//! milliseconds of wall-clock.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::config::Micros;
+
+/// An event with its firing time and an insertion sequence number.
+#[derive(Debug, Clone)]
+pub struct Scheduled<E> {
+    pub time: Micros,
+    pub seq: u64,
+    pub event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we need earliest-first
+        (other.time, other.seq).cmp(&(self.time, self.seq))
+    }
+}
+
+/// Earliest-first event queue with deterministic FIFO tie-breaking.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    next_seq: u64,
+    now: Micros,
+    popped: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            now: 0,
+            popped: 0,
+        }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> Micros {
+        self.now
+    }
+
+    /// Total events processed (simulator throughput metric).
+    pub fn processed(&self) -> u64 {
+        self.popped
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `time`. Scheduling in the past
+    /// (before the last popped event) is a logic error in the caller.
+    pub fn push(&mut self, time: Micros, event: E) {
+        debug_assert!(
+            time >= self.now,
+            "event scheduled in the past: {time} < {}",
+            self.now
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { time, seq, event });
+    }
+
+    /// Schedule `event` `delay` after now.
+    pub fn push_in(&mut self, delay: Micros, event: E) {
+        self.push(self.now + delay, event);
+    }
+
+    pub fn peek_time(&self) -> Option<Micros> {
+        self.heap.peek().map(|s| s.time)
+    }
+
+    /// Pop the earliest event, advancing the virtual clock.
+    pub fn pop(&mut self) -> Option<Scheduled<E>> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.time >= self.now);
+        self.now = s.time;
+        self.popped += 1;
+        Some(s)
+    }
+
+    /// Pop only if the earliest event fires at or before `horizon`.
+    pub fn pop_until(&mut self, horizon: Micros) -> Option<Scheduled<E>> {
+        if self.peek_time()? <= horizon {
+            self.pop()
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, "c");
+        q.push(10, "a");
+        q.push(20, "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|s| s.event).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(5, i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|s| s.event).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push(10, ());
+        q.push(10, ());
+        q.push(50, ());
+        let mut last = 0;
+        while let Some(s) = q.pop() {
+            assert!(s.time >= last);
+            last = s.time;
+            assert_eq!(q.now(), s.time);
+        }
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn pop_until_respects_horizon() {
+        let mut q = EventQueue::new();
+        q.push(10, "early");
+        q.push(100, "late");
+        assert_eq!(q.pop_until(50).unwrap().event, "early");
+        assert!(q.pop_until(50).is_none());
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop_until(200).unwrap().event, "late");
+    }
+
+    #[test]
+    fn push_in_is_relative_to_now() {
+        let mut q = EventQueue::new();
+        q.push(100, ());
+        q.pop();
+        q.push_in(5, ());
+        assert_eq!(q.peek_time(), Some(105));
+    }
+
+    #[test]
+    fn ordering_property_random() {
+        use crate::prop_assert;
+        use crate::util::prop::prop_check;
+        prop_check("event ordering", 100, |g| {
+            let mut q = EventQueue::new();
+            let n = g.usize(1, 200);
+            for i in 0..n {
+                q.push(g.u64(0, 1000), i);
+            }
+            let mut last_t = 0;
+            let mut last_seq_at_t: Option<u64> = None;
+            while let Some(s) = q.pop() {
+                prop_assert!(s.time >= last_t, "time regressed");
+                if s.time != last_t {
+                    last_seq_at_t = None;
+                }
+                if let Some(prev) = last_seq_at_t {
+                    prop_assert!(s.seq > prev, "FIFO violated at t={}", s.time);
+                }
+                last_t = s.time;
+                last_seq_at_t = Some(s.seq);
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,218 @@
+//! Declarative command-line flag parser (the vendored crate set has no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Builder for a subcommand's flags.
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    BadValue(String, String),
+    #[error("help requested")]
+    Help,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    pub fn bool_flag(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nFLAGS:\n", self.program, self.about);
+        for f in &self.flags {
+            let d = match (&f.default, f.is_bool) {
+                (_, true) => "  (boolean)".to_string(),
+                (Some(d), _) if !d.is_empty() => format!("  [default: {d}]"),
+                _ => String::new(),
+            };
+            out.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        out
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                args.values.insert(f.name.clone(), d.clone());
+            }
+            if f.is_bool {
+                args.bools.insert(f.name.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::Help);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::UnknownFlag(name.clone()))?;
+                if spec.is_bool {
+                    args.bools.insert(name, true);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                        }
+                    };
+                    args.values.insert(name, value);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::BadValue(name.into(), self.get(name).into()))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError::BadValue(name.into(), self.get(name).into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test", "about")
+            .flag("seed", "42", "rng seed")
+            .flag("trace", "azure", "trace kind")
+            .bool_flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("seed"), "42");
+        assert_eq!(a.get_u64("seed").unwrap(), 42);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn parses_separate_and_inline() {
+        let a = cli()
+            .parse(&argv(&["--seed", "7", "--trace=synthetic", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_u64("seed").unwrap(), 7);
+        assert_eq!(a.get("trace"), "synthetic");
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(matches!(
+            cli().parse(&argv(&["--nope", "1"])),
+            Err(CliError::UnknownFlag(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_detected() {
+        assert!(matches!(
+            cli().parse(&argv(&["--seed"])),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_numeric_value() {
+        let a = cli().parse(&argv(&["--seed", "xyz"])).unwrap();
+        assert!(matches!(a.get_u64("seed"), Err(CliError::BadValue(_, _))));
+    }
+
+    #[test]
+    fn help_flag() {
+        assert!(matches!(cli().parse(&argv(&["-h"])), Err(CliError::Help)));
+        assert!(cli().usage().contains("--seed"));
+    }
+}

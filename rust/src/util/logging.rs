@@ -1,0 +1,54 @@
+//! Tiny `log`-facade backend: stderr, level from `MPC_LOG` env
+//! (error|warn|info|debug|trace; default warn).
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let tag = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!("[{tag}] {}: {}", record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent; safe to call from every entrypoint).
+pub fn init() {
+    let level = match std::env::var("MPC_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("info") => LevelFilter::Info,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Warn,
+    };
+    if log::set_logger(&LOGGER).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::debug!("smoke");
+    }
+}

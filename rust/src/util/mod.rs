@@ -1,0 +1,14 @@
+//! Foundation utilities: PRNG, statistics, JSON, CLI, ring buffers,
+//! property-test framework, bench harness, logging.
+//!
+//! These replace crates unavailable in the offline vendored set
+//! (rand, serde_json, clap, proptest, criterion) — see DESIGN.md.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timeseries;

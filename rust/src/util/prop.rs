@@ -1,0 +1,118 @@
+//! Seeded property-test mini-framework (proptest is not in the vendored
+//! crate set; see DESIGN.md substitution table).
+//!
+//! Usage:
+//! ```ignore
+//! prop_check("queue conservation", 500, |g| {
+//!     let n = g.usize(0, 100);
+//!     ...
+//!     prop_assert!(invariant_holds, "context {n}");
+//!     Ok(())
+//! });
+//! ```
+//! Each case gets a fresh deterministic generator; on failure the seed is
+//! printed so the case can be replayed with `PROP_SEED=<seed>`.
+
+use crate::util::rng::Rng;
+
+/// Per-case value generator.
+pub struct Gen {
+    pub rng: Rng,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.range_u64(lo, hi)
+    }
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.rng.chance(p_true)
+    }
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64(lo, hi)).collect()
+    }
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+}
+
+/// Run `cases` random cases of `body`. Panics (failing the enclosing test)
+/// on the first case that returns Err, reporting the replay seed.
+pub fn prop_check<F>(name: &str, cases: u32, mut body: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    let (seeds, label): (Vec<u64>, &str) = match base {
+        Some(s) => (vec![s], "replay"),
+        None => ((0..cases as u64).map(|i| 0x5EED_0000 + i).collect(), "search"),
+    };
+    for seed in seeds {
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            case_seed: seed,
+        };
+        if let Err(msg) = body(&mut g) {
+            panic!(
+                "property '{name}' failed ({label} mode)\n  replay: PROP_SEED={seed}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Assert inside a prop body, yielding Err with context instead of panicking
+/// (so prop_check can attach the replay seed).
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check("trivial", 50, |g| {
+            count += 1;
+            let v = g.f64(0.0, 1.0);
+            prop_assert!((0.0..1.0).contains(&v), "v={v}");
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        prop_check("always fails", 5, |_g| Err("boom".to_string()));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        prop_check("gen bounds", 200, |g| {
+            let a = g.usize(2, 9);
+            prop_assert!((2..=9).contains(&a), "usize out of range: {a}");
+            let b = g.f64(-1.0, 1.0);
+            prop_assert!((-1.0..1.0).contains(&b), "f64 out of range: {b}");
+            let v = g.vec_f64(10, 5.0, 6.0);
+            prop_assert!(v.iter().all(|x| (5.0..6.0).contains(x)), "vec out of range");
+            let p = *g.pick(&[1, 2, 3]);
+            prop_assert!([1, 2, 3].contains(&p), "pick out of set");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,129 @@
+//! Fixed-capacity ring buffer for metric histories (forecast windows etc).
+
+/// Ring buffer of f64 samples with O(1) push and windowed reads.
+#[derive(Debug, Clone)]
+pub struct RingBuffer {
+    buf: Vec<f64>,
+    head: usize, // next write slot
+    len: usize,
+}
+
+impl RingBuffer {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        RingBuffer {
+            buf: vec![0.0; capacity],
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len == self.buf.len()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.buf[self.head] = x;
+        self.head = (self.head + 1) % self.buf.len();
+        self.len = (self.len + 1).min(self.buf.len());
+    }
+
+    /// Oldest-to-newest copy of the window.
+    pub fn to_vec(&self) -> Vec<f64> {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        (0..self.len).map(|i| self.buf[(start + i) % cap]).collect()
+    }
+
+    /// Oldest-to-newest copy, left-padded with `pad` to full capacity —
+    /// the forecast artifacts need a fixed-shape window even during warmup.
+    pub fn to_padded_vec(&self, pad: f64) -> Vec<f64> {
+        let mut out = vec![pad; self.capacity() - self.len];
+        out.extend(self.to_vec());
+        out
+    }
+
+    /// Most recent sample.
+    pub fn last(&self) -> Option<f64> {
+        if self.len == 0 {
+            return None;
+        }
+        let cap = self.buf.len();
+        Some(self.buf[(self.head + cap - 1) % cap])
+    }
+
+    /// Mean over the most recent `n` samples (or fewer during warmup).
+    pub fn recent_mean(&self, n: usize) -> f64 {
+        let v = self.to_vec();
+        let take = n.min(v.len());
+        if take == 0 {
+            return 0.0;
+        }
+        v[v.len() - take..].iter().sum::<f64>() / take as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_and_wraps() {
+        let mut rb = RingBuffer::new(3);
+        assert!(rb.is_empty());
+        rb.push(1.0);
+        rb.push(2.0);
+        assert_eq!(rb.to_vec(), vec![1.0, 2.0]);
+        rb.push(3.0);
+        assert!(rb.is_full());
+        rb.push(4.0);
+        assert_eq!(rb.to_vec(), vec![2.0, 3.0, 4.0]);
+        assert_eq!(rb.last(), Some(4.0));
+    }
+
+    #[test]
+    fn padded_window() {
+        let mut rb = RingBuffer::new(4);
+        rb.push(5.0);
+        assert_eq!(rb.to_padded_vec(0.0), vec![0.0, 0.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn recent_mean_windows() {
+        let mut rb = RingBuffer::new(5);
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0, 6.0] {
+            rb.push(x);
+        }
+        // window is now [2..6]
+        assert_eq!(rb.recent_mean(2), 5.5);
+        assert_eq!(rb.recent_mean(100), 4.0);
+        assert_eq!(RingBuffer::new(3).recent_mean(2), 0.0);
+    }
+
+    #[test]
+    fn wraparound_stress_matches_naive() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let mut rb = RingBuffer::new(7);
+        let mut naive: Vec<f64> = Vec::new();
+        for _ in 0..500 {
+            let x = rng.f64();
+            rb.push(x);
+            naive.push(x);
+            let want: Vec<f64> = naive.iter().rev().take(7).rev().cloned().collect();
+            assert_eq!(rb.to_vec(), want);
+        }
+    }
+}

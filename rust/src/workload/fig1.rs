@@ -1,0 +1,42 @@
+//! The Fig. 1 motivation scenario: 50 requests with randomly distributed
+//! arrival times against a cold platform, reproducing the ~8 cold starts
+//! and the warm-container staircase of the paper's opening example.
+
+use crate::config::{secs, Micros};
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+/// 50 arrivals uniformly spread over `span` (paper-like default: ~7 min,
+/// which yields gaps long enough that a handful of overlapping requests
+/// trigger fresh cold starts while most reuse warm containers).
+pub fn generate(span: Micros, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed ^ 0xF1_6001);
+    let arrivals = (0..50)
+        .map(|_| rng.range_u64(0, span.saturating_sub(1)))
+        .collect();
+    Trace::new(arrivals)
+}
+
+pub fn default_span() -> Micros {
+    secs(420.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exactly_fifty_requests() {
+        let t = generate(default_span(), 7);
+        assert_eq!(t.len(), 50);
+        assert!(t.duration() < default_span());
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(
+            generate(default_span(), 7).arrivals,
+            generate(default_span(), 7).arrivals
+        );
+    }
+}

@@ -1,0 +1,145 @@
+//! Workload generation: arrival traces for the paper's two experiment
+//! families (Sec. IV "Workload") plus the Fig. 1 motivation scenario.
+
+pub mod azure;
+pub mod fig1;
+pub mod synthetic;
+
+use crate::config::Micros;
+
+/// An arrival trace: sorted request arrival times (µs from experiment start).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub arrivals: Vec<Micros>,
+}
+
+impl Trace {
+    pub fn new(mut arrivals: Vec<Micros>) -> Self {
+        arrivals.sort_unstable();
+        Trace { arrivals }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    pub fn duration(&self) -> Micros {
+        self.arrivals.last().copied().unwrap_or(0)
+    }
+
+    /// Per-interval arrival counts (the Prometheus invocation-rate series).
+    pub fn binned(&self, dt: Micros) -> Vec<u32> {
+        if self.arrivals.is_empty() {
+            return Vec::new();
+        }
+        let bins = (self.duration() / dt + 1) as usize;
+        let mut out = vec![0u32; bins];
+        for &t in &self.arrivals {
+            out[(t / dt) as usize] += 1;
+        }
+        out
+    }
+
+    /// Truncate to arrivals strictly before `end`.
+    pub fn truncate(&self, end: Micros) -> Trace {
+        Trace {
+            arrivals: self
+                .arrivals
+                .iter()
+                .copied()
+                .take_while(|&t| t < end)
+                .collect(),
+        }
+    }
+
+    /// Mean arrival rate in requests/second.
+    pub fn mean_rate(&self) -> f64 {
+        if self.arrivals.len() < 2 {
+            return 0.0;
+        }
+        self.arrivals.len() as f64 / (self.duration() as f64 / 1e6).max(1e-9)
+    }
+
+    /// Load a single-column CSV of arrival timestamps in seconds (the format
+    /// we extract from the real Azure Functions trace when available).
+    pub fn from_csv(text: &str) -> Result<Trace, String> {
+        let mut arrivals = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with("arrival") {
+                continue;
+            }
+            let secs: f64 = line
+                .split(',')
+                .next()
+                .unwrap()
+                .trim()
+                .parse()
+                .map_err(|_| format!("line {}: bad timestamp '{line}'", i + 1))?;
+            if secs < 0.0 {
+                return Err(format!("line {}: negative timestamp", i + 1));
+            }
+            arrivals.push((secs * 1e6).round() as Micros);
+        }
+        Ok(Trace::new(arrivals))
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("arrival_s\n");
+        for &t in &self.arrivals {
+            out.push_str(&format!("{:.6}\n", t as f64 / 1e6));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_sorts_arrivals() {
+        let t = Trace::new(vec![30, 10, 20]);
+        assert_eq!(t.arrivals, vec![10, 20, 30]);
+        assert_eq!(t.duration(), 30);
+    }
+
+    #[test]
+    fn binned_counts() {
+        let t = Trace::new(vec![0, 500_000, 1_000_000, 1_200_000, 2_500_000]);
+        assert_eq!(t.binned(1_000_000), vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn truncate_is_strict() {
+        let t = Trace::new(vec![10, 20, 30]);
+        assert_eq!(t.truncate(30).arrivals, vec![10, 20]);
+    }
+
+    #[test]
+    fn mean_rate() {
+        let t = Trace::new((0..=10).map(|i| i * 1_000_000).collect());
+        assert!((t.mean_rate() - 1.1).abs() < 1e-9); // 11 requests over 10 s
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = Trace::new(vec![0, 1_500_000, 3_000_000]);
+        let csv = t.to_csv();
+        let back = Trace::from_csv(&csv).unwrap();
+        assert_eq!(back.arrivals, t.arrivals);
+    }
+
+    #[test]
+    fn csv_rejects_garbage() {
+        assert!(Trace::from_csv("1.0\nnot-a-number\n").is_err());
+        assert!(Trace::from_csv("-5\n").is_err());
+        // comments and headers skipped
+        let t = Trace::from_csv("# comment\narrival_s\n2.0\n").unwrap();
+        assert_eq!(t.arrivals, vec![2_000_000]);
+    }
+}

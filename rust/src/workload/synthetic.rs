@@ -1,0 +1,116 @@
+//! Synthetic bursty workload (Sec. IV): "burst durations (1-5) s, idle
+//! periods (50-800) s, and request rates (5-300) req/s", sampled uniformly.
+//!
+//! Arrivals inside a burst are Poisson at the sampled rate. A `scale`
+//! parameter shrinks the idle-period range for quick tests while keeping
+//! the burst structure (document any non-1.0 scale in reports).
+
+use crate::config::{secs, Micros};
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+#[derive(Debug, Clone)]
+pub struct SyntheticConfig {
+    pub burst_secs: (f64, f64),
+    pub idle_secs: (f64, f64),
+    pub rate_rps: (f64, f64),
+    /// Multiplier on idle periods (1.0 = paper's ranges).
+    pub idle_scale: f64,
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        SyntheticConfig {
+            burst_secs: (1.0, 5.0),
+            idle_secs: (50.0, 800.0),
+            rate_rps: (5.0, 300.0),
+            idle_scale: 1.0,
+        }
+    }
+}
+
+/// Generate a bursty trace covering `duration`.
+pub fn generate(cfg: &SyntheticConfig, duration: Micros, seed: u64) -> Trace {
+    // distinct stream from the azure generator under equal seeds
+    let mut rng = Rng::new(seed ^ STREAM_SALT);
+    let mut arrivals = Vec::new();
+    let mut t = 0.0f64;
+    let end = duration as f64 / 1e6;
+    // start mid-idle so the first burst doesn't always hit t=0
+    t += rng.range_f64(0.0, cfg.idle_secs.0 * cfg.idle_scale.max(0.01));
+    while t < end {
+        let burst_len = rng.range_f64(cfg.burst_secs.0, cfg.burst_secs.1);
+        let rate = rng.range_f64(cfg.rate_rps.0, cfg.rate_rps.1);
+        let burst_end = (t + burst_len).min(end);
+        let mut at = t;
+        loop {
+            at += rng.exp(rate);
+            if at >= burst_end {
+                break;
+            }
+            arrivals.push(secs(at));
+        }
+        let idle = rng.range_f64(cfg.idle_secs.0, cfg.idle_secs.1) * cfg.idle_scale;
+        t = burst_end + idle.max(0.001);
+    }
+    Trace::new(arrivals)
+}
+
+const STREAM_SALT: u64 = 0x5EED_B00C;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::secs;
+
+    fn quick_cfg() -> SyntheticConfig {
+        SyntheticConfig {
+            idle_scale: 0.1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&quick_cfg(), secs(600.0), 1);
+        let b = generate(&quick_cfg(), secs(600.0), 1);
+        assert_eq!(a.arrivals, b.arrivals);
+        let c = generate(&quick_cfg(), secs(600.0), 2);
+        assert_ne!(a.arrivals, c.arrivals);
+    }
+
+    #[test]
+    fn arrivals_within_duration() {
+        let t = generate(&quick_cfg(), secs(600.0), 3);
+        assert!(!t.is_empty());
+        assert!(t.duration() <= secs(600.0));
+    }
+
+    #[test]
+    fn burst_rates_in_configured_range() {
+        // within any 1-second bin the rate should not wildly exceed the max
+        let t = generate(&quick_cfg(), secs(1200.0), 4);
+        let bins = t.binned(secs(1.0));
+        let max = *bins.iter().max().unwrap();
+        assert!(max as f64 <= 300.0 * 1.8, "bin max {max} too high");
+    }
+
+    #[test]
+    fn is_actually_bursty() {
+        // most 1-second bins are empty (long idle), some are dense
+        let t = generate(&SyntheticConfig::default(), secs(3600.0), 5);
+        let bins = t.binned(secs(1.0));
+        let empty = bins.iter().filter(|&&b| b == 0).count() as f64;
+        let frac_empty = empty / bins.len() as f64;
+        assert!(frac_empty > 0.7, "only {frac_empty:.2} of bins empty");
+        let peak = *bins.iter().max().unwrap();
+        assert!(peak >= 5, "no real burst observed (peak={peak})");
+    }
+
+    #[test]
+    fn idle_scale_shrinks_gaps() {
+        let slow = generate(&SyntheticConfig::default(), secs(3600.0), 6);
+        let fast = generate(&quick_cfg(), secs(3600.0), 6);
+        assert!(fast.len() > slow.len());
+    }
+}

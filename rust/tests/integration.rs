@@ -1,0 +1,148 @@
+//! Integration tests: full control loops over the platform substrate,
+//! invariant audits, and HLO <-> Rust-mirror differential checks.
+
+use mpc_serverless::config::{secs, ExperimentConfig, Policy, TraceKind};
+use mpc_serverless::coordinator::controller::MpcScheduler;
+use mpc_serverless::experiments::{fig4, run_experiment, run_with_scheduler};
+use mpc_serverless::metrics::RunReport;
+use mpc_serverless::runtime::{ArtifactMeta, Engine, ForecastModule, HloForecaster, HloSolver, MpcModule};
+use mpc_serverless::workload::synthetic::{generate, SyntheticConfig};
+use mpc_serverless::workload::Trace;
+
+fn cfg(kind: TraceKind, duration_s: f64, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        trace: kind,
+        duration: secs(duration_s),
+        seed,
+        ..Default::default()
+    }
+}
+
+fn audit(r: &RunReport, n_requests: usize) {
+    assert_eq!(r.dropped, 0, "{}: dropped requests", r.policy);
+    assert_eq!(r.completed, n_requests, "{}: completion count", r.policy);
+    assert!(r.mean_ms >= 280.0 * 0.9, "{}: response below exec time", r.policy);
+    assert!(r.response_times_s.iter().all(|t| t.is_finite() && *t >= 0.0));
+    assert!(r.keepalive_total_s >= 0.0);
+}
+
+#[test]
+fn all_policies_complete_the_azure_workload() {
+    let c = cfg(TraceKind::AzureLike, 1200.0, 5);
+    let trace = fig4::trace_for(TraceKind::AzureLike, c.duration, c.seed);
+    for policy in [Policy::OpenWhisk, Policy::IceBreaker, Policy::Mpc] {
+        let r = run_experiment(&c, policy, &trace);
+        audit(&r, trace.len());
+    }
+}
+
+#[test]
+fn all_policies_complete_the_bursty_workload() {
+    let c = cfg(TraceKind::SyntheticBursty, 1800.0, 9);
+    let trace = generate(&SyntheticConfig::default(), c.duration, c.seed);
+    for policy in [Policy::OpenWhisk, Policy::IceBreaker, Policy::Mpc] {
+        let r = run_experiment(&c, policy, &trace);
+        audit(&r, trace.len());
+    }
+}
+
+#[test]
+fn mpc_reduces_cold_requests_on_bursty_load() {
+    let c = cfg(TraceKind::SyntheticBursty, 1800.0, 13);
+    let trace = generate(&SyntheticConfig::default(), c.duration, c.seed);
+    let ow = run_experiment(&c, Policy::OpenWhisk, &trace);
+    let mpc = run_experiment(&c, Policy::Mpc, &trace);
+    assert!(
+        mpc.cold_requests < ow.cold_requests,
+        "MPC cold requests {} !< OW {}",
+        mpc.cold_requests,
+        ow.cold_requests
+    );
+    assert!(mpc.mean_warm < ow.mean_warm);
+}
+
+#[test]
+fn capacity_is_never_exceeded() {
+    // hammer a tiny platform; gauge samples must respect the replica cap
+    let mut c = cfg(TraceKind::SyntheticBursty, 600.0, 21);
+    c.platform.max_containers = 8;
+    c.controller.weights.w_max = 8.0;
+    c.sample_interval = secs(5.0);
+    let trace = generate(
+        &SyntheticConfig {
+            idle_scale: 0.1,
+            ..Default::default()
+        },
+        c.duration,
+        c.seed,
+    );
+    for policy in [Policy::OpenWhisk, Policy::Mpc] {
+        let r = run_experiment(&c, policy, &trace);
+        for (t, w) in &r.warm_series {
+            assert!(*w <= 8, "{}: {} warm at t={}", r.policy, w, t);
+        }
+        assert_eq!(r.dropped, 0, "{}", r.policy);
+    }
+}
+
+#[test]
+fn empty_and_single_request_traces() {
+    let c = cfg(TraceKind::AzureLike, 120.0, 1);
+    for trace in [Trace::default(), Trace::new(vec![secs(5.0)])] {
+        for policy in [Policy::OpenWhisk, Policy::IceBreaker, Policy::Mpc] {
+            let r = run_experiment(&c, policy, &trace);
+            assert_eq!(r.completed, trace.len(), "{}", r.policy);
+            assert_eq!(r.dropped, 0);
+        }
+    }
+}
+
+#[test]
+fn hlo_backed_controller_matches_mirror_behaviour() {
+    if !ArtifactMeta::available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let c = cfg(TraceKind::SyntheticBursty, 600.0, 31);
+    let trace = generate(
+        &SyntheticConfig {
+            idle_scale: 0.2,
+            ..Default::default()
+        },
+        c.duration,
+        c.seed,
+    );
+    let mirror = run_experiment(&c, Policy::Mpc, &trace);
+
+    let meta = ArtifactMeta::load(&ArtifactMeta::default_dir()).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let sched = MpcScheduler::new(
+        c.controller.clone(),
+        Box::new(HloForecaster::new(
+            ForecastModule::load(&engine, &meta).unwrap(),
+            c.controller.gamma_clip as f32,
+        )),
+        Box::new(HloSolver::new(
+            MpcModule::load(&engine, &meta).unwrap(),
+            c.controller.weights,
+        )),
+    );
+    let hlo = run_with_scheduler(&c, Box::new(sched), &trace);
+    assert_eq!(hlo.completed, mirror.completed);
+    assert_eq!(hlo.dropped, 0);
+    // f32 vs f64 solver paths may schedule slightly differently; the
+    // aggregate behaviour must stay close
+    let rel = (hlo.mean_ms - mirror.mean_ms).abs() / mirror.mean_ms.max(1.0);
+    assert!(rel < 0.35, "hlo mean {} vs mirror {}", hlo.mean_ms, mirror.mean_ms);
+}
+
+#[test]
+fn runs_are_reproducible() {
+    let c = cfg(TraceKind::SyntheticBursty, 900.0, 17);
+    let trace = generate(&SyntheticConfig::default(), c.duration, c.seed);
+    let a = run_experiment(&c, Policy::Mpc, &trace);
+    let b = run_experiment(&c, Policy::Mpc, &trace);
+    assert_eq!(a.mean_ms, b.mean_ms);
+    assert_eq!(a.counters.cold_starts, b.counters.cold_starts);
+    assert_eq!(a.warm_series, b.warm_series);
+}
