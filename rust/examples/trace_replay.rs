@@ -19,7 +19,7 @@ use mpc_serverless::runtime::{
 use mpc_serverless::util::cli::Cli;
 use mpc_serverless::workload::synthetic::{generate, SyntheticConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     mpc_serverless::util::logging::init();
     let cli = Cli::new("trace_replay", "end-to-end HLO-backed serving run")
         .flag("duration-s", "3600", "trace duration in seconds")
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     let seed = args.get_u64("seed")?;
 
     if !ArtifactMeta::available() {
-        anyhow::bail!("artifacts missing — run `make artifacts` first");
+        return Err("artifacts missing — run `make artifacts` first".into());
     }
     let meta = ArtifactMeta::load(&ArtifactMeta::default_dir())?;
     let engine = Engine::cpu()?;

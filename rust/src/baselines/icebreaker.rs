@@ -74,7 +74,7 @@ impl Scheduler for IceBreaker {
         let decide_ns = t1.elapsed().as_nanos() as f64;
         ctx.recorder.on_control_overhead(forecast_ns, decide_ns);
 
-        let provisioned = ctx.platform.warm_count() + ctx.platform.cold_starting_count();
+        let provisioned = ctx.fleet.warm_count() + ctx.fleet.cold_starting_count();
         if provisioned < target {
             ctx.prewarm(target - provisioned);
         } else if provisioned > target {
@@ -82,7 +82,7 @@ impl Scheduler for IceBreaker {
             // below the forecast target
             let over = provisioned - target;
             let eligible = ctx
-                .platform
+                .fleet
                 .idle_containers_older_than(self.retention, ctx.now);
             let n = over.min(eligible);
             if n > 0 {
@@ -103,54 +103,49 @@ impl Scheduler for IceBreaker {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::Platform;
+    use crate::cluster::Fleet;
     use crate::config::ExperimentConfig;
     use crate::coordinator::Ev;
     use crate::forecast::FourierForecaster;
     use crate::metrics::Recorder;
     use crate::simulator::EventQueue;
 
-    fn make() -> (IceBreaker, Platform, EventQueue<Ev>, Recorder, ExperimentConfig) {
+    fn make() -> (IceBreaker, Fleet, EventQueue<Ev>, Recorder, ExperimentConfig) {
         let cfg = ExperimentConfig::default();
         let sched = IceBreaker::new(
             cfg.controller.clone(),
             Box::new(FourierForecaster::default()),
         );
-        (
-            sched,
-            Platform::new(cfg.platform.clone(), 5),
-            EventQueue::new(),
-            Recorder::new(16),
-            cfg,
-        )
+        let fleet = Fleet::new(&cfg.fleet, &cfg.platform, 5);
+        (sched, fleet, EventQueue::new(), Recorder::new(16), cfg)
     }
 
     #[test]
     fn forwards_immediately() {
-        let (mut sched, mut platform, mut events, mut rec, cfg) = make();
+        let (mut sched, mut fleet, mut events, mut rec, cfg) = make();
         let mut ctx = Ctx {
             now: 0,
-            platform: &mut platform,
+            fleet: &mut fleet,
             events: &mut events,
             recorder: &mut rec,
             cfg: &cfg,
         };
         ctx.recorder.on_arrival(0, 0);
         sched.on_arrival(0, &mut ctx);
-        assert_eq!(ctx.platform.counters.cold_starts, 1);
+        assert_eq!(ctx.fleet.counters().cold_starts, 1);
         assert_eq!(sched.queue_len(), 0);
     }
 
     #[test]
     fn sustained_load_triggers_prewarming() {
-        let (mut sched, mut platform, mut events, mut rec, cfg) = make();
+        let (mut sched, mut fleet, mut events, mut rec, cfg) = make();
         // steady history of 200 requests per 30 s interval
         for _ in 0..120 {
             sched.history.push(200.0);
         }
         let mut ctx = Ctx {
             now: 1_000_000,
-            platform: &mut platform,
+            fleet: &mut fleet,
             events: &mut events,
             recorder: &mut rec,
             cfg: &cfg,
@@ -158,9 +153,9 @@ mod tests {
         sched.on_control_tick(&mut ctx);
         // 200 req/step / mu(5.36 per step at the 1.5 s drain target) -> 38
         assert!(
-            ctx.platform.cold_starting_count() >= 15,
+            ctx.fleet.cold_starting_count() >= 15,
             "prewarmed {} containers",
-            ctx.platform.cold_starting_count()
+            ctx.fleet.cold_starting_count()
         );
     }
 

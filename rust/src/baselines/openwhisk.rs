@@ -23,7 +23,7 @@ impl Scheduler for OpenWhiskDefault {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::Platform;
+    use crate::cluster::Fleet;
     use crate::config::ExperimentConfig;
     use crate::coordinator::Ev;
     use crate::metrics::Recorder;
@@ -32,20 +32,20 @@ mod tests {
     #[test]
     fn forwards_immediately_and_cold_starts() {
         let cfg = ExperimentConfig::default();
-        let mut platform = Platform::new(cfg.platform.clone(), 3);
+        let mut fleet = Fleet::new(&cfg.fleet, &cfg.platform, 3);
         let mut events = EventQueue::new();
         let mut rec = Recorder::new(4);
         let mut sched = OpenWhiskDefault;
         let mut ctx = Ctx {
             now: 0,
-            platform: &mut platform,
+            fleet: &mut fleet,
             events: &mut events,
             recorder: &mut rec,
             cfg: &cfg,
         };
         ctx.recorder.on_arrival(0, 0);
         sched.on_arrival(0, &mut ctx);
-        assert_eq!(ctx.platform.counters.cold_starts, 1);
+        assert_eq!(ctx.fleet.counters().cold_starts, 1);
         assert_eq!(ctx.events.len(), 1); // Ready event scheduled
         assert_eq!(sched.queue_len(), 0); // nothing held back
         assert!(sched.tick_interval().is_none());

@@ -1,0 +1,599 @@
+//! Multi-invoker fleet: N invoker nodes, each wrapping its own
+//! [`Platform`] (per-node capacity, keep-alive, FCFS backlog), behind a
+//! pluggable dispatch placement layer ([`placement`]).
+//!
+//! The paper's testbed is OpenWhisk on a Kubernetes cluster with several
+//! invoker nodes; the fleet makes the cluster-scale effects visible that
+//! a single 64-replica pool cannot show — placement skew, per-node
+//! warm-pool fragmentation, and node failures (the drain scenario).
+//!
+//! Determinism guarantee: node 0 receives the caller's seed unchanged and
+//! every placement decision is a pure function of platform state, so a
+//! one-node fleet reproduces the legacy single-platform results
+//! bit-for-bit (same seed → same metrics), keeping all existing figures
+//! valid.
+
+pub mod placement;
+
+use crate::cluster::container::ContainerId;
+use crate::cluster::platform::{CompleteOutcome, InvokeOutcome, KeepAliveVerdict, Platform, ReadyOutcome};
+use crate::cluster::telemetry::{Counters, GaugeSample};
+use crate::cluster::RequestId;
+use crate::config::{FleetConfig, Micros, PlacementPolicy, PlatformConfig};
+
+/// Invoker-node identifier (index into the fleet, stable for a run).
+pub type NodeId = u32;
+
+/// Split `total` replica capacity across `nodes` as evenly as possible
+/// with nothing lost to rounding: the first `total % nodes` nodes get one
+/// extra replica. Returns None when the split is impossible (`nodes` is 0
+/// or exceeds `total`, which would silently inflate capacity).
+pub fn split_capacity(total: u32, nodes: u32) -> Option<Vec<u32>> {
+    if nodes == 0 || nodes > total {
+        return None;
+    }
+    let base = total / nodes;
+    let rem = total % nodes;
+    Some(
+        (0..nodes)
+            .map(|i| if i < rem { base + 1 } else { base })
+            .collect(),
+    )
+}
+
+/// One invoker: a platform plus its liveness flag. Offline nodes keep
+/// their counters (the work happened) but hold no containers and are
+/// skipped by placement and capacity accounting.
+#[derive(Debug)]
+pub struct InvokerNode {
+    pub id: NodeId,
+    pub platform: Platform,
+    pub online: bool,
+}
+
+impl InvokerNode {
+    /// In-flight work: executing + initializing containers + backlog.
+    pub fn load(&self) -> u64 {
+        (self.platform.busy_count() + self.platform.cold_starting_count()) as u64
+            + self.platform.fcfs_len() as u64
+    }
+}
+
+#[derive(Debug)]
+pub struct Fleet {
+    nodes: Vec<InvokerNode>,
+    placement: PlacementPolicy,
+    rr_cursor: usize,
+}
+
+impl Fleet {
+    /// Build a fleet of `fleet_cfg.nodes` invokers. Per-node capacity
+    /// overrides come from `fleet_cfg.capacities` (cycled); node 0 keeps
+    /// `seed` unchanged so a one-node fleet matches the legacy
+    /// single-platform RNG stream exactly.
+    pub fn new(fleet_cfg: &FleetConfig, platform_cfg: &PlatformConfig, seed: u64) -> Fleet {
+        let n = fleet_cfg.nodes.max(1);
+        let mut nodes = Vec::with_capacity(n as usize);
+        for i in 0..n {
+            let mut pc = platform_cfg.clone();
+            if let Some(caps) = &fleet_cfg.capacities {
+                if !caps.is_empty() {
+                    let cap = caps[i as usize % caps.len()];
+                    pc.max_containers = cap;
+                    // the override is authoritative: lift the node's
+                    // CPU/memory so the derived resource cap cannot bind
+                    // below it (resource_cap() = min(cpu, mem, max))
+                    pc.node_cpu_millis = pc.node_cpu_millis.max(cap * pc.container_cpu_millis);
+                    pc.node_mem_mib = pc.node_mem_mib.max(cap * pc.container_mem_mib);
+                }
+            }
+            let node_seed = seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            nodes.push(InvokerNode {
+                id: i,
+                platform: Platform::new(pc, node_seed),
+                online: true,
+            });
+        }
+        Fleet {
+            nodes,
+            placement: fleet_cfg.placement,
+            rr_cursor: 0,
+        }
+    }
+
+    // ---- topology -----------------------------------------------------------
+
+    pub fn nodes(&self) -> &[InvokerNode] {
+        &self.nodes
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn online_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.online).count()
+    }
+
+    pub fn node(&self, id: NodeId) -> &InvokerNode {
+        &self.nodes[id as usize]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut InvokerNode {
+        &mut self.nodes[id as usize]
+    }
+
+    fn online(&self) -> impl Iterator<Item = &InvokerNode> {
+        self.nodes.iter().filter(|n| n.online)
+    }
+
+    // ---- aggregate gauges (the controller's cluster-level telemetry) --------
+
+    pub fn total(&self) -> u32 {
+        self.online().map(|n| n.platform.total()).sum()
+    }
+
+    pub fn idle_count(&self) -> u32 {
+        self.online().map(|n| n.platform.idle_count()).sum()
+    }
+
+    pub fn busy_count(&self) -> u32 {
+        self.online().map(|n| n.platform.busy_count()).sum()
+    }
+
+    pub fn warm_count(&self) -> u32 {
+        self.online().map(|n| n.platform.warm_count()).sum()
+    }
+
+    pub fn cold_starting_count(&self) -> u32 {
+        self.online().map(|n| n.platform.cold_starting_count()).sum()
+    }
+
+    pub fn fcfs_len(&self) -> usize {
+        self.online().map(|n| n.platform.fcfs_len()).sum()
+    }
+
+    /// Total replica capacity across online nodes (the MPC's pool bound).
+    pub fn resource_cap(&self) -> u32 {
+        self.online().map(|n| n.platform.cfg.resource_cap()).sum()
+    }
+
+    /// Idle containers unused for at least `min_idle`, fleet-wide.
+    pub fn idle_containers_older_than(&self, min_idle: Micros, now: Micros) -> u32 {
+        self.online()
+            .map(|n| n.platform.idle_containers_older_than(min_idle, now))
+            .sum()
+    }
+
+    /// Ready times of in-flight cold starts across the fleet (readyCold).
+    pub fn cold_ready_times(&self) -> Vec<Micros> {
+        self.online()
+            .flat_map(|n| n.platform.cold_ready_times())
+            .collect()
+    }
+
+    /// Monotonic counters summed over every node, including offline ones
+    /// (their history happened and stays in the books).
+    pub fn counters(&self) -> Counters {
+        let mut out = Counters::default();
+        for n in &self.nodes {
+            out.accumulate(&n.platform.counters);
+        }
+        out
+    }
+
+    /// Containers ever created / removed, fleet-wide (conservation audit).
+    pub fn spawned(&self) -> u64 {
+        self.nodes.iter().map(|n| n.platform.spawned).sum()
+    }
+
+    pub fn removed(&self) -> u64 {
+        self.nodes.iter().map(|n| n.platform.removed).sum()
+    }
+
+    pub fn gauge(&self, now: Micros, queue_len: u32) -> GaugeSample {
+        GaugeSample {
+            time: now,
+            warm: self.warm_count(),
+            idle: self.idle_count(),
+            busy: self.busy_count(),
+            cold_starting: self.cold_starting_count(),
+            queue_len,
+        }
+    }
+
+    /// Per-node load snapshot `(id, online, warm, load)` — the placement
+    /// and prewarm-budget telemetry, also handy for reports.
+    pub fn node_loads(&self) -> Vec<(NodeId, bool, u32, u64)> {
+        self.nodes
+            .iter()
+            .map(|n| (n.id, n.online, n.platform.warm_count(), n.load()))
+            .collect()
+    }
+
+    // ---- invocation path ----------------------------------------------------
+
+    fn place(&mut self) -> usize {
+        let picked = match self.placement {
+            PlacementPolicy::RoundRobin => {
+                let k = placement::round_robin(&self.nodes, self.rr_cursor);
+                if k.is_some() {
+                    self.rr_cursor = self.rr_cursor.wrapping_add(1);
+                }
+                k
+            }
+            PlacementPolicy::LeastLoaded => placement::least_loaded(&self.nodes),
+            PlacementPolicy::WarmFirst => placement::warm_first(&self.nodes),
+        };
+        picked.expect("fleet has no online nodes")
+    }
+
+    /// Dispatch `req`: the placement layer picks a node, the node's
+    /// platform applies OpenWhisk semantics (warm bind / cold start /
+    /// FCFS backlog at capacity).
+    pub fn invoke(&mut self, req: RequestId, now: Micros) -> (NodeId, InvokeOutcome) {
+        let idx = self.place();
+        let node = &mut self.nodes[idx];
+        (node.id, node.platform.invoke(req, now))
+    }
+
+    /// Prewarm one container on the least-provisioned online node with
+    /// headroom — this is how the MPC's aggregate prewarm budget x_k is
+    /// split across nodes from per-node telemetry. When every node is
+    /// full the least-provisioned node registers the rejection.
+    pub fn prewarm_one(&mut self, now: Micros) -> Option<(NodeId, ContainerId, Micros)> {
+        let pick = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.online && n.platform.headroom() > 0)
+            .min_by_key(|(i, n)| {
+                (
+                    n.platform.warm_count() + n.platform.cold_starting_count(),
+                    *i,
+                )
+            })
+            .map(|(i, _)| i);
+        let idx = match pick {
+            Some(i) => i,
+            None => {
+                self.nodes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, n)| n.online)
+                    .min_by_key(|(i, n)| (n.platform.total(), *i))
+                    .map(|(i, _)| i)?
+            }
+        };
+        let node = &mut self.nodes[idx];
+        let id = node.id;
+        node.platform
+            .prewarm_one(now)
+            .map(|(cid, ready_at)| (id, cid, ready_at))
+    }
+
+    /// Reclaim up to `n` idle containers fleet-wide, preserving
+    /// Algorithm 2's global score ranking: each step drains the best
+    /// candidate across all online nodes.
+    pub fn try_reclaim(&mut self, n: u32, now: Micros) -> Vec<(NodeId, ContainerId)> {
+        let mut out = Vec::new();
+        if n == 0 {
+            return out;
+        }
+        // single online node: defer to the platform's batch ranking
+        // (bit-identical to the legacy single-platform path)
+        let online: Vec<usize> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, nd)| nd.online)
+            .map(|(i, _)| i)
+            .collect();
+        if online.len() == 1 {
+            let node = &mut self.nodes[online[0]];
+            let id = node.id;
+            return node
+                .platform
+                .try_reclaim(n, now)
+                .into_iter()
+                .map(|cid| (id, cid))
+                .collect();
+        }
+        for _ in 0..n {
+            let best = self
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, nd)| nd.online)
+                .filter_map(|(i, nd)| nd.platform.best_reclaim_score(now).map(|s| (s, i)))
+                .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(b.1.cmp(&a.1)));
+            let Some((_, idx)) = best else { break };
+            let node = &mut self.nodes[idx];
+            let id = node.id;
+            let got = node.platform.try_reclaim(1, now);
+            if got.is_empty() {
+                // Unreachable today: best_reclaim_score ranks only
+                // log-safe idle containers, and acks are synchronous with
+                // exec_complete, so an idle container is always safe and
+                // try_reclaim(1) on that node must succeed. If acks ever
+                // become async (a true Loki analog), the platform's
+                // rank-then-filter could pick an unsafe container and come
+                // back empty here — revisit this break before that change,
+                // or the remaining reclaim budget is dropped fleet-wide.
+                break;
+            }
+            out.extend(got.into_iter().map(|cid| (id, cid)));
+        }
+        out
+    }
+
+    // ---- node-scoped event handlers -----------------------------------------
+    //
+    // Events carry (node, container); after a node failure its stale
+    // Ready/Done/KeepAlive events keep arriving and must be dropped, so
+    // these return None / NotApplicable for offline nodes.
+
+    pub fn container_ready(
+        &mut self,
+        node: NodeId,
+        cid: ContainerId,
+        now: Micros,
+    ) -> Option<ReadyOutcome> {
+        let nd = self.nodes.get_mut(node as usize)?;
+        if !nd.online {
+            return None;
+        }
+        Some(nd.platform.container_ready(cid, now))
+    }
+
+    pub fn exec_complete(
+        &mut self,
+        node: NodeId,
+        cid: ContainerId,
+        now: Micros,
+    ) -> Option<CompleteOutcome> {
+        let nd = self.nodes.get_mut(node as usize)?;
+        if !nd.online {
+            return None;
+        }
+        Some(nd.platform.exec_complete(cid, now))
+    }
+
+    pub fn keepalive_check(&mut self, node: NodeId, cid: ContainerId, now: Micros) -> KeepAliveVerdict {
+        match self.nodes.get_mut(node as usize) {
+            Some(nd) if nd.online => nd.platform.keepalive_check(cid, now),
+            _ => KeepAliveVerdict::NotApplicable,
+        }
+    }
+
+    // ---- failure / drain scenario -------------------------------------------
+
+    /// Take `node` offline: its containers are lost and the requests they
+    /// carried (executing, cold-start-bound, and FCFS backlog) are
+    /// returned for redispatch through the placement layer. Refuses to
+    /// drop the last online node — the fleet must keep serving.
+    pub fn fail_node(&mut self, node: NodeId, now: Micros) -> Vec<RequestId> {
+        if self.online_count() <= 1 {
+            return Vec::new();
+        }
+        let Some(nd) = self.nodes.get_mut(node as usize) else {
+            return Vec::new();
+        };
+        if !nd.online {
+            return Vec::new();
+        }
+        nd.online = false;
+        nd.platform.fail_all(now)
+    }
+
+    /// End-of-run accounting across every node (offline nodes are already
+    /// empty). Returns concatenated (keep-alive durations, idle totals).
+    pub fn finalize(&mut self, now: Micros) -> (Vec<Micros>, Vec<Micros>) {
+        let mut ka = Vec::new();
+        let mut idle = Vec::new();
+        for nd in &mut self.nodes {
+            let (k, i) = nd.platform.finalize(now);
+            ka.extend(k);
+            idle.extend(i);
+        }
+        (ka, idle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FleetConfig;
+
+    fn pcfg() -> PlatformConfig {
+        PlatformConfig {
+            latency_jitter: 0.0,
+            ..Default::default()
+        }
+    }
+
+    fn fleet(nodes: u32, placement: PlacementPolicy) -> Fleet {
+        let fc = FleetConfig {
+            nodes,
+            placement,
+            ..Default::default()
+        };
+        Fleet::new(&fc, &pcfg(), 11)
+    }
+
+    #[test]
+    fn single_node_fleet_mirrors_bare_platform() {
+        // same seed, same call sequence → identical outcomes and counters
+        let mut f = fleet(1, PlacementPolicy::WarmFirst);
+        let mut p = Platform::new(pcfg(), 11);
+        for (req, t) in [(0u64, 0u64), (1, 1000), (2, 2000)] {
+            let (node, a) = f.invoke(req, t);
+            let b = p.invoke(req, t);
+            assert_eq!(node, 0);
+            assert_eq!(a, b);
+        }
+        assert_eq!(f.counters().cold_starts, p.counters.cold_starts);
+        assert_eq!(f.cold_ready_times(), p.cold_ready_times());
+        assert_eq!(f.resource_cap(), p.cfg.resource_cap());
+    }
+
+    #[test]
+    fn round_robin_sprays_across_nodes() {
+        let mut f = fleet(3, PlacementPolicy::RoundRobin);
+        let mut seen = Vec::new();
+        for req in 0..6 {
+            let (node, _) = f.invoke(req, req * 1000);
+            seen.push(node);
+        }
+        assert_eq!(seen, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(f.counters().cold_starts, 6); // every node cold-started
+    }
+
+    #[test]
+    fn warm_first_reuses_warm_node() {
+        let mut f = fleet(4, PlacementPolicy::WarmFirst);
+        let (n0, out) = f.invoke(0, 0);
+        let InvokeOutcome::ColdStart { cid, ready_at } = out else {
+            panic!("{out:?}")
+        };
+        let ReadyOutcome::Started { done_at, .. } =
+            f.container_ready(n0, cid, ready_at).unwrap()
+        else {
+            panic!()
+        };
+        f.exec_complete(n0, cid, done_at).unwrap();
+        // next request must ride the idle warm container on the same node
+        let (n1, out) = f.invoke(1, done_at + 1000);
+        assert_eq!(n1, n0);
+        assert!(matches!(out, InvokeOutcome::WarmStart { .. }), "{out:?}");
+        assert_eq!(f.counters().cold_starts, 1);
+    }
+
+    #[test]
+    fn least_loaded_balances_inflight_work() {
+        let mut f = fleet(2, PlacementPolicy::LeastLoaded);
+        let (a, _) = f.invoke(0, 0);
+        let (b, _) = f.invoke(1, 10);
+        assert_ne!(a, b); // second request avoids the loaded node
+    }
+
+    #[test]
+    fn prewarm_budget_spreads_across_nodes() {
+        let mut f = fleet(3, PlacementPolicy::WarmFirst);
+        let mut targets = Vec::new();
+        for _ in 0..6 {
+            let (node, _cid, _ready) = f.prewarm_one(0).unwrap();
+            targets.push(node);
+        }
+        // least-provisioned-first: each node gets every third prewarm
+        assert_eq!(targets, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn heterogeneous_capacities_cycle() {
+        let fc = FleetConfig {
+            nodes: 3,
+            capacities: Some(vec![1, 2]),
+            placement: PlacementPolicy::LeastLoaded,
+            failure: None,
+        };
+        let f = Fleet::new(&fc, &pcfg(), 1);
+        assert_eq!(f.node(0).platform.cfg.resource_cap(), 1);
+        assert_eq!(f.node(1).platform.cfg.resource_cap(), 2);
+        assert_eq!(f.node(2).platform.cfg.resource_cap(), 1); // cycled
+        assert_eq!(f.resource_cap(), 4);
+    }
+
+    #[test]
+    fn capacity_override_beats_cpu_derived_cap() {
+        // PlatformConfig's CPU budget caps at 64; an explicit per-node
+        // override above that must still be honored
+        let fc = FleetConfig {
+            nodes: 1,
+            capacities: Some(vec![128]),
+            placement: PlacementPolicy::WarmFirst,
+            failure: None,
+        };
+        let f = Fleet::new(&fc, &pcfg(), 1);
+        assert_eq!(f.resource_cap(), 128);
+    }
+
+    #[test]
+    fn split_capacity_conserves_total() {
+        assert_eq!(split_capacity(64, 1), Some(vec![64]));
+        assert_eq!(split_capacity(64, 3), Some(vec![22, 21, 21]));
+        assert_eq!(
+            split_capacity(64, 3).unwrap().iter().sum::<u32>(),
+            64,
+            "remainder must not be lost"
+        );
+        assert_eq!(split_capacity(64, 0), None);
+        assert_eq!(split_capacity(4, 8), None, "must not inflate capacity");
+    }
+
+    #[test]
+    fn fail_node_returns_lost_work_and_goes_dark() {
+        let mut f = fleet(2, PlacementPolicy::RoundRobin);
+        let (n0, _) = f.invoke(7, 0); // cold-start bound to req 7 on node 0
+        assert_eq!(n0, 0);
+        let lost = f.fail_node(0, 1000);
+        assert_eq!(lost, vec![7]);
+        assert_eq!(f.online_count(), 1);
+        // stale events for the dead node are dropped, not panics
+        assert!(f.container_ready(0, 1, 10_500_000).is_none());
+        assert!(f.exec_complete(0, 1, 10_500_000).is_none());
+        assert_eq!(
+            f.keepalive_check(0, 1, 10_500_000),
+            KeepAliveVerdict::NotApplicable
+        );
+        // counters survive the failure (the invocation happened)
+        assert_eq!(f.counters().invocations, 1);
+        // placement now only sees node 1
+        let (n, _) = f.invoke(8, 2000);
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn fail_node_refuses_last_online() {
+        let mut f = fleet(1, PlacementPolicy::WarmFirst);
+        assert!(f.fail_node(0, 0).is_empty());
+        assert_eq!(f.online_count(), 1);
+    }
+
+    #[test]
+    fn reclaim_follows_global_score_ranking() {
+        let mut f = fleet(2, PlacementPolicy::WarmFirst);
+        // idle container on each node; node 0's is older (higher score)
+        let (c0, r0) = f.node_mut(0).platform.prewarm_one(0).unwrap();
+        f.node_mut(0).platform.container_ready(c0, r0);
+        let (c1, r1) = f.node_mut(1).platform.prewarm_one(5_000_000).unwrap();
+        f.node_mut(1).platform.container_ready(c1, r1);
+        let got = f.try_reclaim(1, r1 + 1_000_000);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, 0, "longest-idle candidate lives on node 0");
+        // the remaining idle container drains next
+        let got2 = f.try_reclaim(5, r1 + 2_000_000);
+        assert_eq!(got2.len(), 1);
+        assert_eq!(got2[0].0, 1);
+        assert_eq!(f.idle_count(), 0);
+    }
+
+    #[test]
+    fn aggregates_sum_over_online_nodes() {
+        let mut f = fleet(2, PlacementPolicy::RoundRobin);
+        f.invoke(0, 0);
+        f.invoke(1, 0);
+        assert_eq!(f.cold_starting_count(), 2);
+        assert_eq!(f.total(), 2);
+        assert_eq!(f.spawned(), 2);
+        let g = f.gauge(0, 0);
+        assert_eq!(g.cold_starting, 2);
+        assert_eq!(f.node_loads().len(), 2);
+        // failing node 1 removes its container from the aggregates but
+        // keeps conservation intact
+        f.fail_node(1, 10);
+        assert_eq!(f.cold_starting_count(), 1);
+        assert_eq!(f.spawned(), 2);
+        assert_eq!(f.removed(), 1);
+    }
+}

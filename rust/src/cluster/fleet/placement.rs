@@ -1,0 +1,137 @@
+//! Dispatch placement layer: picks the invoker node an invocation is
+//! routed to. Policies are pure functions over the node array (plus the
+//! round-robin cursor owned by the fleet), so placement decisions are
+//! deterministic and never consume platform RNG state.
+
+use crate::cluster::fleet::InvokerNode;
+
+/// Rotate through online nodes: the `cursor`-th online node (mod count).
+/// OpenWhisk's hash-spray analog — blind to warm-pool state, so it
+/// maximizes placement skew and warm-pool fragmentation.
+pub fn round_robin(nodes: &[InvokerNode], cursor: usize) -> Option<usize> {
+    // allocation-free: this runs once per dispatch, the simulator's
+    // hottest loop
+    let online_count = nodes.iter().filter(|n| n.online).count();
+    if online_count == 0 {
+        return None;
+    }
+    nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| n.online)
+        .nth(cursor % online_count)
+        .map(|(i, _)| i)
+}
+
+/// Online node with the least in-flight work (busy + cold-starting +
+/// backlog); ties break to the lower node index.
+pub fn least_loaded(nodes: &[InvokerNode]) -> Option<usize> {
+    nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| n.online)
+        .min_by_key(|(i, n)| (n.load(), *i))
+        .map(|(i, _)| i)
+}
+
+/// Route to a node holding an idle warm container — most recently used
+/// first, preserving OpenWhisk's MRU reuse affinity across the fleet.
+/// With no idle container anywhere, spill to the least-loaded node that
+/// still has replica headroom; with the whole fleet saturated, fall back
+/// to least-loaded (the request joins that node's FCFS backlog).
+pub fn warm_first(nodes: &[InvokerNode]) -> Option<usize> {
+    let warmest = nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| n.online)
+        .filter_map(|(i, n)| n.platform.mru_idle_recency().map(|r| (r, i)))
+        .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+    if let Some((_, i)) = warmest {
+        return Some(i);
+    }
+    let spill = nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| n.online && n.platform.headroom() > 0)
+        .min_by_key(|(i, n)| (n.load(), *i))
+        .map(|(i, _)| i);
+    if spill.is_some() {
+        return spill;
+    }
+    least_loaded(nodes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::{Fleet, NodeId};
+    use crate::config::{FleetConfig, PlacementPolicy, PlatformConfig};
+
+    fn fleet(n: u32) -> Fleet {
+        let fc = FleetConfig {
+            nodes: n,
+            placement: PlacementPolicy::WarmFirst,
+            ..Default::default()
+        };
+        let pc = PlatformConfig {
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        Fleet::new(&fc, &pc, 7)
+    }
+
+    fn prewarm_on(f: &mut Fleet, node: NodeId, now: u64) {
+        let (cid, ready_at) = f.node_mut(node).platform.prewarm_one(now).unwrap();
+        f.node_mut(node).platform.container_ready(cid, ready_at);
+    }
+
+    #[test]
+    fn round_robin_cycles_online_nodes() {
+        let f = fleet(3);
+        assert_eq!(round_robin(f.nodes(), 0), Some(0));
+        assert_eq!(round_robin(f.nodes(), 1), Some(1));
+        assert_eq!(round_robin(f.nodes(), 2), Some(2));
+        assert_eq!(round_robin(f.nodes(), 3), Some(0));
+    }
+
+    #[test]
+    fn round_robin_skips_offline() {
+        let mut f = fleet(3);
+        f.fail_node(1, 0);
+        assert_eq!(round_robin(f.nodes(), 0), Some(0));
+        assert_eq!(round_robin(f.nodes(), 1), Some(2));
+        assert_eq!(round_robin(f.nodes(), 2), Some(0));
+    }
+
+    #[test]
+    fn least_loaded_prefers_empty_node() {
+        let mut f = fleet(2);
+        // put in-flight work on node 0
+        f.node_mut(0).platform.invoke(1, 0);
+        assert_eq!(least_loaded(f.nodes()), Some(1));
+    }
+
+    #[test]
+    fn warm_first_routes_to_idle_then_spills() {
+        let mut f = fleet(3);
+        // no idle anywhere: spill to least-loaded with headroom (node 0)
+        assert_eq!(warm_first(f.nodes()), Some(0));
+        // idle container on node 2: route there despite node 0 being empty
+        prewarm_on(&mut f, 2, 0);
+        assert_eq!(warm_first(f.nodes()), Some(2));
+        // MRU affinity: fresher idle container on node 1 wins
+        prewarm_on(&mut f, 1, 5_000_000);
+        assert_eq!(warm_first(f.nodes()), Some(1));
+    }
+
+    #[test]
+    fn no_online_nodes_yields_none() {
+        let mut f = fleet(1);
+        // fail_node refuses to drop the last online node, so force the
+        // flag directly to exercise the placement guard
+        f.node_mut(0).online = false;
+        assert_eq!(round_robin(f.nodes(), 0), None);
+        assert_eq!(least_loaded(f.nodes()), None);
+        assert_eq!(warm_first(f.nodes()), None);
+    }
+}

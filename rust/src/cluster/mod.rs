@@ -1,13 +1,16 @@
 //! OpenWhisk/Kubernetes cluster substrate (DESIGN.md substitution table).
 //!
 //! - [`container`]: container lifecycle FSM
-//! - [`platform`]: the platform semantics (invoke / prewarm / reclaim /
-//!   keep-alive / capacity)
+//! - [`platform`]: the per-node platform semantics (invoke / prewarm /
+//!   reclaim / keep-alive / capacity)
+//! - [`fleet`]: multi-invoker fleet with the pluggable dispatch placement
+//!   layer and the node-failure/drain scenario
 //! - [`activation_log`]: Grafana Loki analog (reclaim-safety protocol)
 //! - [`telemetry`]: Prometheus analog (gauges + counters)
 
 pub mod activation_log;
 pub mod container;
+pub mod fleet;
 pub mod platform;
 pub mod telemetry;
 
@@ -15,5 +18,6 @@ pub mod telemetry;
 pub type RequestId = u64;
 
 pub use container::{Container, ContainerId, ContainerState};
+pub use fleet::{Fleet, InvokerNode, NodeId};
 pub use platform::{CompleteOutcome, InvokeOutcome, KeepAliveVerdict, Platform, ReadyOutcome};
 pub use telemetry::{Counters, GaugeSample, Telemetry};

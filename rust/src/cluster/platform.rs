@@ -143,6 +143,31 @@ impl Platform {
         }
     }
 
+    /// Remaining replica slots under the resource cap.
+    pub fn headroom(&self) -> u32 {
+        self.cfg.resource_cap().saturating_sub(self.total())
+    }
+
+    /// Recency (last_used) of the most-recently-used idle container — the
+    /// fleet's warm-first placement compares nodes on this.
+    pub fn mru_idle_recency(&self) -> Option<Micros> {
+        self.containers
+            .values()
+            .filter(|c| c.is_idle())
+            .map(|c| c.last_used)
+            .max()
+    }
+
+    /// Best (highest) reclaim score among idle, log-safe containers — the
+    /// fleet ranks nodes on this to keep Algorithm 2's global ordering.
+    pub fn best_reclaim_score(&self, now: Micros) -> Option<f64> {
+        self.containers
+            .values()
+            .filter(|c| c.is_idle() && self.log.all_completed(c.id))
+            .map(|c| c.reclaim_score(now))
+            .fold(None, |acc, s| Some(acc.map_or(s, |a: f64| a.max(s))))
+    }
+
     /// Ready times of in-flight cold starts (the MPC's readyCold input).
     pub fn cold_ready_times(&self) -> Vec<Micros> {
         self.containers
@@ -312,6 +337,31 @@ impl Platform {
             self.log.forget(cid);
             self.removed += 1;
         }
+    }
+
+    /// Node-crash semantics: every container is lost instantly; requests
+    /// that were executing or waiting on a cold start, plus the FCFS
+    /// backlog, are returned for redispatch elsewhere. Lost containers do
+    /// not produce keep-alive records — the pod vanished, it was not
+    /// drained gracefully.
+    pub fn fail_all(&mut self, _now: Micros) -> Vec<RequestId> {
+        let mut lost = Vec::new();
+        for (cid, c) in std::mem::take(&mut self.containers) {
+            match c.state {
+                crate::cluster::container::ContainerState::ColdStarting {
+                    pending: Some(req),
+                    ..
+                } => lost.push(req),
+                crate::cluster::container::ContainerState::Busy { request, .. } => {
+                    lost.push(request)
+                }
+                _ => {}
+            }
+            self.log.forget(cid);
+            self.removed += 1;
+        }
+        lost.extend(self.fcfs.drain(..));
+        lost
     }
 
     /// End-of-run accounting: treat still-alive idle containers as kept
@@ -499,6 +549,80 @@ mod tests {
         let ready: Vec<_> = p.cold_ready_times();
         assert_eq!(ready.len(), 5);
         assert_eq!(p.spawned, p.removed + p.total() as u64);
+    }
+
+    #[test]
+    fn fail_all_returns_inflight_and_backlog() {
+        let cfg = PlatformConfig {
+            max_containers: 2,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let mut p = Platform::new(cfg, 1);
+        // req 1 cold-starting, req 2 executing, req 3 queued
+        let InvokeOutcome::ColdStart { cid, ready_at } = p.invoke(1, 0) else {
+            panic!()
+        };
+        let InvokeOutcome::ColdStart { cid: c2, ready_at: r2 } = p.invoke(2, 0) else {
+            panic!()
+        };
+        let _ = (cid, ready_at);
+        p.container_ready(c2, r2);
+        assert!(matches!(p.invoke(3, r2 + 1), InvokeOutcome::AtCapacity));
+        let lost = p.fail_all(r2 + 2);
+        assert_eq!(lost, vec![1, 2, 3]);
+        assert_eq!(p.total(), 0);
+        assert_eq!(p.fcfs_len(), 0);
+        assert_eq!(p.spawned, p.removed); // conservation holds through a crash
+        assert!(p.keepalive_records().is_empty()); // no graceful-drain records
+    }
+
+    #[test]
+    fn mru_idle_recency_and_headroom() {
+        let cfg = PlatformConfig {
+            max_containers: 2,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let mut p = Platform::new(cfg, 1);
+        assert_eq!(p.headroom(), 2);
+        assert_eq!(p.mru_idle_recency(), None);
+        let (c1, r1) = p.prewarm_one(0).unwrap();
+        p.container_ready(c1, r1);
+        assert_eq!(p.headroom(), 1);
+        assert_eq!(p.mru_idle_recency(), Some(r1));
+        // an execution bumps recency
+        let InvokeOutcome::WarmStart { cid, done_at } = p.invoke(1, r1 + 10) else {
+            panic!()
+        };
+        assert_eq!(p.mru_idle_recency(), None); // busy, not idle
+        p.exec_complete(cid, done_at);
+        assert_eq!(p.mru_idle_recency(), Some(done_at));
+    }
+
+    #[test]
+    fn best_reclaim_score_tracks_top_candidate() {
+        let mut p = platform();
+        assert!(p.best_reclaim_score(0).is_none());
+        let (c1, r1) = p.prewarm_one(0).unwrap();
+        let (c2, r2) = p.prewarm_one(0).unwrap();
+        p.container_ready(c1, r1);
+        p.container_ready(c2, r2);
+        let now = r2 + 5_000_000;
+        // the peek equals the top candidate's score: c1 has been idle
+        // longest (earlier ready), so it holds the max
+        let peek = p.best_reclaim_score(now).unwrap();
+        let expect = (now - r1) as f64 / 1e6;
+        assert!((peek - expect).abs() < 1e-9, "peek {peek} vs {expect}");
+        // busy containers are not candidates
+        let InvokeOutcome::WarmStart { .. } = p.invoke(1, now) else {
+            panic!()
+        };
+        let InvokeOutcome::WarmStart { .. } = p.invoke(2, now) else {
+            panic!()
+        };
+        assert!(p.best_reclaim_score(now + 1).is_none());
+        let _ = (c1, c2);
     }
 
     #[test]

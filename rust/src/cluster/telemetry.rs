@@ -19,6 +19,30 @@ pub struct Counters {
     pub capacity_queued: u64,
 }
 
+impl Counters {
+    /// Fold another counter set in (fleet-level aggregation over nodes).
+    pub fn accumulate(&mut self, o: &Counters) {
+        // exhaustive destructure (no `..`): adding a counter field without
+        // aggregating it here becomes a compile error, not a silent zero
+        let Counters {
+            invocations,
+            cold_starts,
+            prewarms_started,
+            prewarms_rejected,
+            reclaims,
+            keepalive_expiries,
+            capacity_queued,
+        } = *o;
+        self.invocations += invocations;
+        self.cold_starts += cold_starts;
+        self.prewarms_started += prewarms_started;
+        self.prewarms_rejected += prewarms_rejected;
+        self.reclaims += reclaims;
+        self.keepalive_expiries += keepalive_expiries;
+        self.capacity_queued += capacity_queued;
+    }
+}
+
 /// One gauge sample (scrape).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GaugeSample {

@@ -68,6 +68,80 @@ impl PlatformConfig {
     }
 }
 
+/// Placement policy used by the fleet's dispatch layer to pick an invoker
+/// node for each request (see `cluster::fleet::placement`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Rotate through online nodes regardless of their warm-pool state
+    /// (OpenWhisk's default hash-spray analog; maximizes placement skew).
+    RoundRobin,
+    /// Route to the online node with the least in-flight work.
+    LeastLoaded,
+    /// Route to a node holding an idle warm container (most recently used
+    /// first, preserving OpenWhisk reuse affinity across the fleet); spill
+    /// to the least-loaded node with capacity headroom otherwise.
+    WarmFirst,
+}
+
+impl PlacementPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::RoundRobin => "round-robin",
+            PlacementPolicy::LeastLoaded => "least-loaded",
+            PlacementPolicy::WarmFirst => "warm-first",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PlacementPolicy> {
+        match s {
+            "round-robin" | "rr" => Some(PlacementPolicy::RoundRobin),
+            "least-loaded" | "ll" => Some(PlacementPolicy::LeastLoaded),
+            "warm-first" | "wf" => Some(PlacementPolicy::WarmFirst),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [PlacementPolicy; 3] = [
+        PlacementPolicy::RoundRobin,
+        PlacementPolicy::LeastLoaded,
+        PlacementPolicy::WarmFirst,
+    ];
+}
+
+/// A scheduled node outage (the drain scenario): `node` goes offline at
+/// `at`; its in-flight work and backlog redistribute to the survivors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeFailure {
+    pub node: u32,
+    pub at: Micros,
+}
+
+/// Invoker-fleet shape: how many nodes, their capacities, and the
+/// dispatch placement policy. With `nodes == 1` the fleet reproduces the
+/// single-platform results bit-for-bit (same seed → same metrics).
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of invoker nodes (≥ 1).
+    pub nodes: u32,
+    /// Optional per-node `max_containers` overrides (cycled if shorter
+    /// than `nodes`); None = every node uses `PlatformConfig`'s cap.
+    pub capacities: Option<Vec<u32>>,
+    pub placement: PlacementPolicy,
+    /// Optional mid-run node outage scenario.
+    pub failure: Option<NodeFailure>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            nodes: 1,
+            capacities: None,
+            placement: PlacementPolicy::WarmFirst,
+            failure: None,
+        }
+    }
+}
+
 /// MPC controller parameters (Sec. III; Table I weights).
 #[derive(Debug, Clone)]
 pub struct ControllerConfig {
@@ -244,6 +318,7 @@ impl TraceKind {
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub platform: PlatformConfig,
+    pub fleet: FleetConfig,
     pub controller: ControllerConfig,
     pub trace: TraceKind,
     pub duration: Micros,
@@ -256,6 +331,7 @@ impl Default for ExperimentConfig {
     fn default() -> Self {
         ExperimentConfig {
             platform: PlatformConfig::default(),
+            fleet: FleetConfig::default(),
             controller: ControllerConfig::default(),
             trace: TraceKind::AzureLike,
             duration: secs(3600.0), // paper: 60-minute runs
@@ -271,6 +347,8 @@ impl ExperimentConfig {
             ("trace", Json::Str(self.trace.name().into())),
             ("duration_s", Json::Num(to_secs(self.duration))),
             ("seed", Json::Num(self.seed as f64)),
+            ("nodes", Json::Num(self.fleet.nodes as f64)),
+            ("placement", Json::Str(self.fleet.placement.name().into())),
             ("dt_s", Json::Num(to_secs(self.controller.dt))),
             ("horizon", Json::Num(self.controller.horizon as f64)),
             ("window", Json::Num(self.controller.window as f64)),
@@ -324,6 +402,24 @@ mod tests {
         assert_eq!(Policy::parse("default"), Some(Policy::OpenWhisk));
         assert_eq!(Policy::parse("nope"), None);
         assert_eq!(TraceKind::parse("bursty"), Some(TraceKind::SyntheticBursty));
+    }
+
+    #[test]
+    fn placement_parse_and_names_roundtrip() {
+        for p in PlacementPolicy::ALL {
+            assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(PlacementPolicy::parse("wf"), Some(PlacementPolicy::WarmFirst));
+        assert_eq!(PlacementPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn fleet_defaults_to_single_node() {
+        let f = FleetConfig::default();
+        assert_eq!(f.nodes, 1);
+        assert!(f.capacities.is_none());
+        assert_eq!(f.placement, PlacementPolicy::WarmFirst);
+        assert!(f.failure.is_none());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use std::time::Instant;
 
+use crate::cluster::platform::InvokeOutcome;
 use crate::cluster::RequestId;
 use crate::config::{ControllerConfig, Micros};
 use crate::coordinator::queue::RequestQueue;
@@ -62,7 +63,7 @@ impl MpcScheduler {
     /// Bucket in-flight cold-start ready times into readyCold[k] (k < H).
     fn ready_schedule(&self, ctx: &Ctx) -> Vec<f64> {
         let mut rdy = vec![0.0; self.cc.horizon];
-        for ready_at in ctx.platform.cold_ready_times() {
+        for ready_at in ctx.fleet.cold_ready_times() {
             let delta = ready_at.saturating_sub(ctx.now);
             let k = (delta / self.cc.dt) as usize;
             if k < rdy.len() {
@@ -79,9 +80,17 @@ impl MpcScheduler {
     /// dispatcher drains whenever warm capacity frees up; the plan's s_k
     /// shapes *cold-start avoidance*, not warm serving.
     fn try_dispatch(&mut self, ctx: &mut Ctx) {
-        while !self.queue.is_empty() && ctx.platform.idle_count() > 0 {
+        while !self.queue.is_empty() && ctx.fleet.idle_count() > 0 {
             let (req, _) = self.queue.pop().unwrap();
-            ctx.dispatch(req);
+            if !matches!(ctx.dispatch(req), InvokeOutcome::WarmStart { .. }) {
+                // a non-warm-first placement routed past the idle pool
+                // (round-robin/least-loaded can); stop draining — further
+                // releases would only add cold starts the shaping queue
+                // exists to avoid. With warm-first (and any single-node
+                // fleet) a dispatch under idle_count > 0 always warm-binds,
+                // so this preserves the legacy drain behavior exactly.
+                break;
+            }
         }
     }
 
@@ -89,8 +98,8 @@ impl MpcScheduler {
     /// (warm + in-flight cold) can absorb within one interval. Re-plan
     /// immediately instead of waiting for the next tick (rate-limited).
     fn needs_emergency_replan(&self, ctx: &Ctx) -> bool {
-        let capacity_per_step = (ctx.platform.warm_count()
-            + ctx.platform.cold_starting_count()) as f64
+        let capacity_per_step = (ctx.fleet.warm_count()
+            + ctx.fleet.cold_starting_count()) as f64
             * self.cc.weights.mu;
         // re-plans are cheap (sub-ms solve); during a burst the demand
         // estimate must escalate faster than the burst itself
@@ -107,7 +116,7 @@ impl MpcScheduler {
     /// container (which would take the full L_cold again).
     fn force_stale(&mut self, ctx: &mut Ctx) {
         let imminent = ctx
-            .platform
+            .fleet
             .cold_ready_times()
             .into_iter()
             .min()
@@ -144,7 +153,7 @@ impl MpcScheduler {
             lam,
             rdy: self.ready_schedule(ctx),
             q0: self.queue.len() as f64,
-            w0: ctx.platform.warm_count() as f64,
+            w0: ctx.fleet.warm_count() as f64,
             x_prev: self.x_prev,
         };
         let t1 = Instant::now();
@@ -157,8 +166,8 @@ impl MpcScheduler {
             &input,
             &self.cc.weights,
             self.cc.cold_steps,
-            ctx.platform.cfg.resource_cap(),
-            ctx.platform.cold_starting_count(),
+            ctx.fleet.resource_cap(),
+            ctx.fleet.cold_starting_count(),
         );
         let (x0, r0, _s0) = plan.first();
         self.warm_start = plan.shifted_warm_start();
@@ -216,7 +225,7 @@ impl Scheduler for MpcScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::Platform;
+    use crate::cluster::Fleet;
     use crate::config::{ExperimentConfig, Weights};
     use crate::coordinator::Ev;
     use crate::forecast::FourierForecaster;
@@ -224,7 +233,7 @@ mod tests {
     use crate::mpc::RustSolver;
     use crate::simulator::EventQueue;
 
-    fn make() -> (MpcScheduler, Platform, EventQueue<Ev>, Recorder, ExperimentConfig) {
+    fn make() -> (MpcScheduler, Fleet, EventQueue<Ev>, Recorder, ExperimentConfig) {
         let cfg = ExperimentConfig::default();
         let cc = cfg.controller.clone();
         let sched = MpcScheduler::new(
@@ -232,16 +241,16 @@ mod tests {
             Box::new(FourierForecaster::default()),
             Box::new(RustSolver::new(Weights::default(), 60, cc.cold_steps)),
         );
-        let platform = Platform::new(cfg.platform.clone(), 7);
-        (sched, platform, EventQueue::new(), Recorder::new(64), cfg)
+        let fleet = Fleet::new(&cfg.fleet, &cfg.platform, 7);
+        (sched, fleet, EventQueue::new(), Recorder::new(64), cfg)
     }
 
     #[test]
     fn arrivals_are_queued_not_forwarded_when_cold() {
-        let (mut sched, mut platform, mut events, mut rec, cfg) = make();
+        let (mut sched, mut fleet, mut events, mut rec, cfg) = make();
         let mut ctx = Ctx {
             now: 0,
-            platform: &mut platform,
+            fleet: &mut fleet,
             events: &mut events,
             recorder: &mut rec,
             cfg: &cfg,
@@ -250,7 +259,7 @@ mod tests {
         // shaped, not forwarded: no cold start bound to the request —
         // the emergency replan may prewarm (unbound) containers instead
         assert_eq!(sched.queue_len(), 1);
-        assert_eq!(ctx.platform.counters.cold_starts, 0);
+        assert_eq!(ctx.fleet.counters().cold_starts, 0);
         assert!(sched.emergency_replans <= 1);
     }
 
@@ -261,12 +270,12 @@ mod tests {
 
     #[test]
     fn control_tick_produces_feasible_actions() {
-        let (mut sched, mut platform, mut events, mut rec, cfg) = make();
+        let (mut sched, mut fleet, mut events, mut rec, cfg) = make();
         // queue a burst then tick
         {
             let mut ctx = Ctx {
                 now: 0,
-                platform: &mut platform,
+                fleet: &mut fleet,
                 events: &mut events,
                 recorder: &mut rec,
                 cfg: &cfg,
@@ -277,7 +286,7 @@ mod tests {
         }
         let mut ctx = Ctx {
             now: 30_000_000,
-            platform: &mut platform,
+            fleet: &mut fleet,
             events: &mut events,
             recorder: &mut rec,
             cfg: &cfg,
@@ -285,7 +294,7 @@ mod tests {
         sched.on_control_tick(&mut ctx);
         // standing queue + zero warm pool must have triggered prewarming
         // (either via the arrival-time emergency replan or this tick)
-        assert!(ctx.platform.cold_starting_count() > 0);
+        assert!(ctx.fleet.cold_starting_count() > 0);
         // overhead recorded for every solve
         assert!(!rec.forecast_ns.is_empty());
         assert_eq!(rec.forecast_ns.len(), rec.solve_ns.len());
@@ -293,7 +302,7 @@ mod tests {
 
     #[test]
     fn force_dispatch_guard_fires() {
-        // a platform that cannot host containers at all: prewarms fail, so
+        // a fleet that cannot host containers at all: prewarms fail, so
         // the shaped request has nothing to wait for and must be forced
         let mut cfg = ExperimentConfig::default();
         cfg.platform.max_containers = 0;
@@ -303,13 +312,13 @@ mod tests {
             Box::new(FourierForecaster::default()),
             Box::new(RustSolver::new(Weights::default(), 60, cc.cold_steps)),
         );
-        let mut platform = Platform::new(cfg.platform.clone(), 7);
+        let mut fleet = Fleet::new(&cfg.fleet, &cfg.platform, 7);
         let mut events = EventQueue::new();
         let mut rec = Recorder::new(4);
         {
             let mut ctx = Ctx {
                 now: 0,
-                platform: &mut platform,
+                fleet: &mut fleet,
                 events: &mut events,
                 recorder: &mut rec,
                 cfg: &cfg,
@@ -319,7 +328,7 @@ mod tests {
         // long after max_shaping_delay, a tick must force it out
         let mut ctx = Ctx {
             now: cfg.controller.max_shaping_delay + 2_000_000,
-            platform: &mut platform,
+            fleet: &mut fleet,
             events: &mut events,
             recorder: &mut rec,
             cfg: &cfg,
@@ -327,6 +336,29 @@ mod tests {
         sched.on_control_tick(&mut ctx);
         assert_eq!(sched.queue_len(), 0);
         assert!(sched.forced_dispatches >= 1);
-        assert_eq!(ctx.platform.counters.invocations, 1);
+        assert_eq!(ctx.fleet.counters().invocations, 1);
+    }
+
+    #[test]
+    fn prewarm_budget_lands_on_least_provisioned_nodes() {
+        // 3-node fleet: the controller's aggregate prewarm budget must be
+        // split across nodes by per-node telemetry, not dumped on one
+        let mut cfg = ExperimentConfig::default();
+        cfg.fleet.nodes = 3;
+        let mut fleet = Fleet::new(&cfg.fleet, &cfg.platform, 7);
+        let mut events = EventQueue::new();
+        let mut rec = Recorder::new(4);
+        let mut ctx = Ctx {
+            now: 0,
+            fleet: &mut fleet,
+            events: &mut events,
+            recorder: &mut rec,
+            cfg: &cfg,
+        };
+        assert_eq!(ctx.prewarm(6), 6);
+        for (_, online, _, load) in ctx.fleet.node_loads() {
+            assert!(online);
+            assert_eq!(load, 2, "budget skewed: {:?}", ctx.fleet.node_loads());
+        }
     }
 }

@@ -1,32 +1,42 @@
 //! The scheduling coordinator: the `Scheduler` policy interface, the
 //! actuation context shared by all policies, and the paper's MPC
 //! controller ([`controller::MpcScheduler`]).
+//!
+//! Actuation targets the invoker [`Fleet`]: the dispatch actuator routes
+//! through the placement layer, the prewarm actuator splits the budget
+//! across nodes from per-node telemetry, and reclaim drains the globally
+//! best candidates. With a one-node fleet all of it degenerates to the
+//! legacy single-platform behavior.
 
 pub mod controller;
 pub mod queue;
 
 use crate::cluster::container::ContainerId;
-use crate::cluster::platform::{InvokeOutcome, Platform};
+use crate::cluster::fleet::{Fleet, NodeId};
+use crate::cluster::platform::InvokeOutcome;
 use crate::cluster::RequestId;
 use crate::config::{ExperimentConfig, Micros};
 use crate::metrics::Recorder;
 use crate::simulator::EventQueue;
 
-/// Simulation events shared by the runner and the policies.
+/// Simulation events shared by the runner and the policies. Container
+/// events carry the node they live on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Ev {
     /// A request arrives from the workload.
     Arrival(RequestId),
     /// A cold-starting container finishes initialization.
-    Ready(ContainerId),
+    Ready(NodeId, ContainerId),
     /// An execution completes on a container.
-    Done(ContainerId),
+    Done(NodeId, ContainerId),
     /// Policy control tick (every Δt for MPC / IceBreaker).
     Control,
     /// Telemetry scrape (paper: 1-minute cadence).
     Sample,
     /// Keep-alive expiry check for a container.
-    KeepAlive(ContainerId),
+    KeepAlive(NodeId, ContainerId),
+    /// Invoker node goes offline (drain scenario).
+    NodeFail(NodeId),
 }
 
 /// Everything a policy may touch while handling an event. Provides the
@@ -34,41 +44,46 @@ pub enum Ev {
 /// bypass metrics or event bookkeeping.
 pub struct Ctx<'a> {
     pub now: Micros,
-    pub platform: &'a mut Platform,
+    pub fleet: &'a mut Fleet,
     pub events: &'a mut EventQueue<Ev>,
     pub recorder: &'a mut Recorder,
     pub cfg: &'a ExperimentConfig,
 }
 
 impl Ctx<'_> {
-    /// Dispatch actuator: submit `req` to the platform (Algorithm 1's
-    /// `submitRequestAsync`). Schedules the follow-up events and records
-    /// dispatch/cold metadata.
-    pub fn dispatch(&mut self, req: RequestId) {
+    /// Dispatch actuator: submit `req` to the fleet (Algorithm 1's
+    /// `submitRequestAsync`); the placement layer picks the node.
+    /// Schedules the follow-up events and records dispatch/cold metadata.
+    /// Returns the outcome so shaping policies can see whether placement
+    /// actually consumed warm capacity.
+    pub fn dispatch(&mut self, req: RequestId) -> InvokeOutcome {
         self.recorder.on_dispatch(req, self.now);
-        match self.platform.invoke(req, self.now) {
+        let (node, outcome) = self.fleet.invoke(req, self.now);
+        match outcome {
             InvokeOutcome::WarmStart { cid, done_at } => {
-                self.events.push(done_at, Ev::Done(cid));
+                self.events.push(done_at, Ev::Done(node, cid));
             }
             InvokeOutcome::ColdStart { cid, ready_at } => {
                 self.recorder.on_cold(req);
-                self.events.push(ready_at, Ev::Ready(cid));
+                self.events.push(ready_at, Ev::Ready(node, cid));
             }
             InvokeOutcome::AtCapacity => {
-                // platform FCFS backlog; completion events flow from the
+                // node-local FCFS backlog; completion events flow from the
                 // container that eventually picks it up
             }
         }
+        outcome
     }
 
     /// Prewarm actuator (Listing 1): launch up to `n` unbound cold
-    /// containers; returns how many actually started.
+    /// containers, each on the least-provisioned node; returns how many
+    /// actually started.
     pub fn prewarm(&mut self, n: u32) -> u32 {
         let mut started = 0;
         for _ in 0..n {
-            match self.platform.prewarm_one(self.now) {
-                Some((cid, ready_at)) => {
-                    self.events.push(ready_at, Ev::Ready(cid));
+            match self.fleet.prewarm_one(self.now) {
+                Some((node, cid, ready_at)) => {
+                    self.events.push(ready_at, Ev::Ready(node, cid));
                     started += 1;
                 }
                 None => break,
@@ -77,16 +92,19 @@ impl Ctx<'_> {
         started
     }
 
-    /// Reclaim actuator (Algorithm 2): drain up to `n` idle containers,
-    /// honoring the activation-log safety check. Returns the count.
+    /// Reclaim actuator (Algorithm 2): drain up to `n` idle containers
+    /// fleet-wide, honoring the activation-log safety check. Returns the
+    /// count.
     pub fn reclaim(&mut self, n: u32) -> u32 {
-        self.platform.try_reclaim(n, self.now).len() as u32
+        self.fleet.try_reclaim(n, self.now).len() as u32
     }
 
     /// Schedule the keep-alive check for a container that just went idle.
-    pub fn schedule_keepalive(&mut self, cid: ContainerId) {
-        self.events
-            .push(self.now + self.cfg.platform.keep_alive, Ev::KeepAlive(cid));
+    pub fn schedule_keepalive(&mut self, node: NodeId, cid: ContainerId) {
+        self.events.push(
+            self.now + self.cfg.platform.keep_alive,
+            Ev::KeepAlive(node, cid),
+        );
     }
 }
 

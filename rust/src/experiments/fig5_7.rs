@@ -5,10 +5,11 @@
 //! * Fig. 6 — % reduction in warm-container usage (1-minute samples);
 //! * Fig. 7 — % reduction in keep-alive duration.
 
-use crate::config::{secs, ExperimentConfig, Policy, TraceKind};
+use crate::config::{secs, ExperimentConfig, FleetConfig, Policy, TraceKind};
 use crate::experiments::fig4::trace_for;
 use crate::experiments::runner::run_experiment;
 use crate::metrics::RunReport;
+use crate::workload::Trace;
 
 #[derive(Debug, Clone)]
 pub struct MatrixResult {
@@ -46,21 +47,66 @@ impl MatrixResult {
     }
 }
 
+const POLICIES: [Policy; 3] = [Policy::OpenWhisk, Policy::IceBreaker, Policy::Mpc];
+
 /// Run the full matrix for one trace kind.
 pub fn run_matrix(trace: TraceKind, duration_s: f64, seed: u64) -> MatrixResult {
-    let cfg = ExperimentConfig {
-        trace,
-        duration: secs(duration_s),
-        seed,
-        ..Default::default()
-    };
-    let arrivals = trace_for(trace, cfg.duration, seed);
-    MatrixResult {
-        trace,
-        openwhisk: run_experiment(&cfg, Policy::OpenWhisk, &arrivals),
-        icebreaker: run_experiment(&cfg, Policy::IceBreaker, &arrivals),
-        mpc: run_experiment(&cfg, Policy::Mpc, &arrivals),
-    }
+    run_matrix_all(&[trace], duration_s, seed, &FleetConfig::default())
+        .pop()
+        .expect("one matrix per trace kind")
+}
+
+/// Run the (policy × trace) matrix with every cell on its own thread.
+/// Each cell derives its inputs only from (cfg.seed, trace kind, policy),
+/// so the per-cell seeds — and therefore the reports — are identical to a
+/// serial run, and results come back in the given trace order.
+pub fn run_matrix_all(
+    kinds: &[TraceKind],
+    duration_s: f64,
+    seed: u64,
+    fleet: &FleetConfig,
+) -> Vec<MatrixResult> {
+    let cfgs: Vec<ExperimentConfig> = kinds
+        .iter()
+        .map(|&k| ExperimentConfig {
+            trace: k,
+            duration: secs(duration_s),
+            seed,
+            fleet: fleet.clone(),
+            ..Default::default()
+        })
+        .collect();
+    let traces: Vec<Trace> = cfgs
+        .iter()
+        .map(|c| trace_for(c.trace, c.duration, c.seed))
+        .collect();
+
+    // slot matrix indexed (trace, policy) keeps the output ordering
+    // stable no matter which thread finishes first
+    let mut slots: Vec<[Option<RunReport>; 3]> = kinds.iter().map(|_| [None, None, None]).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (ti, cfg) in cfgs.iter().enumerate() {
+            for (pi, policy) in POLICIES.into_iter().enumerate() {
+                let tr = &traces[ti];
+                handles.push(((ti, pi), s.spawn(move || run_experiment(cfg, policy, tr))));
+            }
+        }
+        for ((ti, pi), h) in handles {
+            slots[ti][pi] = Some(h.join().expect("matrix cell panicked"));
+        }
+    });
+
+    kinds
+        .iter()
+        .zip(slots)
+        .map(|(&trace, [ow, ib, mpc])| MatrixResult {
+            trace,
+            openwhisk: ow.expect("cell ran"),
+            icebreaker: ib.expect("cell ran"),
+            mpc: mpc.expect("cell ran"),
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -115,6 +161,24 @@ mod tests {
             println!(
                 "MPC a={alpha} g={gamma} r1={rho1} e={eta} clip={gclip} dr={drain_s} b={beta} gd={guard_s}: mean={:.0} p90={:.0} p95={:.0} cold={} warm={:.1} ka={:.0}",
                 r.mean_ms, r.p90_ms, r.p95_ms, r.counters.cold_starts, r.mean_warm, r.keepalive_total_s
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_matrix_is_deterministic_and_ordered() {
+        let kinds = [TraceKind::AzureLike, TraceKind::SyntheticBursty];
+        let a = run_matrix_all(&kinds, 120.0, 5, &FleetConfig::default());
+        let b = run_matrix_all(&kinds, 120.0, 5, &FleetConfig::default());
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].trace, TraceKind::AzureLike);
+        assert_eq!(a[1].trace, TraceKind::SyntheticBursty);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.mpc.mean_ms, y.mpc.mean_ms);
+            assert_eq!(x.icebreaker.p95_ms, y.icebreaker.p95_ms);
+            assert_eq!(
+                x.openwhisk.counters.cold_starts,
+                y.openwhisk.counters.cold_starts
             );
         }
     }

@@ -1,14 +1,17 @@
 //! Discrete-event experiment runner: drives a [`Scheduler`] policy against
-//! a workload trace on the platform substrate and produces a [`RunReport`].
+//! a workload trace on the invoker fleet and produces a [`RunReport`].
 //!
 //! Event flow (all times virtual): Arrival → policy (dispatch or shape) →
-//! platform outcomes → Ready/Done events → completions + idle-capacity
-//! callbacks → keep-alive checks. Control and Sample ticks fire at their
-//! configured cadences until the trace duration elapses; a grace window
-//! lets in-flight work drain before the books close.
+//! placement → per-node platform outcomes → Ready/Done events →
+//! completions + idle-capacity callbacks → keep-alive checks. Control and
+//! Sample ticks fire at their configured cadences until the trace duration
+//! elapses; a grace window lets in-flight work drain before the books
+//! close. An optional NodeFail event takes an invoker offline mid-run and
+//! redispatches its lost work through the placement layer.
 
 use crate::baselines::{IceBreaker, OpenWhiskDefault};
-use crate::cluster::platform::{CompleteOutcome, KeepAliveVerdict, Platform, ReadyOutcome};
+use crate::cluster::fleet::Fleet;
+use crate::cluster::platform::{CompleteOutcome, KeepAliveVerdict, ReadyOutcome};
 use crate::config::{secs, ExperimentConfig, Micros, Policy};
 use crate::coordinator::controller::MpcScheduler;
 use crate::coordinator::{Ctx, Ev, Scheduler};
@@ -61,7 +64,9 @@ pub fn run_with_scheduler(
     mut sched: Box<dyn Scheduler>,
     trace: &Trace,
 ) -> RunReport {
-    let mut platform = Platform::new(cfg.platform.clone(), cfg.seed ^ 0x9_1A7F0);
+    // the legacy single-platform seed; node 0 receives it unchanged so a
+    // one-node fleet reproduces the pre-fleet metrics exactly
+    let mut fleet = Fleet::new(&cfg.fleet, &cfg.platform, cfg.seed ^ 0x9_1A7F0);
     let mut events: EventQueue<Ev> = EventQueue::new();
     let mut recorder = Recorder::new(trace.len());
 
@@ -72,6 +77,9 @@ pub fn run_with_scheduler(
         events.push(dt, Ev::Control);
     }
     events.push(cfg.sample_interval, Ev::Sample);
+    if let Some(f) = cfg.fleet.failure {
+        events.push(f.at, Ev::NodeFail(f.node));
+    }
 
     let cutoff = cfg.duration + grace();
 
@@ -82,51 +90,54 @@ pub fn run_with_scheduler(
                 recorder.on_arrival(req, now);
                 let mut ctx = Ctx {
                     now,
-                    platform: &mut platform,
+                    fleet: &mut fleet,
                     events: &mut events,
                     recorder: &mut recorder,
                     cfg,
                 };
                 sched.on_arrival(req, &mut ctx);
             }
-            Ev::Ready(cid) => match platform.container_ready(cid, now) {
-                ReadyOutcome::Started { done_at, .. } => {
-                    events.push(done_at, Ev::Done(cid));
+            Ev::Ready(node, cid) => match fleet.container_ready(node, cid, now) {
+                Some(ReadyOutcome::Started { done_at, .. }) => {
+                    events.push(done_at, Ev::Done(node, cid));
                 }
-                ReadyOutcome::Idle => {
+                Some(ReadyOutcome::Idle) => {
                     let mut ctx = Ctx {
                         now,
-                        platform: &mut platform,
+                        fleet: &mut fleet,
                         events: &mut events,
                         recorder: &mut recorder,
                         cfg,
                     };
-                    ctx.schedule_keepalive(cid);
+                    ctx.schedule_keepalive(node, cid);
                     sched.on_idle_capacity(&mut ctx);
                 }
+                None => {} // node went offline; stale event
             },
-            Ev::Done(cid) => {
-                let CompleteOutcome { completed, next } = platform.exec_complete(cid, now);
-                recorder.on_complete(completed, now);
-                match next {
-                    Some((_req, done_at)) => events.push(done_at, Ev::Done(cid)),
-                    None => {
-                        let mut ctx = Ctx {
-                            now,
-                            platform: &mut platform,
-                            events: &mut events,
-                            recorder: &mut recorder,
-                            cfg,
-                        };
-                        ctx.schedule_keepalive(cid);
-                        sched.on_idle_capacity(&mut ctx);
+            Ev::Done(node, cid) => match fleet.exec_complete(node, cid, now) {
+                Some(CompleteOutcome { completed, next }) => {
+                    recorder.on_complete(completed, now);
+                    match next {
+                        Some((_req, done_at)) => events.push(done_at, Ev::Done(node, cid)),
+                        None => {
+                            let mut ctx = Ctx {
+                                now,
+                                fleet: &mut fleet,
+                                events: &mut events,
+                                recorder: &mut recorder,
+                                cfg,
+                            };
+                            ctx.schedule_keepalive(node, cid);
+                            sched.on_idle_capacity(&mut ctx);
+                        }
                     }
                 }
-            }
+                None => {} // node went offline; stale event
+            },
             Ev::Control => {
                 let mut ctx = Ctx {
                     now,
-                    platform: &mut platform,
+                    fleet: &mut fleet,
                     events: &mut events,
                     recorder: &mut recorder,
                     cfg,
@@ -139,34 +150,53 @@ pub fn run_with_scheduler(
                 }
             }
             Ev::Sample => {
-                recorder.on_gauge(platform.gauge(now, sched.queue_len()));
+                recorder.on_gauge(fleet.gauge(now, sched.queue_len()));
                 if now < cfg.duration {
                     events.push(now + cfg.sample_interval, Ev::Sample);
                 }
             }
-            Ev::KeepAlive(cid) => match platform.keepalive_check(cid, now) {
-                KeepAliveVerdict::Recheck(t) => events.push(t, Ev::KeepAlive(cid)),
+            Ev::KeepAlive(node, cid) => match fleet.keepalive_check(node, cid, now) {
+                KeepAliveVerdict::Recheck(t) => events.push(t, Ev::KeepAlive(node, cid)),
                 KeepAliveVerdict::Expired | KeepAliveVerdict::NotApplicable => {}
             },
+            Ev::NodeFail(node) => {
+                // drain scenario: the node's in-flight work and backlog
+                // redistribute through the placement layer immediately
+                let lost = fleet.fail_node(node, now);
+                let mut ctx = Ctx {
+                    now,
+                    fleet: &mut fleet,
+                    events: &mut events,
+                    recorder: &mut recorder,
+                    cfg,
+                };
+                for req in lost {
+                    ctx.dispatch(req);
+                }
+            }
         }
     }
 
     let end = cutoff.max(events.now());
-    let (keepalive, idle_totals) = platform.finalize(end);
-    RunReport::from_recorder(
+    let (keepalive, idle_totals) = fleet.finalize(end);
+    let mut report = RunReport::from_recorder(
         sched.name(),
         cfg.trace.name(),
         cfg.duration,
         &recorder,
-        platform.counters,
+        fleet.counters(),
         &keepalive,
         &idle_totals,
-    )
+    );
+    report.nodes = fleet.node_count() as u32;
+    report.placement = cfg.fleet.placement.name().to_string();
+    report
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{NodeFailure, PlacementPolicy};
     use crate::workload::Trace;
 
     fn quick_cfg(duration_s: f64) -> ExperimentConfig {
@@ -233,5 +263,78 @@ mod tests {
         let cfg = quick_cfg(180.0);
         let report = run_experiment(&cfg, Policy::OpenWhisk, &steady_trace());
         assert!(report.warm_series.len() >= 3, "{:?}", report.warm_series);
+    }
+
+    #[test]
+    fn single_node_metrics_identical_across_placements() {
+        // with one node every placement policy must collapse to the same
+        // node choice, so metrics are bit-identical (the determinism
+        // guarantee that keeps the existing figures valid)
+        let mut reports = Vec::new();
+        for placement in PlacementPolicy::ALL {
+            let mut cfg = quick_cfg(120.0);
+            cfg.fleet.placement = placement;
+            reports.push(run_experiment(&cfg, Policy::Mpc, &steady_trace()));
+        }
+        for r in &reports[1..] {
+            assert_eq!(r.mean_ms, reports[0].mean_ms);
+            assert_eq!(r.p99_ms, reports[0].p99_ms);
+            assert_eq!(r.counters.cold_starts, reports[0].counters.cold_starts);
+            assert_eq!(r.warm_series, reports[0].warm_series);
+            assert_eq!(r.keepalive_total_s, reports[0].keepalive_total_s);
+        }
+    }
+
+    #[test]
+    fn multi_node_fleet_completes_under_each_placement() {
+        for placement in PlacementPolicy::ALL {
+            let mut cfg = quick_cfg(120.0);
+            cfg.fleet.nodes = 4;
+            cfg.fleet.placement = placement;
+            let report = run_experiment(&cfg, Policy::OpenWhisk, &steady_trace());
+            assert_eq!(report.dropped, 0, "{placement:?}: {report:?}");
+            assert_eq!(report.completed, 480, "{placement:?}");
+            assert_eq!(report.nodes, 4);
+            assert_eq!(report.placement, placement.name());
+        }
+    }
+
+    #[test]
+    fn node_failure_redistributes_backlog() {
+        // node 1 dies a third into the run; every request must still
+        // complete on the survivors
+        let mut cfg = quick_cfg(120.0);
+        cfg.fleet.nodes = 4;
+        cfg.fleet.placement = PlacementPolicy::RoundRobin;
+        cfg.fleet.failure = Some(NodeFailure {
+            node: 1,
+            at: secs(40.0),
+        });
+        for policy in [Policy::OpenWhisk, Policy::Mpc] {
+            let report = run_experiment(&cfg, policy, &steady_trace());
+            assert_eq!(report.dropped, 0, "{}: {report:?}", report.policy);
+            assert_eq!(report.completed, 480, "{}", report.policy);
+        }
+    }
+
+    #[test]
+    fn warm_first_beats_round_robin_on_cold_starts() {
+        // spraying a steady trickle across 4 nodes fragments the warm
+        // pool; warm-first concentrates reuse, so it can never cold-start
+        // more often than round-robin on this workload
+        let mk = |placement| {
+            let mut cfg = quick_cfg(120.0);
+            cfg.fleet.nodes = 4;
+            cfg.fleet.placement = placement;
+            run_experiment(&cfg, Policy::OpenWhisk, &steady_trace())
+        };
+        let wf = mk(PlacementPolicy::WarmFirst);
+        let rr = mk(PlacementPolicy::RoundRobin);
+        assert!(
+            wf.counters.cold_starts <= rr.counters.cold_starts,
+            "warm-first {} cold starts > round-robin {}",
+            wf.counters.cold_starts,
+            rr.counters.cold_starts
+        );
     }
 }

@@ -1,16 +1,21 @@
 //! `mpc-serverless` CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   simulate   run one policy on one trace, print the run report
-//!   matrix     run the full Fig. 5-7 policy x trace matrix
-//!   forecast   Fig. 4 forecast comparison
-//!   overhead   Fig. 8 control overhead (rust mirror + HLO if available)
-//!   fig1       the 50-request motivation scenario
-//!   gen-trace  emit a workload trace as CSV to stdout
+//!   simulate     run one policy on one trace (optionally multi-node), print the run report
+//!   matrix       run the full Fig. 5-7 policy x trace matrix (parallel cells)
+//!   fleet-sweep  sweep node count x placement policy at fixed total capacity
+//!   forecast     Fig. 4 forecast comparison
+//!   overhead     Fig. 8 control overhead (rust mirror + HLO if available)
+//!   fig1         the 50-request motivation scenario
+//!   gen-trace    emit a workload trace as CSV to stdout
 
-use mpc_serverless::config::{secs, ExperimentConfig, Policy, TraceKind};
+use mpc_serverless::config::{
+    secs, ExperimentConfig, FleetConfig, NodeFailure, PlacementPolicy, Policy, TraceKind,
+};
 use mpc_serverless::experiments::{fig1, fig4, fig5_7, fig8, run_experiment};
-use mpc_serverless::util::cli::{Cli, CliError};
+use mpc_serverless::util::bench::Table;
+use mpc_serverless::util::cli::{Args, Cli, CliError};
+use mpc_serverless::workload::Trace;
 
 fn main() {
     mpc_serverless::util::logging::init();
@@ -20,6 +25,7 @@ fn main() {
     let code = match cmd {
         "simulate" => simulate(&rest),
         "matrix" => matrix(&rest),
+        "fleet-sweep" => fleet_sweep(&rest),
         "forecast" => forecast(&rest),
         "overhead" => overhead(),
         "fig1" => {
@@ -30,7 +36,7 @@ fn main() {
         }
         "gen-trace" => gen_trace(&rest),
         _ => {
-            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
+            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
                       mpc_serverless::version());
             if cmd == "help" { 0 } else { 2 }
         }
@@ -46,7 +52,7 @@ fn common_cli(name: &str, about: &str) -> Cli {
         .flag("seed", "42", "rng seed")
 }
 
-fn parse_or_exit(cli: &Cli, rest: &[String]) -> mpc_serverless::util::cli::Args {
+fn parse_or_exit(cli: &Cli, rest: &[String]) -> Args {
     match cli.parse(rest) {
         Ok(a) => a,
         Err(CliError::Help) => {
@@ -60,8 +66,28 @@ fn parse_or_exit(cli: &Cli, rest: &[String]) -> mpc_serverless::util::cli::Args 
     }
 }
 
+/// Parse the shared fleet flags (--nodes / --placement) into a config.
+fn fleet_from_args(a: &Args) -> Result<FleetConfig, String> {
+    let nodes = a.get_u64("nodes").map_err(|e| e.to_string())? as u32;
+    if nodes == 0 {
+        return Err("--nodes must be at least 1".into());
+    }
+    let placement = PlacementPolicy::parse(a.get("placement"))
+        .ok_or_else(|| format!("unknown placement '{}'", a.get("placement")))?;
+    Ok(FleetConfig {
+        nodes,
+        placement,
+        ..Default::default()
+    })
+}
+
 fn simulate(rest: &[String]) -> i32 {
-    let cli = common_cli("simulate", "run one policy on one workload");
+    let cli = common_cli("simulate", "run one policy on one workload")
+        .flag("nodes", "1", "invoker node count")
+        .flag("placement", "warm-first", "round-robin | least-loaded | warm-first")
+        .flag("trace-file", "", "replay an arrival CSV (overrides --trace)")
+        .flag("fail-node", "", "node id to take offline mid-run (drain scenario)")
+        .flag("fail-at-s", "600", "outage time for --fail-node (seconds)");
     let a = parse_or_exit(&cli, rest);
     let policy = match Policy::parse(a.get("policy")) {
         Some(p) => p,
@@ -77,31 +103,221 @@ fn simulate(rest: &[String]) -> i32 {
             return 2;
         }
     };
+    let mut fleet = match fleet_from_args(&a) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    // a drain that cannot happen must be an error, not a silent healthy
+    // run masquerading as a resilience measurement
+    let mut failure: Option<NodeFailure> = None;
+    if !a.get("fail-node").is_empty() {
+        let node = match a.get_u64("fail-node") {
+            Ok(n) => n as u32,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        let at = match a.get_f64("fail-at-s") {
+            Ok(t) => secs(t),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        if node >= fleet.nodes {
+            eprintln!("--fail-node {node} out of range for --nodes {}", fleet.nodes);
+            return 2;
+        }
+        if fleet.nodes < 2 {
+            eprintln!("--fail-node needs --nodes >= 2 (the fleet must keep serving)");
+            return 2;
+        }
+        failure = Some(NodeFailure { node, at });
+    }
+    let mut duration = secs(a.get_f64("duration-s").unwrap_or(3600.0));
+    let seed = a.get_u64("seed").unwrap_or(42);
+    let trace = if a.get("trace-file").is_empty() {
+        fig4::trace_for(trace_kind, duration, seed)
+    } else {
+        let path = a.get("trace-file");
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("reading {path}: {e}");
+                return 2;
+            }
+        };
+        match Trace::from_csv(&text) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("parsing {path}: {e}");
+                return 2;
+            }
+        }
+    };
+    // a replayed file defines its own span: never truncate it silently
+    duration = duration.max(trace.duration());
+    if let Some(f) = failure {
+        // an outage scheduled past the end would silently never fire
+        if f.at >= duration {
+            eprintln!(
+                "--fail-at-s {:.0} is at/after the run end ({:.0} s); the drain would never happen",
+                f.at as f64 / 1e6,
+                duration as f64 / 1e6
+            );
+            return 2;
+        }
+        fleet.failure = failure;
+    }
     let cfg = ExperimentConfig {
         trace: trace_kind,
-        duration: secs(a.get_f64("duration-s").unwrap_or(3600.0)),
-        seed: a.get_u64("seed").unwrap_or(42),
+        fleet,
+        duration,
+        seed,
         ..Default::default()
     };
-    let trace = fig4::trace_for(trace_kind, cfg.duration, cfg.seed);
-    let r = run_experiment(&cfg, policy, &trace);
+    let mut r = run_experiment(&cfg, policy, &trace);
+    if !a.get("trace-file").is_empty() {
+        // label the report with the replayed file, not the unrelated
+        // --trace generator default
+        r.trace = format!("file:{}", a.get("trace-file"));
+    }
     println!("{}", r.to_json());
     0
 }
 
 fn matrix(rest: &[String]) -> i32 {
-    let cli = Cli::new("matrix", "full policy x trace matrix (Figs. 5-7)")
+    let cli = Cli::new("matrix", "full policy x trace matrix (Figs. 5-7), one thread per cell")
         .flag("duration-s", "3600", "experiment duration (seconds)")
-        .flag("seed", "42", "rng seed");
+        .flag("seed", "42", "rng seed")
+        .flag("nodes", "1", "invoker node count")
+        .flag("placement", "warm-first", "round-robin | least-loaded | warm-first");
     let a = parse_or_exit(&cli, rest);
     let d = a.get_f64("duration-s").unwrap_or(3600.0);
     let seed = a.get_u64("seed").unwrap_or(42);
-    for kind in [TraceKind::AzureLike, TraceKind::SyntheticBursty] {
-        let m = fig5_7::run_matrix(kind, d, seed);
+    let fleet = match fleet_from_args(&a) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let kinds = [TraceKind::AzureLike, TraceKind::SyntheticBursty];
+    for m in fig5_7::run_matrix_all(&kinds, d, seed, &fleet) {
         for r in [&m.openwhisk, &m.icebreaker, &m.mpc] {
             println!("{}", r.to_json());
         }
     }
+    0
+}
+
+fn fleet_sweep(rest: &[String]) -> i32 {
+    let cli = common_cli("fleet-sweep", "sweep node count x placement at fixed total capacity")
+        .flag("nodes-list", "1,2,4,8", "comma-separated node counts")
+        .flag("placements", "round-robin,least-loaded,warm-first", "comma-separated placement policies")
+        .flag("total-cap", "64", "total replica capacity split evenly across nodes");
+    let a = parse_or_exit(&cli, rest);
+    let policy = match Policy::parse(a.get("policy")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown policy '{}'", a.get("policy"));
+            return 2;
+        }
+    };
+    let trace_kind = match TraceKind::parse(a.get("trace")) {
+        Some(t) => t,
+        None => {
+            eprintln!("unknown trace '{}'", a.get("trace"));
+            return 2;
+        }
+    };
+    let node_counts: Vec<u32> = {
+        let mut v = Vec::new();
+        for tok in a.get("nodes-list").split(',') {
+            match tok.trim().parse::<u32>() {
+                Ok(n) if n >= 1 => v.push(n),
+                _ => {
+                    eprintln!("bad node count '{tok}' in --nodes-list");
+                    return 2;
+                }
+            }
+        }
+        v
+    };
+    let placements: Vec<PlacementPolicy> = {
+        let mut v = Vec::new();
+        for tok in a.get("placements").split(',') {
+            match PlacementPolicy::parse(tok.trim()) {
+                Some(p) => v.push(p),
+                None => {
+                    eprintln!("unknown placement '{tok}' in --placements");
+                    return 2;
+                }
+            }
+        }
+        v
+    };
+    let total_cap = a.get_u64("total-cap").unwrap_or(64).max(1) as u32;
+    let duration_s = a.get_f64("duration-s").unwrap_or(3600.0);
+    let seed = a.get_u64("seed").unwrap_or(42);
+
+    // one trace shared across every cell so the sweep isolates the fleet
+    // shape; total capacity stays fixed so node count shows pure
+    // fragmentation/placement effects, not extra hardware
+    let trace = fig4::trace_for(trace_kind, secs(duration_s), seed);
+    println!(
+        "fleet-sweep: policy={} trace={} requests={} total-cap={}",
+        policy.name(),
+        trace_kind.name(),
+        trace.len(),
+        total_cap
+    );
+    let mut t = Table::new(&[
+        "nodes", "placement", "p50 ms", "p99 ms", "cold %", "keep-alive s", "mean warm",
+    ]);
+    for &nodes in &node_counts {
+        let capacities = match mpc_serverless::cluster::fleet::split_capacity(total_cap, nodes) {
+            Some(c) => c,
+            None => {
+                eprintln!("--nodes-list entry {nodes} exceeds --total-cap {total_cap}; skipping");
+                continue;
+            }
+        };
+        for &placement in &placements {
+            let cfg = ExperimentConfig {
+                trace: trace_kind,
+                fleet: FleetConfig {
+                    nodes,
+                    capacities: Some(capacities.clone()),
+                    placement,
+                    failure: None,
+                },
+                duration: secs(duration_s),
+                seed,
+                ..Default::default()
+            };
+            let r = run_experiment(&cfg, policy, &trace);
+            let cold_pct = if r.completed > 0 {
+                100.0 * r.cold_requests as f64 / r.completed as f64
+            } else {
+                0.0
+            };
+            t.row(&[
+                nodes.to_string(),
+                placement.name().to_string(),
+                format!("{:.0}", r.p50_ms),
+                format!("{:.0}", r.p99_ms),
+                format!("{cold_pct:.1}"),
+                format!("{:.0}", r.keepalive_total_s),
+                format!("{:.1}", r.mean_warm),
+            ]);
+        }
+    }
+    t.print();
     0
 }
 

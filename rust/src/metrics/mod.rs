@@ -91,6 +91,11 @@ pub struct RunReport {
     pub policy: String,
     pub trace: String,
     pub duration_s: f64,
+    /// Invoker-node count of the fleet this run used (1 = legacy shape).
+    pub nodes: u32,
+    /// Placement policy name (set by the runner; empty for unit tests
+    /// that build reports directly).
+    pub placement: String,
     pub completed: usize,
     pub dropped: usize,
     pub cold_requests: u64,
@@ -153,6 +158,8 @@ impl RunReport {
             policy: policy.to_string(),
             trace: trace.to_string(),
             duration_s: to_secs(duration),
+            nodes: 1,
+            placement: String::new(),
             completed: rt.len(),
             dropped,
             cold_requests,
@@ -188,6 +195,8 @@ impl RunReport {
             ("policy", Json::Str(self.policy.clone())),
             ("trace", Json::Str(self.trace.clone())),
             ("duration_s", Json::Num(self.duration_s)),
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("placement", Json::Str(self.placement.clone())),
             ("completed", Json::Num(self.completed as f64)),
             ("dropped", Json::Num(self.dropped as f64)),
             ("cold_requests", Json::Num(self.cold_requests as f64)),

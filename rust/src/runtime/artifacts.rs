@@ -4,8 +4,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::runtime::{RtError, RtResult};
 use crate::util::json::Json;
 
 /// Parsed artifact metadata (shapes + baked constants).
@@ -28,15 +27,15 @@ pub struct ArtifactMeta {
 
 impl ArtifactMeta {
     /// Load and validate `<dir>/meta.json`.
-    pub fn load(dir: &Path) -> Result<ArtifactMeta> {
+    pub fn load(dir: &Path) -> RtResult<ArtifactMeta> {
         let path = dir.join("meta.json");
         let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
-        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
-        let num = |k: &str| -> Result<f64> {
+            .map_err(|e| RtError(format!("reading {path:?} (run `make artifacts`): {e}")))?;
+        let j = Json::parse(&text).map_err(|e| RtError(format!("parsing {path:?}: {e}")))?;
+        let num = |k: &str| -> RtResult<f64> {
             j.path(k)
                 .and_then(Json::as_f64)
-                .with_context(|| format!("meta.json missing numeric '{k}'"))
+                .ok_or_else(|| RtError(format!("meta.json missing numeric '{k}'")))
         };
         let meta = ArtifactMeta {
             dir: dir.to_path_buf(),
@@ -53,14 +52,14 @@ impl ArtifactMeta {
             param_names: j
                 .path("param_names")
                 .and_then(Json::as_arr)
-                .context("param_names")?
+                .ok_or_else(|| RtError("meta.json missing param_names".into()))?
                 .iter()
                 .filter_map(|v| v.as_str().map(String::from))
                 .collect(),
             default_params: j
                 .path("default_params")
                 .and_then(Json::as_arr)
-                .context("default_params")?
+                .ok_or_else(|| RtError("meta.json missing default_params".into()))?
                 .iter()
                 .filter_map(Json::as_f64)
                 .collect(),
@@ -83,9 +82,12 @@ impl ArtifactMeta {
         Self::default_dir().join("meta.json").exists()
     }
 
-    fn validate(&self) -> Result<()> {
+    fn validate(&self) -> RtResult<()> {
         if self.param_names.len() != 16 || self.default_params.len() != 16 {
-            bail!("params vector must have 16 entries (got {})", self.param_names.len());
+            return Err(RtError(format!(
+                "params vector must have 16 entries (got {})",
+                self.param_names.len()
+            )));
         }
         // cross-check against the constants the Rust mirrors assume
         let expect = [
@@ -95,11 +97,15 @@ impl ArtifactMeta {
         ];
         for (name, got, want) in expect {
             if got != want {
-                bail!("artifact {name}={got} but this build expects {want}; re-run `make artifacts`");
+                return Err(RtError(format!(
+                    "artifact {name}={got} but this build expects {want}; re-run `make artifacts`"
+                )));
             }
         }
         if (self.l_warm_s - 0.280).abs() > 1e-9 || (self.l_cold_s - 10.5).abs() > 1e-9 {
-            bail!("artifact latency constants diverge from PlatformConfig defaults");
+            return Err(RtError(
+                "artifact latency constants diverge from PlatformConfig defaults".into(),
+            ));
         }
         Ok(())
     }

@@ -4,11 +4,33 @@
 //!
 //! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!
+//! The PJRT path needs the external `xla` bindings crate, which the
+//! offline toolchain does not ship; without the `xla-runtime` feature the
+//! engine is a stub whose constructors return an error, and every caller
+//! gates on [`ArtifactMeta::available`] first.
 
 pub mod artifacts;
 pub mod engine;
 pub mod modules;
 
+use std::fmt;
+
+/// Runtime error (the offline toolchain has no anyhow; this is the
+/// message-carrying equivalent for the artifact/engine paths).
+#[derive(Debug)]
+pub struct RtError(pub String);
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+pub type RtResult<T> = Result<T, RtError>;
+
 pub use artifacts::ArtifactMeta;
 pub use engine::{Engine, LoadedModule};
-pub use modules::{DetectorModule, ForecastModule, HloSolver, HloForecaster, MpcModule};
+pub use modules::{DetectorModule, ForecastModule, HloForecaster, HloSolver, MpcModule};

@@ -3,13 +3,20 @@
 //! deployed HLO path interchangeably with the Rust mirrors.
 
 
-use anyhow::{ensure, Result};
-
 use crate::config::Weights;
 use crate::forecast::Forecaster;
 use crate::mpc::{MpcInput, MpcSolver};
 use crate::runtime::artifacts::ArtifactMeta;
 use crate::runtime::engine::{Engine, LoadedModule};
+use crate::runtime::{RtError, RtResult};
+
+macro_rules! rt_ensure {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(RtError(format!($($fmt)*)));
+        }
+    };
+}
 
 /// The Fourier forecast artifact (Eq. 1-2 as HLO).
 pub struct ForecastModule {
@@ -19,7 +26,7 @@ pub struct ForecastModule {
 }
 
 impl ForecastModule {
-    pub fn load(engine: &Engine, meta: &ArtifactMeta) -> Result<Self> {
+    pub fn load(engine: &Engine, meta: &ArtifactMeta) -> RtResult<Self> {
         Ok(ForecastModule {
             module: engine.load(&meta.module_path("forecast"))?,
             window: meta.window,
@@ -27,8 +34,8 @@ impl ForecastModule {
         })
     }
 
-    pub fn forecast(&self, history: &[f32], gamma_clip: f32) -> Result<Vec<f32>> {
-        ensure!(
+    pub fn forecast(&self, history: &[f32], gamma_clip: f32) -> RtResult<Vec<f32>> {
+        rt_ensure!(
             history.len() == self.window,
             "history must have exactly W={} samples (got {})",
             self.window,
@@ -49,7 +56,7 @@ pub struct MpcModule {
 }
 
 impl MpcModule {
-    pub fn load(engine: &Engine, meta: &ArtifactMeta) -> Result<Self> {
+    pub fn load(engine: &Engine, meta: &ArtifactMeta) -> RtResult<Self> {
         Ok(MpcModule {
             module: engine.load(&meta.module_path("mpc"))?,
             horizon: meta.horizon,
@@ -64,11 +71,11 @@ impl MpcModule {
         rdy: &[f32],
         state: &[f32; 4],
         params: &[f32; 16],
-    ) -> Result<(Vec<f32>, f32)> {
+    ) -> RtResult<(Vec<f32>, f32)> {
         let h = self.horizon as i64;
-        ensure!(z0.len() == 3 * self.horizon, "z0 shape");
-        ensure!(lam.len() == self.horizon, "lam shape");
-        ensure!(rdy.len() == self.horizon, "rdy shape");
+        rt_ensure!(z0.len() == 3 * self.horizon, "z0 shape");
+        rt_ensure!(lam.len() == self.horizon, "lam shape");
+        rt_ensure!(rdy.len() == self.horizon, "rdy shape");
         let out = self.module.run_f32(&[
             (z0, &[3 * h]),
             (lam, &[h]),
@@ -91,7 +98,7 @@ pub struct DetectorModule {
 }
 
 impl DetectorModule {
-    pub fn load(engine: &Engine, meta: &ArtifactMeta) -> Result<Self> {
+    pub fn load(engine: &Engine, meta: &ArtifactMeta) -> RtResult<Self> {
         Ok(DetectorModule {
             module: engine.load(&meta.module_path("detector"))?,
             img_size: meta.img_size,
@@ -100,9 +107,9 @@ impl DetectorModule {
     }
 
     /// Run detection on one NHWC frame (flattened), returning class scores.
-    pub fn detect(&self, img: &[f32]) -> Result<Vec<f32>> {
+    pub fn detect(&self, img: &[f32]) -> RtResult<Vec<f32>> {
         let s = self.img_size as i64;
-        ensure!(
+        rt_ensure!(
             img.len() == (s * s * 3) as usize,
             "image must be {s}x{s}x3 flattened"
         );
@@ -189,7 +196,13 @@ mod tests {
             return None;
         }
         let meta = ArtifactMeta::load(&ArtifactMeta::default_dir()).unwrap();
-        let engine = Engine::cpu().unwrap();
+        let engine = match Engine::cpu() {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                return None;
+            }
+        };
         Some((meta, engine))
     }
 

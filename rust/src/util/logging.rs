@@ -1,54 +1,95 @@
-//! Tiny `log`-facade backend: stderr, level from `MPC_LOG` env
-//! (error|warn|info|debug|trace; default warn).
+//! Tiny stderr logger (the offline toolchain has no `log` facade crate):
+//! level from `MPC_LOG` env (error|warn|info|debug|trace; default warn).
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicU8, Ordering};
 
-struct StderrLogger;
-
-static LOGGER: StderrLogger = StderrLogger;
-
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            let tag = match record.level() {
-                Level::Error => "ERROR",
-                Level::Warn => "WARN ",
-                Level::Info => "INFO ",
-                Level::Debug => "DEBUG",
-                Level::Trace => "TRACE",
-            };
-            eprintln!("[{tag}] {}: {}", record.target(), record.args());
-        }
-    }
-
-    fn flush(&self) {}
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-/// Install the logger (idempotent; safe to call from every entrypoint).
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
+
+pub fn max_level() -> u8 {
+    MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= max_level()
+}
+
+/// Emit one log line if `level` is enabled (used via the `log_*!` macros).
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments) {
+    if !enabled(level) {
+        return;
+    }
+    let tag = match level {
+        Level::Off => return,
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{tag}] {target}: {args}");
+}
+
+/// Install the logger level (idempotent; safe to call from every entrypoint).
 pub fn init() {
     let level = match std::env::var("MPC_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("info") => LevelFilter::Info,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        Ok("off") => LevelFilter::Off,
-        _ => LevelFilter::Warn,
+        Ok("error") => Level::Error,
+        Ok("info") => Level::Info,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        Ok("off") => Level::Off,
+        _ => Level::Warn,
     };
-    if log::set_logger(&LOGGER).is_ok() {
-        log::set_max_level(level);
-    }
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::debug!("smoke");
+        init();
+        init();
+        crate::log_debug!("smoke");
+    }
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        // default (or env-set) level always admits Error, never panics
+        log(Level::Error, "test", format_args!("visible at any level"));
     }
 }

@@ -127,6 +127,43 @@ mod tests {
     }
 
     #[test]
+    fn binned_arrival_on_exact_bin_boundary() {
+        // an arrival at t == k*dt belongs to bin k (bins are [k*dt, (k+1)*dt))
+        let dt = 1_000_000;
+        let t = Trace::new(vec![0, dt, 2 * dt]);
+        assert_eq!(t.binned(dt), vec![1, 1, 1]);
+        // the last arrival exactly on a boundary still gets its own bin
+        let t2 = Trace::new(vec![999_999, dt]);
+        assert_eq!(t2.binned(dt), vec![1, 1]);
+    }
+
+    #[test]
+    fn truncate_at_zero_is_empty() {
+        let t = Trace::new(vec![0, 10, 20]);
+        assert!(t.truncate(0).is_empty());
+        assert_eq!(t.truncate(0).len(), 0);
+    }
+
+    #[test]
+    fn binned_conserves_arrival_count() {
+        use crate::prop_assert;
+        use crate::util::prop::prop_check;
+        prop_check("binned sum equals len", 200, |g| {
+            let n = g.usize(0, 300);
+            let arrivals: Vec<Micros> = (0..n).map(|_| g.u64(0, 5_000_000)).collect();
+            let t = Trace::new(arrivals);
+            let dt = g.u64(1, 2_000_000);
+            let total: u64 = t.binned(dt).iter().map(|&c| c as u64).sum();
+            prop_assert!(
+                total == t.len() as u64,
+                "dt={dt}: binned sum {total} != len {}",
+                t.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
     fn csv_roundtrip() {
         let t = Trace::new(vec![0, 1_500_000, 3_000_000]);
         let csv = t.to_csv();

@@ -1,0 +1,135 @@
+//! CLI-level tests driving the built `mpc-serverless` binary: the
+//! gen-trace → file → simulate --trace-file round trip, and the fleet
+//! flags end-to-end.
+
+use std::process::Command;
+
+use mpc_serverless::util::json::Json;
+use mpc_serverless::workload::Trace;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_mpc-serverless"))
+}
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("mpc-cli-{}-{}", std::process::id(), name))
+}
+
+#[test]
+fn gen_trace_to_file_to_simulate_roundtrip() {
+    let out = bin()
+        .args(["gen-trace", "--trace", "synthetic", "--duration-s", "300", "--seed", "9"])
+        .output()
+        .expect("spawn gen-trace");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let csv = String::from_utf8(out.stdout).unwrap();
+    let trace = Trace::from_csv(&csv).expect("gen-trace emits parseable CSV");
+    assert!(!trace.is_empty(), "empty generated trace");
+
+    let path = tmp_path("roundtrip.csv");
+    std::fs::write(&path, &csv).unwrap();
+
+    let out = bin()
+        .args([
+            "simulate",
+            "--policy",
+            "openwhisk",
+            "--duration-s",
+            "300",
+            "--seed",
+            "9",
+            "--trace-file",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn simulate");
+    std::fs::remove_file(&path).ok();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let report = Json::parse(&String::from_utf8(out.stdout).unwrap()).expect("report is JSON");
+    // every request in the replayed file completes
+    assert_eq!(
+        report.path("completed").and_then(Json::as_f64),
+        Some(trace.len() as f64),
+        "{report:?}"
+    );
+    assert_eq!(report.path("dropped").and_then(Json::as_f64), Some(0.0));
+}
+
+#[test]
+fn simulate_accepts_fleet_flags() {
+    let out = bin()
+        .args([
+            "simulate",
+            "--policy",
+            "openwhisk",
+            "--trace",
+            "synthetic",
+            "--duration-s",
+            "120",
+            "--nodes",
+            "8",
+            "--placement",
+            "warm-first",
+        ])
+        .output()
+        .expect("spawn simulate");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let report = Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap();
+    assert_eq!(report.path("nodes").and_then(Json::as_f64), Some(8.0));
+    assert_eq!(
+        report.path("placement").and_then(Json::as_str),
+        Some("warm-first")
+    );
+    assert_eq!(report.path("dropped").and_then(Json::as_f64), Some(0.0));
+}
+
+#[test]
+fn simulate_rejects_bad_placement() {
+    let out = bin()
+        .args(["simulate", "--placement", "nope"])
+        .output()
+        .expect("spawn simulate");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn simulate_rejects_impossible_drain() {
+    // failing the only node (or an out-of-range id) must be an error,
+    // not a silent healthy run
+    let out = bin()
+        .args(["simulate", "--nodes", "1", "--fail-node", "0"])
+        .output()
+        .expect("spawn simulate");
+    assert!(!out.status.success());
+    let out = bin()
+        .args(["simulate", "--nodes", "4", "--fail-node", "9"])
+        .output()
+        .expect("spawn simulate");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn fleet_sweep_runs_end_to_end() {
+    let out = bin()
+        .args([
+            "fleet-sweep",
+            "--policy",
+            "openwhisk",
+            "--trace",
+            "synthetic",
+            "--duration-s",
+            "120",
+            "--nodes-list",
+            "1,2",
+            "--placements",
+            "round-robin,warm-first",
+        ])
+        .output()
+        .expect("spawn fleet-sweep");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8(out.stdout).unwrap();
+    // 4 sweep cells + header rows
+    assert!(text.contains("fleet-sweep:"), "{text}");
+    assert!(text.contains("round-robin"), "{text}");
+    assert!(text.contains("warm-first"), "{text}");
+}

@@ -1,11 +1,18 @@
 //! Integration tests: full control loops over the platform substrate,
 //! invariant audits, and HLO <-> Rust-mirror differential checks.
 
-use mpc_serverless::config::{secs, ExperimentConfig, Policy, TraceKind};
+use mpc_serverless::cluster::platform::{
+    CompleteOutcome, InvokeOutcome, KeepAliveVerdict, Platform, ReadyOutcome,
+};
+use mpc_serverless::config::{
+    secs, ExperimentConfig, NodeFailure, PlacementPolicy, Policy, TraceKind,
+};
 use mpc_serverless::coordinator::controller::MpcScheduler;
+use mpc_serverless::experiments::runner::grace;
 use mpc_serverless::experiments::{fig4, run_experiment, run_with_scheduler};
-use mpc_serverless::metrics::RunReport;
+use mpc_serverless::metrics::{Recorder, RunReport};
 use mpc_serverless::runtime::{ArtifactMeta, Engine, ForecastModule, HloForecaster, HloSolver, MpcModule};
+use mpc_serverless::simulator::EventQueue;
 use mpc_serverless::workload::synthetic::{generate, SyntheticConfig};
 use mpc_serverless::workload::Trace;
 
@@ -134,6 +141,151 @@ fn hlo_backed_controller_matches_mirror_behaviour() {
     // aggregate behaviour must stay close
     let rel = (hlo.mean_ms - mirror.mean_ms).abs() / mirror.mean_ms.max(1.0);
     assert!(rel < 0.35, "hlo mean {} vs mirror {}", hlo.mean_ms, mirror.mean_ms);
+}
+
+/// Reference implementation of the pre-fleet single-platform event loop
+/// for the reactive OpenWhisk policy (dispatch on arrival, no control
+/// ticks). The fleet with `--nodes 1` must reproduce this bit-for-bit —
+/// the determinism regression that keeps every existing figure valid.
+fn legacy_single_platform_openwhisk(cfg: &ExperimentConfig, trace: &Trace) -> RunReport {
+    #[derive(Debug, Clone, Copy)]
+    enum LEv {
+        Arrival(u64),
+        Ready(u64),
+        Done(u64),
+        Sample,
+        KeepAlive(u64),
+    }
+
+    let mut platform = Platform::new(cfg.platform.clone(), cfg.seed ^ 0x9_1A7F0);
+    let mut events: EventQueue<LEv> = EventQueue::new();
+    let mut recorder = Recorder::new(trace.len());
+    for (i, &t) in trace.arrivals.iter().enumerate() {
+        events.push(t, LEv::Arrival(i as u64));
+    }
+    events.push(cfg.sample_interval, LEv::Sample);
+    let cutoff = cfg.duration + grace();
+    while let Some(s) = events.pop_until(cutoff) {
+        let now = s.time;
+        match s.event {
+            LEv::Arrival(req) => {
+                recorder.on_arrival(req, now);
+                recorder.on_dispatch(req, now);
+                match platform.invoke(req, now) {
+                    InvokeOutcome::WarmStart { cid, done_at } => {
+                        events.push(done_at, LEv::Done(cid));
+                    }
+                    InvokeOutcome::ColdStart { cid, ready_at } => {
+                        recorder.on_cold(req);
+                        events.push(ready_at, LEv::Ready(cid));
+                    }
+                    InvokeOutcome::AtCapacity => {}
+                }
+            }
+            LEv::Ready(cid) => match platform.container_ready(cid, now) {
+                ReadyOutcome::Started { done_at, .. } => events.push(done_at, LEv::Done(cid)),
+                ReadyOutcome::Idle => {
+                    events.push(now + cfg.platform.keep_alive, LEv::KeepAlive(cid));
+                }
+            },
+            LEv::Done(cid) => {
+                let CompleteOutcome { completed, next } = platform.exec_complete(cid, now);
+                recorder.on_complete(completed, now);
+                match next {
+                    Some((_req, done_at)) => events.push(done_at, LEv::Done(cid)),
+                    None => events.push(now + cfg.platform.keep_alive, LEv::KeepAlive(cid)),
+                }
+            }
+            LEv::Sample => {
+                recorder.on_gauge(platform.gauge(now, 0));
+                if now < cfg.duration {
+                    events.push(now + cfg.sample_interval, LEv::Sample);
+                }
+            }
+            LEv::KeepAlive(cid) => match platform.keepalive_check(cid, now) {
+                KeepAliveVerdict::Recheck(t) => events.push(t, LEv::KeepAlive(cid)),
+                KeepAliveVerdict::Expired | KeepAliveVerdict::NotApplicable => {}
+            },
+        }
+    }
+    let end = cutoff.max(events.now());
+    let (keepalive, idle_totals) = platform.finalize(end);
+    RunReport::from_recorder(
+        "openwhisk",
+        cfg.trace.name(),
+        cfg.duration,
+        &recorder,
+        platform.counters,
+        &keepalive,
+        &idle_totals,
+    )
+}
+
+#[test]
+fn single_node_fleet_matches_legacy_single_platform_exactly() {
+    for placement in PlacementPolicy::ALL {
+        let mut c = cfg(TraceKind::SyntheticBursty, 1200.0, 23);
+        c.fleet.placement = placement;
+        let trace = generate(&SyntheticConfig::default(), c.duration, c.seed);
+        let legacy = legacy_single_platform_openwhisk(&c, &trace);
+        let fleet = run_experiment(&c, Policy::OpenWhisk, &trace);
+        assert_eq!(fleet.completed, legacy.completed, "{placement:?}");
+        assert_eq!(fleet.mean_ms, legacy.mean_ms, "{placement:?}");
+        assert_eq!(fleet.p99_ms, legacy.p99_ms, "{placement:?}");
+        assert_eq!(fleet.counters.cold_starts, legacy.counters.cold_starts);
+        assert_eq!(fleet.counters.invocations, legacy.counters.invocations);
+        assert_eq!(
+            fleet.counters.keepalive_expiries,
+            legacy.counters.keepalive_expiries
+        );
+        assert_eq!(fleet.warm_series, legacy.warm_series, "{placement:?}");
+        assert_eq!(fleet.keepalive_total_s, legacy.keepalive_total_s);
+        assert_eq!(fleet.idle_total_s, legacy.idle_total_s);
+    }
+}
+
+#[test]
+fn multi_node_fleet_with_mpc_completes_bursty_load() {
+    let mut c = cfg(TraceKind::SyntheticBursty, 1800.0, 29);
+    c.fleet.nodes = 8;
+    c.fleet.placement = PlacementPolicy::WarmFirst;
+    let trace = generate(&SyntheticConfig::default(), c.duration, c.seed);
+    let r = run_experiment(&c, Policy::Mpc, &trace);
+    audit(&r, trace.len());
+    assert_eq!(r.nodes, 8);
+    assert_eq!(r.placement, "warm-first");
+}
+
+#[test]
+fn node_drain_scenario_completes_all_requests() {
+    // a quarter of the fleet dies mid-run; the backlog redistributes and
+    // every request still completes on the survivors
+    let mut c = cfg(TraceKind::SyntheticBursty, 1800.0, 31);
+    c.fleet.nodes = 4;
+    c.fleet.placement = PlacementPolicy::LeastLoaded;
+    c.fleet.failure = Some(NodeFailure {
+        node: 2,
+        at: secs(700.0),
+    });
+    let trace = generate(&SyntheticConfig::default(), c.duration, c.seed);
+    for policy in [Policy::OpenWhisk, Policy::IceBreaker, Policy::Mpc] {
+        let r = run_experiment(&c, policy, &trace);
+        audit(&r, trace.len());
+    }
+    // the drain must actually change cluster behaviour vs a healthy
+    // fleet: node 2's warm pool vanishes at the outage, so the warm
+    // gauge series cannot stay identical
+    let healthy = {
+        let mut h = c.clone();
+        h.fleet.failure = None;
+        run_experiment(&h, Policy::OpenWhisk, &trace)
+    };
+    let drained = run_experiment(&c, Policy::OpenWhisk, &trace);
+    assert_eq!(drained.completed, healthy.completed);
+    assert_ne!(
+        drained.warm_series, healthy.warm_series,
+        "node outage left the warm-container series untouched"
+    );
 }
 
 #[test]
