@@ -17,6 +17,7 @@ use crate::config::{ControllerConfig, Micros};
 use crate::coordinator::{Ctx, Scheduler};
 use crate::forecast::Forecaster;
 use crate::util::timeseries::RingBuffer;
+use crate::workload::tenant::{split_budget, FunctionId};
 
 pub struct IceBreaker {
     cc: ControllerConfig,
@@ -29,6 +30,11 @@ pub struct IceBreaker {
     /// Number of horizon steps whose peak forecast sizes the warm pool
     /// (lead time covers the cold start latency).
     pub lead_steps: usize,
+    /// Per-function EWMA of interval arrivals (multi-tenant prewarm
+    /// split; empty in a single-tenant run).
+    fn_recent: Vec<f64>,
+    /// Per-function arrivals in the open interval.
+    fn_arrivals: Vec<u32>,
 }
 
 impl IceBreaker {
@@ -42,7 +48,21 @@ impl IceBreaker {
             forecaster,
             retention: 240_000_000, // 4 min of unused warmth before release
             lead_steps: lead,
+            fn_recent: Vec::new(),
+            fn_arrivals: Vec::new(),
         }
+    }
+
+    /// Enable per-function arrival tracking for an `n`-function workload
+    /// (no-op for `n <= 1`): IceBreaker's prewarm budget is then split by
+    /// each function's recent arrival share, mirroring its per-function
+    /// predictor without granting it the MPC's shaping advantage.
+    pub fn with_functions(mut self, n: usize) -> Self {
+        if n > 1 {
+            self.fn_recent = vec![0.0; n];
+            self.fn_arrivals = vec![0; n];
+        }
+        self
     }
 
     /// Warm-pool target: peak forecast over the lead window, converted to
@@ -57,12 +77,24 @@ impl IceBreaker {
 impl Scheduler for IceBreaker {
     fn on_arrival(&mut self, req: RequestId, ctx: &mut Ctx) {
         self.arrivals_this_interval += 1;
+        if !self.fn_arrivals.is_empty() {
+            let f = ctx.func_of(req) as usize;
+            if let Some(c) = self.fn_arrivals.get_mut(f) {
+                *c += 1;
+            }
+        }
         ctx.dispatch(req); // no shaping
     }
 
     fn on_control_tick(&mut self, ctx: &mut Ctx) {
         self.history.push(self.arrivals_this_interval as f64);
         self.arrivals_this_interval = 0;
+        for (recent, arr) in self.fn_recent.iter_mut().zip(&mut self.fn_arrivals) {
+            // EWMA so a function's share survives short gaps between its
+            // invocations (IceBreaker's utility window analog)
+            *recent = 0.7 * *recent + 0.3 * *arr as f64;
+            *arr = 0;
+        }
 
         let pad = self.history.recent_mean(self.cc.window);
         let hist = self.history.to_padded_vec(pad);
@@ -76,7 +108,17 @@ impl Scheduler for IceBreaker {
 
         let provisioned = ctx.fleet.warm_count() + ctx.fleet.cold_starting_count();
         if provisioned < target {
-            ctx.prewarm(target - provisioned);
+            let need = target - provisioned;
+            if self.fn_recent.len() > 1 {
+                // split the budget by recent per-function arrival share
+                for (f, n) in split_budget(&self.fn_recent, need).into_iter().enumerate() {
+                    if n > 0 {
+                        ctx.prewarm_for(f as FunctionId, n);
+                    }
+                }
+            } else {
+                ctx.prewarm(need);
+            }
         } else if provisioned > target {
             // release only long-idle containers (retention-aware), never
             // below the forecast target

@@ -6,6 +6,7 @@
 
 use crate::cluster::RequestId;
 use crate::config::Micros;
+use crate::workload::tenant::FunctionId;
 
 pub type ContainerId = u64;
 
@@ -26,6 +27,10 @@ pub enum ContainerState {
 #[derive(Debug, Clone)]
 pub struct Container {
     pub id: ContainerId,
+    /// The function this container is initialized for. A warm container
+    /// serves only its own function — the unit of warm-pool
+    /// fragmentation the multi-tenant experiments measure.
+    pub func: FunctionId,
     pub state: ContainerState,
     pub created_at: Micros,
     /// End of the most recent activation (== created_at before first use).
@@ -37,9 +42,16 @@ pub struct Container {
 }
 
 impl Container {
-    pub fn cold(id: ContainerId, now: Micros, ready_at: Micros, pending: Option<RequestId>) -> Self {
+    pub fn cold(
+        id: ContainerId,
+        func: FunctionId,
+        now: Micros,
+        ready_at: Micros,
+        pending: Option<RequestId>,
+    ) -> Self {
         Container {
             id,
+            func,
             state: ContainerState::ColdStarting { ready_at, pending },
             created_at: now,
             last_used: now,
@@ -128,7 +140,7 @@ mod tests {
 
     #[test]
     fn lifecycle_roundtrip() {
-        let mut c = Container::cold(1, 0, 10_500_000, Some(99));
+        let mut c = Container::cold(1, 0, 0, 10_500_000, Some(99));
         assert!(c.is_cold_starting());
         assert!(!c.is_warm());
         let pending = c.finish_cold_start(10_500_000);
@@ -145,7 +157,7 @@ mod tests {
 
     #[test]
     fn idle_accounting_accumulates() {
-        let mut c = Container::cold(1, 0, 100, None);
+        let mut c = Container::cold(1, 0, 0, 100, None);
         c.finish_cold_start(100);
         c.start_execution(1, 600, 880); // idle 100..600 = 500
         c.finish_execution(880);
@@ -157,9 +169,9 @@ mod tests {
 
     #[test]
     fn reclaim_score_prefers_long_idle_low_use() {
-        let mut fresh = Container::cold(1, 0, 0, None);
+        let mut fresh = Container::cold(1, 0, 0, 0, None);
         fresh.finish_cold_start(0);
-        let mut veteran = Container::cold(2, 0, 0, None);
+        let mut veteran = Container::cold(2, 0, 0, 0, None);
         veteran.finish_cold_start(0);
         for i in 0..50 {
             veteran.start_execution(i, i * 1000, i * 1000 + 1);
@@ -173,7 +185,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "non-idle")]
     fn cannot_execute_on_cold_container() {
-        let mut c = Container::cold(1, 0, 100, None);
+        let mut c = Container::cold(1, 0, 0, 100, None);
         c.start_execution(1, 0, 10);
     }
 }

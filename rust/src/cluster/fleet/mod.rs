@@ -5,21 +5,47 @@
 //! The paper's testbed is OpenWhisk on a Kubernetes cluster with several
 //! invoker nodes; the fleet makes the cluster-scale effects visible that
 //! a single 64-replica pool cannot show — placement skew, per-node
-//! warm-pool fragmentation, and node failures (the drain scenario).
+//! warm-pool fragmentation, node failures (the drain scenario), and
+//! multi-tenant contention between functions sharing the cluster.
+//!
+//! # Math-to-code mapping
+//!
+//! The fleet is the actuation target of the paper's control loop:
+//!
+//! * **Dispatch** (Algorithm 1, `submitRequestAsync`) →
+//!   [`Fleet::invoke_for`]: the placement layer picks a node for the
+//!   request's *function* (warm-first becomes
+//!   warm-for-this-function-first), then the node's platform applies
+//!   OpenWhisk semantics.
+//! * **Prewarm actuation** (Listing 1, Eq. 14's `x_k` budget) →
+//!   [`Fleet::prewarm_for`]: one unbound cold container of a function on
+//!   the node least provisioned *for that function*. The aggregate
+//!   budget itself is fleet-scaled upstream: the planner's pool bound
+//!   `w_max` grows with `FleetConfig::total_capacity` (`w_max × nodes`
+//!   for a homogeneous fleet), so an 8-node cluster is not capped at one
+//!   node's 64 replicas.
+//! * **Reclaim** (Algorithm 2, Eq. 15's `r_k`) → [`Fleet::try_reclaim`]:
+//!   each step drains the best-scoring log-safe idle candidate across
+//!   all online nodes, preserving the algorithm's global ranking.
+//! * **Telemetry** (the controller's Prometheus scrape) → the aggregate
+//!   gauges ([`Fleet::warm_count`], [`Fleet::cold_ready_times`], …) and
+//!   their per-function variants.
 //!
 //! Determinism guarantee: node 0 receives the caller's seed unchanged and
 //! every placement decision is a pure function of platform state, so a
 //! one-node fleet reproduces the legacy single-platform results
 //! bit-for-bit (same seed → same metrics), keeping all existing figures
-//! valid.
+//! valid; a one-function registry likewise collapses every `*_for`
+//! method to its legacy aggregate form.
 
 pub mod placement;
 
 use crate::cluster::container::ContainerId;
 use crate::cluster::platform::{CompleteOutcome, InvokeOutcome, KeepAliveVerdict, Platform, ReadyOutcome};
-use crate::cluster::telemetry::{Counters, GaugeSample};
+use crate::cluster::telemetry::{Counters, FnCounterMap, GaugeSample};
 use crate::cluster::RequestId;
 use crate::config::{FleetConfig, Micros, PlacementPolicy, PlatformConfig};
+use crate::workload::tenant::{FunctionId, FunctionRegistry};
 
 /// Invoker-node identifier (index into the fleet, stable for a run).
 pub type NodeId = u32;
@@ -67,11 +93,28 @@ pub struct Fleet {
 }
 
 impl Fleet {
-    /// Build a fleet of `fleet_cfg.nodes` invokers. Per-node capacity
-    /// overrides come from `fleet_cfg.capacities` (cycled); node 0 keeps
-    /// `seed` unchanged so a one-node fleet matches the legacy
-    /// single-platform RNG stream exactly.
+    /// Build a single-tenant fleet (one-function registry from
+    /// `platform_cfg`). See [`Fleet::with_registry`].
     pub fn new(fleet_cfg: &FleetConfig, platform_cfg: &PlatformConfig, seed: u64) -> Fleet {
+        Self::with_registry(
+            fleet_cfg,
+            platform_cfg,
+            &FunctionRegistry::single(platform_cfg),
+            seed,
+        )
+    }
+
+    /// Build a fleet of `fleet_cfg.nodes` invokers serving `registry`'s
+    /// function set. Per-node capacity overrides come from
+    /// `fleet_cfg.capacities` (cycled); node 0 keeps `seed` unchanged so
+    /// a one-node fleet matches the legacy single-platform RNG stream
+    /// exactly.
+    pub fn with_registry(
+        fleet_cfg: &FleetConfig,
+        platform_cfg: &PlatformConfig,
+        registry: &FunctionRegistry,
+        seed: u64,
+    ) -> Fleet {
         let n = fleet_cfg.nodes.max(1);
         let mut nodes = Vec::with_capacity(n as usize);
         for i in 0..n {
@@ -90,7 +133,7 @@ impl Fleet {
             let node_seed = seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
             nodes.push(InvokerNode {
                 id: i,
-                platform: Platform::new(pc, node_seed),
+                platform: Platform::with_registry(pc, registry.clone(), node_seed),
                 online: true,
             });
         }
@@ -165,6 +208,51 @@ impl Fleet {
             .sum()
     }
 
+    /// Fleet-wide idle warm pool of one function.
+    pub fn idle_count_for(&self, func: FunctionId) -> u32 {
+        self.online().map(|n| n.platform.idle_count_for(func)).sum()
+    }
+
+    /// Fleet-wide idle-container counts for every function in one pass
+    /// (index = [`FunctionId`], length `nf`) — the dispatcher's drain
+    /// snapshot.
+    pub fn idle_by_function(&self, nf: usize) -> Vec<u32> {
+        let mut out = vec![0u32; nf];
+        for n in self.online() {
+            n.platform.idle_by_function_into(&mut out);
+        }
+        out
+    }
+
+    /// Fleet-wide warm (idle + busy) containers of one function.
+    pub fn warm_count_for(&self, func: FunctionId) -> u32 {
+        self.online().map(|n| n.platform.warm_count_for(func)).sum()
+    }
+
+    /// Fleet-wide in-flight cold starts of one function.
+    pub fn cold_starting_for(&self, func: FunctionId) -> u32 {
+        self.online()
+            .map(|n| n.platform.cold_starting_for(func))
+            .sum()
+    }
+
+    /// Ready times of in-flight cold starts of one function, fleet-wide.
+    pub fn cold_ready_times_for(&self, func: FunctionId) -> Vec<Micros> {
+        self.online()
+            .flat_map(|n| n.platform.cold_ready_times_for(func))
+            .collect()
+    }
+
+    /// Keep-alive window of a live container's function (None for
+    /// unknown containers or offline nodes).
+    pub fn keepalive_of(&self, node: NodeId, cid: ContainerId) -> Option<Micros> {
+        let nd = self.nodes.get(node as usize)?;
+        if !nd.online {
+            return None;
+        }
+        nd.platform.keepalive_of(cid)
+    }
+
     /// Ready times of in-flight cold starts across the fleet (readyCold).
     pub fn cold_ready_times(&self) -> Vec<Micros> {
         self.online()
@@ -178,6 +266,18 @@ impl Fleet {
         let mut out = Counters::default();
         for n in &self.nodes {
             out.accumulate(&n.platform.counters);
+        }
+        out
+    }
+
+    /// Per-function activation counters aggregated over every node
+    /// (offline included — their history happened).
+    pub fn fn_counters(&self) -> FnCounterMap {
+        let mut out = FnCounterMap::new();
+        for n in &self.nodes {
+            for (&f, c) in n.platform.fn_counters() {
+                out.entry(f).or_default().accumulate(c);
+            }
         }
         out
     }
@@ -213,7 +313,7 @@ impl Fleet {
 
     // ---- invocation path ----------------------------------------------------
 
-    fn place(&mut self) -> usize {
+    fn place_for(&mut self, func: FunctionId) -> usize {
         let picked = match self.placement {
             PlacementPolicy::RoundRobin => {
                 let k = placement::round_robin(&self.nodes, self.rr_cursor);
@@ -223,33 +323,54 @@ impl Fleet {
                 k
             }
             PlacementPolicy::LeastLoaded => placement::least_loaded(&self.nodes),
-            PlacementPolicy::WarmFirst => placement::warm_first(&self.nodes),
+            PlacementPolicy::WarmFirst => placement::warm_first_for(&self.nodes, func),
         };
         picked.expect("fleet has no online nodes")
     }
 
-    /// Dispatch `req`: the placement layer picks a node, the node's
-    /// platform applies OpenWhisk semantics (warm bind / cold start /
-    /// FCFS backlog at capacity).
+    /// Dispatch `req` (single-tenant shorthand for function 0).
     pub fn invoke(&mut self, req: RequestId, now: Micros) -> (NodeId, InvokeOutcome) {
-        let idx = self.place();
-        let node = &mut self.nodes[idx];
-        (node.id, node.platform.invoke(req, now))
+        self.invoke_for(req, 0, now)
     }
 
-    /// Prewarm one container on the least-provisioned online node with
-    /// headroom — this is how the MPC's aggregate prewarm budget x_k is
-    /// split across nodes from per-node telemetry. When every node is
-    /// full the least-provisioned node registers the rejection.
+    /// Dispatch `req` for `func`: the placement layer picks a node for
+    /// the function (warm-first prefers nodes holding an idle container
+    /// *of this function*), the node's platform applies OpenWhisk
+    /// semantics (warm bind / cold start / eviction / FCFS backlog).
+    pub fn invoke_for(
+        &mut self,
+        req: RequestId,
+        func: FunctionId,
+        now: Micros,
+    ) -> (NodeId, InvokeOutcome) {
+        let idx = self.place_for(func);
+        let node = &mut self.nodes[idx];
+        (node.id, node.platform.invoke_for(req, func, now))
+    }
+
+    /// Prewarm one container of function 0 (single-tenant shorthand).
     pub fn prewarm_one(&mut self, now: Micros) -> Option<(NodeId, ContainerId, Micros)> {
+        self.prewarm_for(0, now)
+    }
+
+    /// Prewarm one container of `func` on the online node least
+    /// provisioned *for that function* (with room for it) — this is how
+    /// the MPC's fleet-scaled prewarm budget x_k lands on nodes from
+    /// per-node, per-function telemetry. When no node can admit the
+    /// function the least-provisioned node registers the rejection.
+    pub fn prewarm_for(
+        &mut self,
+        func: FunctionId,
+        now: Micros,
+    ) -> Option<(NodeId, ContainerId, Micros)> {
         let pick = self
             .nodes
             .iter()
             .enumerate()
-            .filter(|(_, n)| n.online && n.platform.headroom() > 0)
+            .filter(|(_, n)| n.online && n.platform.can_admit(func))
             .min_by_key(|(i, n)| {
                 (
-                    n.platform.warm_count() + n.platform.cold_starting_count(),
+                    n.platform.warm_count_for(func) + n.platform.cold_starting_for(func),
                     *i,
                 )
             })
@@ -268,7 +389,7 @@ impl Fleet {
         let node = &mut self.nodes[idx];
         let id = node.id;
         node.platform
-            .prewarm_one(now)
+            .prewarm_for(func, now)
             .map(|(cid, ready_at)| (id, cid, ready_at))
     }
 
@@ -576,6 +697,58 @@ mod tests {
         assert_eq!(got2.len(), 1);
         assert_eq!(got2[0].0, 1);
         assert_eq!(f.idle_count(), 0);
+    }
+
+    #[test]
+    fn function_aware_warm_first_and_prewarm_split() {
+        use crate::workload::tenant::{FunctionProfile, FunctionRegistry};
+        let pc = pcfg();
+        let mut p0 = FunctionRegistry::single(&pc).get(0).clone();
+        p0.share = 0.5;
+        let registry = FunctionRegistry::new(vec![
+            p0,
+            FunctionProfile {
+                id: 1,
+                name: "fn-1".into(),
+                l_warm: 100_000,
+                l_cold: 2_000_000,
+                keep_alive: 60_000_000,
+                mem_mib: 128,
+                share: 0.5,
+            },
+        ]);
+        let fc = FleetConfig {
+            nodes: 3,
+            placement: PlacementPolicy::WarmFirst,
+            ..Default::default()
+        };
+        let mut f = Fleet::with_registry(&fc, &pc, &registry, 11);
+        // idle fn-0 container on node 2, idle fn-1 container on node 1
+        let (c0, r0) = f.node_mut(2).platform.prewarm_for(0, 0).unwrap();
+        f.node_mut(2).platform.container_ready(c0, r0);
+        let (c1, r1) = f.node_mut(1).platform.prewarm_for(1, 5_000_000).unwrap();
+        f.node_mut(1).platform.container_ready(c1, r1);
+        // each function routes to ITS warm node, not the freshest overall
+        let (n, out) = f.invoke_for(1, 0, r1 + 10);
+        assert_eq!(n, 2);
+        assert!(matches!(out, InvokeOutcome::WarmStart { .. }), "{out:?}");
+        let (n, out) = f.invoke_for(2, 1, r1 + 20);
+        assert_eq!(n, 1);
+        assert!(matches!(out, InvokeOutcome::WarmStart { .. }), "{out:?}");
+        // per-function prewarm provisioning counts only that function:
+        // fn-1 is provisioned on node 1 (busy), so its next prewarms land
+        // on nodes 0 and 2 first
+        let (pn, _, _) = f.prewarm_for(1, r1 + 30).unwrap();
+        assert_eq!(pn, 0);
+        let (pn, _, _) = f.prewarm_for(1, r1 + 40).unwrap();
+        assert_eq!(pn, 2);
+        // per-function counters aggregate across nodes
+        let fc_map = f.fn_counters();
+        assert_eq!(fc_map[&0].warm_starts, 1);
+        assert_eq!(fc_map[&1].warm_starts, 1);
+        assert_eq!(f.warm_count_for(0), 1);
+        assert_eq!(f.cold_starting_for(1), 2);
+        assert_eq!(f.keepalive_of(1, c1), Some(60_000_000));
     }
 
     #[test]

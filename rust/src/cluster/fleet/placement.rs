@@ -4,6 +4,7 @@
 //! deterministic and never consume platform RNG state.
 
 use crate::cluster::fleet::InvokerNode;
+use crate::workload::tenant::FunctionId;
 
 /// Rotate through online nodes: the `cursor`-th online node (mod count).
 /// OpenWhisk's hash-spray analog — blind to warm-pool state, so it
@@ -34,17 +35,25 @@ pub fn least_loaded(nodes: &[InvokerNode]) -> Option<usize> {
         .map(|(i, _)| i)
 }
 
-/// Route to a node holding an idle warm container — most recently used
-/// first, preserving OpenWhisk's MRU reuse affinity across the fleet.
-/// With no idle container anywhere, spill to the least-loaded node that
-/// still has replica headroom; with the whole fleet saturated, fall back
-/// to least-loaded (the request joins that node's FCFS backlog).
+/// Single-tenant [`warm_first_for`] (function 0).
 pub fn warm_first(nodes: &[InvokerNode]) -> Option<usize> {
+    warm_first_for(nodes, 0)
+}
+
+/// Route to a node holding an idle warm container **of this function** —
+/// most recently used first, preserving OpenWhisk's MRU reuse affinity
+/// across the fleet. A foreign function's warm pool is useless to this
+/// request, so it never attracts it. With no matching idle container
+/// anywhere, spill to the least-loaded node that can still admit the
+/// function; with the whole fleet saturated, fall back to least-loaded
+/// (the request joins that node's FCFS backlog or evicts a foreign
+/// idle container there).
+pub fn warm_first_for(nodes: &[InvokerNode], func: FunctionId) -> Option<usize> {
     let warmest = nodes
         .iter()
         .enumerate()
         .filter(|(_, n)| n.online)
-        .filter_map(|(i, n)| n.platform.mru_idle_recency().map(|r| (r, i)))
+        .filter_map(|(i, n)| n.platform.mru_idle_recency_for(func).map(|r| (r, i)))
         .max_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
     if let Some((_, i)) = warmest {
         return Some(i);
@@ -52,7 +61,7 @@ pub fn warm_first(nodes: &[InvokerNode]) -> Option<usize> {
     let spill = nodes
         .iter()
         .enumerate()
-        .filter(|(_, n)| n.online && n.platform.headroom() > 0)
+        .filter(|(_, n)| n.online && n.platform.can_admit(func))
         .min_by_key(|(i, n)| (n.load(), *i))
         .map(|(i, _)| i);
     if spill.is_some() {

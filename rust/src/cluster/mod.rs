@@ -20,4 +20,4 @@ pub type RequestId = u64;
 pub use container::{Container, ContainerId, ContainerState};
 pub use fleet::{Fleet, InvokerNode, NodeId};
 pub use platform::{CompleteOutcome, InvokeOutcome, KeepAliveVerdict, Platform, ReadyOutcome};
-pub use telemetry::{Counters, GaugeSample, Telemetry};
+pub use telemetry::{Counters, FnCounterMap, FnCounters, GaugeSample, Telemetry};

@@ -5,6 +5,18 @@
 //! pool (64 = 32 vCPU / 0.5), FCFS backlog at capacity, keep-alive expiry,
 //! and the reclaim-safety protocol of Algorithm 2 (activation-log check).
 //!
+//! **Multi-tenant semantics.** Every container is initialized for one
+//! function and a warm container serves only that function. The platform
+//! therefore keeps *per-function warm pools* inside one replica budget:
+//! warm binding, the FCFS backlog, and keep-alive expiry all match on
+//! the container's function, lifecycle latencies come from the
+//! function's profile, and a per-function memory ledger bounds
+//! heavyweight tenants. Cross-function contention appears as
+//! *evictions*: at capacity, an idle container of another function is
+//! drained (log-safe, Algorithm 2's ranking) to make room. With a
+//! one-function registry all of this degenerates to the legacy
+//! single-tenant behavior bit-for-bit.
+//!
 //! The platform is event-driven but owns no clock: methods take `now` and
 //! return outcomes carrying future timestamps; the experiment runner turns
 //! those into simulator events (or real timers in real-time mode).
@@ -13,10 +25,11 @@ use std::collections::{BTreeMap, VecDeque};
 
 use crate::cluster::activation_log::ActivationLog;
 use crate::cluster::container::{Container, ContainerId};
-use crate::cluster::telemetry::{Counters, GaugeSample};
+use crate::cluster::telemetry::{Counters, FnCounters, GaugeSample};
 use crate::cluster::RequestId;
 use crate::config::{Micros, PlatformConfig};
 use crate::util::rng::Rng;
+use crate::workload::tenant::{FunctionId, FunctionProfile, FunctionRegistry};
 
 /// Result of an invocation request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,14 +50,29 @@ pub enum ReadyOutcome {
     Idle,
     /// Immediately started executing `request`; completes at `done_at`.
     Started { request: RequestId, done_at: Micros },
+    /// Multi-tenant recycle: the container matched none of the backlog,
+    /// so it was evicted and a fresh cold container `cid` (ready at
+    /// `ready_at`) was spawned bound to waiting request `req` — which
+    /// therefore pays a cold start.
+    Respawned {
+        req: RequestId,
+        cid: ContainerId,
+        ready_at: Micros,
+    },
 }
 
 /// Result of an execution completing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CompleteOutcome {
     pub completed: RequestId,
-    /// FCFS backlog request that immediately reused the container.
+    /// FCFS backlog request (same function) that immediately reused the
+    /// container.
     pub next: Option<(RequestId, Micros)>,
+    /// Multi-tenant recycle: the idle container was evicted and a cold
+    /// container spawned bound to the waiting foreign-function request
+    /// `(req, cid, ready_at)` (None in any single-tenant run). The
+    /// runner schedules a Ready event for it and marks `req` cold.
+    pub respawn: Option<(RequestId, ContainerId, Micros)>,
 }
 
 /// Keep-alive check verdict.
@@ -61,36 +89,71 @@ pub enum KeepAliveVerdict {
 #[derive(Debug)]
 pub struct Platform {
     pub cfg: PlatformConfig,
+    /// The deployed function set; profiles drive per-function lifecycle
+    /// latencies, keep-alive windows, and memory footprints.
+    registry: FunctionRegistry,
     containers: BTreeMap<ContainerId, Container>,
     next_cid: ContainerId,
-    fcfs: VecDeque<RequestId>,
+    fcfs: VecDeque<(RequestId, FunctionId)>,
     rng: Rng,
     pub counters: Counters,
+    /// Per-function activation accounting (multi-tenant telemetry).
+    fn_counters: BTreeMap<FunctionId, FnCounters>,
     pub log: ActivationLog,
     /// keep-alive durations (last activation → removal) of removed containers
     removed_keepalive: Vec<Micros>,
     /// total idle (warm-unused) time of removed containers
     removed_idle_total: Vec<Micros>,
+    /// memory claimed by live containers (MiB), per-function footprints
+    mem_used: u32,
     /// containers ever created (for conservation checks)
     pub spawned: u64,
     pub removed: u64,
 }
 
 impl Platform {
+    /// Single-tenant platform: a one-function registry mirroring `cfg`.
     pub fn new(cfg: PlatformConfig, seed: u64) -> Self {
+        let registry = FunctionRegistry::single(&cfg);
+        Self::with_registry(cfg, registry, seed)
+    }
+
+    /// Multi-tenant platform serving `registry`'s function set.
+    pub fn with_registry(cfg: PlatformConfig, registry: FunctionRegistry, seed: u64) -> Self {
         Platform {
             cfg,
+            registry,
             containers: BTreeMap::new(),
             next_cid: 1,
             fcfs: VecDeque::new(),
             rng: Rng::new(seed),
             counters: Counters::default(),
+            fn_counters: BTreeMap::new(),
             log: ActivationLog::new(),
             removed_keepalive: Vec::new(),
             removed_idle_total: Vec::new(),
+            mem_used: 0,
             spawned: 0,
             removed: 0,
         }
+    }
+
+    /// Profile of one function in the registry.
+    pub fn profile(&self, func: FunctionId) -> &FunctionProfile {
+        self.registry.get(func)
+    }
+
+    pub fn registry(&self) -> &FunctionRegistry {
+        &self.registry
+    }
+
+    fn fn_counters_mut(&mut self, func: FunctionId) -> &mut FnCounters {
+        self.fn_counters.entry(func).or_default()
+    }
+
+    /// Per-function activation counters observed so far.
+    pub fn fn_counters(&self) -> &BTreeMap<FunctionId, FnCounters> {
+        &self.fn_counters
     }
 
     fn jitter(&mut self, base: Micros) -> Micros {
@@ -148,12 +211,75 @@ impl Platform {
         self.cfg.resource_cap().saturating_sub(self.total())
     }
 
+    /// Memory claimed by live containers (MiB).
+    pub fn mem_used_mib(&self) -> u32 {
+        self.mem_used
+    }
+
+    /// Whether a new container of `func` fits the node right now: a free
+    /// replica slot *and* room in the memory ledger for the function's
+    /// footprint. With uniform paper-profile functions the memory term
+    /// never binds (64 × 256 MiB ≪ 48 GiB), so this reduces to the
+    /// legacy slot check.
+    pub fn can_admit(&self, func: FunctionId) -> bool {
+        self.total() < self.cfg.resource_cap()
+            && self.mem_used + self.registry.get(func).mem_mib <= self.cfg.node_mem_mib
+    }
+
+    /// Idle warm containers of one function (the per-function warm pool).
+    pub fn idle_count_for(&self, func: FunctionId) -> u32 {
+        self.containers
+            .values()
+            .filter(|c| c.is_idle() && c.func == func)
+            .count() as u32
+    }
+
+    /// Accumulate idle-container counts per function into `out` (index =
+    /// [`FunctionId`]; functions beyond `out.len()` are ignored) — one
+    /// container pass instead of one per function for the dispatcher's
+    /// drain snapshot.
+    pub fn idle_by_function_into(&self, out: &mut [u32]) {
+        for c in self.containers.values() {
+            if c.is_idle() {
+                if let Some(slot) = out.get_mut(c.func as usize) {
+                    *slot += 1;
+                }
+            }
+        }
+    }
+
+    /// Warm (idle + busy) containers of one function.
+    pub fn warm_count_for(&self, func: FunctionId) -> u32 {
+        self.containers
+            .values()
+            .filter(|c| c.is_warm() && c.func == func)
+            .count() as u32
+    }
+
+    /// In-flight cold starts of one function.
+    pub fn cold_starting_for(&self, func: FunctionId) -> u32 {
+        self.containers
+            .values()
+            .filter(|c| c.is_cold_starting() && c.func == func)
+            .count() as u32
+    }
+
     /// Recency (last_used) of the most-recently-used idle container — the
     /// fleet's warm-first placement compares nodes on this.
     pub fn mru_idle_recency(&self) -> Option<Micros> {
         self.containers
             .values()
             .filter(|c| c.is_idle())
+            .map(|c| c.last_used)
+            .max()
+    }
+
+    /// Function-scoped [`Platform::mru_idle_recency`]: the fleet's
+    /// warm-*for-this-function*-first placement compares nodes on this.
+    pub fn mru_idle_recency_for(&self, func: FunctionId) -> Option<Micros> {
+        self.containers
+            .values()
+            .filter(|c| c.is_idle() && c.func == func)
             .map(|c| c.last_used)
             .max()
     }
@@ -181,102 +307,241 @@ impl Platform {
             .collect()
     }
 
+    /// Ready times of in-flight cold starts of one function.
+    pub fn cold_ready_times_for(&self, func: FunctionId) -> Vec<Micros> {
+        self.containers
+            .values()
+            .filter(|c| c.func == func)
+            .filter_map(|c| match c.state {
+                crate::cluster::container::ContainerState::ColdStarting { ready_at, .. } => {
+                    Some(ready_at)
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
     // ---- invocation path ----------------------------------------------------
 
-    /// Invoke `req` now. OpenWhisk semantics: bind to a warm idle container
-    /// if any (most-recently-used first, matching OpenWhisk's reuse
-    /// affinity), otherwise cold start, otherwise FCFS-queue at capacity.
+    /// Invoke `req` now (single-tenant shorthand for function 0).
     pub fn invoke(&mut self, req: RequestId, now: Micros) -> InvokeOutcome {
+        self.invoke_for(req, 0, now)
+    }
+
+    /// Invoke `req` for `func` now. OpenWhisk semantics, function-aware:
+    /// bind to an idle warm container *of this function* if any
+    /// (most-recently-used first, matching OpenWhisk's reuse affinity),
+    /// otherwise cold start; with the pool full of other functions'
+    /// idle containers, evict the best log-safe candidate (Algorithm 2's
+    /// ranking) to make room; otherwise FCFS-queue at capacity.
+    pub fn invoke_for(&mut self, req: RequestId, func: FunctionId, now: Micros) -> InvokeOutcome {
         self.counters.invocations += 1;
-        // MRU idle container: OpenWhisk reuses the warmest replica
+        self.fn_counters_mut(func).invocations += 1;
+        // MRU idle container of this function: OpenWhisk reuses the
+        // warmest matching replica
         let pick = self
             .containers
             .values()
-            .filter(|c| c.is_idle())
+            .filter(|c| c.is_idle() && c.func == func)
             .max_by_key(|c| (c.last_used, c.id))
             .map(|c| c.id);
         if let Some(cid) = pick {
-            let done_at = now + self.jitter(self.cfg.l_warm);
+            let l_warm = self.profile(func).l_warm;
+            let done_at = now + self.jitter(l_warm);
             let c = self.containers.get_mut(&cid).unwrap();
             c.start_execution(req, now, done_at);
             self.log.record_assignment(cid, req);
+            self.fn_counters_mut(func).warm_starts += 1;
             return InvokeOutcome::WarmStart { cid, done_at };
         }
-        if self.total() < self.cfg.resource_cap() {
-            let ready_at = now + self.jitter(self.cfg.l_cold);
-            let cid = self.spawn(now, ready_at, Some(req));
+        if self.can_admit(func) || self.evict_for(func, now) {
+            let l_cold = self.profile(func).l_cold;
+            let ready_at = now + self.jitter(l_cold);
+            let cid = self.spawn(func, now, ready_at, Some(req));
             self.counters.cold_starts += 1;
+            self.fn_counters_mut(func).cold_starts += 1;
             return InvokeOutcome::ColdStart { cid, ready_at };
         }
         self.counters.capacity_queued += 1;
-        self.fcfs.push_back(req);
+        self.fcfs.push_back((req, func));
         InvokeOutcome::AtCapacity
     }
 
-    fn spawn(&mut self, now: Micros, ready_at: Micros, pending: Option<RequestId>) -> ContainerId {
+    /// Evict idle containers of *other* functions (best reclaim score
+    /// first, log-safe only) until a container of `func` fits. Returns
+    /// whether room was made. Never fires in a single-tenant run: any
+    /// idle container there would have warm-served the request instead.
+    fn evict_for(&mut self, func: FunctionId, now: Micros) -> bool {
+        loop {
+            if self.can_admit(func) {
+                return true;
+            }
+            let victim = self
+                .containers
+                .values()
+                .filter(|c| c.is_idle() && c.func != func && self.log.all_completed(c.id))
+                .map(|c| (c.reclaim_score(now), c.id))
+                .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(b.1.cmp(&a.1)))
+                .map(|(_, id)| id);
+            let Some(vid) = victim else { return false };
+            let vfunc = self.containers[&vid].func;
+            self.remove(vid, now);
+            self.counters.evictions += 1;
+            self.fn_counters_mut(vfunc).evictions += 1;
+        }
+    }
+
+    fn spawn(
+        &mut self,
+        func: FunctionId,
+        now: Micros,
+        ready_at: Micros,
+        pending: Option<RequestId>,
+    ) -> ContainerId {
         let cid = self.next_cid;
         self.next_cid += 1;
         self.spawned += 1;
+        self.mem_used += self.registry.get(func).mem_mib;
         self.containers
-            .insert(cid, Container::cold(cid, now, ready_at, pending));
+            .insert(cid, Container::cold(cid, func, now, ready_at, pending));
         cid
     }
 
-    /// Controller prewarm (Listing 1, forcePrewarm=true): start one unbound
-    /// cold container. Returns None (and counts the rejection) at capacity.
+    /// Controller prewarm (Listing 1, forcePrewarm=true) for function 0.
     pub fn prewarm_one(&mut self, now: Micros) -> Option<(ContainerId, Micros)> {
-        if self.total() >= self.cfg.resource_cap() {
+        self.prewarm_for(0, now)
+    }
+
+    /// Controller prewarm for one function: start one unbound cold
+    /// container of `func`. Returns None (and counts the rejection) when
+    /// the function does not fit; prewarms never evict live warm state.
+    pub fn prewarm_for(&mut self, func: FunctionId, now: Micros) -> Option<(ContainerId, Micros)> {
+        if !self.can_admit(func) {
             self.counters.prewarms_rejected += 1;
             return None;
         }
-        let ready_at = now + self.jitter(self.cfg.l_cold);
-        let cid = self.spawn(now, ready_at, None);
+        let l_cold = self.profile(func).l_cold;
+        let ready_at = now + self.jitter(l_cold);
+        let cid = self.spawn(func, now, ready_at, None);
         self.counters.prewarms_started += 1;
         Some((cid, ready_at))
     }
 
+    /// Pop the oldest FCFS backlog request of `func` (FIFO within the
+    /// function; foreign requests keep their positions).
+    fn pop_fcfs(&mut self, func: FunctionId) -> Option<RequestId> {
+        let idx = self.fcfs.iter().position(|&(_, f)| f == func)?;
+        self.fcfs.remove(idx).map(|(req, _)| req)
+    }
+
     /// Cold init finished (ContainerReady event). Binds the triggering
-    /// request, else the FCFS backlog head, else goes idle.
+    /// request, else the oldest same-function backlog request, else goes
+    /// idle — unless the backlog holds only foreign functions, in which
+    /// case the container is recycled for the oldest waiter (see
+    /// [`ReadyOutcome::Respawned`]): without it a pool full of
+    /// wrong-function prewarms could strand the backlog forever.
     pub fn container_ready(&mut self, cid: ContainerId, now: Micros) -> ReadyOutcome {
-        let pending = {
+        let (pending, func) = {
             let c = self
                 .containers
                 .get_mut(&cid)
                 .expect("ready event for unknown container");
-            c.finish_cold_start(now)
+            let f = c.func;
+            (c.finish_cold_start(now), f)
         };
-        let next = pending.or_else(|| self.fcfs.pop_front());
+        let next = pending.or_else(|| self.pop_fcfs(func));
         match next {
             Some(request) => {
-                let done_at = now + self.jitter(self.cfg.l_warm);
+                let l_warm = self.profile(func).l_warm;
+                let done_at = now + self.jitter(l_warm);
                 let c = self.containers.get_mut(&cid).unwrap();
                 c.start_execution(request, now, done_at);
                 self.log.record_assignment(cid, request);
                 ReadyOutcome::Started { request, done_at }
             }
-            None => ReadyOutcome::Idle,
+            None => {
+                if !self.fcfs.is_empty() {
+                    if let Some((req, ncid, ready_at)) = self.respawn_for_backlog(cid, now) {
+                        return ReadyOutcome::Respawned {
+                            req,
+                            cid: ncid,
+                            ready_at,
+                        };
+                    }
+                }
+                ReadyOutcome::Idle
+            }
         }
     }
 
-    /// Execution finished (ExecDone event). Acks the activation and lets the
-    /// FCFS backlog immediately reuse the now-idle container.
+    /// Execution finished (ExecDone event). Acks the activation and lets
+    /// the oldest same-function backlog request immediately reuse the
+    /// container; a backlog of only foreign functions recycles it.
     pub fn exec_complete(&mut self, cid: ContainerId, now: Micros) -> CompleteOutcome {
-        let completed = {
+        let (completed, func) = {
             let c = self
                 .containers
                 .get_mut(&cid)
                 .expect("completion for unknown container");
-            c.finish_execution(now)
+            let f = c.func;
+            (c.finish_execution(now), f)
         };
         self.log.record_ack(cid, completed, now);
-        let next = self.fcfs.pop_front().map(|req| {
-            let done_at = now + self.jitter(self.cfg.l_warm);
+        let next = self.pop_fcfs(func).map(|req| {
+            let l_warm = self.profile(func).l_warm;
+            let done_at = now + self.jitter(l_warm);
             let c = self.containers.get_mut(&cid).unwrap();
             c.start_execution(req, now, done_at);
             self.log.record_assignment(cid, req);
             (req, done_at)
         });
-        CompleteOutcome { completed, next }
+        let respawn = if next.is_none() && !self.fcfs.is_empty() {
+            self.respawn_for_backlog(cid, now)
+        } else {
+            None
+        };
+        CompleteOutcome {
+            completed,
+            next,
+            respawn,
+        }
+    }
+
+    /// The FCFS backlog holds only requests this idle container cannot
+    /// serve (other functions). Evict it and cold-start a replacement
+    /// bound to the oldest waiter whose swap fits the memory ledger
+    /// (skipping an oversized head so it cannot starve feasible waiters
+    /// behind it), provided the activation log clears the container for
+    /// removal. Returns `(waiter, new container, ready time)`.
+    fn respawn_for_backlog(
+        &mut self,
+        cid: ContainerId,
+        now: Micros,
+    ) -> Option<(RequestId, ContainerId, Micros)> {
+        let (vfunc, freed) = {
+            let c = self.containers.get(&cid)?;
+            if !c.is_idle() || !self.log.all_completed(cid) {
+                return None;
+            }
+            (c.func, self.registry.get(c.func).mem_mib)
+        };
+        let budget = self.cfg.node_mem_mib;
+        let after_evict = self.mem_used.saturating_sub(freed);
+        let idx = self
+            .fcfs
+            .iter()
+            .position(|&(_, f)| after_evict + self.registry.get(f).mem_mib <= budget)?;
+        let (req, func) = self.fcfs[idx];
+        self.remove(cid, now);
+        self.counters.evictions += 1;
+        self.fn_counters_mut(vfunc).evictions += 1;
+        self.fcfs.remove(idx);
+        let l_cold = self.profile(func).l_cold;
+        let ready_at = now + self.jitter(l_cold);
+        let ncid = self.spawn(func, now, ready_at, Some(req));
+        self.counters.cold_starts += 1;
+        self.fn_counters_mut(func).cold_starts += 1;
+        Some((req, ncid, ready_at))
     }
 
     // ---- reclaim (Algorithm 2) ----------------------------------------------
@@ -309,7 +574,16 @@ impl Platform {
         reclaimed
     }
 
-    /// Keep-alive check for one container (scheduled at last_used+keep_alive).
+    /// Keep-alive window of a live container (its function's profile) —
+    /// the runner's scheduling hint for the KeepAlive event.
+    pub fn keepalive_of(&self, cid: ContainerId) -> Option<Micros> {
+        self.containers
+            .get(&cid)
+            .map(|c| self.registry.get(c.func).keep_alive)
+    }
+
+    /// Keep-alive check for one container, scheduled at `last_used +
+    /// keep_alive` of the container's function.
     pub fn keepalive_check(&mut self, cid: ContainerId, now: Micros) -> KeepAliveVerdict {
         let Some(c) = self.containers.get(&cid) else {
             return KeepAliveVerdict::NotApplicable;
@@ -317,7 +591,7 @@ impl Platform {
         if !c.is_idle() {
             return KeepAliveVerdict::NotApplicable;
         }
-        let due = c.last_used + self.cfg.keep_alive;
+        let due = c.last_used + self.registry.get(c.func).keep_alive;
         if now >= due {
             self.remove(cid, now);
             self.counters.keepalive_expiries += 1;
@@ -334,6 +608,9 @@ impl Platform {
             self.removed_keepalive.push(now.saturating_sub(c.last_used));
             self.removed_idle_total
                 .push(c.idle_accum + c.idle_for(now));
+            self.mem_used = self
+                .mem_used
+                .saturating_sub(self.registry.get(c.func).mem_mib);
             self.log.forget(cid);
             self.removed += 1;
         }
@@ -360,7 +637,8 @@ impl Platform {
             self.log.forget(cid);
             self.removed += 1;
         }
-        lost.extend(self.fcfs.drain(..));
+        self.mem_used = 0;
+        lost.extend(self.fcfs.drain(..).map(|(req, _)| req));
         lost
     }
 
@@ -635,5 +913,193 @@ mod tests {
         assert_eq!(idle.len(), 1);
         assert_eq!(idle[0], 1_000_000);
         assert_eq!(p.total(), 0);
+    }
+
+    // ---- multi-tenant semantics ---------------------------------------------
+
+    use crate::workload::tenant::{FunctionProfile, FunctionRegistry};
+
+    /// Two-function registry: fn-0 = paper profile, fn-1 = a faster
+    /// lightweight function with a short keep-alive.
+    fn two_tenant_platform(max_containers: u32) -> Platform {
+        let cfg = PlatformConfig {
+            max_containers,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let mut p0 = FunctionRegistry::single(&cfg).get(0).clone();
+        p0.share = 0.7;
+        let registry = FunctionRegistry::new(vec![
+            p0,
+            FunctionProfile {
+                id: 1,
+                name: "fn-1".into(),
+                l_warm: 100_000,           // 100 ms
+                l_cold: 2_000_000,         // 2 s
+                keep_alive: 60_000_000,    // 1 min
+                mem_mib: 128,
+                share: 0.3,
+            },
+        ]);
+        Platform::with_registry(cfg, registry, 1)
+    }
+
+    #[test]
+    fn warm_pools_are_per_function() {
+        let mut p = two_tenant_platform(64);
+        // warm up a fn-0 container
+        let InvokeOutcome::ColdStart { cid, ready_at } = p.invoke_for(1, 0, 0) else {
+            panic!()
+        };
+        let ReadyOutcome::Started { done_at, .. } = p.container_ready(cid, ready_at) else {
+            panic!()
+        };
+        p.exec_complete(cid, done_at);
+        assert_eq!(p.idle_count_for(0), 1);
+        assert_eq!(p.idle_count_for(1), 0);
+        // fn-1 cannot ride fn-0's warm container: it cold-starts with its
+        // own (shorter) init latency
+        match p.invoke_for(2, 1, done_at + 10) {
+            InvokeOutcome::ColdStart { ready_at, .. } => {
+                assert_eq!(ready_at, done_at + 10 + 2_000_000);
+            }
+            o => panic!("expected fn-1 cold start, got {o:?}"),
+        }
+        // fn-0 still warm-binds with its own exec latency
+        match p.invoke_for(3, 0, done_at + 20) {
+            InvokeOutcome::WarmStart { done_at: d, .. } => {
+                assert_eq!(d, done_at + 20 + 280_000);
+            }
+            o => panic!("expected fn-0 warm start, got {o:?}"),
+        }
+        let fc = p.fn_counters();
+        assert_eq!(fc[&0].cold_starts, 1);
+        assert_eq!(fc[&0].warm_starts, 1);
+        assert_eq!(fc[&1].cold_starts, 1);
+    }
+
+    #[test]
+    fn eviction_makes_room_at_capacity() {
+        let mut p = two_tenant_platform(1);
+        // fill the single slot with an idle fn-0 container
+        let (cid, ready_at) = p.prewarm_for(0, 0).unwrap();
+        assert_eq!(p.container_ready(cid, ready_at), ReadyOutcome::Idle);
+        // fn-1 arrives: the idle foreign container is evicted, not queued
+        match p.invoke_for(7, 1, ready_at + 10) {
+            InvokeOutcome::ColdStart { .. } => {}
+            o => panic!("expected eviction + cold start, got {o:?}"),
+        }
+        assert_eq!(p.counters.evictions, 1);
+        assert_eq!(p.fn_counters()[&0].evictions, 1);
+        assert_eq!(p.total(), 1);
+        assert_eq!(p.cold_starting_for(1), 1);
+        assert_eq!(p.spawned, p.removed + p.total() as u64);
+    }
+
+    #[test]
+    fn backlog_respawn_serves_foreign_function() {
+        let mut p = two_tenant_platform(1);
+        // fn-0 busy on the only slot; fn-1 queues at capacity
+        let InvokeOutcome::ColdStart { cid, ready_at } = p.invoke_for(1, 0, 0) else {
+            panic!()
+        };
+        let ReadyOutcome::Started { done_at, .. } = p.container_ready(cid, ready_at) else {
+            panic!()
+        };
+        assert!(matches!(p.invoke_for(2, 1, ready_at + 1), InvokeOutcome::AtCapacity));
+        assert_eq!(p.fcfs_len(), 1);
+        // completion cannot warm-reuse (wrong function): the container is
+        // recycled into a cold start bound to the fn-1 waiter
+        let out = p.exec_complete(cid, done_at);
+        assert_eq!(out.completed, 1);
+        assert!(out.next.is_none());
+        let (wreq, ncid, nready) = out.respawn.expect("respawn for the foreign waiter");
+        assert_eq!(wreq, 2);
+        assert_eq!(nready, done_at + 2_000_000);
+        assert_eq!(p.fcfs_len(), 0);
+        // the respawned container starts fn-1's request when ready
+        let ReadyOutcome::Started { request, .. } = p.container_ready(ncid, nready) else {
+            panic!()
+        };
+        assert_eq!(request, 2);
+        assert_eq!(p.counters.evictions, 1);
+    }
+
+    #[test]
+    fn ready_prewarm_recycles_for_stranded_foreign_backlog() {
+        let mut p = two_tenant_platform(1);
+        // an unbound fn-0 prewarm occupies the slot while fn-1 queues
+        let (cid, ready_at) = p.prewarm_for(0, 0).unwrap();
+        assert!(matches!(p.invoke_for(9, 1, 1), InvokeOutcome::AtCapacity));
+        // when the prewarm lands there is no fn-0 work — without the
+        // recycle the fn-1 request would be stranded forever
+        let ReadyOutcome::Respawned { req, cid: ncid, ready_at: nready } =
+            p.container_ready(cid, ready_at)
+        else {
+            panic!("expected recycle for the stranded waiter")
+        };
+        assert_eq!(req, 9);
+        let ReadyOutcome::Started { request, .. } = p.container_ready(ncid, nready) else {
+            panic!()
+        };
+        assert_eq!(request, 9);
+        assert_eq!(p.fcfs_len(), 0);
+    }
+
+    #[test]
+    fn fcfs_is_fifo_within_function() {
+        let mut p = two_tenant_platform(1);
+        // fn-0 busy; backlog = [fn-1 req 2, fn-0 req 3]
+        let InvokeOutcome::ColdStart { cid, ready_at } = p.invoke_for(1, 0, 0) else {
+            panic!()
+        };
+        let ReadyOutcome::Started { done_at, .. } = p.container_ready(cid, ready_at) else {
+            panic!()
+        };
+        assert!(matches!(p.invoke_for(2, 1, ready_at + 1), InvokeOutcome::AtCapacity));
+        assert!(matches!(p.invoke_for(3, 0, ready_at + 2), InvokeOutcome::AtCapacity));
+        // the completing fn-0 container skips the older fn-1 waiter and
+        // warm-serves its own function's request
+        let out = p.exec_complete(cid, done_at);
+        assert_eq!(out.next.unwrap().0, 3);
+        assert!(out.respawn.is_none());
+        assert_eq!(p.fcfs_len(), 1); // fn-1 still waiting
+    }
+
+    #[test]
+    fn keepalive_follows_function_profile() {
+        let mut p = two_tenant_platform(4);
+        let (c1, r1) = p.prewarm_for(1, 0).unwrap();
+        p.container_ready(c1, r1);
+        assert_eq!(p.keepalive_of(c1), Some(60_000_000));
+        // fn-1's 1-minute window, not the platform's 10-minute default
+        let due = r1 + 60_000_000;
+        match p.keepalive_check(c1, due - 1) {
+            KeepAliveVerdict::Recheck(t) => assert_eq!(t, due),
+            v => panic!("{v:?}"),
+        }
+        assert_eq!(p.keepalive_check(c1, due), KeepAliveVerdict::Expired);
+    }
+
+    #[test]
+    fn memory_ledger_bounds_heavy_tenants() {
+        // node with room for exactly one 384-MiB heavyweight
+        let cfg = PlatformConfig {
+            node_mem_mib: 512,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let mut p0 = FunctionRegistry::single(&cfg).get(0).clone();
+        p0.mem_mib = 384;
+        let registry = FunctionRegistry::new(vec![p0]);
+        let mut p = Platform::with_registry(cfg, registry, 1);
+        assert!(p.can_admit(0));
+        assert!(p.prewarm_for(0, 0).is_some());
+        assert_eq!(p.mem_used_mib(), 384);
+        // a second container would need 768 MiB total: rejected despite
+        // free replica slots
+        assert!(!p.can_admit(0));
+        assert!(p.prewarm_for(0, 0).is_none());
+        assert_eq!(p.counters.prewarms_rejected, 1);
     }
 }

@@ -6,6 +6,7 @@
 //! for the experiment reports.
 
 use crate::config::Micros;
+use crate::workload::tenant::FunctionId;
 
 /// Monotonic platform counters.
 #[derive(Debug, Clone, Copy, Default)]
@@ -17,6 +18,9 @@ pub struct Counters {
     pub reclaims: u64,
     pub keepalive_expiries: u64,
     pub capacity_queued: u64,
+    /// Idle containers of one function removed to make room for another
+    /// (multi-tenant contention; always 0 in a single-tenant run).
+    pub evictions: u64,
 }
 
 impl Counters {
@@ -32,6 +36,7 @@ impl Counters {
             reclaims,
             keepalive_expiries,
             capacity_queued,
+            evictions,
         } = *o;
         self.invocations += invocations;
         self.cold_starts += cold_starts;
@@ -40,8 +45,42 @@ impl Counters {
         self.reclaims += reclaims;
         self.keepalive_expiries += keepalive_expiries;
         self.capacity_queued += capacity_queued;
+        self.evictions += evictions;
     }
 }
+
+/// Per-function activation counters (the multi-tenant accounting the
+/// tenant experiments report alongside the aggregate [`Counters`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FnCounters {
+    pub invocations: u64,
+    /// Invocations served directly by an idle warm container.
+    pub warm_starts: u64,
+    /// Invocations (or backlog respawns) that paid this function's cold
+    /// start.
+    pub cold_starts: u64,
+    /// Containers of this function evicted to make room for another.
+    pub evictions: u64,
+}
+
+impl FnCounters {
+    /// Fold another per-function counter set in (fleet aggregation).
+    pub fn accumulate(&mut self, o: &FnCounters) {
+        let FnCounters {
+            invocations,
+            warm_starts,
+            cold_starts,
+            evictions,
+        } = *o;
+        self.invocations += invocations;
+        self.warm_starts += warm_starts;
+        self.cold_starts += cold_starts;
+        self.evictions += evictions;
+    }
+}
+
+/// Convenience alias for fleet-level per-function aggregation results.
+pub type FnCounterMap = std::collections::BTreeMap<FunctionId, FnCounters>;
 
 /// One gauge sample (scrape).
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -142,6 +142,43 @@ impl Default for FleetConfig {
     }
 }
 
+impl FleetConfig {
+    /// Total replica capacity across the fleet (per-node overrides cycled
+    /// exactly as `Fleet::new` applies them). This is what the MPC's pool
+    /// bound `w_max` scales with — the ROADMAP follow-up from the fleet
+    /// PR: a single node's 64-replica bound must not cap an 8-node
+    /// cluster's prewarm plan.
+    pub fn total_capacity(&self, pc: &PlatformConfig) -> u32 {
+        let n = self.nodes.max(1);
+        match &self.capacities {
+            Some(caps) if !caps.is_empty() => {
+                (0..n).map(|i| caps[i as usize % caps.len()]).sum()
+            }
+            _ => pc.resource_cap() * n,
+        }
+    }
+}
+
+/// Multi-tenant workload shape: how many functions share the fleet and
+/// how skewed their popularity is. The default (one function) is the
+/// legacy single-tenant system, bit-identical to the pre-tenancy code.
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    /// Number of distinct functions (1 = legacy single-tenant).
+    pub functions: u32,
+    /// Zipf popularity exponent `s` (0 = uniform shares).
+    pub zipf_s: f64,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        TenantConfig {
+            functions: 1,
+            zipf_s: 1.1,
+        }
+    }
+}
+
 /// MPC controller parameters (Sec. III; Table I weights).
 #[derive(Debug, Clone)]
 pub struct ControllerConfig {
@@ -321,6 +358,8 @@ pub struct ExperimentConfig {
     pub fleet: FleetConfig,
     pub controller: ControllerConfig,
     pub trace: TraceKind,
+    /// Multi-tenant workload shape (1 function = legacy single-tenant).
+    pub tenancy: TenantConfig,
     pub duration: Micros,
     pub seed: u64,
     /// Sampling interval for container-usage metrics (paper: 1 minute).
@@ -334,6 +373,7 @@ impl Default for ExperimentConfig {
             fleet: FleetConfig::default(),
             controller: ControllerConfig::default(),
             trace: TraceKind::AzureLike,
+            tenancy: TenantConfig::default(),
             duration: secs(3600.0), // paper: 60-minute runs
             seed: 42,
             sample_interval: secs(60.0),
@@ -349,6 +389,8 @@ impl ExperimentConfig {
             ("seed", Json::Num(self.seed as f64)),
             ("nodes", Json::Num(self.fleet.nodes as f64)),
             ("placement", Json::Str(self.fleet.placement.name().into())),
+            ("functions", Json::Num(self.tenancy.functions as f64)),
+            ("zipf_s", Json::Num(self.tenancy.zipf_s)),
             ("dt_s", Json::Num(to_secs(self.controller.dt))),
             ("horizon", Json::Num(self.controller.horizon as f64)),
             ("window", Json::Num(self.controller.window as f64)),
@@ -420,6 +462,31 @@ mod tests {
         assert!(f.capacities.is_none());
         assert_eq!(f.placement, PlacementPolicy::WarmFirst);
         assert!(f.failure.is_none());
+    }
+
+    #[test]
+    fn tenancy_defaults_to_single_function() {
+        let t = TenantConfig::default();
+        assert_eq!(t.functions, 1);
+        assert!((t.zipf_s - 1.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fleet_total_capacity_scales_and_cycles() {
+        let pc = PlatformConfig::default();
+        assert_eq!(FleetConfig::default().total_capacity(&pc), 64);
+        let f = FleetConfig {
+            nodes: 8,
+            ..Default::default()
+        };
+        assert_eq!(f.total_capacity(&pc), 512);
+        // explicit per-node overrides (cycled) win over the derived cap
+        let f = FleetConfig {
+            nodes: 3,
+            capacities: Some(vec![1, 2]),
+            ..Default::default()
+        };
+        assert_eq!(f.total_capacity(&pc), 4); // 1 + 2 + 1
     }
 
     #[test]

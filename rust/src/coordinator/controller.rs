@@ -6,6 +6,16 @@
 //! batches (Algorithm 1), guided by the optimized plan. A force-dispatch
 //! guard bounds worst-case shaping delay so a mispredicted lull can never
 //! strand requests.
+//!
+//! **Multi-tenant control.** The horizon problem stays aggregate (one
+//! queue/pool state, Eq. 3-18), but the scheduler additionally tracks a
+//! per-function arrival history and runs a per-function Fourier forecast
+//! at each control step. The plan's first-step prewarm budget `x_0` —
+//! already fleet-scaled through `w_max` — is then split across functions
+//! proportionally to their predicted demand over the cold-start lead
+//! window, and the dispatcher releases queued requests against *their
+//! function's* idle warm pool. With one function all of this collapses
+//! to the single-tenant controller bit-for-bit.
 
 use std::time::Instant;
 
@@ -14,9 +24,17 @@ use crate::cluster::RequestId;
 use crate::config::{ControllerConfig, Micros};
 use crate::coordinator::queue::RequestQueue;
 use crate::coordinator::{Ctx, Scheduler};
-use crate::forecast::Forecaster;
+use crate::forecast::{Forecaster, FourierForecaster};
 use crate::mpc::{repair, MpcInput, MpcSolver, Plan};
 use crate::util::timeseries::RingBuffer;
+use crate::workload::tenant::{split_budget, FunctionId};
+
+/// Per-function demand tracker driving the multi-tenant prewarm split.
+struct TenantDemand {
+    history: RingBuffer,
+    arrivals_this_interval: u32,
+    forecaster: FourierForecaster,
+}
 
 pub struct MpcScheduler {
     cc: ControllerConfig,
@@ -27,6 +45,9 @@ pub struct MpcScheduler {
     solver: Box<dyn MpcSolver>,
     warm_start: Vec<f64>,
     x_prev: f64,
+    /// Per-function demand trackers; empty in a single-tenant run (the
+    /// aggregate machinery is then the whole controller).
+    tenants: Vec<TenantDemand>,
     /// Last optimized plan (observability / tests).
     pub last_plan: Option<Plan>,
     /// Total force-dispatches (guard activations).
@@ -53,11 +74,31 @@ impl MpcScheduler {
             solver,
             warm_start: vec![0.0; 3 * horizon],
             x_prev: 0.0,
+            tenants: Vec::new(),
             last_plan: None,
             forced_dispatches: 0,
             emergency_replans: 0,
             last_solve_at: None,
         }
+    }
+
+    /// Enable per-function demand tracking for an `n`-function workload.
+    /// With `n <= 1` this is a no-op and the controller stays bit-identical
+    /// to the single-tenant form.
+    pub fn with_functions(mut self, n: usize) -> Self {
+        if n > 1 {
+            self.tenants = (0..n)
+                .map(|_| TenantDemand {
+                    history: RingBuffer::new(self.cc.window),
+                    arrivals_this_interval: 0,
+                    forecaster: FourierForecaster {
+                        gamma_clip: self.cc.gamma_clip,
+                        ..Default::default()
+                    },
+                })
+                .collect();
+        }
+        self
     }
 
     /// Bucket in-flight cold-start ready times into readyCold[k] (k < H).
@@ -79,16 +120,49 @@ impl MpcScheduler {
     /// objective (WaitCost and OverProvision are both positive), so the
     /// dispatcher drains whenever warm capacity frees up; the plan's s_k
     /// shapes *cold-start avoidance*, not warm serving.
+    ///
+    /// Multi-tenant form: a request is released only against *its
+    /// function's* idle pool (FIFO within each function), so a
+    /// head-of-line function with no warm capacity cannot block another
+    /// function's drain. The per-function idle counts are snapshotted
+    /// once and decremented as warm capacity is consumed — O(functions ×
+    /// containers) per drain instead of per released request. With one
+    /// function this is exactly the legacy head pop.
     fn try_dispatch(&mut self, ctx: &mut Ctx) {
-        while !self.queue.is_empty() && ctx.fleet.idle_count() > 0 {
-            let (req, _) = self.queue.pop().unwrap();
-            if !matches!(ctx.dispatch(req), InvokeOutcome::WarmStart { .. }) {
-                // a non-warm-first placement routed past the idle pool
-                // (round-robin/least-loaded can); stop draining — further
-                // releases would only add cold starts the shaping queue
-                // exists to avoid. With warm-first (and any single-node
-                // fleet) a dispatch under idle_count > 0 always warm-binds,
-                // so this preserves the legacy drain behavior exactly.
+        if self.tenants.len() <= 1 {
+            // legacy single-tenant drain, bit-identical to the pre-tenancy
+            // controller
+            while !self.queue.is_empty() && ctx.fleet.idle_count() > 0 {
+                let (req, _) = self.queue.pop().unwrap();
+                if !matches!(ctx.dispatch(req), InvokeOutcome::WarmStart { .. }) {
+                    // a non-warm-first placement routed past the idle pool
+                    // (round-robin/least-loaded can); stop draining —
+                    // further releases would only add cold starts the
+                    // shaping queue exists to avoid
+                    break;
+                }
+            }
+            return;
+        }
+        let mut idle: Vec<u32> = ctx.fleet.idle_by_function(self.tenants.len());
+        loop {
+            if self.queue.is_empty() || idle.iter().all(|&c| c == 0) {
+                break;
+            }
+            let Some((req, _)) = self.queue.pop_matching(|r, _| {
+                let f = ctx.func_of(r) as usize;
+                f < idle.len() && idle[f] > 0
+            }) else {
+                // queued work exists but none of it has a matching warm
+                // container — releasing would only add cold starts
+                break;
+            };
+            let f = ctx.func_of(req) as usize;
+            if matches!(ctx.dispatch(req), InvokeOutcome::WarmStart { .. }) {
+                idle[f] -= 1;
+            } else {
+                // placement routed past the function's idle pool; stop
+                // draining rather than manufacture cold starts
                 break;
             }
         }
@@ -111,25 +185,47 @@ impl MpcScheduler {
 
     /// Force-dispatch guard: requests older than `max_shaping_delay` go out
     /// unconditionally (a cold start now beats unbounded queueing) — unless
-    /// an in-flight prewarm is about to land, in which case waiting the
-    /// last couple of seconds strictly dominates starting a fresh cold
-    /// container (which would take the full L_cold again).
+    /// an in-flight prewarm *of that request's function* is about to land,
+    /// in which case waiting the last couple of seconds strictly dominates
+    /// starting a fresh cold container (which would take the full L_cold
+    /// again). The imminence check is per request, so one function's
+    /// landing prewarm neither holds back nor releases another function's
+    /// stale work.
     fn force_stale(&mut self, ctx: &mut Ctx) {
-        let imminent = ctx
-            .fleet
-            .cold_ready_times()
-            .into_iter()
-            .min()
-            .is_some_and(|t| t.saturating_sub(ctx.now) < crate::config::secs(3.0));
-        if imminent {
+        let now = ctx.now;
+        let guard = self.cc.max_shaping_delay;
+        // fast path: shaping rarely exceeds the guard, and stale requests
+        // form a FIFO prefix — if the head is fresh, everything is
+        if !self
+            .queue
+            .oldest_age(now)
+            .is_some_and(|age| age > guard)
+        {
             return;
         }
-        while self
-            .queue
-            .oldest_age(ctx.now)
-            .is_some_and(|age| age > self.cc.max_shaping_delay)
-        {
-            let (req, _) = self.queue.pop().unwrap();
+        // per-function imminence, computed once per call (as the legacy
+        // single-tenant guard did): a cold start launched by a forced
+        // dispatch below lands a full L_cold away, far outside the 3 s
+        // window, so the verdicts cannot change mid-drain
+        let nf = self.tenants.len().max(1);
+        let imminent: Vec<bool> = (0..nf)
+            .map(|f| {
+                ctx.fleet
+                    .cold_ready_times_for(f as FunctionId)
+                    .into_iter()
+                    .min()
+                    .is_some_and(|t| t.saturating_sub(now) < crate::config::secs(3.0))
+            })
+            .collect();
+        loop {
+            let popped = self.queue.pop_matching(|req, arrival| {
+                now.saturating_sub(arrival) > guard
+                    && !imminent
+                        .get(ctx.func_of(req) as usize)
+                        .copied()
+                        .unwrap_or(false)
+            });
+            let Some((req, _)) = popped else { break };
             self.forced_dispatches += 1;
             ctx.dispatch(req);
         }
@@ -138,7 +234,8 @@ impl MpcScheduler {
     /// The control cycle (Fig. 3): forecast → optimize → actuate step 0.
     fn replan(&mut self, ctx: &mut Ctx) {
         self.last_solve_at = Some(ctx.now);
-        // 1. forecast over the horizon
+        // 1. forecast over the horizon (aggregate + per-function demand
+        // shares, both inside the reported forecast overhead)
         let pad = self.history.recent_mean(self.cc.window);
         let hist = self.history.to_padded_vec(pad);
         let t0 = Instant::now();
@@ -146,6 +243,11 @@ impl MpcScheduler {
         // the open interval's arrivals are demand the closed-bin history
         // cannot see yet — fold them into the first forecast step
         lam[0] += self.arrivals_this_interval as f64;
+        let shares = if self.tenants.len() > 1 {
+            Some(self.tenant_shares())
+        } else {
+            None
+        };
         let forecast_ns = t0.elapsed().as_nanos() as f64;
 
         // 2. optimize
@@ -173,9 +275,21 @@ impl MpcScheduler {
         self.warm_start = plan.shifted_warm_start();
         self.x_prev = x0 as f64;
 
-        // 3. actuate only the first step (receding horizon)
+        // 3. actuate only the first step (receding horizon); the prewarm
+        // budget lands per-function in a multi-tenant run
         if x0 > 0 {
-            ctx.prewarm(x0);
+            match &shares {
+                Some(sh) => {
+                    for (f, n) in split_budget(sh, x0).into_iter().enumerate() {
+                        if n > 0 {
+                            ctx.prewarm_for(f as FunctionId, n);
+                        }
+                    }
+                }
+                None => {
+                    ctx.prewarm(x0);
+                }
+            }
         } else if r0 > 0 {
             ctx.reclaim(r0);
         }
@@ -184,11 +298,39 @@ impl MpcScheduler {
         self.try_dispatch(ctx);
         self.force_stale(ctx);
     }
+
+    /// Per-function demand over the cold-start lead window (one Fourier
+    /// forecast per function, same lead as IceBreaker's sizing) — the
+    /// shares the plan's first-step prewarm budget `x_0` is split by,
+    /// via the largest-remainder method so the budget is conserved
+    /// exactly.
+    fn tenant_shares(&mut self) -> Vec<f64> {
+        let lead = self.cc.cold_steps + 2;
+        let horizon = self.cc.horizon;
+        let window = self.cc.window;
+        self.tenants
+            .iter_mut()
+            .map(|t| {
+                let pad = t.history.recent_mean(window);
+                let hist = t.history.to_padded_vec(pad);
+                let lam = t.forecaster.forecast(&hist, horizon);
+                let demand: f64 =
+                    lam.iter().take(lead).sum::<f64>() + t.arrivals_this_interval as f64;
+                demand.max(0.0)
+            })
+            .collect()
+    }
 }
 
 impl Scheduler for MpcScheduler {
     fn on_arrival(&mut self, req: RequestId, ctx: &mut Ctx) {
         self.arrivals_this_interval += 1;
+        if !self.tenants.is_empty() {
+            let f = ctx.func_of(req) as usize;
+            if let Some(t) = self.tenants.get_mut(f) {
+                t.arrivals_this_interval += 1;
+            }
+        }
         self.queue.push(req, ctx.now);
         // serve immediately if a warm container is free — shaping never
         // delays needlessly
@@ -203,6 +345,10 @@ impl Scheduler for MpcScheduler {
         // close the interval's arrival bin, then run the control cycle
         self.history.push(self.arrivals_this_interval as f64);
         self.arrivals_this_interval = 0;
+        for t in &mut self.tenants {
+            t.history.push(t.arrivals_this_interval as f64);
+            t.arrivals_this_interval = 0;
+        }
         self.replan(ctx);
     }
     fn on_idle_capacity(&mut self, ctx: &mut Ctx) {

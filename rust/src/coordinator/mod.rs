@@ -18,6 +18,7 @@ use crate::cluster::RequestId;
 use crate::config::{ExperimentConfig, Micros};
 use crate::metrics::Recorder;
 use crate::simulator::EventQueue;
+use crate::workload::tenant::FunctionId;
 
 /// Simulation events shared by the runner and the policies. Container
 /// events carry the node they live on.
@@ -51,14 +52,22 @@ pub struct Ctx<'a> {
 }
 
 impl Ctx<'_> {
+    /// Function of a request, as recorded at arrival (function 0 when the
+    /// workload is single-tenant).
+    pub fn func_of(&self, req: RequestId) -> FunctionId {
+        self.recorder.func_of(req)
+    }
+
     /// Dispatch actuator: submit `req` to the fleet (Algorithm 1's
-    /// `submitRequestAsync`); the placement layer picks the node.
-    /// Schedules the follow-up events and records dispatch/cold metadata.
-    /// Returns the outcome so shaping policies can see whether placement
-    /// actually consumed warm capacity.
+    /// `submitRequestAsync`) under the function recorded at arrival; the
+    /// placement layer picks the node for that function. Schedules the
+    /// follow-up events and records dispatch/cold metadata. Returns the
+    /// outcome so shaping policies can see whether placement actually
+    /// consumed warm capacity.
     pub fn dispatch(&mut self, req: RequestId) -> InvokeOutcome {
         self.recorder.on_dispatch(req, self.now);
-        let (node, outcome) = self.fleet.invoke(req, self.now);
+        let func = self.recorder.func_of(req);
+        let (node, outcome) = self.fleet.invoke_for(req, func, self.now);
         match outcome {
             InvokeOutcome::WarmStart { cid, done_at } => {
                 self.events.push(done_at, Ev::Done(node, cid));
@@ -75,13 +84,19 @@ impl Ctx<'_> {
         outcome
     }
 
-    /// Prewarm actuator (Listing 1): launch up to `n` unbound cold
-    /// containers, each on the least-provisioned node; returns how many
-    /// actually started.
+    /// Prewarm actuator (Listing 1) for function 0 — the single-tenant
+    /// form every pre-tenancy policy used.
     pub fn prewarm(&mut self, n: u32) -> u32 {
+        self.prewarm_for(0, n)
+    }
+
+    /// Prewarm actuator for one function: launch up to `n` unbound cold
+    /// containers of `func`, each on the node least provisioned for it;
+    /// returns how many actually started.
+    pub fn prewarm_for(&mut self, func: FunctionId, n: u32) -> u32 {
         let mut started = 0;
         for _ in 0..n {
-            match self.fleet.prewarm_one(self.now) {
+            match self.fleet.prewarm_for(func, self.now) {
                 Some((node, cid, ready_at)) => {
                     self.events.push(ready_at, Ev::Ready(node, cid));
                     started += 1;
@@ -99,12 +114,15 @@ impl Ctx<'_> {
         self.fleet.try_reclaim(n, self.now).len() as u32
     }
 
-    /// Schedule the keep-alive check for a container that just went idle.
+    /// Schedule the keep-alive check for a container that just went idle,
+    /// at its function's keep-alive window (the platform default when the
+    /// container is already gone).
     pub fn schedule_keepalive(&mut self, node: NodeId, cid: ContainerId) {
-        self.events.push(
-            self.now + self.cfg.platform.keep_alive,
-            Ev::KeepAlive(node, cid),
-        );
+        let ka = self
+            .fleet
+            .keepalive_of(node, cid)
+            .unwrap_or(self.cfg.platform.keep_alive);
+        self.events.push(self.now + ka, Ev::KeepAlive(node, cid));
     }
 }
 

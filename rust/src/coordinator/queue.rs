@@ -45,6 +45,24 @@ impl RequestQueue {
         item
     }
 
+    /// Pop the oldest request satisfying `pred(request, arrival)` (FIFO
+    /// within the matching subset) — the multi-tenant dispatcher
+    /// releases the oldest request whose *function* has idle warm
+    /// capacity, so a head-of-line function without capacity cannot
+    /// block the others; the force-dispatch guard uses the arrival to
+    /// select only stale requests.
+    pub fn pop_matching<F: Fn(RequestId, Micros) -> bool>(
+        &mut self,
+        pred: F,
+    ) -> Option<(RequestId, Micros)> {
+        let idx = self.q.iter().position(|&(req, at)| pred(req, at))?;
+        let item = self.q.remove(idx);
+        if item.is_some() {
+            self.popped += 1;
+        }
+        item
+    }
+
     /// Pop up to `n` oldest requests.
     pub fn pop_batch(&mut self, n: usize) -> Vec<(RequestId, Micros)> {
         let take = n.min(self.q.len());
@@ -83,6 +101,24 @@ mod tests {
         assert_eq!(q.popped, 4);
         assert_eq!(q.len(), 6);
         assert_eq!(q.enqueued - q.popped, q.len() as u64);
+    }
+
+    #[test]
+    fn pop_matching_keeps_fifo_within_subset() {
+        let mut q = RequestQueue::new();
+        for (req, t) in [(10, 1), (11, 2), (12, 3), (13, 4)] {
+            q.push(req, t);
+        }
+        // pop the oldest even request, then the next
+        assert_eq!(q.pop_matching(|r, _| r % 2 == 0), Some((10, 1)));
+        assert_eq!(q.pop_matching(|r, _| r % 2 == 0), Some((12, 3)));
+        assert_eq!(q.pop_matching(|r, _| r % 2 == 0), None);
+        // the arrival timestamp is visible to the predicate
+        assert_eq!(q.pop_matching(|_, at| at >= 4), Some((13, 4)));
+        // the skipped-over request kept its place
+        assert_eq!(q.pop(), Some((11, 2)));
+        assert!(q.is_empty());
+        assert_eq!(q.popped, 4);
     }
 
     #[test]

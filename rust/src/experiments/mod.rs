@@ -8,5 +8,6 @@ pub mod fig4;
 pub mod fig5_7;
 pub mod fig8;
 pub mod runner;
+pub mod tenant;
 
-pub use runner::{make_scheduler, run_experiment, run_with_scheduler};
+pub use runner::{make_scheduler, run_experiment, run_tenant, run_with_scheduler};

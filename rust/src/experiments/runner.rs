@@ -19,7 +19,7 @@ use crate::forecast::FourierForecaster;
 use crate::metrics::{Recorder, RunReport};
 use crate::mpc::RustSolver;
 use crate::simulator::EventQueue;
-use crate::workload::Trace;
+use crate::workload::{TenantWorkload, Trace};
 
 /// Post-duration grace for in-flight work (forced dispatch + cold start +
 /// execution all fit comfortably).
@@ -28,28 +28,42 @@ pub fn grace() -> Micros {
 }
 
 /// Build the default (in-process solver) scheduler for a policy.
+///
+/// Two config-derived adjustments happen here: the MPC's planning pool
+/// bound `w_max` scales with the fleet's total capacity (the ROADMAP
+/// `w_max × nodes` follow-up — exactly 1× for the legacy single node,
+/// and 1× in capacity-preserving sweeps where a fixed total is split
+/// across nodes), and both proactive policies learn the workload's
+/// function count for their per-function prewarm splits.
 pub fn make_scheduler(cfg: &ExperimentConfig, policy: Policy) -> Box<dyn Scheduler> {
+    let mut cc = cfg.controller.clone();
+    let scale =
+        cfg.fleet.total_capacity(&cfg.platform) as f64 / cfg.platform.resource_cap().max(1) as f64;
+    cc.weights.w_max *= scale;
+    let functions = cfg.tenancy.functions as usize;
     match policy {
         Policy::OpenWhisk => Box::new(OpenWhiskDefault),
-        Policy::IceBreaker => Box::new(IceBreaker::new(
-            cfg.controller.clone(),
-            Box::new(FourierForecaster {
-                gamma_clip: cfg.controller.gamma_clip,
-                ..Default::default()
-            }),
-        )),
-        Policy::Mpc => Box::new(MpcScheduler::new(
-            cfg.controller.clone(),
-            Box::new(FourierForecaster {
-                gamma_clip: cfg.controller.gamma_clip,
-                ..Default::default()
-            }),
-            Box::new(RustSolver::new(
-                cfg.controller.weights,
-                cfg.controller.pgd_iters,
-                cfg.controller.cold_steps,
-            )),
-        )),
+        Policy::IceBreaker => Box::new(
+            IceBreaker::new(
+                cc.clone(),
+                Box::new(FourierForecaster {
+                    gamma_clip: cc.gamma_clip,
+                    ..Default::default()
+                }),
+            )
+            .with_functions(functions),
+        ),
+        Policy::Mpc => Box::new(
+            MpcScheduler::new(
+                cc.clone(),
+                Box::new(FourierForecaster {
+                    gamma_clip: cc.gamma_clip,
+                    ..Default::default()
+                }),
+                Box::new(RustSolver::new(cc.weights, cc.pgd_iters, cc.cold_steps)),
+            )
+            .with_functions(functions),
+        ),
     }
 }
 
@@ -61,16 +75,39 @@ pub fn run_experiment(cfg: &ExperimentConfig, policy: Policy, trace: &Trace) -> 
 /// Run an explicit scheduler instance (e.g. HLO-backed) on `trace`.
 pub fn run_with_scheduler(
     cfg: &ExperimentConfig,
-    mut sched: Box<dyn Scheduler>,
+    sched: Box<dyn Scheduler>,
     trace: &Trace,
+) -> RunReport {
+    run_tenant_with_scheduler(cfg, sched, &TenantWorkload::single(trace, &cfg.platform))
+}
+
+/// Run `policy` on a multi-tenant workload under `cfg`. Per-function
+/// P50/P99 come back in `RunReport::per_function`; set
+/// `cfg.tenancy.functions` to the workload's function count so the
+/// proactive policies split their prewarm budgets per function.
+pub fn run_tenant(cfg: &ExperimentConfig, policy: Policy, workload: &TenantWorkload) -> RunReport {
+    run_tenant_with_scheduler(cfg, make_scheduler(cfg, policy), workload)
+}
+
+/// Run an explicit scheduler on a multi-tenant workload — the shared
+/// event loop every experiment path funnels through.
+pub fn run_tenant_with_scheduler(
+    cfg: &ExperimentConfig,
+    mut sched: Box<dyn Scheduler>,
+    workload: &TenantWorkload,
 ) -> RunReport {
     // the legacy single-platform seed; node 0 receives it unchanged so a
     // one-node fleet reproduces the pre-fleet metrics exactly
-    let mut fleet = Fleet::new(&cfg.fleet, &cfg.platform, cfg.seed ^ 0x9_1A7F0);
+    let mut fleet = Fleet::with_registry(
+        &cfg.fleet,
+        &cfg.platform,
+        &workload.registry,
+        cfg.seed ^ 0x9_1A7F0,
+    );
     let mut events: EventQueue<Ev> = EventQueue::new();
-    let mut recorder = Recorder::new(trace.len());
+    let mut recorder = Recorder::new(workload.len());
 
-    for (i, &t) in trace.arrivals.iter().enumerate() {
+    for (i, &t) in workload.arrivals.iter().enumerate() {
         events.push(t, Ev::Arrival(i as u64));
     }
     if let Some(dt) = sched.tick_interval() {
@@ -87,7 +124,7 @@ pub fn run_with_scheduler(
         let now = s.time;
         match s.event {
             Ev::Arrival(req) => {
-                recorder.on_arrival(req, now);
+                recorder.on_arrival_for(req, now, workload.func_of(req));
                 let mut ctx = Ctx {
                     now,
                     fleet: &mut fleet,
@@ -112,14 +149,31 @@ pub fn run_with_scheduler(
                     ctx.schedule_keepalive(node, cid);
                     sched.on_idle_capacity(&mut ctx);
                 }
+                Some(ReadyOutcome::Respawned { req, cid: ncid, ready_at }) => {
+                    // multi-tenant recycle: the container was traded for a
+                    // cold start bound to a stranded foreign-function
+                    // waiter, which therefore pays that cold start
+                    recorder.on_cold(req);
+                    events.push(ready_at, Ev::Ready(node, ncid));
+                }
                 None => {} // node went offline; stale event
             },
             Ev::Done(node, cid) => match fleet.exec_complete(node, cid, now) {
-                Some(CompleteOutcome { completed, next }) => {
+                Some(CompleteOutcome {
+                    completed,
+                    next,
+                    respawn,
+                }) => {
                     recorder.on_complete(completed, now);
-                    match next {
-                        Some((_req, done_at)) => events.push(done_at, Ev::Done(node, cid)),
-                        None => {
+                    match (next, respawn) {
+                        (Some((_req, done_at)), _) => {
+                            events.push(done_at, Ev::Done(node, cid))
+                        }
+                        (None, Some((rreq, ncid, ready_at))) => {
+                            recorder.on_cold(rreq);
+                            events.push(ready_at, Ev::Ready(node, ncid));
+                        }
+                        (None, None) => {
                             let mut ctx = Ctx {
                                 now,
                                 fleet: &mut fleet,

@@ -1,0 +1,108 @@
+//! Multi-tenant experiment driver (the `tenant-sweep` CLI subcommand and
+//! the fig10 bench target): one shared N-function workload, every policy
+//! run against it, aggregate and per-function latency side by side.
+//!
+//! The scenario the paper's headline P99 claim lives in: functions with
+//! heavy-tailed popularity contend for one fleet's warm capacity, so the
+//! tail functions pay cold starts under reactive scheduling while the
+//! MPC's shaping + per-function prewarm split absorbs them.
+
+use crate::config::{secs, ExperimentConfig, FleetConfig, Policy, TenantConfig, TraceKind};
+use crate::experiments::runner::run_tenant;
+use crate::metrics::RunReport;
+use crate::workload::TenantWorkload;
+
+/// Results of one tenant sweep cell set: the workload plus one report per
+/// policy, in [`TenantMatrix::POLICIES`] order.
+#[derive(Debug)]
+pub struct TenantMatrix {
+    pub workload: TenantWorkload,
+    pub reports: Vec<RunReport>,
+}
+
+impl TenantMatrix {
+    pub const POLICIES: [Policy; 3] = [Policy::OpenWhisk, Policy::IceBreaker, Policy::Mpc];
+
+    pub fn report(&self, policy: Policy) -> &RunReport {
+        let idx = Self::POLICIES
+            .iter()
+            .position(|&p| p == policy)
+            .expect("policy in matrix");
+        &self.reports[idx]
+    }
+}
+
+/// Run every policy against one generated `functions`-tenant workload.
+/// Cells run on their own threads (the workload is shared read-only), and
+/// each derives its inputs only from the config, so results are identical
+/// to a serial run.
+pub fn run_tenant_matrix(
+    kind: TraceKind,
+    duration_s: f64,
+    seed: u64,
+    functions: u32,
+    zipf_s: f64,
+    fleet: &FleetConfig,
+) -> TenantMatrix {
+    let cfg = ExperimentConfig {
+        trace: kind,
+        duration: secs(duration_s),
+        seed,
+        fleet: fleet.clone(),
+        tenancy: TenantConfig {
+            functions,
+            zipf_s,
+        },
+        ..Default::default()
+    };
+    let workload = TenantWorkload::generate(
+        kind,
+        cfg.duration,
+        seed,
+        functions,
+        zipf_s,
+        &cfg.platform,
+    );
+    let mut slots: Vec<Option<RunReport>> = TenantMatrix::POLICIES.iter().map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (i, policy) in TenantMatrix::POLICIES.into_iter().enumerate() {
+            let cfg = &cfg;
+            let workload = &workload;
+            handles.push((i, s.spawn(move || run_tenant(cfg, policy, workload))));
+        }
+        for (i, h) in handles {
+            slots[i] = Some(h.join().expect("tenant cell panicked"));
+        }
+    });
+    TenantMatrix {
+        workload,
+        reports: slots.into_iter().map(|r| r.expect("cell ran")).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_runs_all_policies_on_a_shared_workload() {
+        let m = run_tenant_matrix(
+            TraceKind::SyntheticBursty,
+            300.0,
+            7,
+            4,
+            1.1,
+            &FleetConfig::default(),
+        );
+        assert_eq!(m.reports.len(), 3);
+        let n = m.workload.len();
+        for r in &m.reports {
+            assert_eq!(r.dropped, 0, "{}: {r:?}", r.policy);
+            assert_eq!(r.completed, n, "{}", r.policy);
+            assert!(!r.per_function.is_empty(), "{}", r.policy);
+        }
+        assert_eq!(m.report(Policy::Mpc).policy, "mpc");
+        assert_eq!(m.report(Policy::OpenWhisk).policy, "openwhisk");
+    }
+}

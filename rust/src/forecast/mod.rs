@@ -1,10 +1,24 @@
 //! Invocation forecasting (Sec. III-A): the Fourier predictor (Eq. 1-2),
 //! the ARIMA baseline (Fig. 4), and error metrics.
 //!
+//! # Math-to-code mapping (paper Sec. III-A)
+//!
+//! Given the last `W` per-interval invocation counts, the predictor
+//! extrapolates `H` future counts:
+//!
+//! | Paper | Code |
+//! |-------|------|
+//! | Eq. 1 (harmonic regression: trend + top-K DFT components) | `fourier::quadratic_trend` (normal-equations trend fit), `fourier::dft` (explicit-projection real DFT), and the stable top-K harmonic selection inside [`fourier::FourierForecaster`] |
+//! | Eq. 2 (statistical clipping at γ·σ over the trailing M samples) | the `gamma_clip`/`recent` fields of [`fourier::FourierForecaster`] |
+//! | ARIMA baseline (Fig. 4) | [`arima::ArimaForecaster`], normal equations via [`linalg::solve`] |
+//! | accuracy / WAPE / sMAPE / RMSE (Fig. 4's scores) | [`accuracy`] |
+//!
 //! The deployed forecast path executes the AOT HLO artifact through
 //! `runtime::modules::ForecastModule`; [`fourier::FourierForecaster`] is
 //! the bit-level Rust mirror used for fast simulation sweeps and
-//! differential testing.
+//! differential testing. In a multi-tenant run the MPC keeps one
+//! aggregate forecaster for the horizon problem plus one per function to
+//! split the prewarm budget by predicted demand.
 
 pub mod accuracy;
 pub mod arima;

@@ -5,10 +5,13 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the MPC scheduler and every substrate it needs:
-//!   an OpenWhisk/Kubernetes cluster analog, workload generators, the
-//!   request-shaping coordinator, baselines (OpenWhisk default policy,
-//!   IceBreaker), metrics, and the experiment drivers for every figure in
-//!   the paper's evaluation.
+//!   an OpenWhisk/Kubernetes cluster analog (multi-invoker fleet with
+//!   per-function warm pools), single- and multi-tenant workload
+//!   generators, the request-shaping coordinator, baselines (OpenWhisk
+//!   default policy, IceBreaker), metrics (aggregate and per-function),
+//!   and the experiment drivers for every figure in the paper's
+//!   evaluation. See `docs/ARCHITECTURE.md` for the layer map and the
+//!   event-loop lifecycle of one invocation.
 //! * **L2/L1 (python/, build-time only)** — the controller's compute
 //!   graphs (Fourier forecast, horizon-QP projected-gradient solver,
 //!   detector payload) authored in JAX with Pallas kernels and AOT-lowered

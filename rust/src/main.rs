@@ -1,21 +1,27 @@
 //! `mpc-serverless` CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   simulate     run one policy on one trace (optionally multi-node), print the run report
+//!   simulate     run one policy on one trace (optionally multi-node / multi-tenant), print the run report
 //!   matrix       run the full Fig. 5-7 policy x trace matrix (parallel cells)
 //!   fleet-sweep  sweep node count x placement policy at fixed total capacity
+//!   tenant-sweep run every policy on one multi-tenant workload, per-function P50/P99
 //!   forecast     Fig. 4 forecast comparison
 //!   overhead     Fig. 8 control overhead (rust mirror + HLO if available)
 //!   fig1         the 50-request motivation scenario
 //!   gen-trace    emit a workload trace as CSV to stdout
+//!
+//! The full flag-by-flag reference lives in README.md ("CLI reference").
 
 use mpc_serverless::config::{
-    secs, ExperimentConfig, FleetConfig, NodeFailure, PlacementPolicy, Policy, TraceKind,
+    secs, ExperimentConfig, FleetConfig, NodeFailure, PlacementPolicy, Policy, TenantConfig,
+    TraceKind,
 };
-use mpc_serverless::experiments::{fig1, fig4, fig5_7, fig8, run_experiment};
+use mpc_serverless::experiments::tenant::run_tenant_matrix;
+use mpc_serverless::experiments::{fig1, fig4, fig5_7, fig8, run_experiment, run_tenant};
 use mpc_serverless::util::bench::Table;
 use mpc_serverless::util::cli::{Args, Cli, CliError};
-use mpc_serverless::workload::Trace;
+use mpc_serverless::workload::tenant::parse_skew;
+use mpc_serverless::workload::{FunctionRegistry, TenantWorkload, Trace};
 
 fn main() {
     mpc_serverless::util::logging::init();
@@ -26,6 +32,7 @@ fn main() {
         "simulate" => simulate(&rest),
         "matrix" => matrix(&rest),
         "fleet-sweep" => fleet_sweep(&rest),
+        "tenant-sweep" => tenant_sweep(&rest),
         "forecast" => forecast(&rest),
         "overhead" => overhead(),
         "fig1" => {
@@ -36,7 +43,7 @@ fn main() {
         }
         "gen-trace" => gen_trace(&rest),
         _ => {
-            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
+            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
                       mpc_serverless::version());
             if cmd == "help" { 0 } else { 2 }
         }
@@ -85,6 +92,8 @@ fn simulate(rest: &[String]) -> i32 {
     let cli = common_cli("simulate", "run one policy on one workload")
         .flag("nodes", "1", "invoker node count")
         .flag("placement", "warm-first", "round-robin | least-loaded | warm-first")
+        .flag("functions", "1", "distinct functions sharing the fleet (1 = legacy single-tenant)")
+        .flag("skew", "zipf:1.1", "function popularity: zipf:<s> | uniform")
         .flag("trace-file", "", "replay an arrival CSV (overrides --trace)")
         .flag("fail-node", "", "node id to take offline mid-run (drain scenario)")
         .flag("fail-at-s", "600", "outage time for --fail-node (seconds)");
@@ -138,11 +147,25 @@ fn simulate(rest: &[String]) -> i32 {
         }
         failure = Some(NodeFailure { node, at });
     }
+    let functions = match a.get_u64("functions") {
+        Ok(n) if n >= 1 => n as u32,
+        _ => {
+            eprintln!("--functions must be a positive integer");
+            return 2;
+        }
+    };
+    let zipf_s = match parse_skew(a.get("skew")) {
+        Some(s) => s,
+        None => {
+            eprintln!("bad --skew '{}' (expected zipf:<s> or uniform)", a.get("skew"));
+            return 2;
+        }
+    };
     let mut duration = secs(a.get_f64("duration-s").unwrap_or(3600.0));
     let seed = a.get_u64("seed").unwrap_or(42);
-    let trace = if a.get("trace-file").is_empty() {
-        fig4::trace_for(trace_kind, duration, seed)
-    } else {
+    // the trace is built here only for the paths that consume it as-is;
+    // a generated multi-tenant workload builds its own traces
+    let trace: Option<Trace> = if !a.get("trace-file").is_empty() {
         let path = a.get("trace-file");
         let text = match std::fs::read_to_string(path) {
             Ok(t) => t,
@@ -152,15 +175,21 @@ fn simulate(rest: &[String]) -> i32 {
             }
         };
         match Trace::from_csv(&text) {
-            Ok(t) => t,
+            Ok(t) => Some(t),
             Err(e) => {
                 eprintln!("parsing {path}: {e}");
                 return 2;
             }
         }
+    } else if functions == 1 {
+        Some(fig4::trace_for(trace_kind, duration, seed))
+    } else {
+        None
     };
     // a replayed file defines its own span: never truncate it silently
-    duration = duration.max(trace.duration());
+    if let Some(t) = &trace {
+        duration = duration.max(t.duration());
+    }
     if let Some(f) = failure {
         // an outage scheduled past the end would silently never fire
         if f.at >= duration {
@@ -176,17 +205,157 @@ fn simulate(rest: &[String]) -> i32 {
     let cfg = ExperimentConfig {
         trace: trace_kind,
         fleet,
+        tenancy: TenantConfig {
+            functions,
+            zipf_s,
+        },
         duration,
         seed,
         ..Default::default()
     };
-    let mut r = run_experiment(&cfg, policy, &trace);
+    // --functions 1 takes the untouched legacy path: bit-identical to the
+    // pre-tenancy simulator (regression-tested)
+    let mut r = if functions > 1 {
+        let workload = match &trace {
+            // replayed arrivals keep their timing; tenants are assigned
+            // by popularity sampling
+            Some(t) => {
+                let registry = FunctionRegistry::synthesize(functions, zipf_s, &cfg.platform, seed);
+                TenantWorkload::assign(t, registry, seed)
+            }
+            None => TenantWorkload::generate(
+                trace_kind,
+                duration,
+                seed,
+                functions,
+                zipf_s,
+                &cfg.platform,
+            ),
+        };
+        run_tenant(&cfg, policy, &workload)
+    } else {
+        run_experiment(&cfg, policy, trace.as_ref().expect("single-tenant trace built above"))
+    };
     if !a.get("trace-file").is_empty() {
         // label the report with the replayed file, not the unrelated
         // --trace generator default
         r.trace = format!("file:{}", a.get("trace-file"));
     }
     println!("{}", r.to_json());
+    0
+}
+
+fn tenant_sweep(rest: &[String]) -> i32 {
+    let cli = Cli::new(
+        "tenant-sweep",
+        "every policy on one multi-tenant workload; aggregate + per-function P50/P99",
+    )
+    .flag("trace", "synthetic", "azure | synthetic")
+    .flag("duration-s", "3600", "experiment duration (seconds)")
+    .flag("seed", "42", "rng seed")
+    .flag("nodes", "1", "invoker node count")
+    .flag("placement", "warm-first", "round-robin | least-loaded | warm-first")
+    .flag("functions", "8", "distinct functions sharing the fleet")
+    .flag("skew", "zipf:1.1", "function popularity: zipf:<s> | uniform");
+    let a = parse_or_exit(&cli, rest);
+    let trace_kind = match TraceKind::parse(a.get("trace")) {
+        Some(t) => t,
+        None => {
+            eprintln!("unknown trace '{}'", a.get("trace"));
+            return 2;
+        }
+    };
+    let fleet = match fleet_from_args(&a) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let functions = match a.get_u64("functions") {
+        Ok(n) if n >= 1 => n as u32,
+        _ => {
+            eprintln!("--functions must be a positive integer");
+            return 2;
+        }
+    };
+    let zipf_s = match parse_skew(a.get("skew")) {
+        Some(s) => s,
+        None => {
+            eprintln!("bad --skew '{}' (expected zipf:<s> or uniform)", a.get("skew"));
+            return 2;
+        }
+    };
+    let duration_s = a.get_f64("duration-s").unwrap_or(3600.0);
+    let seed = a.get_u64("seed").unwrap_or(42);
+    let m = run_tenant_matrix(trace_kind, duration_s, seed, functions, zipf_s, &fleet);
+    println!(
+        "tenant-sweep: trace={} functions={} skew={} requests={} nodes={}",
+        trace_kind.name(),
+        functions,
+        a.get("skew"),
+        m.workload.len(),
+        fleet.nodes
+    );
+    let mut agg = Table::new(&[
+        "policy", "p50 ms", "p99 ms", "cold %", "evictions", "mean warm", "keep-alive s",
+    ]);
+    for r in &m.reports {
+        let cold_pct = if r.completed > 0 {
+            100.0 * r.cold_requests as f64 / r.completed as f64
+        } else {
+            0.0
+        };
+        agg.row(&[
+            r.policy.clone(),
+            format!("{:.0}", r.p50_ms),
+            format!("{:.0}", r.p99_ms),
+            format!("{cold_pct:.1}"),
+            r.counters.evictions.to_string(),
+            format!("{:.1}", r.mean_warm),
+            format!("{:.0}", r.keepalive_total_s),
+        ]);
+    }
+    agg.print();
+    // per-function tail latency, side by side (functions ordered by id =
+    // descending popularity under zipf)
+    println!("\nper-function P50/P99 (ms):");
+    let mut t = Table::new(&[
+        "func", "share %", "requests", "ow p50", "ow p99", "ib p99", "mpc p50", "mpc p99",
+    ]);
+    let ow = m.report(Policy::OpenWhisk);
+    let ib = m.report(Policy::IceBreaker);
+    let mpc = m.report(Policy::Mpc);
+    for p in m.workload.registry.profiles() {
+        let find = |r: &mpc_serverless::metrics::RunReport| {
+            r.per_function.iter().find(|f| f.func == p.id).cloned()
+        };
+        let (Some(fo), Some(fi), Some(fm)) = (find(ow), find(ib), find(mpc)) else {
+            continue; // function received no traffic
+        };
+        t.row(&[
+            p.name.clone(),
+            format!("{:.1}", p.share * 100.0),
+            (fo.completed + fo.dropped).to_string(),
+            format!("{:.0}", fo.p50_ms),
+            format!("{:.0}", fo.p99_ms),
+            format!("{:.0}", fi.p99_ms),
+            format!("{:.0}", fm.p50_ms),
+            format!("{:.0}", fm.p99_ms),
+        ]);
+    }
+    t.print();
+    let verdict = if mpc.p99_ms < ow.p99_ms && mpc.p99_ms < ib.p99_ms {
+        "MPC beats both baselines on aggregate P99"
+    } else if mpc.p99_ms < ow.p99_ms {
+        "MPC beats openwhisk on aggregate P99"
+    } else {
+        "MPC does not beat the baselines here (inspect the table)"
+    };
+    println!(
+        "\naggregate P99: mpc {:.0} ms vs openwhisk {:.0} ms vs icebreaker {:.0} ms — {}",
+        mpc.p99_ms, ow.p99_ms, ib.p99_ms, verdict
+    );
     0
 }
 

@@ -7,6 +7,7 @@ use crate::cluster::RequestId;
 use crate::config::{to_secs, Micros};
 use crate::util::json::Json;
 use crate::util::stats::Summary;
+use crate::workload::tenant::FunctionId;
 
 /// Per-request lifecycle timestamps.
 #[derive(Debug, Clone, Copy, Default)]
@@ -16,6 +17,8 @@ pub struct RequestRecord {
     pub completed: Option<Micros>,
     /// Whether this request's execution waited on a cold start.
     pub cold: bool,
+    /// Function this request invokes (0 in single-tenant runs).
+    pub func: FunctionId,
 }
 
 impl RequestRecord {
@@ -48,11 +51,25 @@ impl Recorder {
     }
 
     pub fn on_arrival(&mut self, req: RequestId, t: Micros) {
+        self.on_arrival_for(req, t, 0);
+    }
+
+    /// Record an arrival with its function (multi-tenant runs).
+    pub fn on_arrival_for(&mut self, req: RequestId, t: Micros, func: FunctionId) {
         let idx = req as usize;
         if self.requests.len() <= idx {
             self.requests.resize(idx + 1, RequestRecord::default());
         }
         self.requests[idx].arrival = t;
+        self.requests[idx].func = func;
+    }
+
+    /// Function of a recorded request (0 for unknown/single-tenant).
+    pub fn func_of(&self, req: RequestId) -> FunctionId {
+        self.requests
+            .get(req as usize)
+            .map(|r| r.func)
+            .unwrap_or(0)
     }
 
     pub fn on_dispatch(&mut self, req: RequestId, t: Micros) {
@@ -83,6 +100,21 @@ impl Recorder {
     pub fn samples(&self) -> &[GaugeSample] {
         &self.samples
     }
+}
+
+/// Per-function latency breakdown of one run (the multi-tenant view of
+/// the paper's response-time metrics; a single entry for function 0 in
+/// single-tenant runs).
+#[derive(Debug, Clone)]
+pub struct FnReport {
+    pub func: FunctionId,
+    pub completed: usize,
+    pub dropped: usize,
+    /// Completed requests whose execution waited on a cold start.
+    pub cold_requests: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
 }
 
 /// Aggregated results of one experiment run (one policy, one trace).
@@ -118,6 +150,9 @@ pub struct RunReport {
     pub solve_overhead_ms: f64,
     /// Per-request response times in seconds (for downstream analysis).
     pub response_times_s: Vec<f64>,
+    /// Per-function P50/P99 breakdown, ordered by function id (one entry
+    /// per function that received at least one request).
+    pub per_function: Vec<FnReport>,
 }
 
 impl RunReport {
@@ -134,20 +169,40 @@ impl RunReport {
         let mut qd = Summary::new();
         let mut cold_requests = 0;
         let mut dropped = 0;
+        let mut by_fn: std::collections::BTreeMap<FunctionId, (Summary, usize, u64)> =
+            std::collections::BTreeMap::new();
         for r in rec.requests() {
+            let slot = by_fn.entry(r.func).or_default();
             match r.response_time() {
                 Some(t) => {
                     rt.add(to_secs(t));
+                    slot.0.add(to_secs(t));
                     if r.cold {
                         cold_requests += 1;
+                        slot.2 += 1;
                     }
                     if let Some(d) = r.queue_delay() {
                         qd.add(to_secs(d));
                     }
                 }
-                None => dropped += 1,
+                None => {
+                    dropped += 1;
+                    slot.1 += 1;
+                }
             }
         }
+        let per_function = by_fn
+            .into_iter()
+            .map(|(func, (mut s, fdropped, fcold))| FnReport {
+                func,
+                completed: s.len(),
+                dropped: fdropped,
+                cold_requests: fcold,
+                mean_ms: s.mean() * 1e3,
+                p50_ms: s.p50() * 1e3,
+                p99_ms: s.p99() * 1e3,
+            })
+            .collect();
         let mean_warm = if rec.samples().is_empty() {
             0.0
         } else {
@@ -178,6 +233,7 @@ impl RunReport {
             forecast_overhead_ms: mean(&rec.forecast_ns) / 1e6,
             solve_overhead_ms: mean(&rec.solve_ns) / 1e6,
             response_times_s: rt.samples().to_vec(),
+            per_function,
         }
     }
 
@@ -212,6 +268,27 @@ impl RunReport {
             ("idle_total_s", Json::Num(self.idle_total_s)),
             ("forecast_overhead_ms", Json::Num(self.forecast_overhead_ms)),
             ("solve_overhead_ms", Json::Num(self.solve_overhead_ms)),
+            ("evictions", Json::Num(self.counters.evictions as f64)),
+            ("functions", Json::Num(self.per_function.len() as f64)),
+            (
+                "per_function",
+                Json::Arr(
+                    self.per_function
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("func", Json::Num(f.func as f64)),
+                                ("completed", Json::Num(f.completed as f64)),
+                                ("dropped", Json::Num(f.dropped as f64)),
+                                ("cold_requests", Json::Num(f.cold_requests as f64)),
+                                ("mean_ms", Json::Num(f.mean_ms)),
+                                ("p50_ms", Json::Num(f.p50_ms)),
+                                ("p99_ms", Json::Num(f.p99_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -236,6 +313,7 @@ mod tests {
             dispatched: Some(secs(1.5)),
             completed: Some(secs(2.0)),
             cold: false,
+            func: 0,
         };
         assert_eq!(r.response_time(), Some(secs(1.0)));
         assert_eq!(r.queue_delay(), Some(secs(0.5)));
@@ -280,6 +358,56 @@ mod tests {
         assert_eq!(report.idle_total_s, 40.0);
         // queue delays: 0, 0, 0.5 s -> mean 166.67 ms
         assert!((report.mean_queue_delay_ms - 500.0 / 3.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn per_function_breakdown_partitions_the_run() {
+        let mut rec = Recorder::new(6);
+        // fn 0: two fast requests; fn 1: one cold slow request + one drop
+        for (req, func, a, c, cold) in [
+            (0u64, 0u32, 0.0, 0.28, false),
+            (1, 0, 1.0, 1.28, false),
+            (2, 1, 2.0, 12.78, true),
+            (3, 1, 3.0, f64::NAN, false),
+        ] {
+            rec.on_arrival_for(req, secs(a), func);
+            rec.on_dispatch(req, secs(a));
+            if cold {
+                rec.on_cold(req);
+            }
+            if !c.is_nan() {
+                rec.on_complete(req, secs(c));
+            }
+        }
+        assert_eq!(rec.func_of(2), 1);
+        assert_eq!(rec.func_of(99), 0); // unknown defaults to fn 0
+        let report = RunReport::from_recorder(
+            "test",
+            "unit",
+            secs(60.0),
+            &rec,
+            Counters::default(),
+            &[],
+            &[],
+        );
+        assert_eq!(report.per_function.len(), 2);
+        let f0 = &report.per_function[0];
+        let f1 = &report.per_function[1];
+        assert_eq!((f0.func, f0.completed, f0.dropped), (0, 2, 0));
+        assert_eq!((f1.func, f1.completed, f1.dropped), (1, 1, 1));
+        assert_eq!(f1.cold_requests, 1);
+        assert!(f1.p99_ms > f0.p99_ms);
+        // partition property: per-function counts sum to the aggregate
+        let sum_completed: usize = report.per_function.iter().map(|f| f.completed).sum();
+        let sum_dropped: usize = report.per_function.iter().map(|f| f.dropped).sum();
+        assert_eq!(sum_completed, report.completed);
+        assert_eq!(sum_dropped, report.dropped);
+        // JSON surface carries the breakdown
+        let j = report.to_json();
+        assert_eq!(j.path("functions").unwrap().as_f64(), Some(2.0));
+        let arr = j.path("per_function").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].path("cold_requests").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

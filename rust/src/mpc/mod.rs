@@ -2,6 +2,35 @@
 //! feasibility repair. The deployed solve path runs the AOT HLO artifact
 //! (`runtime::modules::HloSolver`); [`solver::RustSolver`] is the
 //! in-process mirror for sweeps and differential tests.
+//!
+//! # Math-to-code mapping (paper Sec. III-B)
+//!
+//! The horizon problem optimizes, for each step `k < H`, the decision
+//! vector `z = concat(x, r, s)` — prewarms `x_k`, reclaims `r_k`, served
+//! requests `s_k`:
+//!
+//! | Paper | Code |
+//! |-------|------|
+//! | Eq. 3 (ColdDelay cost)         | `problem::cost`, the `alpha` term |
+//! | Eq. 4 (WaitCost)               | `problem::cost`, the `beta` term  |
+//! | Eq. 5 (LaunchCost)             | `problem::cost`, the `delta` term |
+//! | Eq. 6 (OverProvision)          | `problem::cost`, the `gamma` term |
+//! | Eq. 7 (ReclaimReward)          | `problem::cost`, the `eta` term   |
+//! | Eq. 8 (smoothness)             | `problem::cost`, `rho1`/`rho2` terms |
+//! | Eq. 9 (total objective J)      | [`problem::cost`]                 |
+//! | Eq. 10-11 (queue/pool dynamics)| [`problem::rollout`]              |
+//! | Eq. 12-17 (hard constraints)   | `kappa`-weighted penalties in [`problem::cost`]; box bounds in [`problem::upper_bounds`]; exact integer form in [`repair::repair`] |
+//! | Eq. 18 (x·r exclusivity)       | `rho_me` relaxation in [`problem::cost`]; exact in [`repair::repair`] |
+//! | ∇J (hand-derived adjoint)      | [`problem::grad`], differentially tested against finite differences |
+//!
+//! The PGD solver ([`solver::RustSolver`]) runs Adam-style projected
+//! gradient descent on the penalty relaxation; [`repair::repair`] then
+//! rounds the relaxed solution and walks the true integer dynamics so
+//! every actuated plan satisfies Eq. 12-18 *exactly* (checked by
+//! [`repair::verify`] in property tests). Only step 0 actuates
+//! (receding horizon); in a multi-tenant run the coordinator splits that
+//! first-step prewarm budget across functions by predicted demand, with
+//! `w_max` pre-scaled to the fleet's total capacity.
 
 pub mod problem;
 pub mod repair;

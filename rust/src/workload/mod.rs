@@ -1,11 +1,15 @@
 //! Workload generation: arrival traces for the paper's two experiment
-//! families (Sec. IV "Workload") plus the Fig. 1 motivation scenario.
+//! families (Sec. IV "Workload"), the Fig. 1 motivation scenario, and the
+//! multi-tenant function layer ([`tenant`]).
 
 pub mod azure;
 pub mod fig1;
 pub mod synthetic;
+pub mod tenant;
 
 use crate::config::Micros;
+
+pub use tenant::{FunctionId, FunctionProfile, FunctionRegistry, TenantWorkload};
 
 /// An arrival trace: sorted request arrival times (µs from experiment start).
 #[derive(Debug, Clone, Default)]
@@ -56,12 +60,27 @@ impl Trace {
         }
     }
 
-    /// Mean arrival rate in requests/second.
+    /// Mean arrival rate in requests/second over the span `[0, duration()]`.
+    ///
+    /// Convention: the observation window is taken to be `[0, last
+    /// arrival]`, so leading silence counts against the rate and a
+    /// single arrival at `t > 0` reports `1 / t` (not the degenerate 0
+    /// the pre-fix version returned). A trace whose span is zero (empty,
+    /// or only arrivals at `t == 0`) has no measurable window and
+    /// reports 0. When the enclosing experiment window is known —
+    /// trailing silence matters — prefer [`Trace::mean_rate_in`].
     pub fn mean_rate(&self) -> f64 {
-        if self.arrivals.len() < 2 {
+        self.mean_rate_in(self.duration())
+    }
+
+    /// Mean arrival rate in requests/second over an explicit observation
+    /// window (the experiment duration), robust to single-arrival traces
+    /// and leading/trailing silence. A zero window reports 0.
+    pub fn mean_rate_in(&self, window: Micros) -> f64 {
+        if self.arrivals.is_empty() || window == 0 {
             return 0.0;
         }
-        self.arrivals.len() as f64 / (self.duration() as f64 / 1e6).max(1e-9)
+        self.arrivals.len() as f64 / (window as f64 / 1e6)
     }
 
     /// Load a single-column CSV of arrival timestamps in seconds (the format
@@ -124,6 +143,21 @@ mod tests {
     fn mean_rate() {
         let t = Trace::new((0..=10).map(|i| i * 1_000_000).collect());
         assert!((t.mean_rate() - 1.1).abs() < 1e-9); // 11 requests over 10 s
+    }
+
+    #[test]
+    fn mean_rate_window_convention() {
+        // single arrival: rate over [0, t], not the degenerate 0
+        let one = Trace::new(vec![2_000_000]);
+        assert!((one.mean_rate() - 0.5).abs() < 1e-9);
+        // zero span (empty, or only t == 0 arrivals) has no window
+        assert_eq!(Trace::default().mean_rate(), 0.0);
+        assert_eq!(Trace::new(vec![0]).mean_rate(), 0.0);
+        // trailing silence: the explicit window sees it, mean_rate cannot
+        let t = Trace::new((0..10).map(|i| i * 1_000_000).collect());
+        assert!((t.mean_rate_in(20_000_000) - 0.5).abs() < 1e-9);
+        assert!((t.mean_rate() - 10.0 / 9.0).abs() < 1e-9);
+        assert_eq!(t.mean_rate_in(0), 0.0);
     }
 
     #[test]

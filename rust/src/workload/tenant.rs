@@ -1,0 +1,520 @@
+//! Multi-tenant workload layer: function identities, per-function
+//! profiles, Zipf popularity, and interleaved multi-function traces.
+//!
+//! The paper's Azure-trace experiments are inherently multi-tenant — the
+//! MPC controller forecasts *per-function* invocations and jointly
+//! optimizes prewarming and dispatch — but a single anonymous function
+//! hides warm-pool fragmentation, cross-function contention, and
+//! per-function tail latency. This module supplies the missing identity
+//! layer:
+//!
+//! * [`FunctionId`] + [`FunctionProfile`] — per-function cold/warm
+//!   latency, memory footprint, and keep-alive window;
+//! * [`FunctionRegistry`] — the deployed function set (a one-entry
+//!   registry reproduces the legacy single-tenant system exactly);
+//! * [`zipf_shares`] — Azure-style heavy-tailed popularity (Shahrad et
+//!   al., ATC'20 observe a small head of functions dominating
+//!   invocations);
+//! * [`TenantWorkload`] — per-function arrival traces interleaved into
+//!   one merged trace, with the function of every request.
+//!
+//! Determinism: everything is a pure function of `(config, seed)`. With
+//! `functions == 1` the generated workload is *bit-identical* to the
+//! legacy single-tenant trace (same generator, same seed, every request
+//! tagged function 0), which is what keeps all published figures valid.
+
+use crate::config::{secs, Micros, PlatformConfig, TraceKind};
+use crate::util::rng::Rng;
+use crate::workload::{azure, synthetic, Trace};
+
+/// Function (tenant) identifier: index into the [`FunctionRegistry`],
+/// stable for a run. Function 0 is the paper's reference function.
+pub type FunctionId = u32;
+
+/// Per-function execution profile. Function 0 always carries the paper's
+/// testbed constants; synthesized co-tenants vary around them.
+#[derive(Debug, Clone)]
+pub struct FunctionProfile {
+    pub id: FunctionId,
+    pub name: String,
+    /// Warm execution latency of this function.
+    pub l_warm: Micros,
+    /// Cold-start initialization latency of this function.
+    pub l_cold: Micros,
+    /// Keep-alive window for this function's idle containers.
+    pub keep_alive: Micros,
+    /// Memory footprint of one container of this function (MiB).
+    pub mem_mib: u32,
+    /// Popularity share in (0, 1]; shares sum to 1 across the registry.
+    pub share: f64,
+}
+
+/// The deployed function set. Cloned into every invoker node's platform
+/// so container lifecycle latencies and keep-alive windows are
+/// per-function.
+#[derive(Debug, Clone)]
+pub struct FunctionRegistry {
+    profiles: Vec<FunctionProfile>,
+}
+
+impl FunctionRegistry {
+    /// Build a registry from explicit profiles. Ids must equal their
+    /// index (the registry is an arena keyed by [`FunctionId`]).
+    pub fn new(profiles: Vec<FunctionProfile>) -> Self {
+        assert!(!profiles.is_empty(), "registry needs at least one function");
+        for (i, p) in profiles.iter().enumerate() {
+            assert_eq!(p.id as usize, i, "profile ids must be their index");
+        }
+        FunctionRegistry { profiles }
+    }
+
+    /// One-function registry mirroring the platform config exactly — the
+    /// legacy single-tenant system.
+    pub fn single(pc: &PlatformConfig) -> Self {
+        FunctionRegistry {
+            profiles: vec![FunctionProfile {
+                id: 0,
+                name: "fn-0".to_string(),
+                l_warm: pc.l_warm,
+                l_cold: pc.l_cold,
+                keep_alive: pc.keep_alive,
+                mem_mib: pc.container_mem_mib,
+                share: 1.0,
+            }],
+        }
+    }
+
+    /// Synthesize `n` functions with Zipf(`zipf_s`) popularity shares.
+    /// Function 0 keeps the paper profile; co-tenants draw deterministic
+    /// variations (exec 150-450 ms, cold start 5-14 s, memory
+    /// 128/256/384 MiB) from `seed` so every run is reproducible.
+    pub fn synthesize(n: u32, zipf_s: f64, pc: &PlatformConfig, seed: u64) -> Self {
+        let n = n.max(1);
+        if n == 1 {
+            return Self::single(pc);
+        }
+        let shares = zipf_shares(n, zipf_s);
+        let mut rng = Rng::new(seed ^ PROFILE_SALT);
+        let profiles = (0..n)
+            .map(|id| {
+                if id == 0 {
+                    let mut p = Self::single(pc).profiles.remove(0);
+                    p.share = shares[0];
+                    return p;
+                }
+                FunctionProfile {
+                    id,
+                    name: format!("fn-{id}"),
+                    l_warm: secs(rng.range_f64(0.150, 0.450)),
+                    l_cold: secs(rng.range_f64(5.0, 14.0)),
+                    keep_alive: pc.keep_alive,
+                    mem_mib: *rng_pick(&mut rng, &[128, 256, 384]),
+                    share: shares[id as usize],
+                }
+            })
+            .collect();
+        FunctionRegistry { profiles }
+    }
+
+    pub fn get(&self, f: FunctionId) -> &FunctionProfile {
+        &self.profiles[f as usize]
+    }
+
+    pub fn profiles(&self) -> &[FunctionProfile] {
+        &self.profiles
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+}
+
+const PROFILE_SALT: u64 = 0x7E4A_17F5;
+const ASSIGN_SALT: u64 = 0x2F00_CAFE;
+const TRACE_SALT: u64 = 0x51C6_D00D;
+
+fn rng_pick<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.range_usize(0, xs.len() - 1)]
+}
+
+/// Zipf popularity shares over ranks 1..=n: the rank-r function's share
+/// is ∝ 1/r^s, normalized to sum to 1. `s == 0` is uniform; the Azure
+/// trace's head-heavy invocation distribution is around s ≈ 1.
+pub fn zipf_shares(n: u32, s: f64) -> Vec<f64> {
+    let n = n.max(1);
+    let raw: Vec<f64> = (1..=n).map(|rank| (rank as f64).powf(-s)).collect();
+    let total: f64 = raw.iter().sum();
+    raw.into_iter().map(|w| w / total).collect()
+}
+
+/// Split an integer budget across functions proportionally to `shares`
+/// (largest-remainder method): nothing is lost to rounding and the
+/// result sums to `total` exactly. All-zero shares send the whole budget
+/// to function 0 (the head function is the safest default target).
+pub fn split_budget(shares: &[f64], total: u32) -> Vec<u32> {
+    if shares.is_empty() {
+        return Vec::new();
+    }
+    let sum: f64 = shares.iter().map(|s| s.max(0.0)).sum();
+    if sum <= 0.0 {
+        let mut out = vec![0u32; shares.len()];
+        out[0] = total;
+        return out;
+    }
+    let quotas: Vec<f64> = shares
+        .iter()
+        .map(|s| s.max(0.0) / sum * total as f64)
+        .collect();
+    let mut out: Vec<u32> = quotas.iter().map(|q| q.floor() as u32).collect();
+    let assigned: u32 = out.iter().sum();
+    // distribute the remainder by descending fractional part, ties to the
+    // lower (more popular) index
+    let mut frac: Vec<(f64, usize)> = quotas
+        .iter()
+        .enumerate()
+        .map(|(i, q)| (q - q.floor(), i))
+        .collect();
+    frac.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    for k in 0..(total - assigned) as usize {
+        out[frac[k % frac.len()].1] += 1;
+    }
+    out
+}
+
+/// A multi-function workload: the merged arrival sequence plus the
+/// function of every request (request ids are assigned in merged arrival
+/// order, matching the runner's convention).
+#[derive(Debug, Clone)]
+pub struct TenantWorkload {
+    pub registry: FunctionRegistry,
+    /// Merged arrival times, sorted ascending.
+    pub arrivals: Vec<Micros>,
+    /// Function of each arrival (empty ⇒ every request is function 0).
+    pub funcs: Vec<FunctionId>,
+}
+
+impl TenantWorkload {
+    /// Wrap a legacy single-tenant trace: one function (the platform
+    /// profile), every arrival tagged function 0.
+    pub fn single(trace: &Trace, pc: &PlatformConfig) -> Self {
+        TenantWorkload {
+            registry: FunctionRegistry::single(pc),
+            arrivals: trace.arrivals.clone(),
+            funcs: Vec::new(),
+        }
+    }
+
+    /// Generate an `n`-function workload for `kind`.
+    ///
+    /// * `AzureLike`: each function gets its own quasi-periodic trace
+    ///   (base rate scaled by its popularity share, independent phases
+    ///   and period drift per function), merged by arrival time —
+    ///   genuinely heterogeneous temporal structure, the case where
+    ///   per-function forecasting matters.
+    /// * `SyntheticBursty`: the aggregate burst profile of the paper is
+    ///   preserved exactly (same generator, same seed as the
+    ///   single-tenant trace) and each arrival is assigned a function by
+    ///   popularity sampling — co-occurring bursts contended across
+    ///   functions.
+    ///
+    /// With `n == 1` both arms reduce to the legacy single-tenant trace
+    /// bit-for-bit.
+    pub fn generate(
+        kind: TraceKind,
+        duration: Micros,
+        seed: u64,
+        n: u32,
+        zipf_s: f64,
+        pc: &PlatformConfig,
+    ) -> Self {
+        let registry = FunctionRegistry::synthesize(n, zipf_s, pc, seed);
+        if registry.len() == 1 {
+            return Self::single(&base_trace(kind, duration, seed), pc);
+        }
+        match kind {
+            TraceKind::AzureLike => {
+                let mut tagged: Vec<(Micros, FunctionId)> = Vec::new();
+                for p in registry.profiles() {
+                    let cfg = azure::AzureLikeConfig {
+                        base_rate: azure::AzureLikeConfig::default().base_rate * p.share,
+                        ..Default::default()
+                    };
+                    let fseed = seed ^ (p.id as u64).wrapping_mul(TRACE_SALT);
+                    let t = azure::generate(&cfg, duration, fseed);
+                    tagged.extend(t.arrivals.into_iter().map(|at| (at, p.id)));
+                }
+                tagged.sort_unstable();
+                let (arrivals, funcs) = tagged.into_iter().unzip();
+                TenantWorkload {
+                    registry,
+                    arrivals,
+                    funcs,
+                }
+            }
+            TraceKind::SyntheticBursty => {
+                let trace = base_trace(kind, duration, seed);
+                Self::assign(&trace, registry, seed)
+            }
+        }
+    }
+
+    /// Assign a function to every arrival of an existing trace by
+    /// sampling the registry's popularity shares (deterministic in
+    /// `seed`). Used for the bursty generator and for replayed
+    /// `--trace-file` workloads.
+    pub fn assign(trace: &Trace, registry: FunctionRegistry, seed: u64) -> Self {
+        if registry.len() == 1 {
+            return TenantWorkload {
+                registry,
+                arrivals: trace.arrivals.clone(),
+                funcs: Vec::new(),
+            };
+        }
+        let mut cum = Vec::with_capacity(registry.len());
+        let mut acc = 0.0;
+        for p in registry.profiles() {
+            acc += p.share;
+            cum.push(acc);
+        }
+        let mut rng = Rng::new(seed ^ ASSIGN_SALT);
+        let last = registry.len() - 1;
+        let funcs = trace
+            .arrivals
+            .iter()
+            .map(|_| {
+                let u = rng.f64() * acc;
+                // clamp guards the float edge where u rounds up to acc
+                cum.partition_point(|&c| c <= u).min(last) as FunctionId
+            })
+            .collect();
+        TenantWorkload {
+            registry,
+            arrivals: trace.arrivals.clone(),
+            funcs,
+        }
+    }
+
+    /// Function of request `req` (requests are numbered in arrival order).
+    pub fn func_of(&self, req: u64) -> FunctionId {
+        self.funcs.get(req as usize).copied().unwrap_or(0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// The merged (aggregate) trace.
+    pub fn merged(&self) -> Trace {
+        Trace {
+            arrivals: self.arrivals.clone(),
+        }
+    }
+
+    /// The arrival trace of one function.
+    pub fn per_function(&self, f: FunctionId) -> Trace {
+        Trace {
+            arrivals: self
+                .arrivals
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| self.func_of(i as u64) == f)
+                .map(|(_, &t)| t)
+                .collect(),
+        }
+    }
+}
+
+/// The aggregate trace for a kind (mirrors `experiments::fig4::trace_for`
+/// without the module cycle).
+fn base_trace(kind: TraceKind, duration: Micros, seed: u64) -> Trace {
+    match kind {
+        TraceKind::AzureLike => azure::generate(&azure::AzureLikeConfig::default(), duration, seed),
+        TraceKind::SyntheticBursty => {
+            synthetic::generate(&synthetic::SyntheticConfig::default(), duration, seed)
+        }
+    }
+}
+
+/// Parse a CLI skew spec: `uniform` or `zipf:<s>` with `s >= 0`.
+pub fn parse_skew(s: &str) -> Option<f64> {
+    if s == "uniform" {
+        return Some(0.0);
+    }
+    let v: f64 = s.strip_prefix("zipf:")?.parse().ok()?;
+    (v >= 0.0 && v.is_finite()).then_some(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    fn pc() -> PlatformConfig {
+        PlatformConfig::default()
+    }
+
+    #[test]
+    fn single_registry_mirrors_platform_config() {
+        let r = FunctionRegistry::single(&pc());
+        assert_eq!(r.len(), 1);
+        let p = r.get(0);
+        assert_eq!(p.l_warm, pc().l_warm);
+        assert_eq!(p.l_cold, pc().l_cold);
+        assert_eq!(p.keep_alive, pc().keep_alive);
+        assert_eq!(p.mem_mib, pc().container_mem_mib);
+        assert_eq!(p.share, 1.0);
+    }
+
+    #[test]
+    fn synthesized_registry_is_deterministic_and_headed_by_the_paper_profile() {
+        let a = FunctionRegistry::synthesize(6, 1.1, &pc(), 42);
+        let b = FunctionRegistry::synthesize(6, 1.1, &pc(), 42);
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.profiles().iter().zip(b.profiles()) {
+            assert_eq!(x.l_warm, y.l_warm);
+            assert_eq!(x.l_cold, y.l_cold);
+            assert_eq!(x.mem_mib, y.mem_mib);
+            assert_eq!(x.share, y.share);
+        }
+        // function 0 keeps the paper constants
+        assert_eq!(a.get(0).l_warm, pc().l_warm);
+        assert_eq!(a.get(0).l_cold, pc().l_cold);
+        // a different seed varies the co-tenants
+        let c = FunctionRegistry::synthesize(6, 1.1, &pc(), 43);
+        assert!(a
+            .profiles()
+            .iter()
+            .zip(c.profiles())
+            .skip(1)
+            .any(|(x, y)| x.l_warm != y.l_warm || x.l_cold != y.l_cold));
+    }
+
+    #[test]
+    fn zipf_shares_sum_to_one_and_decay() {
+        for s in [0.0, 0.8, 1.1, 2.0] {
+            let shares = zipf_shares(8, s);
+            assert_eq!(shares.len(), 8);
+            assert!((shares.iter().sum::<f64>() - 1.0).abs() < 1e-12, "s={s}");
+            for w in shares.windows(2) {
+                assert!(w[0] >= w[1], "shares must be non-increasing (s={s})");
+            }
+        }
+        // uniform at s = 0
+        let u = zipf_shares(4, 0.0);
+        assert!(u.iter().all(|&x| (x - 0.25).abs() < 1e-12));
+        // heavier skew concentrates the head
+        assert!(zipf_shares(8, 2.0)[0] > zipf_shares(8, 1.1)[0]);
+    }
+
+    #[test]
+    fn split_budget_conserves_total() {
+        prop_check("split_budget sums to total", 200, |g| {
+            let n = g.usize(1, 12);
+            let shares = g.vec_f64(n, 0.0, 10.0);
+            let total = g.u64(0, 200) as u32;
+            let out = split_budget(&shares, total);
+            prop_assert!(out.len() == n, "length mismatch");
+            let sum: u32 = out.iter().sum();
+            prop_assert!(sum == total, "sum {sum} != total {total}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn split_budget_follows_shares() {
+        assert_eq!(split_budget(&[3.0, 1.0], 4), vec![3, 1]);
+        assert_eq!(split_budget(&[1.0, 1.0, 1.0], 3), vec![1, 1, 1]);
+        // all-zero shares default to function 0
+        assert_eq!(split_budget(&[0.0, 0.0], 5), vec![5, 0]);
+        assert_eq!(split_budget(&[], 5), Vec::<u32>::new());
+        // largest remainder: 2.5 / 2.5 with 5 → 3 / 2 (tie to lower index)
+        assert_eq!(split_budget(&[1.0, 1.0], 5), vec![3, 2]);
+    }
+
+    #[test]
+    fn assignment_is_deterministic_by_seed() {
+        let trace = base_trace(TraceKind::SyntheticBursty, secs(600.0), 7);
+        let r = FunctionRegistry::synthesize(5, 1.1, &pc(), 7);
+        let a = TenantWorkload::assign(&trace, r.clone(), 7);
+        let b = TenantWorkload::assign(&trace, r.clone(), 7);
+        assert_eq!(a.funcs, b.funcs);
+        let c = TenantWorkload::assign(&trace, r, 8);
+        assert_ne!(a.funcs, c.funcs, "different seed must reshuffle tenants");
+        // every function id is in range
+        assert!(a.funcs.iter().all(|&f| f < 5));
+    }
+
+    #[test]
+    fn popularity_head_dominates_under_skew() {
+        let trace = base_trace(TraceKind::SyntheticBursty, secs(3600.0), 11);
+        let r = FunctionRegistry::synthesize(8, 1.1, &pc(), 11);
+        let w = TenantWorkload::assign(&trace, r, 11);
+        let f0 = w.per_function(0).len();
+        let f7 = w.per_function(7).len();
+        assert!(
+            f0 > f7,
+            "head function ({f0} arrivals) must outweigh the tail ({f7})"
+        );
+    }
+
+    #[test]
+    fn merged_equals_sum_of_per_function_traces() {
+        for kind in [TraceKind::AzureLike, TraceKind::SyntheticBursty] {
+            let w = TenantWorkload::generate(kind, secs(900.0), 13, 4, 1.1, &pc());
+            let merged = w.merged();
+            let dt = secs(60.0);
+            let merged_bins = merged.binned(dt);
+            let mut sum_bins = vec![0u32; merged_bins.len()];
+            let mut total = 0;
+            for f in 0..4 {
+                let t = w.per_function(f);
+                total += t.len();
+                for (i, b) in t.binned(dt).iter().enumerate() {
+                    sum_bins[i] += b;
+                }
+            }
+            assert_eq!(total, merged.len(), "{kind:?}: arrival count conserved");
+            assert_eq!(sum_bins, merged_bins, "{kind:?}: per-bin conservation");
+        }
+    }
+
+    #[test]
+    fn single_function_generation_is_bit_identical_to_legacy() {
+        for kind in [TraceKind::AzureLike, TraceKind::SyntheticBursty] {
+            let legacy = base_trace(kind, secs(1200.0), 42);
+            let w = TenantWorkload::generate(kind, secs(1200.0), 42, 1, 1.1, &pc());
+            assert_eq!(w.arrivals, legacy.arrivals, "{kind:?}");
+            assert!(w.funcs.is_empty());
+            assert_eq!(w.func_of(0), 0);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_by_seed() {
+        let a = TenantWorkload::generate(TraceKind::AzureLike, secs(600.0), 3, 6, 1.1, &pc());
+        let b = TenantWorkload::generate(TraceKind::AzureLike, secs(600.0), 3, 6, 1.1, &pc());
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.funcs, b.funcs);
+        let c = TenantWorkload::generate(TraceKind::AzureLike, secs(600.0), 4, 6, 1.1, &pc());
+        assert_ne!(a.arrivals, c.arrivals);
+    }
+
+    #[test]
+    fn parse_skew_specs() {
+        assert_eq!(parse_skew("uniform"), Some(0.0));
+        assert_eq!(parse_skew("zipf:1.1"), Some(1.1));
+        assert_eq!(parse_skew("zipf:0"), Some(0.0));
+        assert_eq!(parse_skew("zipf:-1"), None);
+        assert_eq!(parse_skew("zipf:"), None);
+        assert_eq!(parse_skew("pareto:2"), None);
+    }
+}

@@ -109,6 +109,78 @@ fn simulate_rejects_impossible_drain() {
 }
 
 #[test]
+fn simulate_emits_per_function_breakdown() {
+    let out = bin()
+        .args([
+            "simulate",
+            "--policy",
+            "openwhisk",
+            "--trace",
+            "synthetic",
+            "--duration-s",
+            "300",
+            "--seed",
+            "9",
+            "--functions",
+            "4",
+            "--skew",
+            "zipf:1.1",
+        ])
+        .output()
+        .expect("spawn simulate");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let report = Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap();
+    assert_eq!(report.path("dropped").and_then(Json::as_f64), Some(0.0));
+    // 300 s of the seed-9 bursty trace is non-empty (the roundtrip test
+    // above pins that), so at least the head function saw traffic
+    let n_funcs = report.path("functions").and_then(Json::as_f64).unwrap();
+    assert!((1.0..=4.0).contains(&n_funcs), "{report:?}");
+    let per_fn = report.path("per_function").unwrap().as_arr().unwrap();
+    assert_eq!(per_fn.len() as f64, n_funcs);
+    // per-function completions partition the aggregate
+    let sum: f64 = per_fn
+        .iter()
+        .map(|f| f.path("completed").and_then(Json::as_f64).unwrap())
+        .sum();
+    assert_eq!(Some(sum), report.path("completed").and_then(Json::as_f64));
+}
+
+#[test]
+fn simulate_rejects_bad_skew() {
+    let out = bin()
+        .args(["simulate", "--functions", "4", "--skew", "pareto:9"])
+        .output()
+        .expect("spawn simulate");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn tenant_sweep_runs_end_to_end() {
+    let out = bin()
+        .args([
+            "tenant-sweep",
+            "--trace",
+            "synthetic",
+            "--duration-s",
+            "180",
+            "--functions",
+            "3",
+            "--skew",
+            "zipf:1.1",
+        ])
+        .output()
+        .expect("spawn tenant-sweep");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8(out.stdout).unwrap();
+    assert!(text.contains("tenant-sweep:"), "{text}");
+    for policy in ["openwhisk", "icebreaker", "mpc"] {
+        assert!(text.contains(policy), "missing {policy} row: {text}");
+    }
+    assert!(text.contains("per-function P50/P99"), "{text}");
+    assert!(text.contains("aggregate P99"), "{text}");
+}
+
+#[test]
 fn fleet_sweep_runs_end_to_end() {
     let out = bin()
         .args([

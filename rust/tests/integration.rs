@@ -187,9 +187,15 @@ fn legacy_single_platform_openwhisk(cfg: &ExperimentConfig, trace: &Trace) -> Ru
                 ReadyOutcome::Idle => {
                     events.push(now + cfg.platform.keep_alive, LEv::KeepAlive(cid));
                 }
+                ReadyOutcome::Respawned { .. } => {
+                    unreachable!("single-tenant run cannot respawn")
+                }
             },
             LEv::Done(cid) => {
-                let CompleteOutcome { completed, next } = platform.exec_complete(cid, now);
+                // single-tenant: respawn is structurally None
+                let CompleteOutcome {
+                    completed, next, ..
+                } = platform.exec_complete(cid, now);
                 recorder.on_complete(completed, now);
                 match next {
                     Some((_req, done_at)) => events.push(done_at, LEv::Done(cid)),
