@@ -1,0 +1,46 @@
+//! Fig. 11 (new scenario axis): simulator throughput at fleet scale —
+//! events/second and wall-clock as nodes × functions × load grow.
+//!
+//! This is the macro-benchmark behind BENCH_throughput.json: the control
+//! plane's own bookkeeping must stay near-free (SPES's observation, and
+//! the premise of the paper's Fig. 8 overhead claim), so events/sec
+//! should stay roughly flat as the fleet and the function count scale.
+//! Before the indexed-platform refactor every control step scanned all
+//! containers (O(nodes × functions × containers)); the 8×32 cells are
+//! the regression canary for that cost.
+//!
+//! Wall-clock columns vary run to run; every other column is
+//! deterministic in the seed. To refresh the committed record, write the
+//! sweep to a scratch file and copy its `cells` array into the
+//! `after.cells` slot of BENCH_throughput.json (which also carries the
+//! protocol and the before/after provenance — do not overwrite it):
+//!   mpc-serverless bench-throughput --out BENCH_throughput.after.json
+
+use mpc_serverless::config::{PlacementPolicy, Policy, TraceKind};
+use mpc_serverless::experiments::throughput::run_sweep;
+
+fn main() {
+    let duration_s = 600.0;
+    let seed = 42;
+    println!(
+        "=== Fig. 11: simulator throughput (bursty, {:.0} min per cell, seed {seed}) ===",
+        duration_s / 60.0
+    );
+    for policy in [Policy::OpenWhisk, Policy::Mpc] {
+        let sweep = run_sweep(
+            policy,
+            TraceKind::SyntheticBursty,
+            duration_s,
+            seed,
+            &[1, 2, 4, 8],
+            &[1, 8, 32],
+            &[1, 4],
+            PlacementPolicy::WarmFirst,
+        );
+        println!("\n-- {} --", policy.name());
+        sweep.print_table();
+        println!("{}", sweep.to_json());
+    }
+    println!("\nflat events/sec across the grid = O(1) platform gauges doing their job;");
+    println!("a slope in the functions or nodes column means a scan crept back in.");
+}

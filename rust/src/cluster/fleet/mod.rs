@@ -218,10 +218,18 @@ impl Fleet {
     /// snapshot.
     pub fn idle_by_function(&self, nf: usize) -> Vec<u32> {
         let mut out = vec![0u32; nf];
-        for n in self.online() {
-            n.platform.idle_by_function_into(&mut out);
-        }
+        self.idle_by_function_into(&mut out);
         out
+    }
+
+    /// Allocation-free [`Fleet::idle_by_function`]: zero `out` and
+    /// accumulate each node's per-function idle counters into it — an
+    /// O(nodes × functions) counter copy, no container scans.
+    pub fn idle_by_function_into(&self, out: &mut [u32]) {
+        out.fill(0);
+        for n in self.online() {
+            n.platform.idle_by_function_into(out);
+        }
     }
 
     /// Fleet-wide warm (idle + busy) containers of one function.
@@ -243,6 +251,15 @@ impl Fleet {
             .collect()
     }
 
+    /// Earliest ready time among in-flight cold starts of one function,
+    /// fleet-wide — the force-dispatch guard's imminence probe, without
+    /// materializing the ready-time vectors.
+    pub fn next_cold_ready_for(&self, func: FunctionId) -> Option<Micros> {
+        self.online()
+            .filter_map(|n| n.platform.next_cold_ready_for(func))
+            .min()
+    }
+
     /// Keep-alive window of a live container's function (None for
     /// unknown containers or offline nodes).
     pub fn keepalive_of(&self, node: NodeId, cid: ContainerId) -> Option<Micros> {
@@ -255,9 +272,18 @@ impl Fleet {
 
     /// Ready times of in-flight cold starts across the fleet (readyCold).
     pub fn cold_ready_times(&self) -> Vec<Micros> {
-        self.online()
-            .flat_map(|n| n.platform.cold_ready_times())
-            .collect()
+        let mut out = Vec::new();
+        self.cold_ready_times_into(&mut out);
+        out
+    }
+
+    /// Allocation-free [`Fleet::cold_ready_times`]: append every online
+    /// node's in-flight cold-start ready times to `out` (the controller's
+    /// per-replan scratch buffer; the caller clears it).
+    pub fn cold_ready_times_into(&self, out: &mut Vec<Micros>) {
+        for n in self.online() {
+            n.platform.cold_ready_times_into(out);
+        }
     }
 
     /// Monotonic counters summed over every node, including offline ones
@@ -427,7 +453,9 @@ impl Fleet {
                 .enumerate()
                 .filter(|(_, nd)| nd.online)
                 .filter_map(|(i, nd)| nd.platform.best_reclaim_score(now).map(|s| (s, i)))
-                .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(b.1.cmp(&a.1)));
+                // total_cmp: a degenerate (NaN) score must not panic the
+                // run mid-reclaim; ties break to the lower node index
+                .max_by(|a, b| a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)));
             let Some((_, idx)) = best else { break };
             let node = &mut self.nodes[idx];
             let id = node.id;

@@ -2,6 +2,12 @@
 //! routed to. Policies are pure functions over the node array (plus the
 //! round-robin cursor owned by the fleet), so placement decisions are
 //! deterministic and never consume platform RNG state.
+//!
+//! Every per-node probe these policies make — `load()` (busy +
+//! cold-starting + backlog), `mru_idle_recency_for`, `can_admit` — reads
+//! the platform's incrementally-maintained indices, so placing one
+//! request is O(nodes), independent of the container population (see
+//! "State indices & hot-path complexity" in docs/ARCHITECTURE.md).
 
 use crate::cluster::fleet::InvokerNode;
 use crate::workload::tenant::FunctionId;

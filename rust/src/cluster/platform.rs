@@ -17,14 +17,28 @@
 //! one-function registry all of this degenerates to the legacy
 //! single-tenant behavior bit-for-bit.
 //!
+//! **Indexed state (hot-path complexity).** The controller's gauges fire
+//! every control interval (Fig. 3) and the dispatcher consults the warm
+//! pool on every invocation, so none of them may scan the container map:
+//! the platform maintains per-function indices (`FnIndex`) updated at
+//! every container state transition — an idle MRU set ordered by
+//! `(last_used, id)`, busy/cold-starting tallies, the in-flight
+//! cold-start ready times, and a per-function FCFS backlog queue — plus
+//! aggregate idle/busy/cold counters and the memory ledger. Every gauge
+//! is O(1) (aggregates, per-function counts, MRU recency via
+//! `BTreeSet::last`) or O(functions); the brute-force scans survive only
+//! as a `#[cfg(test)]` reference implementation that property tests
+//! compare against bit-for-bit (see `assert_matches_scan`).
+//!
 //! The platform is event-driven but owns no clock: methods take `now` and
 //! return outcomes carrying future timestamps; the experiment runner turns
 //! those into simulator events (or real timers in real-time mode).
 
-use std::collections::{BTreeMap, VecDeque};
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::cluster::activation_log::ActivationLog;
-use crate::cluster::container::{Container, ContainerId};
+use crate::cluster::container::{Container, ContainerId, ContainerState};
 use crate::cluster::telemetry::{Counters, FnCounters, GaugeSample};
 use crate::cluster::RequestId;
 use crate::config::{Micros, PlatformConfig};
@@ -86,6 +100,39 @@ pub enum KeepAliveVerdict {
     NotApplicable,
 }
 
+/// Per-function incremental indices, maintained at every container state
+/// transition (the invariants live in the four `index_*`/`deindex`
+/// helpers on [`Platform`]).
+///
+/// * `idle` is ordered by `(last_used, id)`, so `.last()` is exactly the
+///   MRU pick the dispatcher's scan used to compute
+///   (`max_by_key(|c| (c.last_used, c.id))`) — idle containers always
+///   satisfy `since == last_used`, which also makes the set a sorted
+///   idle-age index for retention queries.
+/// * `cold` maps in-flight cold starts to their ready times (the MPC's
+///   readyCold input), keyed by container id.
+/// * `backlog` carries `(global seq, request)` so cross-function FIFO
+///   order is recoverable in O(functions) (oldest waiter = minimum head
+///   seq among the per-function queues).
+#[derive(Debug, Default)]
+struct FnIndex {
+    idle: BTreeSet<(Micros, ContainerId)>,
+    busy: u32,
+    cold: BTreeMap<ContainerId, Micros>,
+    backlog: VecDeque<(u64, RequestId)>,
+}
+
+/// Max-pick under Algorithm 2's ranking: highest reclaim score, ties to
+/// the lower container id. `total_cmp` keeps the ranking a total order
+/// even if a score ever degenerates to NaN (the old
+/// `partial_cmp().unwrap()` would panic the run instead).
+fn better_reclaim(a: (f64, ContainerId), b: (f64, ContainerId)) -> (f64, ContainerId) {
+    match a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)) {
+        Ordering::Less => b,
+        _ => a,
+    }
+}
+
 #[derive(Debug)]
 pub struct Platform {
     pub cfg: PlatformConfig,
@@ -94,7 +141,17 @@ pub struct Platform {
     registry: FunctionRegistry,
     containers: BTreeMap<ContainerId, Container>,
     next_cid: ContainerId,
-    fcfs: VecDeque<(RequestId, FunctionId)>,
+    /// Per-function indices (idle MRU set, busy/cold tallies, backlog);
+    /// one entry per registry function.
+    fns: Vec<FnIndex>,
+    /// Aggregate tallies mirroring the per-function indices.
+    idle_total: u32,
+    busy_total: u32,
+    cold_total: u32,
+    /// Total backlogged requests across the per-function queues.
+    fcfs_total: usize,
+    /// Global arrival sequence for backlog entries (cross-function FIFO).
+    fcfs_seq: u64,
     rng: Rng,
     pub counters: Counters,
     /// Per-function activation accounting (multi-tenant telemetry).
@@ -120,12 +177,18 @@ impl Platform {
 
     /// Multi-tenant platform serving `registry`'s function set.
     pub fn with_registry(cfg: PlatformConfig, registry: FunctionRegistry, seed: u64) -> Self {
+        let fns = (0..registry.len()).map(|_| FnIndex::default()).collect();
         Platform {
             cfg,
             registry,
             containers: BTreeMap::new(),
             next_cid: 1,
-            fcfs: VecDeque::new(),
+            fns,
+            idle_total: 0,
+            busy_total: 0,
+            cold_total: 0,
+            fcfs_total: 0,
+            fcfs_seq: 0,
             rng: Rng::new(seed),
             counters: Counters::default(),
             fn_counters: BTreeMap::new(),
@@ -165,34 +228,106 @@ impl Platform {
         (base as f64 * f).round().max(1.0) as Micros
     }
 
-    // ---- gauges -------------------------------------------------------------
+    // ---- index transitions --------------------------------------------------
+    //
+    // Every container state change funnels through exactly one of these,
+    // so the FnIndex structures and the aggregate tallies can never drift
+    // from the container map (the property test audits this after every
+    // operation).
+
+    /// Container entered the idle pool at `t` (its new `last_used`).
+    fn index_idle(&mut self, func: FunctionId, cid: ContainerId, t: Micros) {
+        let inserted = self.fns[func as usize].idle.insert((t, cid));
+        debug_assert!(inserted, "container {cid} already indexed idle");
+        self.idle_total += 1;
+    }
+
+    /// Idle → busy on `req` until `done_at`. Reads the idle key
+    /// (`last_used`) off the container before transitioning it.
+    fn begin_execution(
+        &mut self,
+        cid: ContainerId,
+        func: FunctionId,
+        req: RequestId,
+        now: Micros,
+        done_at: Micros,
+    ) {
+        let c = self
+            .containers
+            .get_mut(&cid)
+            .expect("begin_execution on unknown container");
+        let key = (c.last_used, cid);
+        c.start_execution(req, now, done_at);
+        let fi = &mut self.fns[func as usize];
+        let removed = fi.idle.remove(&key);
+        debug_assert!(removed, "idle index out of sync for container {cid}");
+        self.idle_total -= 1;
+        fi.busy += 1;
+        self.busy_total += 1;
+    }
+
+    /// Drop a (live) container from whichever index matches its state.
+    fn deindex(&mut self, c: &Container) {
+        let fi = &mut self.fns[c.func as usize];
+        match c.state {
+            ContainerState::Idle { .. } => {
+                let removed = fi.idle.remove(&(c.last_used, c.id));
+                debug_assert!(removed, "idle index out of sync for container {}", c.id);
+                self.idle_total -= 1;
+            }
+            ContainerState::Busy { .. } => {
+                fi.busy -= 1;
+                self.busy_total -= 1;
+            }
+            ContainerState::ColdStarting { .. } => {
+                let removed = fi.cold.remove(&c.id).is_some();
+                debug_assert!(removed, "cold index out of sync for container {}", c.id);
+                self.cold_total -= 1;
+            }
+        }
+    }
+
+    // ---- gauges (all O(1) or O(functions); no container scans) --------------
 
     pub fn total(&self) -> u32 {
         self.containers.len() as u32
     }
     pub fn idle_count(&self) -> u32 {
-        self.containers.values().filter(|c| c.is_idle()).count() as u32
+        self.idle_total
     }
     pub fn busy_count(&self) -> u32 {
-        self.containers.values().filter(|c| c.is_busy()).count() as u32
+        self.busy_total
     }
     pub fn warm_count(&self) -> u32 {
-        self.containers.values().filter(|c| c.is_warm()).count() as u32
+        self.idle_total + self.busy_total
     }
     pub fn cold_starting_count(&self) -> u32 {
-        self.containers.values().filter(|c| c.is_cold_starting()).count() as u32
+        self.cold_total
     }
     pub fn fcfs_len(&self) -> usize {
-        self.fcfs.len()
+        self.fcfs_total
     }
 
     /// Idle containers unused for at least `min_idle` (IceBreaker's
-    /// retention-aware release eligibility).
+    /// retention-aware release eligibility). Idle containers always have
+    /// `since == last_used`, so this is a sorted-prefix count on the
+    /// per-function idle sets — O(functions + matches), not O(containers).
+    ///
+    /// `min_idle == 0` counts every *idle* container. (The old scan's
+    /// `idle_for(now) >= 0` vacuously counted busy/cold containers too
+    /// at 0 — a latent bug no caller could hit, since the only consumer
+    /// passes IceBreaker's fixed 240 s retention window.)
     pub fn idle_containers_older_than(&self, min_idle: Micros, now: Micros) -> u32 {
-        self.containers
-            .values()
-            .filter(|c| c.idle_for(now) >= min_idle)
-            .count() as u32
+        if min_idle == 0 {
+            return self.idle_total;
+        }
+        let Some(cutoff) = now.checked_sub(min_idle) else {
+            return 0;
+        };
+        self.fns
+            .iter()
+            .map(|fi| fi.idle.range(..=(cutoff, ContainerId::MAX)).count() as u32)
+            .sum()
     }
 
     pub fn gauge(&self, now: Micros, queue_len: u32) -> GaugeSample {
@@ -228,97 +363,104 @@ impl Platform {
 
     /// Idle warm containers of one function (the per-function warm pool).
     pub fn idle_count_for(&self, func: FunctionId) -> u32 {
-        self.containers
-            .values()
-            .filter(|c| c.is_idle() && c.func == func)
-            .count() as u32
+        self.fns
+            .get(func as usize)
+            .map_or(0, |fi| fi.idle.len() as u32)
     }
 
     /// Accumulate idle-container counts per function into `out` (index =
-    /// [`FunctionId`]; functions beyond `out.len()` are ignored) — one
-    /// container pass instead of one per function for the dispatcher's
-    /// drain snapshot.
+    /// [`FunctionId`]; functions beyond `out.len()` are ignored) — an
+    /// O(functions) counter copy for the dispatcher's drain snapshot.
     pub fn idle_by_function_into(&self, out: &mut [u32]) {
-        for c in self.containers.values() {
-            if c.is_idle() {
-                if let Some(slot) = out.get_mut(c.func as usize) {
-                    *slot += 1;
-                }
+        for (f, fi) in self.fns.iter().enumerate() {
+            if let Some(slot) = out.get_mut(f) {
+                *slot += fi.idle.len() as u32;
             }
         }
     }
 
     /// Warm (idle + busy) containers of one function.
     pub fn warm_count_for(&self, func: FunctionId) -> u32 {
-        self.containers
-            .values()
-            .filter(|c| c.is_warm() && c.func == func)
-            .count() as u32
+        self.fns
+            .get(func as usize)
+            .map_or(0, |fi| fi.idle.len() as u32 + fi.busy)
     }
 
     /// In-flight cold starts of one function.
     pub fn cold_starting_for(&self, func: FunctionId) -> u32 {
-        self.containers
-            .values()
-            .filter(|c| c.is_cold_starting() && c.func == func)
-            .count() as u32
+        self.fns
+            .get(func as usize)
+            .map_or(0, |fi| fi.cold.len() as u32)
     }
 
     /// Recency (last_used) of the most-recently-used idle container — the
     /// fleet's warm-first placement compares nodes on this.
     pub fn mru_idle_recency(&self) -> Option<Micros> {
-        self.containers
-            .values()
-            .filter(|c| c.is_idle())
-            .map(|c| c.last_used)
+        self.fns
+            .iter()
+            .filter_map(|fi| fi.idle.last())
+            .map(|&(t, _)| t)
             .max()
     }
 
     /// Function-scoped [`Platform::mru_idle_recency`]: the fleet's
     /// warm-*for-this-function*-first placement compares nodes on this.
     pub fn mru_idle_recency_for(&self, func: FunctionId) -> Option<Micros> {
-        self.containers
-            .values()
-            .filter(|c| c.is_idle() && c.func == func)
-            .map(|c| c.last_used)
-            .max()
+        self.fns
+            .get(func as usize)
+            .and_then(|fi| fi.idle.last())
+            .map(|&(t, _)| t)
     }
 
     /// Best (highest) reclaim score among idle, log-safe containers — the
     /// fleet ranks nodes on this to keep Algorithm 2's global ordering.
+    /// O(idle containers), not O(all containers): the scores depend on
+    /// `now` so they cannot be pre-ordered, but only idle candidates are
+    /// visited.
     pub fn best_reclaim_score(&self, now: Micros) -> Option<f64> {
-        self.containers
-            .values()
-            .filter(|c| c.is_idle() && self.log.all_completed(c.id))
-            .map(|c| c.reclaim_score(now))
-            .fold(None, |acc, s| Some(acc.map_or(s, |a: f64| a.max(s))))
+        let mut best: Option<f64> = None;
+        for fi in &self.fns {
+            for &(_, cid) in &fi.idle {
+                if !self.log.all_completed(cid) {
+                    continue;
+                }
+                let s = self.containers[&cid].reclaim_score(now);
+                best = Some(best.map_or(s, |a: f64| a.max(s)));
+            }
+        }
+        best
     }
 
     /// Ready times of in-flight cold starts (the MPC's readyCold input).
     pub fn cold_ready_times(&self) -> Vec<Micros> {
-        self.containers
-            .values()
-            .filter_map(|c| match c.state {
-                crate::cluster::container::ContainerState::ColdStarting { ready_at, .. } => {
-                    Some(ready_at)
-                }
-                _ => None,
-            })
-            .collect()
+        let mut out = Vec::with_capacity(self.cold_total as usize);
+        self.cold_ready_times_into(&mut out);
+        out
+    }
+
+    /// Append every in-flight cold-start ready time to `out` (the
+    /// allocation-free form the controller's scratch buffer uses).
+    pub fn cold_ready_times_into(&self, out: &mut Vec<Micros>) {
+        for fi in &self.fns {
+            out.extend(fi.cold.values().copied());
+        }
     }
 
     /// Ready times of in-flight cold starts of one function.
     pub fn cold_ready_times_for(&self, func: FunctionId) -> Vec<Micros> {
-        self.containers
-            .values()
-            .filter(|c| c.func == func)
-            .filter_map(|c| match c.state {
-                crate::cluster::container::ContainerState::ColdStarting { ready_at, .. } => {
-                    Some(ready_at)
-                }
-                _ => None,
-            })
-            .collect()
+        self.fns
+            .get(func as usize)
+            .map_or_else(Vec::new, |fi| fi.cold.values().copied().collect())
+    }
+
+    /// Earliest ready time among in-flight cold starts of one function
+    /// (the force-dispatch guard's imminence probe, without building a
+    /// vector): O(cold starts of `func`).
+    pub fn next_cold_ready_for(&self, func: FunctionId) -> Option<Micros> {
+        self.fns
+            .get(func as usize)
+            .and_then(|fi| fi.cold.values().min())
+            .copied()
     }
 
     // ---- invocation path ----------------------------------------------------
@@ -338,18 +480,16 @@ impl Platform {
         self.counters.invocations += 1;
         self.fn_counters_mut(func).invocations += 1;
         // MRU idle container of this function: OpenWhisk reuses the
-        // warmest matching replica
+        // warmest matching replica — `.last()` of the (last_used, id)
+        // ordered idle set, O(log idle) instead of a container scan
         let pick = self
-            .containers
-            .values()
-            .filter(|c| c.is_idle() && c.func == func)
-            .max_by_key(|c| (c.last_used, c.id))
-            .map(|c| c.id);
-        if let Some(cid) = pick {
+            .fns
+            .get(func as usize)
+            .and_then(|fi| fi.idle.last().copied());
+        if let Some((_, cid)) = pick {
             let l_warm = self.profile(func).l_warm;
             let done_at = now + self.jitter(l_warm);
-            let c = self.containers.get_mut(&cid).unwrap();
-            c.start_execution(req, now, done_at);
+            self.begin_execution(cid, func, req, now, done_at);
             self.log.record_assignment(cid, req);
             self.fn_counters_mut(func).warm_starts += 1;
             return InvokeOutcome::WarmStart { cid, done_at };
@@ -363,7 +503,9 @@ impl Platform {
             return InvokeOutcome::ColdStart { cid, ready_at };
         }
         self.counters.capacity_queued += 1;
-        self.fcfs.push_back((req, func));
+        self.fcfs_seq += 1;
+        self.fns[func as usize].backlog.push_back((self.fcfs_seq, req));
+        self.fcfs_total += 1;
         InvokeOutcome::AtCapacity
     }
 
@@ -371,19 +513,30 @@ impl Platform {
     /// first, log-safe only) until a container of `func` fits. Returns
     /// whether room was made. Never fires in a single-tenant run: any
     /// idle container there would have warm-served the request instead.
+    /// Candidates come from the idle indices, so each round is O(idle),
+    /// not O(all containers).
     fn evict_for(&mut self, func: FunctionId, now: Micros) -> bool {
         loop {
             if self.can_admit(func) {
                 return true;
             }
-            let victim = self
-                .containers
-                .values()
-                .filter(|c| c.is_idle() && c.func != func && self.log.all_completed(c.id))
-                .map(|c| (c.reclaim_score(now), c.id))
-                .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(b.1.cmp(&a.1)))
-                .map(|(_, id)| id);
-            let Some(vid) = victim else { return false };
+            let mut victim: Option<(f64, ContainerId)> = None;
+            for (fid, fi) in self.fns.iter().enumerate() {
+                if fid as FunctionId == func {
+                    continue;
+                }
+                for &(_, cid) in &fi.idle {
+                    if !self.log.all_completed(cid) {
+                        continue;
+                    }
+                    let cand = (self.containers[&cid].reclaim_score(now), cid);
+                    victim = Some(match victim {
+                        None => cand,
+                        Some(best) => better_reclaim(best, cand),
+                    });
+                }
+            }
+            let Some((_, vid)) = victim else { return false };
             let vfunc = self.containers[&vid].func;
             self.remove(vid, now);
             self.counters.evictions += 1;
@@ -404,6 +557,8 @@ impl Platform {
         self.mem_used += self.registry.get(func).mem_mib;
         self.containers
             .insert(cid, Container::cold(cid, func, now, ready_at, pending));
+        self.fns[func as usize].cold.insert(cid, ready_at);
+        self.cold_total += 1;
         cid
     }
 
@@ -428,10 +583,12 @@ impl Platform {
     }
 
     /// Pop the oldest FCFS backlog request of `func` (FIFO within the
-    /// function; foreign requests keep their positions).
+    /// function; foreign requests keep their positions). O(1) on the
+    /// per-function queue — no positional scan of a shared deque.
     fn pop_fcfs(&mut self, func: FunctionId) -> Option<RequestId> {
-        let idx = self.fcfs.iter().position(|&(_, f)| f == func)?;
-        self.fcfs.remove(idx).map(|(req, _)| req)
+        let (_, req) = self.fns.get_mut(func as usize)?.backlog.pop_front()?;
+        self.fcfs_total -= 1;
+        Some(req)
     }
 
     /// Cold init finished (ContainerReady event). Binds the triggering
@@ -449,18 +606,26 @@ impl Platform {
             let f = c.func;
             (c.finish_cold_start(now), f)
         };
+        // index: cold start landed → idle (possibly transiently, if it
+        // starts executing in the same instant below)
+        {
+            let fi = &mut self.fns[func as usize];
+            let removed = fi.cold.remove(&cid).is_some();
+            debug_assert!(removed, "cold index out of sync for container {cid}");
+            self.cold_total -= 1;
+        }
+        self.index_idle(func, cid, now);
         let next = pending.or_else(|| self.pop_fcfs(func));
         match next {
             Some(request) => {
                 let l_warm = self.profile(func).l_warm;
                 let done_at = now + self.jitter(l_warm);
-                let c = self.containers.get_mut(&cid).unwrap();
-                c.start_execution(request, now, done_at);
+                self.begin_execution(cid, func, request, now, done_at);
                 self.log.record_assignment(cid, request);
                 ReadyOutcome::Started { request, done_at }
             }
             None => {
-                if !self.fcfs.is_empty() {
+                if self.fcfs_total > 0 {
                     if let Some((req, ncid, ready_at)) = self.respawn_for_backlog(cid, now) {
                         return ReadyOutcome::Respawned {
                             req,
@@ -486,16 +651,19 @@ impl Platform {
             let f = c.func;
             (c.finish_execution(now), f)
         };
+        // index: busy → idle at `now` (the container's new last_used)
+        self.fns[func as usize].busy -= 1;
+        self.busy_total -= 1;
+        self.index_idle(func, cid, now);
         self.log.record_ack(cid, completed, now);
         let next = self.pop_fcfs(func).map(|req| {
             let l_warm = self.profile(func).l_warm;
             let done_at = now + self.jitter(l_warm);
-            let c = self.containers.get_mut(&cid).unwrap();
-            c.start_execution(req, now, done_at);
+            self.begin_execution(cid, func, req, now, done_at);
             self.log.record_assignment(cid, req);
             (req, done_at)
         });
-        let respawn = if next.is_none() && !self.fcfs.is_empty() {
+        let respawn = if next.is_none() && self.fcfs_total > 0 {
             self.respawn_for_backlog(cid, now)
         } else {
             None
@@ -513,6 +681,11 @@ impl Platform {
     /// (skipping an oversized head so it cannot starve feasible waiters
     /// behind it), provided the activation log clears the container for
     /// removal. Returns `(waiter, new container, ready time)`.
+    ///
+    /// Cross-function FIFO without a positional scan: the oldest feasible
+    /// waiter is the minimum head sequence number among the per-function
+    /// queues whose footprint fits — if any entry of a function fits, its
+    /// queue head (older) fits too, so only heads need comparing.
     fn respawn_for_backlog(
         &mut self,
         cid: ContainerId,
@@ -527,15 +700,29 @@ impl Platform {
         };
         let budget = self.cfg.node_mem_mib;
         let after_evict = self.mem_used.saturating_sub(freed);
-        let idx = self
-            .fcfs
-            .iter()
-            .position(|&(_, f)| after_evict + self.registry.get(f).mem_mib <= budget)?;
-        let (req, func) = self.fcfs[idx];
+        let mut pick: Option<(u64, usize)> = None;
+        for (fid, fi) in self.fns.iter().enumerate() {
+            let Some(&(seq, _)) = fi.backlog.front() else {
+                continue;
+            };
+            if after_evict + self.registry.get(fid as FunctionId).mem_mib > budget {
+                continue;
+            }
+            let older = match pick {
+                None => true,
+                Some((s, _)) => seq < s,
+            };
+            if older {
+                pick = Some((seq, fid));
+            }
+        }
+        let (_, fidx) = pick?;
         self.remove(cid, now);
         self.counters.evictions += 1;
         self.fn_counters_mut(vfunc).evictions += 1;
-        self.fcfs.remove(idx);
+        let (_, req) = self.fns[fidx].backlog.pop_front().expect("head checked above");
+        self.fcfs_total -= 1;
+        let func = fidx as FunctionId;
         let l_cold = self.profile(func).l_cold;
         let ready_at = now + self.jitter(l_cold);
         let ncid = self.spawn(func, now, ready_at, Some(req));
@@ -549,20 +736,35 @@ impl Platform {
     /// Reclaim up to `n` idle containers. Ranking by composite score
     /// (line 1), safety via the activation log (lines 5-6), then drain
     /// (lines 7-9). Returns the reclaimed ids.
+    ///
+    /// Candidates come from the idle indices; the top-`n` prefix is
+    /// isolated with `select_nth_unstable_by` and only that prefix is
+    /// sorted — O(idle + n log n) instead of O(idle log idle). The
+    /// comparator is a strict total order (score, then id), so the
+    /// selected prefix and its order are identical to a full sort.
     pub fn try_reclaim(&mut self, n: u32, now: Micros) -> Vec<ContainerId> {
         if n == 0 {
             return Vec::new();
         }
         // rankPods: idle candidates by descending reclaim score
-        let mut candidates: Vec<(f64, ContainerId)> = self
-            .containers
-            .values()
-            .filter(|c| c.is_idle())
-            .map(|c| (c.reclaim_score(now), c.id))
-            .collect();
-        candidates.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut candidates: Vec<(f64, ContainerId)> =
+            Vec::with_capacity(self.idle_total as usize);
+        for fi in &self.fns {
+            for &(_, cid) in &fi.idle {
+                candidates.push((self.containers[&cid].reclaim_score(now), cid));
+            }
+        }
+        let cmp = |a: &(f64, ContainerId), b: &(f64, ContainerId)| {
+            b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
+        };
+        let k = (n as usize).min(candidates.len());
+        if k > 0 && k < candidates.len() {
+            let _ = candidates.select_nth_unstable_by(k - 1, cmp);
+            candidates.truncate(k);
+        }
+        candidates.sort_unstable_by(cmp);
         let mut reclaimed = Vec::new();
-        for (_, cid) in candidates.into_iter().take(n as usize) {
+        for (_, cid) in candidates {
             // safety: the log must show completion for all assigned work
             if !self.log.all_completed(cid) {
                 continue;
@@ -604,6 +806,7 @@ impl Platform {
     fn remove(&mut self, cid: ContainerId, now: Micros) {
         if let Some(c) = self.containers.remove(&cid) {
             debug_assert!(c.is_idle(), "removing non-idle container {cid}");
+            self.deindex(&c);
             // paper metric: duration from last activation to reclamation
             self.removed_keepalive.push(now.saturating_sub(c.last_used));
             self.removed_idle_total
@@ -618,27 +821,38 @@ impl Platform {
 
     /// Node-crash semantics: every container is lost instantly; requests
     /// that were executing or waiting on a cold start, plus the FCFS
-    /// backlog, are returned for redispatch elsewhere. Lost containers do
-    /// not produce keep-alive records — the pod vanished, it was not
-    /// drained gracefully.
+    /// backlog (in arrival order), are returned for redispatch elsewhere.
+    /// Lost containers do not produce keep-alive records — the pod
+    /// vanished, it was not drained gracefully.
     pub fn fail_all(&mut self, _now: Micros) -> Vec<RequestId> {
         let mut lost = Vec::new();
         for (cid, c) in std::mem::take(&mut self.containers) {
             match c.state {
-                crate::cluster::container::ContainerState::ColdStarting {
-                    pending: Some(req),
-                    ..
+                ContainerState::ColdStarting {
+                    pending: Some(req), ..
                 } => lost.push(req),
-                crate::cluster::container::ContainerState::Busy { request, .. } => {
-                    lost.push(request)
-                }
+                ContainerState::Busy { request, .. } => lost.push(request),
                 _ => {}
             }
             self.log.forget(cid);
             self.removed += 1;
         }
         self.mem_used = 0;
-        lost.extend(self.fcfs.drain(..).map(|(req, _)| req));
+        // reset the indices wholesale; the backlog drains in global
+        // arrival order (merge the per-function queues by sequence)
+        let mut backlog: Vec<(u64, RequestId)> = Vec::with_capacity(self.fcfs_total);
+        for fi in &mut self.fns {
+            fi.idle.clear();
+            fi.busy = 0;
+            fi.cold.clear();
+            backlog.extend(fi.backlog.drain(..));
+        }
+        backlog.sort_unstable_by_key(|&(seq, _)| seq);
+        lost.extend(backlog.into_iter().map(|(_, req)| req));
+        self.idle_total = 0;
+        self.busy_total = 0;
+        self.cold_total = 0;
+        self.fcfs_total = 0;
         lost
     }
 
@@ -661,6 +875,124 @@ impl Platform {
     /// Direct read of accumulated keep-alive records (without finalize).
     pub fn keepalive_records(&self) -> &[Micros] {
         &self.removed_keepalive
+    }
+}
+
+/// Brute-force reference implementation of every indexed query, kept as
+/// the oracle the property tests compare the incremental indices against
+/// after arbitrary operation sequences. This *is* the old pre-index code
+/// path (full scans over the container map); it must never be used on a
+/// hot path again, which is why it only compiles for tests.
+#[cfg(test)]
+impl Platform {
+    /// Assert every indexed gauge equals its brute-force scan, returning
+    /// Err with context so `prop_check` can report the replay seed.
+    pub(crate) fn assert_matches_scan(&self, now: Micros) -> Result<(), String> {
+        use crate::prop_assert;
+        let scan = |pred: &dyn Fn(&Container) -> bool| -> u32 {
+            self.containers.values().filter(|c| pred(c)).count() as u32
+        };
+        let idle = scan(&|c| c.is_idle());
+        let busy = scan(&|c| c.is_busy());
+        let cold = scan(&|c| c.is_cold_starting());
+        prop_assert!(idle == self.idle_count(), "idle {} != {}", self.idle_count(), idle);
+        prop_assert!(busy == self.busy_count(), "busy {} != {}", self.busy_count(), busy);
+        prop_assert!(cold == self.cold_starting_count(), "cold {} != {}", self.cold_starting_count(), cold);
+        prop_assert!(
+            scan(&|c| c.is_warm()) == self.warm_count(),
+            "warm mismatch at t={now}"
+        );
+        let mru = self
+            .containers
+            .values()
+            .filter(|c| c.is_idle())
+            .map(|c| c.last_used)
+            .max();
+        prop_assert!(
+            mru == self.mru_idle_recency(),
+            "mru {:?} != scan {:?}",
+            self.mru_idle_recency(),
+            mru
+        );
+        let best = self
+            .containers
+            .values()
+            .filter(|c| c.is_idle() && self.log.all_completed(c.id))
+            .map(|c| c.reclaim_score(now))
+            .fold(None, |acc: Option<f64>, s| Some(acc.map_or(s, |a| a.max(s))));
+        prop_assert!(
+            best == self.best_reclaim_score(now),
+            "best_reclaim {:?} != scan {:?}",
+            self.best_reclaim_score(now),
+            best
+        );
+        let mut scan_cold: Vec<Micros> = self
+            .containers
+            .values()
+            .filter_map(|c| match c.state {
+                ContainerState::ColdStarting { ready_at, .. } => Some(ready_at),
+                _ => None,
+            })
+            .collect();
+        scan_cold.sort_unstable();
+        let mut idx_cold = self.cold_ready_times();
+        idx_cold.sort_unstable();
+        prop_assert!(idx_cold == scan_cold, "cold_ready_times mismatch at t={now}");
+        for min_idle in [0, 1, 1_000_000, 600_000_000] {
+            // is_idle() guard: busy/cold containers have idle_for == 0 and
+            // must not be counted at min_idle == 0 (see the gauge's doc)
+            let want = scan(&|c| c.is_idle() && c.idle_for(now) >= min_idle);
+            let got = self.idle_containers_older_than(min_idle, now);
+            prop_assert!(got == want, "older_than({min_idle}) {got} != {want}");
+        }
+        for f in 0..self.registry.len() as FunctionId {
+            let idle_f = scan(&|c| c.is_idle() && c.func == f);
+            let warm_f = scan(&|c| c.is_warm() && c.func == f);
+            let cold_f = scan(&|c| c.is_cold_starting() && c.func == f);
+            prop_assert!(idle_f == self.idle_count_for(f), "idle[{f}] mismatch");
+            prop_assert!(warm_f == self.warm_count_for(f), "warm[{f}] mismatch");
+            prop_assert!(cold_f == self.cold_starting_for(f), "cold[{f}] mismatch");
+            let mru_f = self
+                .containers
+                .values()
+                .filter(|c| c.is_idle() && c.func == f)
+                .map(|c| c.last_used)
+                .max();
+            prop_assert!(mru_f == self.mru_idle_recency_for(f), "mru[{f}] mismatch");
+            let mut scan_cold_f: Vec<Micros> = self
+                .containers
+                .values()
+                .filter(|c| c.func == f)
+                .filter_map(|c| match c.state {
+                    ContainerState::ColdStarting { ready_at, .. } => Some(ready_at),
+                    _ => None,
+                })
+                .collect();
+            scan_cold_f.sort_unstable();
+            let mut idx_cold_f = self.cold_ready_times_for(f);
+            idx_cold_f.sort_unstable();
+            prop_assert!(idx_cold_f == scan_cold_f, "cold_ready[{f}] mismatch");
+            prop_assert!(
+                self.next_cold_ready_for(f) == scan_cold_f.first().copied(),
+                "next_cold_ready[{f}] mismatch"
+            );
+        }
+        let mem: u32 = self
+            .containers
+            .values()
+            .map(|c| self.registry.get(c.func).mem_mib)
+            .sum();
+        prop_assert!(mem == self.mem_used_mib(), "mem ledger {} != {mem}", self.mem_used_mib());
+        let backlog_total: usize = self.fns.iter().map(|fi| fi.backlog.len()).sum();
+        prop_assert!(backlog_total == self.fcfs_len(), "fcfs_len mismatch");
+        prop_assert!(
+            self.spawned == self.removed + self.total() as u64,
+            "conservation broken: spawned {} removed {} live {}",
+            self.spawned,
+            self.removed,
+            self.total()
+        );
+        Ok(())
     }
 }
 
@@ -1101,5 +1433,98 @@ mod tests {
         assert!(!p.can_admit(0));
         assert!(p.prewarm_for(0, 0).is_none());
         assert_eq!(p.counters.prewarms_rejected, 1);
+    }
+
+    // ---- index vs. reference-scan property ----------------------------------
+
+    use crate::util::prop::prop_check;
+
+    /// After an arbitrary interleaving of invoke / prewarm / ready /
+    /// complete / keep-alive / reclaim operations, every indexed counter
+    /// and MRU/recency/ready-time query must equal the brute-force scan
+    /// over the container map (see [`Platform::assert_matches_scan`]).
+    #[test]
+    fn indices_match_reference_scan_after_random_ops() {
+        prop_check("platform index == reference scan", 40, |g| {
+            let nf = g.usize(1, 4) as u32;
+            let cfg = PlatformConfig {
+                max_containers: g.usize(1, 10) as u32,
+                // small ledger so eviction/respawn paths actually fire
+                node_mem_mib: g.usize(256, 2048) as u32,
+                latency_jitter: 0.0,
+                ..Default::default()
+            };
+            let registry = FunctionRegistry::synthesize(nf, 1.1, &cfg, g.u64(0, 1 << 32));
+            let mut p = Platform::with_registry(cfg, registry, g.u64(0, 1 << 32));
+            let mut now: Micros = 0;
+            let mut req: RequestId = 0;
+            let mut pending_ready: Vec<(ContainerId, Micros)> = Vec::new();
+            let mut pending_done: Vec<(ContainerId, Micros)> = Vec::new();
+            let steps = g.usize(20, 150);
+            for _ in 0..steps {
+                now += g.u64(1, 2_000_000);
+                let func = g.u64(0, (nf - 1) as u64) as FunctionId;
+                match g.usize(0, 5) {
+                    0 => {
+                        req += 1;
+                        match p.invoke_for(req, func, now) {
+                            InvokeOutcome::ColdStart { cid, ready_at } => {
+                                pending_ready.push((cid, ready_at))
+                            }
+                            InvokeOutcome::WarmStart { cid, done_at } => {
+                                pending_done.push((cid, done_at))
+                            }
+                            InvokeOutcome::AtCapacity => {}
+                        }
+                    }
+                    1 => {
+                        if let Some((cid, ready_at)) = p.prewarm_for(func, now) {
+                            pending_ready.push((cid, ready_at));
+                        }
+                    }
+                    2 => {
+                        if !pending_ready.is_empty() {
+                            let i = g.usize(0, pending_ready.len() - 1);
+                            let (cid, t) = pending_ready.swap_remove(i);
+                            now = now.max(t);
+                            match p.container_ready(cid, now) {
+                                ReadyOutcome::Started { done_at, .. } => {
+                                    pending_done.push((cid, done_at))
+                                }
+                                ReadyOutcome::Respawned {
+                                    cid: ncid, ready_at, ..
+                                } => pending_ready.push((ncid, ready_at)),
+                                ReadyOutcome::Idle => {}
+                            }
+                        }
+                    }
+                    3 => {
+                        if !pending_done.is_empty() {
+                            let i = g.usize(0, pending_done.len() - 1);
+                            let (cid, t) = pending_done.swap_remove(i);
+                            now = now.max(t);
+                            let out = p.exec_complete(cid, now);
+                            if let Some((_, done_at)) = out.next {
+                                pending_done.push((cid, done_at));
+                            }
+                            if let Some((_, ncid, ready_at)) = out.respawn {
+                                pending_ready.push((ncid, ready_at));
+                            }
+                        }
+                    }
+                    4 => {
+                        p.try_reclaim(g.usize(0, 3) as u32, now);
+                    }
+                    _ => {
+                        // keep-alive probe on an arbitrary (possibly gone)
+                        // container id; expiry removes only idle ones
+                        let cid = g.u64(1, p.spawned.max(1));
+                        let _ = p.keepalive_check(cid, now + 600_000_000 * u64::from(g.bool(0.5)));
+                    }
+                }
+                p.assert_matches_scan(now)?;
+            }
+            Ok(())
+        });
     }
 }

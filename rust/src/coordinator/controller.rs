@@ -48,6 +48,14 @@ pub struct MpcScheduler {
     /// Per-function demand trackers; empty in a single-tenant run (the
     /// aggregate machinery is then the whole controller).
     tenants: Vec<TenantDemand>,
+    /// Scratch: per-function idle snapshot for the dispatcher's drain
+    /// (reused every call instead of allocating per arrival).
+    idle_scratch: Vec<u32>,
+    /// Scratch: readyCold bucket vector, recycled across replans (it is
+    /// lent to [`MpcInput`] for the solve and taken back afterwards).
+    rdy_scratch: Vec<f64>,
+    /// Scratch: raw cold-start ready times gathered from the fleet.
+    cold_scratch: Vec<Micros>,
     /// Last optimized plan (observability / tests).
     pub last_plan: Option<Plan>,
     /// Total force-dispatches (guard activations).
@@ -75,6 +83,9 @@ impl MpcScheduler {
             warm_start: vec![0.0; 3 * horizon],
             x_prev: 0.0,
             tenants: Vec::new(),
+            idle_scratch: Vec::new(),
+            rdy_scratch: Vec::new(),
+            cold_scratch: Vec::new(),
             last_plan: None,
             forced_dispatches: 0,
             emergency_replans: 0,
@@ -102,9 +113,17 @@ impl MpcScheduler {
     }
 
     /// Bucket in-flight cold-start ready times into readyCold[k] (k < H).
-    fn ready_schedule(&self, ctx: &Ctx) -> Vec<f64> {
-        let mut rdy = vec![0.0; self.cc.horizon];
-        for ready_at in ctx.fleet.cold_ready_times() {
+    /// Allocation-free on the steady state: the ready times land in
+    /// `cold_scratch` (the fleet's indexed cold maps, no container scan)
+    /// and the bucket vector is the recycled `rdy_scratch`, which
+    /// `replan` hands back to the scratch slot after the solve.
+    fn ready_schedule(&mut self, ctx: &Ctx) -> Vec<f64> {
+        self.cold_scratch.clear();
+        ctx.fleet.cold_ready_times_into(&mut self.cold_scratch);
+        let mut rdy = std::mem::take(&mut self.rdy_scratch);
+        rdy.clear();
+        rdy.resize(self.cc.horizon, 0.0);
+        for &ready_at in &self.cold_scratch {
             let delta = ready_at.saturating_sub(ctx.now);
             let k = (delta / self.cc.dt) as usize;
             if k < rdy.len() {
@@ -125,9 +144,10 @@ impl MpcScheduler {
     /// function's* idle pool (FIFO within each function), so a
     /// head-of-line function with no warm capacity cannot block another
     /// function's drain. The per-function idle counts are snapshotted
-    /// once and decremented as warm capacity is consumed — O(functions ×
-    /// containers) per drain instead of per released request. With one
-    /// function this is exactly the legacy head pop.
+    /// once into a reused scratch buffer (an O(nodes × functions)
+    /// counter copy off the platform indices — no container scan, no
+    /// allocation) and decremented as warm capacity is consumed. With
+    /// one function this is exactly the legacy head pop.
     fn try_dispatch(&mut self, ctx: &mut Ctx) {
         if self.tenants.len() <= 1 {
             // legacy single-tenant drain, bit-identical to the pre-tenancy
@@ -144,7 +164,10 @@ impl MpcScheduler {
             }
             return;
         }
-        let mut idle: Vec<u32> = ctx.fleet.idle_by_function(self.tenants.len());
+        let nf = self.tenants.len();
+        self.idle_scratch.resize(nf, 0);
+        ctx.fleet.idle_by_function_into(&mut self.idle_scratch);
+        let idle = &mut self.idle_scratch;
         loop {
             if self.queue.is_empty() || idle.iter().all(|&c| c == 0) {
                 break;
@@ -211,9 +234,7 @@ impl MpcScheduler {
         let imminent: Vec<bool> = (0..nf)
             .map(|f| {
                 ctx.fleet
-                    .cold_ready_times_for(f as FunctionId)
-                    .into_iter()
-                    .min()
+                    .next_cold_ready_for(f as FunctionId)
                     .is_some_and(|t| t.saturating_sub(now) < crate::config::secs(3.0))
             })
             .collect();
@@ -271,6 +292,9 @@ impl MpcScheduler {
             ctx.fleet.resource_cap(),
             ctx.fleet.cold_starting_count(),
         );
+        // hand the readyCold buffer back to the scratch slot so the next
+        // replan reuses it instead of allocating
+        self.rdy_scratch = input.rdy;
         let (x0, r0, _s0) = plan.first();
         self.warm_start = plan.shifted_warm_start();
         self.x_prev = x0 as f64;

@@ -9,5 +9,6 @@ pub mod fig5_7;
 pub mod fig8;
 pub mod runner;
 pub mod tenant;
+pub mod throughput;
 
 pub use runner::{make_scheduler, run_experiment, run_tenant, run_with_scheduler};

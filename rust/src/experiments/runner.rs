@@ -106,6 +106,7 @@ pub fn run_tenant_with_scheduler(
     );
     let mut events: EventQueue<Ev> = EventQueue::new();
     let mut recorder = Recorder::new(workload.len());
+    let wall_start = std::time::Instant::now();
 
     for (i, &t) in workload.arrivals.iter().enumerate() {
         events.push(t, Ev::Arrival(i as u64));
@@ -231,6 +232,7 @@ pub fn run_tenant_with_scheduler(
         }
     }
 
+    let wall_secs = wall_start.elapsed().as_secs_f64();
     let end = cutoff.max(events.now());
     let (keepalive, idle_totals) = fleet.finalize(end);
     let mut report = RunReport::from_recorder(
@@ -244,6 +246,7 @@ pub fn run_tenant_with_scheduler(
     );
     report.nodes = fleet.node_count() as u32;
     report.placement = cfg.fleet.placement.name().to_string();
+    report.set_throughput(events.processed(), wall_secs);
     report
 }
 

@@ -1,0 +1,250 @@
+//! Simulator throughput macro-benchmark (the `bench-throughput` CLI
+//! subcommand and the fig11 bench target): sweep nodes × functions ×
+//! load and measure the *simulator itself* — events processed, wall
+//! clock, events/second — instead of the simulated latency metrics.
+//!
+//! This is the workload behind the BENCH trajectory for the indexed
+//! platform-state refactor: every cell's per-event cost used to grow
+//! with `nodes × functions × containers` (the controller's gauges were
+//! full container scans); with the incremental indices it must stay flat
+//! as the fleet and the function count grow. Each cell is fully
+//! deterministic in everything except the wall-clock columns.
+
+use crate::config::{
+    secs, ExperimentConfig, FleetConfig, Micros, PlacementPolicy, Policy, TenantConfig, TraceKind,
+};
+use crate::experiments::fig4;
+use crate::experiments::runner::run_tenant;
+use crate::util::json::Json;
+use crate::workload::tenant::FunctionRegistry;
+use crate::workload::{TenantWorkload, Trace};
+
+/// One sweep cell: the fleet/workload shape plus the measured simulator
+/// throughput for it.
+#[derive(Debug, Clone)]
+pub struct ThroughputCell {
+    pub nodes: u32,
+    pub functions: u32,
+    /// Load multiplier: how many independent base traces are
+    /// superimposed (1 = the paper's base arrival rate).
+    pub load: u32,
+    pub requests: usize,
+    pub completed: usize,
+    pub events: u64,
+    pub wall_ms: f64,
+    pub events_per_sec: f64,
+    /// Simulated aggregate P99 (ms) — carried along so a throughput run
+    /// doubles as a regression canary for the simulated metrics.
+    pub p99_ms: f64,
+}
+
+impl ThroughputCell {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes", Json::Num(self.nodes as f64)),
+            ("functions", Json::Num(self.functions as f64)),
+            ("load", Json::Num(self.load as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("events", Json::Num(self.events as f64)),
+            ("wall_ms", Json::Num(self.wall_ms)),
+            ("events_per_sec", Json::Num(self.events_per_sec)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+        ])
+    }
+}
+
+/// A full sweep: the shared run parameters plus one cell per
+/// (nodes, functions, load) combination, in sweep order.
+#[derive(Debug, Clone)]
+pub struct ThroughputSweep {
+    pub policy: Policy,
+    pub trace: TraceKind,
+    pub duration_s: f64,
+    pub seed: u64,
+    pub cells: Vec<ThroughputCell>,
+}
+
+impl ThroughputSweep {
+    /// Print the sweep as the standard 7-column table (shared by the
+    /// `bench-throughput` CLI and the fig11 bench target).
+    pub fn print_table(&self) {
+        let mut t = crate::util::bench::Table::new(&[
+            "nodes", "functions", "load", "requests", "events", "wall ms", "events/sec",
+        ]);
+        for c in &self.cells {
+            t.row(&[
+                c.nodes.to_string(),
+                c.functions.to_string(),
+                c.load.to_string(),
+                c.requests.to_string(),
+                c.events.to_string(),
+                format!("{:.1}", c.wall_ms),
+                format!("{:.0}", c.events_per_sec),
+            ]);
+        }
+        t.print();
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("throughput".to_string())),
+            ("policy", Json::Str(self.policy.name().to_string())),
+            ("trace", Json::Str(self.trace.name().to_string())),
+            ("duration_s", Json::Num(self.duration_s)),
+            ("seed", Json::Num(self.seed as f64)),
+            (
+                "cells",
+                Json::Arr(self.cells.iter().map(|c| c.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+/// Build a `load`-times superimposed multi-tenant workload: `load`
+/// independent base traces (decorrelated seeds) merged by arrival time,
+/// functions assigned by the registry's Zipf popularity. `load == 1`
+/// with the bursty generator reproduces `TenantWorkload::generate`
+/// exactly; higher loads scale the arrival *rate* while keeping the
+/// temporal burst structure.
+pub fn scaled_workload(
+    kind: TraceKind,
+    duration: Micros,
+    seed: u64,
+    functions: u32,
+    zipf_s: f64,
+    load: u32,
+    pc: &crate::config::PlatformConfig,
+) -> TenantWorkload {
+    let mut arrivals: Vec<Micros> = Vec::new();
+    for i in 0..u64::from(load.max(1)) {
+        let t = fig4::trace_for(kind, duration, seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        arrivals.extend(t.arrivals);
+    }
+    arrivals.sort_unstable();
+    let trace = Trace { arrivals };
+    let registry = FunctionRegistry::synthesize(functions, zipf_s, pc, seed);
+    TenantWorkload::assign(&trace, registry, seed)
+}
+
+/// Run one sweep cell. Nodes here add capacity (every node carries the
+/// full per-node replica budget) — this measures fleet *scale*, unlike
+/// `fleet-sweep`'s fixed-total-capacity fragmentation sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn run_cell(
+    policy: Policy,
+    kind: TraceKind,
+    duration_s: f64,
+    seed: u64,
+    nodes: u32,
+    functions: u32,
+    load: u32,
+    placement: PlacementPolicy,
+) -> ThroughputCell {
+    let cfg = ExperimentConfig {
+        trace: kind,
+        fleet: FleetConfig {
+            nodes,
+            placement,
+            ..Default::default()
+        },
+        tenancy: TenantConfig {
+            functions,
+            zipf_s: 1.1,
+        },
+        duration: secs(duration_s),
+        seed,
+        ..Default::default()
+    };
+    let workload = scaled_workload(kind, cfg.duration, seed, functions, 1.1, load, &cfg.platform);
+    let r = run_tenant(&cfg, policy, &workload);
+    ThroughputCell {
+        nodes,
+        functions,
+        load,
+        requests: workload.len(),
+        completed: r.completed,
+        events: r.events_processed,
+        wall_ms: r.wall_clock_ms,
+        events_per_sec: r.events_per_sec,
+        p99_ms: r.p99_ms,
+    }
+}
+
+/// Sweep the full nodes × functions × load grid (cells run serially so
+/// wall-clock numbers are not polluted by core contention).
+#[allow(clippy::too_many_arguments)]
+pub fn run_sweep(
+    policy: Policy,
+    kind: TraceKind,
+    duration_s: f64,
+    seed: u64,
+    nodes_list: &[u32],
+    functions_list: &[u32],
+    load_list: &[u32],
+    placement: PlacementPolicy,
+) -> ThroughputSweep {
+    let mut cells = Vec::new();
+    for &nodes in nodes_list {
+        for &functions in functions_list {
+            for &load in load_list {
+                cells.push(run_cell(
+                    policy, kind, duration_s, seed, nodes, functions, load, placement,
+                ));
+            }
+        }
+    }
+    ThroughputSweep {
+        policy,
+        trace: kind,
+        duration_s,
+        seed,
+        cells,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_one_reproduces_the_generated_workload() {
+        let pc = crate::config::PlatformConfig::default();
+        let a = scaled_workload(TraceKind::SyntheticBursty, secs(300.0), 7, 4, 1.1, 1, &pc);
+        let b = TenantWorkload::generate(TraceKind::SyntheticBursty, secs(300.0), 7, 4, 1.1, &pc);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_eq!(a.funcs, b.funcs);
+    }
+
+    #[test]
+    fn load_scales_the_request_count() {
+        let pc = crate::config::PlatformConfig::default();
+        let one = scaled_workload(TraceKind::SyntheticBursty, secs(300.0), 7, 2, 1.1, 1, &pc);
+        let four = scaled_workload(TraceKind::SyntheticBursty, secs(300.0), 7, 2, 1.1, 4, &pc);
+        assert!(four.len() > 2 * one.len(), "{} vs {}", four.len(), one.len());
+        // merged arrivals stay sorted (the runner requires arrival order)
+        assert!(four.arrivals.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn cell_measures_events_and_wall_clock() {
+        let c = run_cell(
+            Policy::OpenWhisk,
+            TraceKind::SyntheticBursty,
+            120.0,
+            3,
+            2,
+            2,
+            1,
+            PlacementPolicy::WarmFirst,
+        );
+        assert!(c.requests > 0);
+        assert_eq!(c.completed, c.requests, "no drops on the base load");
+        // every request contributes at least an Arrival event
+        assert!(c.events >= c.requests as u64, "{c:?}");
+        assert!(c.wall_ms > 0.0);
+        assert!(c.events_per_sec > 0.0);
+        let j = c.to_json();
+        assert_eq!(j.path("nodes").unwrap().as_f64(), Some(2.0));
+    }
+}

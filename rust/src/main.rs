@@ -5,6 +5,7 @@
 //!   matrix       run the full Fig. 5-7 policy x trace matrix (parallel cells)
 //!   fleet-sweep  sweep node count x placement policy at fixed total capacity
 //!   tenant-sweep run every policy on one multi-tenant workload, per-function P50/P99
+//!   bench-throughput  sweep nodes x functions x load, report simulator events/sec (BENCH JSON)
 //!   forecast     Fig. 4 forecast comparison
 //!   overhead     Fig. 8 control overhead (rust mirror + HLO if available)
 //!   fig1         the 50-request motivation scenario
@@ -33,6 +34,7 @@ fn main() {
         "matrix" => matrix(&rest),
         "fleet-sweep" => fleet_sweep(&rest),
         "tenant-sweep" => tenant_sweep(&rest),
+        "bench-throughput" => bench_throughput(&rest),
         "forecast" => forecast(&rest),
         "overhead" => overhead(),
         "fig1" => {
@@ -43,7 +45,7 @@ fn main() {
         }
         "gen-trace" => gen_trace(&rest),
         _ => {
-            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
+            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
                       mpc_serverless::version());
             if cmd == "help" { 0 } else { 2 }
         }
@@ -356,6 +358,97 @@ fn tenant_sweep(rest: &[String]) -> i32 {
         "\naggregate P99: mpc {:.0} ms vs openwhisk {:.0} ms vs icebreaker {:.0} ms — {}",
         mpc.p99_ms, ow.p99_ms, ib.p99_ms, verdict
     );
+    0
+}
+
+fn bench_throughput(rest: &[String]) -> i32 {
+    let cli = Cli::new(
+        "bench-throughput",
+        "sweep nodes x functions x load; report simulator events/sec and wall-clock",
+    )
+    .flag("policy", "mpc", "openwhisk | icebreaker | mpc")
+    .flag("trace", "synthetic", "azure | synthetic")
+    .flag("duration-s", "600", "simulated duration per cell (seconds)")
+    .flag("seed", "42", "rng seed")
+    .flag("placement", "warm-first", "round-robin | least-loaded | warm-first")
+    .flag("nodes-list", "1,2,4,8", "comma-separated node counts (each node adds full capacity)")
+    .flag("functions-list", "1,8,32", "comma-separated function counts")
+    .flag("load-list", "1,4", "comma-separated load multipliers (superimposed base traces)")
+    .flag("out", "", "also write the sweep as a BENCH JSON file (e.g. BENCH_throughput.json)");
+    let a = parse_or_exit(&cli, rest);
+    let policy = match Policy::parse(a.get("policy")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown policy '{}'", a.get("policy"));
+            return 2;
+        }
+    };
+    let trace_kind = match TraceKind::parse(a.get("trace")) {
+        Some(t) => t,
+        None => {
+            eprintln!("unknown trace '{}'", a.get("trace"));
+            return 2;
+        }
+    };
+    let placement = match PlacementPolicy::parse(a.get("placement")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown placement '{}'", a.get("placement"));
+            return 2;
+        }
+    };
+    let parse_list = |flag: &str| -> Result<Vec<u32>, String> {
+        let mut v = Vec::new();
+        for tok in a.get(flag).split(',') {
+            match tok.trim().parse::<u32>() {
+                Ok(n) if n >= 1 => v.push(n),
+                _ => return Err(format!("bad entry '{tok}' in --{flag} (positive integers)")),
+            }
+        }
+        Ok(v)
+    };
+    let (nodes_list, functions_list, load_list) = match (
+        parse_list("nodes-list"),
+        parse_list("functions-list"),
+        parse_list("load-list"),
+    ) {
+        (Ok(n), Ok(f), Ok(l)) => (n, f, l),
+        (n, f, l) => {
+            for e in [n.err(), f.err(), l.err()].into_iter().flatten() {
+                eprintln!("{e}");
+            }
+            return 2;
+        }
+    };
+    let duration_s = a.get_f64("duration-s").unwrap_or(600.0);
+    let seed = a.get_u64("seed").unwrap_or(42);
+    println!(
+        "bench-throughput: policy={} trace={} duration={duration_s:.0}s placement={}",
+        policy.name(),
+        trace_kind.name(),
+        placement.name()
+    );
+    let sweep = mpc_serverless::experiments::throughput::run_sweep(
+        policy,
+        trace_kind,
+        duration_s,
+        seed,
+        &nodes_list,
+        &functions_list,
+        &load_list,
+        placement,
+    );
+    sweep.print_table();
+    let json = sweep.to_json();
+    let out = a.get("out");
+    if out.is_empty() {
+        println!("{json}");
+    } else if let Err(e) = std::fs::write(out, format!("{json}\n")) {
+        eprintln!("writing {out}: {e}");
+        return 2;
+    } else {
+        println!("wrote {out}");
+    }
     0
 }
 

@@ -148,6 +148,15 @@ pub struct RunReport {
     pub counters: Counters,
     pub forecast_overhead_ms: f64,
     pub solve_overhead_ms: f64,
+    /// Simulator events processed by the run's event loop (the
+    /// `EventQueue::processed()` counter — arrivals, readies,
+    /// completions, control/sample ticks, keep-alive checks).
+    pub events_processed: u64,
+    /// Wall-clock time of the event loop (ms). Unlike every other field
+    /// this is *not* deterministic — it measures the simulator itself.
+    pub wall_clock_ms: f64,
+    /// Simulator throughput: `events_processed` per wall-clock second.
+    pub events_per_sec: f64,
     /// Per-request response times in seconds (for downstream analysis).
     pub response_times_s: Vec<f64>,
     /// Per-function P50/P99 breakdown, ordered by function id (one entry
@@ -232,9 +241,24 @@ impl RunReport {
             counters,
             forecast_overhead_ms: mean(&rec.forecast_ns) / 1e6,
             solve_overhead_ms: mean(&rec.solve_ns) / 1e6,
+            events_processed: 0,
+            wall_clock_ms: 0.0,
+            events_per_sec: 0.0,
             response_times_s: rt.samples().to_vec(),
             per_function,
         }
+    }
+
+    /// Record the simulator's own throughput for this run (set by the
+    /// experiment runner, which owns the event loop and the wall clock).
+    pub fn set_throughput(&mut self, events: u64, wall_secs: f64) {
+        self.events_processed = events;
+        self.wall_clock_ms = wall_secs * 1e3;
+        self.events_per_sec = if wall_secs > 0.0 {
+            events as f64 / wall_secs
+        } else {
+            0.0
+        };
     }
 
     /// Percentage improvement of a latency/usage metric over a baseline
@@ -268,6 +292,9 @@ impl RunReport {
             ("idle_total_s", Json::Num(self.idle_total_s)),
             ("forecast_overhead_ms", Json::Num(self.forecast_overhead_ms)),
             ("solve_overhead_ms", Json::Num(self.solve_overhead_ms)),
+            ("events_processed", Json::Num(self.events_processed as f64)),
+            ("wall_clock_ms", Json::Num(self.wall_clock_ms)),
+            ("events_per_sec", Json::Num(self.events_per_sec)),
             ("evictions", Json::Num(self.counters.evictions as f64)),
             ("functions", Json::Num(self.per_function.len() as f64)),
             (
