@@ -36,7 +36,7 @@ fn main() {
                         nodes,
                         capacities: Some(capacities.clone()),
                         placement,
-                        failure: None,
+                        ..Default::default()
                     },
                     duration: secs(duration_s),
                     seed,

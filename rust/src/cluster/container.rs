@@ -124,13 +124,27 @@ impl Container {
         }
     }
 
-    /// Composite reclaim-ranking score (Algorithm 2, line 1): prioritize
-    /// long-idle, little-used containers. Higher = better reclaim candidate.
-    pub fn reclaim_score(&self, now: Micros) -> f64 {
-        let idle_s = self.idle_for(now) as f64 / 1e6;
+    /// Now-independent reclaim ranking key: `last_used` in seconds plus
+    /// the activation penalty. Algorithm 2's composite score at time
+    /// `now` is `now_s − key`, so **ascending key = descending score** —
+    /// the property that lets the platform keep idle containers in a
+    /// pre-sorted reclaim order instead of re-scoring every candidate on
+    /// each reclaim call. Always non-negative and finite, so its IEEE-754
+    /// bit pattern is a valid `u64` ordering key.
+    pub fn reclaim_key(&self) -> f64 {
         // activation count proxies CPU/memory pressure in the paper's
         // composite (heavily used containers are likely needed again)
-        idle_s - 0.1 * self.activations as f64
+        self.last_used as f64 / 1e6 + 0.1 * self.activations as f64
+    }
+
+    /// Composite reclaim-ranking score (Algorithm 2, line 1): prioritize
+    /// long-idle, little-used containers. Higher = better reclaim
+    /// candidate. For an idle container (`since == last_used`) this is
+    /// `idle_s − 0.1 × activations`, expressed as `now_s −`
+    /// [`Container::reclaim_key`] so the score's order is exactly the
+    /// key's reversed order.
+    pub fn reclaim_score(&self, now: Micros) -> f64 {
+        now as f64 / 1e6 - self.reclaim_key()
     }
 }
 
@@ -180,6 +194,24 @@ mod tests {
         // same idle-since time for both → veteran scores lower
         let now = 100_000_000;
         assert!(fresh.reclaim_score(now) > veteran.reclaim_score(now));
+        // ascending key == descending score (the reclaim-order invariant)
+        assert!(fresh.reclaim_key() < veteran.reclaim_key());
+    }
+
+    #[test]
+    fn reclaim_key_is_non_negative_and_now_independent() {
+        let mut c = Container::cold(1, 0, 2_000_000, 3_000_000, None);
+        c.finish_cold_start(3_000_000);
+        assert!(c.reclaim_key() >= 0.0);
+        let k = c.reclaim_key();
+        // score = now_s − key at any now
+        for now in [3_000_000u64, 50_000_000, 3_600_000_000] {
+            assert_eq!(c.reclaim_score(now), now as f64 / 1e6 - k);
+        }
+        // an execution bumps last_used and activations, so the key grows
+        c.start_execution(1, 4_000_000, 5_000_000);
+        c.finish_execution(5_000_000);
+        assert!(c.reclaim_key() > k);
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! Cross-node container migration planning — the fleet's rebalancing
+//! pass (elasticity). Plugs in alongside [`super::placement`]: placement
+//! decides where *new* work lands, migration moves *existing* idle warm
+//! capacity when the standing allocation no longer matches demand
+//! (tenant skew drift, a node rejoining cold, memory pressure building
+//! on one node).
+//!
+//! Planners are pure functions over the fleet's indexed telemetry (no
+//! mutation, no RNG): they return a list of [`MigrationMove`]s the
+//! coordinator executes through [`super::Fleet::migrate`], which
+//! re-validates each move — a planned move that no longer fits is
+//! skipped, never forced.
+//!
+//! # Math-to-code: the demand-gap scoring rule
+//!
+//! For function `f` with forecast demand `d_f` (expected arrivals over
+//! the cold-start lead window, supplied by the MPC's per-function
+//! Fourier forecasts) and online nodes `n` with replica capacities
+//! `c_n`:
+//!
+//! ```text
+//! target(n, f) = d_f · c_n / Σ_m c_m          capacity-proportional share
+//! supply(n, f) = warm(n, f) + coldStarting(n, f)
+//! gap(n, f)    = target(n, f) − supply(n, f)
+//! ```
+//!
+//! Each planned move takes the most over-provisioned donor
+//! (`argmin gap ≤ −1`, holding a movable idle replica of `f`) and the
+//! most under-provisioned receiver (`argmax gap ≥ +1`, with admission
+//! headroom), then shifts both gaps by one. Functions are served in
+//! descending-demand order under a shared per-pass move budget, so the
+//! hottest function's gaps close first. The ±1 thresholds make the pass
+//! idempotent: once every |gap| < 1 no further moves are planned, so a
+//! balanced fleet stays untouched.
+
+use crate::cluster::fleet::{Fleet, NodeId};
+use crate::config::{MigrationConfig, MigrationPolicy};
+use crate::workload::tenant::FunctionId;
+
+/// One planned move: `func`'s LRU idle container leaves `from` for `to`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationMove {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub func: FunctionId,
+}
+
+/// Plan one rebalancing pass under `cfg.policy`. `demand` is the
+/// caller's per-function demand forecast over the cold-start lead
+/// window (index = [`FunctionId`]; the MPC supplies its per-function
+/// forecasts, a single-tenant caller a one-element aggregate). With
+/// [`MigrationPolicy::Off`] (the default) no moves are ever planned.
+pub fn plan(cfg: &MigrationConfig, fleet: &Fleet, demand: &[f64]) -> Vec<MigrationMove> {
+    match cfg.policy {
+        MigrationPolicy::Off => Vec::new(),
+        MigrationPolicy::DemandGap => plan_demand_gap(fleet, demand, cfg.max_moves_per_step),
+        MigrationPolicy::IdleSpread => plan_idle_spread(fleet, cfg.max_moves_per_step),
+    }
+}
+
+/// Forecast-driven planner (see the module-level scoring rule). All node
+/// probes (`warm_count_for`, `cold_starting_for`, `idle_count_for`,
+/// `headroom`) read the platform's incremental indices, so one pass is
+/// O(functions × nodes + moves × nodes), independent of the container
+/// population.
+pub fn plan_demand_gap(fleet: &Fleet, demand: &[f64], max_moves: u32) -> Vec<MigrationMove> {
+    let mut moves = Vec::new();
+    let online: Vec<(NodeId, u32)> = fleet
+        .nodes()
+        .iter()
+        .filter(|n| n.online)
+        .map(|n| (n.id, n.platform.cfg.resource_cap()))
+        .collect();
+    let total_cap: u32 = online.iter().map(|&(_, c)| c).sum();
+    if online.len() < 2 || total_cap == 0 {
+        return moves;
+    }
+    // descending demand, ties to the lower function id
+    let mut order: Vec<usize> = (0..demand.len()).collect();
+    order.sort_by(|&a, &b| demand[b].total_cmp(&demand[a]).then(a.cmp(&b)));
+    for f in order {
+        if moves.len() as u32 >= max_moves {
+            break;
+        }
+        let func = f as FunctionId;
+        let d = demand[f].max(0.0);
+        if d <= 0.0 {
+            continue;
+        }
+        let mut gap: Vec<f64> = Vec::with_capacity(online.len());
+        let mut movable: Vec<u32> = Vec::with_capacity(online.len());
+        let mut headroom: Vec<u32> = Vec::with_capacity(online.len());
+        for &(id, cap) in &online {
+            let p = &fleet.node(id).platform;
+            let supply = (p.warm_count_for(func) + p.cold_starting_for(func)) as f64;
+            gap.push(d * cap as f64 / total_cap as f64 - supply);
+            movable.push(p.idle_count_for(func));
+            // replica headroom as the planning proxy; the executor
+            // re-checks full admission (incl. the memory ledger)
+            headroom.push(if p.can_admit(func) { p.headroom() } else { 0 });
+        }
+        while (moves.len() as u32) < max_moves {
+            let donor = (0..online.len())
+                .filter(|&j| gap[j] <= -1.0 && movable[j] > 0)
+                .min_by(|&a, &b| gap[a].total_cmp(&gap[b]).then(online[a].0.cmp(&online[b].0)));
+            let recv = (0..online.len())
+                .filter(|&j| gap[j] >= 1.0 && headroom[j] > 0)
+                .max_by(|&a, &b| gap[a].total_cmp(&gap[b]).then(online[b].0.cmp(&online[a].0)));
+            let (Some(dj), Some(rj)) = (donor, recv) else {
+                break;
+            };
+            if dj == rj {
+                break;
+            }
+            moves.push(MigrationMove {
+                from: online[dj].0,
+                to: online[rj].0,
+                func,
+            });
+            gap[dj] += 1.0;
+            movable[dj] -= 1;
+            gap[rj] -= 1.0;
+            headroom[rj] -= 1;
+        }
+    }
+    moves
+}
+
+/// Demand-agnostic planner: level warm stock across online nodes by
+/// repeatedly moving the most-stocked node's coldest idle container to
+/// the least-stocked node with headroom, while the difference exceeds
+/// one (so a balanced fleet plans nothing). "Stock" counts idle *plus*
+/// in-flight cold-starting containers — transfers and prewarms already
+/// headed for a node are supply that has merely not landed yet, so a
+/// replan inside the transfer-latency window (emergency replans fire on
+/// arrival bursts) does not re-plan moves that are still in flight and
+/// over-drain the donor. Only genuinely idle containers are movable.
+pub fn plan_idle_spread(fleet: &Fleet, max_moves: u32) -> Vec<MigrationMove> {
+    let mut moves = Vec::new();
+    let online: Vec<NodeId> = fleet
+        .nodes()
+        .iter()
+        .filter(|n| n.online)
+        .map(|n| n.id)
+        .collect();
+    if online.len() < 2 {
+        return moves;
+    }
+    let mut stock: Vec<u32> = online
+        .iter()
+        .map(|&id| {
+            let p = &fleet.node(id).platform;
+            p.idle_count() + p.cold_starting_count()
+        })
+        .collect();
+    let mut movable: Vec<u32> = online
+        .iter()
+        .map(|&id| fleet.node(id).platform.idle_count())
+        .collect();
+    let mut headroom: Vec<u32> = online
+        .iter()
+        .map(|&id| fleet.node(id).platform.headroom())
+        .collect();
+    while (moves.len() as u32) < max_moves {
+        let Some(dj) = (0..online.len())
+            .filter(|&j| movable[j] > 0)
+            .max_by(|&a, &b| stock[a].cmp(&stock[b]).then(online[b].cmp(&online[a])))
+        else {
+            break;
+        };
+        let Some(rj) = (0..online.len())
+            .filter(|&j| j != dj && headroom[j] > 0)
+            .min_by(|&a, &b| stock[a].cmp(&stock[b]).then(online[a].cmp(&online[b])))
+        else {
+            break;
+        };
+        if stock[dj] < stock[rj] + 2 {
+            break; // moving would not strictly level the pools
+        }
+        // the victim is the donor's coldest (best-reclaim) idle container
+        let Some(func) = fleet.node(online[dj]).platform.coldest_idle_function() else {
+            break;
+        };
+        moves.push(MigrationMove {
+            from: online[dj],
+            to: online[rj],
+            func,
+        });
+        stock[dj] -= 1;
+        movable[dj] -= 1;
+        stock[rj] += 1;
+        headroom[rj] -= 1;
+    }
+    moves
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FleetConfig, PlacementPolicy, PlatformConfig};
+
+    fn fleet(nodes: u32) -> Fleet {
+        let fc = FleetConfig {
+            nodes,
+            placement: PlacementPolicy::WarmFirst,
+            ..Default::default()
+        };
+        let pc = PlatformConfig {
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        Fleet::new(&fc, &pc, 7)
+    }
+
+    fn stock_idle(f: &mut Fleet, node: NodeId, count: usize, t0: u64) {
+        for i in 0..count {
+            let now = t0 + i as u64;
+            let (cid, ready_at) = f.node_mut(node).platform.prewarm_one(now).unwrap();
+            f.node_mut(node).platform.container_ready(cid, ready_at);
+        }
+    }
+
+    #[test]
+    fn off_plans_nothing() {
+        let mut f = fleet(2);
+        stock_idle(&mut f, 0, 3, 0);
+        let cfg = MigrationConfig::default();
+        assert!(plan(&cfg, &f, &[100.0]).is_empty());
+    }
+
+    #[test]
+    fn demand_gap_moves_toward_predicted_demand() {
+        let mut f = fleet(2);
+        // all supply on node 0, demand worth 4 containers fleet-wide:
+        // equal caps → target 2 per node, gaps (−1, +2) → exactly one move
+        stock_idle(&mut f, 0, 3, 0);
+        let moves = plan_demand_gap(&f, &[4.0], 8);
+        assert_eq!(
+            moves,
+            vec![MigrationMove {
+                from: 0,
+                to: 1,
+                func: 0
+            }]
+        );
+        // a balanced fleet (|gap| < 1 everywhere) plans nothing
+        stock_idle(&mut f, 1, 3, 100);
+        assert!(plan_demand_gap(&f, &[12.0], 8).is_empty());
+    }
+
+    #[test]
+    fn demand_gap_respects_move_budget_and_zero_demand() {
+        let mut f = fleet(2);
+        stock_idle(&mut f, 0, 8, 0);
+        // demand 8 over equal caps → targets 4/4, gaps (−4, +4): four
+        // moves would level it, but the per-pass budget caps at 2
+        assert_eq!(plan_demand_gap(&f, &[8.0], 2).len(), 2);
+        // no demand → nothing to rebalance toward
+        assert!(plan_demand_gap(&f, &[0.0], 8).is_empty());
+        assert!(plan_demand_gap(&f, &[-5.0], 8).is_empty());
+    }
+
+    #[test]
+    fn demand_gap_skips_offline_nodes() {
+        let mut f = fleet(3);
+        stock_idle(&mut f, 0, 6, 0);
+        f.fail_node(2, 1_000_000_000);
+        let moves = plan_demand_gap(&f, &[8.0], 8);
+        assert!(!moves.is_empty());
+        assert!(moves.iter().all(|m| m.from != 2 && m.to != 2));
+    }
+
+    #[test]
+    fn idle_spread_levels_pools() {
+        let mut f = fleet(2);
+        stock_idle(&mut f, 0, 4, 0);
+        let moves = plan_idle_spread(&f, 8);
+        // 4 vs 0 levels to 2 vs 2 in exactly two moves
+        assert_eq!(moves.len(), 2);
+        assert!(moves.iter().all(|m| m.from == 0 && m.to == 1));
+        // an already-level fleet plans nothing
+        stock_idle(&mut f, 1, 4, 100);
+        assert!(plan_idle_spread(&f, 8).is_empty());
+    }
+
+    #[test]
+    fn idle_spread_counts_inflight_transfers_as_receiver_stock() {
+        // execute the planned moves, then replan while the transfers are
+        // still in flight (cold-starting on the receiver): an emergency
+        // replan inside the latency window must NOT move more containers
+        let mut f = fleet(2);
+        stock_idle(&mut f, 0, 4, 0);
+        let moves = plan_idle_spread(&f, 8);
+        assert_eq!(moves.len(), 2);
+        for m in &moves {
+            f.migrate(m.from, m.to, m.func, 1_000_000_000, 2_000_000)
+                .expect("planned move must execute");
+        }
+        assert_eq!(f.node(1).platform.cold_starting_count(), 2);
+        assert_eq!(f.node(1).platform.idle_count(), 0, "not landed yet");
+        assert!(
+            plan_idle_spread(&f, 8).is_empty(),
+            "in-flight transfers re-planned as missing stock"
+        );
+    }
+
+    #[test]
+    fn single_online_node_never_migrates() {
+        let mut f = fleet(1);
+        stock_idle(&mut f, 0, 4, 0);
+        assert!(plan_idle_spread(&f, 8).is_empty());
+        assert!(plan_demand_gap(&f, &[10.0], 8).is_empty());
+    }
+}

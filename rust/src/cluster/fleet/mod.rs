@@ -21,12 +21,24 @@
 //!   [`Fleet::prewarm_for`]: one unbound cold container of a function on
 //!   the node least provisioned *for that function*. The aggregate
 //!   budget itself is fleet-scaled upstream: the planner's pool bound
-//!   `w_max` grows with `FleetConfig::total_capacity` (`w_max × nodes`
-//!   for a homogeneous fleet), so an 8-node cluster is not capped at one
-//!   node's 64 replicas.
+//!   `w_max` tracks the fleet's **live** online capacity at every
+//!   control step (`w_max × nodes` when everyone is healthy), so an
+//!   8-node cluster is not capped at one node's 64 replicas — and a
+//!   drained node's share drops out until it rejoins.
 //! * **Reclaim** (Algorithm 2, Eq. 15's `r_k`) → [`Fleet::try_reclaim`]:
 //!   each step drains the best-scoring log-safe idle candidate across
-//!   all online nodes, preserving the algorithm's global ranking.
+//!   all online nodes, preserving the algorithm's global ranking. With
+//!   `PlatformConfig::reclaim_pressure_weight > 0` each node's best
+//!   score carries a memory-pressure bias, so the cross-node pick
+//!   prefers draining pressured nodes.
+//! * **Elasticity** — the capacity lifecycle *healthy → draining →
+//!   drained → rejoining* (docs/ARCHITECTURE.md "Fleet elasticity"):
+//!   [`Fleet::fail_node`] drains a node, [`Fleet::restore_node`] brings
+//!   it back cold (placement and capacity accounting see it
+//!   immediately; the controller re-scales its budget to the live
+//!   capacity at the next step), and [`Fleet::migrate`] moves idle warm
+//!   containers between nodes under the [`migration`] planner's
+//!   policies.
 //! * **Telemetry** (the controller's Prometheus scrape) → the aggregate
 //!   gauges ([`Fleet::warm_count`], [`Fleet::cold_ready_times`], …) and
 //!   their per-function variants.
@@ -38,6 +50,7 @@
 //! valid; a one-function registry likewise collapses every `*_for`
 //! method to its legacy aggregate form.
 
+pub mod migration;
 pub mod placement;
 
 use crate::cluster::container::ContainerId;
@@ -75,6 +88,18 @@ pub struct InvokerNode {
     pub id: NodeId,
     pub platform: Platform,
     pub online: bool,
+    /// Drain generation: how many times this node has failed. Nonzero
+    /// means container events scheduled before a drain may still be in
+    /// flight (referencing containers lost with the node), so
+    /// unknown-container events are dropped after a rejoin instead of
+    /// panicking. Ids are never reused, so post-rejoin events can't
+    /// collide with lost ones.
+    pub epoch: u32,
+    /// Counter snapshot taken at the most recent drain. An offline node
+    /// does no work, so `counters − counters_at_drain` is exactly the
+    /// node's *post-rejoin* activity — the per-node report's evidence
+    /// that a restored node reabsorbed load.
+    pub counters_at_drain: Option<Counters>,
 }
 
 impl InvokerNode {
@@ -82,6 +107,49 @@ impl InvokerNode {
     pub fn load(&self) -> u64 {
         (self.platform.busy_count() + self.platform.cold_starting_count()) as u64
             + self.platform.fcfs_len() as u64
+    }
+}
+
+/// One node's slice of a run report: identity, liveness, live container
+/// population, and the node-local monotonic counters (the per-node view
+/// of the fleet's aggregate [`Counters`]).
+#[derive(Debug, Clone, Copy)]
+pub struct NodeReport {
+    pub node: NodeId,
+    pub online: bool,
+    /// Replica capacity under the node's resource cap.
+    pub capacity: u32,
+    /// Containers live on the node when the snapshot was taken.
+    pub containers: u32,
+    pub counters: Counters,
+    /// Counter snapshot at the node's most recent drain (None if it
+    /// never failed). `counters − counters_at_drain` is the node's
+    /// post-rejoin activity.
+    pub counters_at_drain: Option<Counters>,
+}
+
+impl NodeReport {
+    /// Activity since the node's most recent drain (None if it never
+    /// drained). An offline node does no work, so nonzero
+    /// invocations/prewarms here are exactly the rejoin evidence: the
+    /// restored node reabsorbed load.
+    pub fn post_restore(&self) -> Option<Counters> {
+        let at = self.counters_at_drain?;
+        let c = self.counters;
+        // exhaustive construction: a new counter field must be diffed
+        // here or this stops compiling
+        Some(Counters {
+            invocations: c.invocations - at.invocations,
+            cold_starts: c.cold_starts - at.cold_starts,
+            prewarms_started: c.prewarms_started - at.prewarms_started,
+            prewarms_rejected: c.prewarms_rejected - at.prewarms_rejected,
+            reclaims: c.reclaims - at.reclaims,
+            keepalive_expiries: c.keepalive_expiries - at.keepalive_expiries,
+            capacity_queued: c.capacity_queued - at.capacity_queued,
+            evictions: c.evictions - at.evictions,
+            migrations_out: c.migrations_out - at.migrations_out,
+            migrations_in: c.migrations_in - at.migrations_in,
+        })
     }
 }
 
@@ -135,6 +203,8 @@ impl Fleet {
                 id: i,
                 platform: Platform::with_registry(pc, registry.clone(), node_seed),
                 online: true,
+                epoch: 0,
+                counters_at_drain: None,
             });
         }
         Fleet {
@@ -337,6 +407,23 @@ impl Fleet {
             .collect()
     }
 
+    /// Per-node accounting snapshot (all nodes, offline included): which
+    /// invoker did the work, and the elasticity counters showing capacity
+    /// moving between nodes — the `RunReport.per_node` source.
+    pub fn node_reports(&self) -> Vec<NodeReport> {
+        self.nodes
+            .iter()
+            .map(|n| NodeReport {
+                node: n.id,
+                online: n.online,
+                capacity: n.platform.cfg.resource_cap(),
+                containers: n.platform.total(),
+                counters: n.platform.counters,
+                counters_at_drain: n.counters_at_drain,
+            })
+            .collect()
+    }
+
     // ---- invocation path ----------------------------------------------------
 
     fn place_for(&mut self, func: FunctionId) -> usize {
@@ -480,7 +567,11 @@ impl Fleet {
     //
     // Events carry (node, container); after a node failure its stale
     // Ready/Done/KeepAlive events keep arriving and must be dropped, so
-    // these return None / NotApplicable for offline nodes.
+    // these return None / NotApplicable for offline nodes. A *rejoined*
+    // node (epoch > 0) additionally drops events for containers lost in
+    // the drain — they can still be in flight when the node is back
+    // online; on a never-drained node an unknown container stays the
+    // hard logic error it always was.
 
     pub fn container_ready(
         &mut self,
@@ -489,7 +580,7 @@ impl Fleet {
         now: Micros,
     ) -> Option<ReadyOutcome> {
         let nd = self.nodes.get_mut(node as usize)?;
-        if !nd.online {
+        if !nd.online || (nd.epoch > 0 && !nd.platform.has_container(cid)) {
             return None;
         }
         Some(nd.platform.container_ready(cid, now))
@@ -502,7 +593,7 @@ impl Fleet {
         now: Micros,
     ) -> Option<CompleteOutcome> {
         let nd = self.nodes.get_mut(node as usize)?;
-        if !nd.online {
+        if !nd.online || (nd.epoch > 0 && !nd.platform.has_container(cid)) {
             return None;
         }
         Some(nd.platform.exec_complete(cid, now))
@@ -532,7 +623,61 @@ impl Fleet {
             return Vec::new();
         }
         nd.online = false;
+        nd.epoch += 1;
+        nd.counters_at_drain = Some(nd.platform.counters);
         nd.platform.fail_all(now)
+    }
+
+    /// Bring a drained node back online (the rejoin scenario): it
+    /// re-enters placement and capacity accounting immediately, starting
+    /// cold — no containers, no backlog, counters (history) intact. The
+    /// controller's prewarm budget and `w_max` pick up the restored
+    /// capacity at its next control step (live-capacity re-scaling).
+    /// Returns whether the node actually transitioned offline → online.
+    pub fn restore_node(&mut self, node: NodeId, _now: Micros) -> bool {
+        match self.nodes.get_mut(node as usize) {
+            Some(nd) if !nd.online => {
+                nd.online = true;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Migration actuator: move one idle warm container of `func` from
+    /// node `from` to node `to`. The source releases its LRU log-safe
+    /// candidate (books it like a drain); the destination hosts the
+    /// in-flight transfer — slot and memory claimed now, serviceable at
+    /// the returned ready time (`now + latency`, jittered, with no cold
+    /// start counted). Returns None with **no state change** when either
+    /// side cannot participate (offline, no movable candidate, or the
+    /// destination cannot admit the function — migrations never evict).
+    pub fn migrate(
+        &mut self,
+        from: NodeId,
+        to: NodeId,
+        func: FunctionId,
+        now: Micros,
+        latency: Micros,
+    ) -> Option<(ContainerId, Micros)> {
+        if from == to {
+            return None;
+        }
+        let src_ok = self.nodes.get(from as usize).is_some_and(|n| n.online);
+        let dst_ok = self
+            .nodes
+            .get(to as usize)
+            .is_some_and(|n| n.online && n.platform.can_admit(func));
+        if !src_ok || !dst_ok {
+            return None;
+        }
+        let cid = self.nodes[from as usize].platform.migrate_out_candidate(func)?;
+        if !self.nodes[from as usize].platform.migrate_out(cid, now) {
+            return None;
+        }
+        // admission was checked above and releasing a container on
+        // another node cannot invalidate it
+        self.nodes[to as usize].platform.migrate_in(func, now, latency)
     }
 
     /// End-of-run accounting across every node (offline nodes are already
@@ -644,7 +789,7 @@ mod tests {
             nodes: 3,
             capacities: Some(vec![1, 2]),
             placement: PlacementPolicy::LeastLoaded,
-            failure: None,
+            ..Default::default()
         };
         let f = Fleet::new(&fc, &pcfg(), 1);
         assert_eq!(f.node(0).platform.cfg.resource_cap(), 1);
@@ -661,7 +806,7 @@ mod tests {
             nodes: 1,
             capacities: Some(vec![128]),
             placement: PlacementPolicy::WarmFirst,
-            failure: None,
+            ..Default::default()
         };
         let f = Fleet::new(&fc, &pcfg(), 1);
         assert_eq!(f.resource_cap(), 128);
@@ -707,6 +852,134 @@ mod tests {
         let mut f = fleet(1, PlacementPolicy::WarmFirst);
         assert!(f.fail_node(0, 0).is_empty());
         assert_eq!(f.online_count(), 1);
+    }
+
+    #[test]
+    fn restore_node_rejoins_cold_and_reabsorbs_work() {
+        let mut f = fleet(2, PlacementPolicy::RoundRobin);
+        let (n0, _) = f.invoke(1, 0);
+        assert_eq!(n0, 0);
+        f.fail_node(0, 1000);
+        assert_eq!(f.online_count(), 1);
+        // restoring an online node is a no-op, an offline one rejoins
+        assert!(!f.restore_node(1, 2000));
+        assert!(f.restore_node(0, 2000));
+        assert!(!f.restore_node(0, 2001), "already online");
+        assert_eq!(f.online_count(), 2);
+        // the node rejoined cold: no containers, but capacity counts again
+        assert_eq!(f.node(0).platform.total(), 0);
+        assert_eq!(f.resource_cap(), 2 * f.node(1).platform.cfg.resource_cap());
+        // placement routes to it again (round-robin resumes over both)...
+        let mut seen = Vec::new();
+        for req in 2..6 {
+            seen.push(f.invoke(req, 3000 + req).0);
+        }
+        assert!(seen.contains(&0), "restored node got no dispatches: {seen:?}");
+        // ...and the prewarm budget lands on the least-provisioned node,
+        // which is now the cold rejoiner
+        assert!(f.node(0).platform.counters.invocations >= 2);
+    }
+
+    #[test]
+    fn stale_events_after_rejoin_are_dropped_not_panics() {
+        let mut f = fleet(2, PlacementPolicy::RoundRobin);
+        // a cold start in flight on node 0, lost when the node drains
+        let (n0, out) = f.invoke(7, 0);
+        let InvokeOutcome::ColdStart { cid, ready_at } = out else {
+            panic!("{out:?}")
+        };
+        assert_eq!(n0, 0);
+        f.fail_node(0, 1000);
+        assert!(f.restore_node(0, 2000));
+        // the pre-drain Ready event arrives at the now-online node: the
+        // container died with the drain, so the event must be dropped
+        assert!(f.container_ready(0, cid, ready_at).is_none());
+        assert!(f.exec_complete(0, cid, ready_at).is_none());
+        assert_eq!(
+            f.keepalive_check(0, cid, ready_at),
+            KeepAliveVerdict::NotApplicable
+        );
+        // fresh work on the rejoined node flows normally (new ids)
+        let (cid2, r2) = f.node_mut(0).platform.prewarm_one(3000).unwrap();
+        assert_ne!(cid2, cid, "container ids must never be reused");
+        assert!(matches!(
+            f.container_ready(0, cid2, r2),
+            Some(ReadyOutcome::Idle)
+        ));
+    }
+
+    #[test]
+    fn migrate_moves_warm_state_without_cold_start() {
+        let mut f = fleet(2, PlacementPolicy::WarmFirst);
+        let (cid, r) = f.node_mut(0).platform.prewarm_one(0).unwrap();
+        f.node_mut(0).platform.container_ready(cid, r);
+        assert_eq!(f.idle_count(), 1);
+        let (ncid, ready_at) = f
+            .migrate(0, 1, 0, r + 1_000_000, 2_000_000)
+            .expect("migration must proceed");
+        assert_eq!(ready_at, r + 3_000_000);
+        // source released, destination hosts the in-flight transfer
+        assert_eq!(f.node(0).platform.total(), 0);
+        assert_eq!(f.node(1).platform.cold_starting_count(), 1);
+        let c = f.counters();
+        assert_eq!(c.migrations_out, 1);
+        assert_eq!(c.migrations_in, 1);
+        assert_eq!(c.cold_starts, 0, "migration is not a cold start");
+        // conservation holds across the move (one removed, one spawned)
+        assert_eq!(f.spawned(), f.removed() + f.total() as u64);
+        // the transfer lands and serves warm on the destination
+        assert!(matches!(
+            f.container_ready(1, ncid, ready_at),
+            Some(ReadyOutcome::Idle)
+        ));
+        let (node, out) = f.invoke(1, ready_at + 10);
+        assert_eq!(node, 1);
+        assert!(matches!(out, InvokeOutcome::WarmStart { .. }), "{out:?}");
+    }
+
+    #[test]
+    fn migrate_refuses_bad_endpoints() {
+        let mut f = fleet(2, PlacementPolicy::WarmFirst);
+        // nothing to move
+        assert!(f.migrate(0, 1, 0, 0, 1000).is_none());
+        let (cid, r) = f.node_mut(0).platform.prewarm_one(0).unwrap();
+        f.node_mut(0).platform.container_ready(cid, r);
+        // self-moves, unknown nodes, offline destinations
+        assert!(f.migrate(0, 0, 0, r, 1000).is_none());
+        assert!(f.migrate(0, 9, 0, r, 1000).is_none());
+        f.fail_node(1, r + 1);
+        assert!(f.migrate(0, 1, 0, r + 2, 1000).is_none());
+        // no state was touched by the refusals
+        assert_eq!(f.node(0).platform.total(), 1);
+        assert_eq!(f.counters().migrations_out, 0);
+    }
+
+    #[test]
+    fn node_reports_carry_per_node_counters() {
+        let mut f = fleet(2, PlacementPolicy::RoundRobin);
+        f.invoke(0, 0);
+        f.invoke(1, 10);
+        let reports = f.node_reports();
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().all(|r| r.online && r.counters.invocations == 1));
+        assert_eq!(reports[0].node, 0);
+        assert_eq!(reports[1].containers, 1);
+        // offline nodes keep their history in the report, and the drain
+        // snapshot pins what happened before the outage
+        f.fail_node(1, 100);
+        let reports = f.node_reports();
+        assert!(!reports[1].online);
+        assert_eq!(reports[1].counters.invocations, 1);
+        assert_eq!(reports[1].containers, 0);
+        assert!(reports[0].post_restore().is_none(), "node 0 never drained");
+        let pr = reports[1].post_restore().expect("drained node has snapshot");
+        assert_eq!(pr.invocations, 0, "no post-rejoin work yet");
+        // after a restore, new work shows up as post-restore activity
+        assert!(f.restore_node(1, 200));
+        f.invoke(2, 300); // round-robin continues on node 0 or 1
+        f.invoke(3, 310);
+        let pr = f.node_reports()[1].post_restore().unwrap();
+        assert_eq!(pr.invocations, 1, "one of the two landed on node 1");
     }
 
     #[test]

@@ -18,6 +18,6 @@ pub mod telemetry;
 pub type RequestId = u64;
 
 pub use container::{Container, ContainerId, ContainerState};
-pub use fleet::{Fleet, InvokerNode, NodeId};
+pub use fleet::{Fleet, InvokerNode, NodeId, NodeReport};
 pub use platform::{CompleteOutcome, InvokeOutcome, KeepAliveVerdict, Platform, ReadyOutcome};
 pub use telemetry::{Counters, FnCounterMap, FnCounters, GaugeSample, Telemetry};

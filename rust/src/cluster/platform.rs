@@ -30,11 +30,36 @@
 //! as a `#[cfg(test)]` reference implementation that property tests
 //! compare against bit-for-bit (see `assert_matches_scan`).
 //!
+//! **Indexed reclaim order.** Algorithm 2's per-container score
+//! `idle_s − 0.1 × activations` equals `now_s − key` for the
+//! now-independent key `last_used_s + 0.1 × activations`
+//! ([`Container::reclaim_key`]), so descending-score enumeration is
+//! ascending-key enumeration of a pre-sorted set. The platform keeps all
+//! idle containers in one such `reclaim_order` set, making
+//! [`Platform::try_reclaim`] O(n) in the *requested* count (output-
+//! sensitive), eviction a first-match probe, and the fleet's
+//! [`Platform::best_reclaim_score`] peek O(1) on the common path.
+//!
+//! **Pressure-aware reclaim.** With
+//! `PlatformConfig::reclaim_pressure_weight > 0` the node's best reclaim
+//! score is biased by its memory-ledger pressure
+//! (`+ weight × mem_used / node_mem`), so the fleet's cross-node reclaim
+//! ranking prefers draining pressured nodes. The term is node-constant,
+//! so intra-node ranking is unchanged; at the default weight `0.0` the
+//! scores are bit-identical to the container-only ranking.
+//!
+//! **Elasticity hooks.** [`Platform::migrate_out`] /
+//! [`Platform::migrate_in`] move an idle container's warm state between
+//! nodes (the fleet's rebalancing pass): the source books it like a
+//! drain, the destination hosts it as an in-flight transfer that
+//! occupies a replica slot and memory (resource-time is conserved) and
+//! re-enters service after the transfer latency — with no cold start
+//! counted, which is the point of migrating instead of respawning.
+//!
 //! The platform is event-driven but owns no clock: methods take `now` and
 //! return outcomes carrying future timestamps; the experiment runner turns
 //! those into simulator events (or real timers in real-time mode).
 
-use std::cmp::Ordering;
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::cluster::activation_log::ActivationLog;
@@ -122,15 +147,28 @@ struct FnIndex {
     backlog: VecDeque<(u64, RequestId)>,
 }
 
-/// Max-pick under Algorithm 2's ranking: highest reclaim score, ties to
-/// the lower container id. `total_cmp` keeps the ranking a total order
-/// even if a score ever degenerates to NaN (the old
-/// `partial_cmp().unwrap()` would panic the run instead).
-fn better_reclaim(a: (f64, ContainerId), b: (f64, ContainerId)) -> (f64, ContainerId) {
-    match a.0.total_cmp(&b.0).then(b.1.cmp(&a.1)) {
-        Ordering::Less => b,
-        _ => a,
-    }
+/// Reclaim-order set key: the container's now-independent reclaim key as
+/// IEEE-754 bits. Keys are non-negative and finite (see
+/// [`Container::reclaim_key`]), where the bit pattern of an `f64` orders
+/// exactly like its value — so `BTreeSet<(bits, id)>` enumerates by
+/// ascending key (descending Algorithm-2 score), ties to the lower
+/// container id.
+///
+/// Relation to the scan-era comparator (`score total_cmp desc, id
+/// asc`): `score = now_s − key` is weakly monotone in `key`, so the two
+/// orders agree whenever scores differ, and exactly-equal keys tie by
+/// id in both. The one divergence is the rounding edge where two
+/// *distinct* keys (Δ of a few ulps) subtract to bitwise-equal scores
+/// at large `now`: the scan broke that tie by id, the pre-sorted order
+/// breaks it by key — both are valid rankings of candidates whose
+/// scores are bitwise identical, and the canonical order is now the
+/// key's.
+fn reclaim_bits(key: f64) -> u64 {
+    debug_assert!(
+        key >= 0.0 && key.is_finite(),
+        "reclaim key must be non-negative finite, got {key}"
+    );
+    key.to_bits()
 }
 
 #[derive(Debug)]
@@ -144,6 +182,10 @@ pub struct Platform {
     /// Per-function indices (idle MRU set, busy/cold tallies, backlog);
     /// one entry per registry function.
     fns: Vec<FnIndex>,
+    /// All idle containers ordered by ascending reclaim key (descending
+    /// Algorithm-2 score) — see [`reclaim_bits`]. Maintained in lock-step
+    /// with the per-function idle sets.
+    reclaim_order: BTreeSet<(u64, ContainerId)>,
     /// Aggregate tallies mirroring the per-function indices.
     idle_total: u32,
     busy_total: u32,
@@ -184,6 +226,7 @@ impl Platform {
             containers: BTreeMap::new(),
             next_cid: 1,
             fns,
+            reclaim_order: BTreeSet::new(),
             idle_total: 0,
             busy_total: 0,
             cold_total: 0,
@@ -239,6 +282,9 @@ impl Platform {
     fn index_idle(&mut self, func: FunctionId, cid: ContainerId, t: Micros) {
         let inserted = self.fns[func as usize].idle.insert((t, cid));
         debug_assert!(inserted, "container {cid} already indexed idle");
+        let key = reclaim_bits(self.containers[&cid].reclaim_key());
+        let inserted = self.reclaim_order.insert((key, cid));
+        debug_assert!(inserted, "container {cid} already in the reclaim order");
         self.idle_total += 1;
     }
 
@@ -257,10 +303,16 @@ impl Platform {
             .get_mut(&cid)
             .expect("begin_execution on unknown container");
         let key = (c.last_used, cid);
+        // the reclaim key reads last_used/activations, neither of which
+        // start_execution changes — but take it before the transition for
+        // symmetry with the insertion point
+        let rkey = (reclaim_bits(c.reclaim_key()), cid);
         c.start_execution(req, now, done_at);
         let fi = &mut self.fns[func as usize];
         let removed = fi.idle.remove(&key);
         debug_assert!(removed, "idle index out of sync for container {cid}");
+        let removed = self.reclaim_order.remove(&rkey);
+        debug_assert!(removed, "reclaim order out of sync for container {cid}");
         self.idle_total -= 1;
         fi.busy += 1;
         self.busy_total += 1;
@@ -273,6 +325,10 @@ impl Platform {
             ContainerState::Idle { .. } => {
                 let removed = fi.idle.remove(&(c.last_used, c.id));
                 debug_assert!(removed, "idle index out of sync for container {}", c.id);
+                let removed = self
+                    .reclaim_order
+                    .remove(&(reclaim_bits(c.reclaim_key()), c.id));
+                debug_assert!(removed, "reclaim order out of sync for container {}", c.id);
                 self.idle_total -= 1;
             }
             ContainerState::Busy { .. } => {
@@ -412,23 +468,37 @@ impl Platform {
             .map(|&(t, _)| t)
     }
 
+    /// Node memory pressure in `[0, 1]`: ledger-claimed MiB over node
+    /// capacity (the PR 2 memory ledger feeding the reclaim ranking).
+    pub fn mem_pressure(&self) -> f64 {
+        self.mem_used as f64 / self.cfg.node_mem_mib.max(1) as f64
+    }
+
     /// Best (highest) reclaim score among idle, log-safe containers — the
-    /// fleet ranks nodes on this to keep Algorithm 2's global ordering.
-    /// O(idle containers), not O(all containers): the scores depend on
-    /// `now` so they cannot be pre-ordered, but only idle candidates are
-    /// visited.
+    /// fleet ranks nodes on this to keep Algorithm 2's global ordering,
+    /// so it carries the node's memory-pressure bias
+    /// (`+ weight × mem_pressure`, skipped entirely at weight `0.0` so
+    /// the default is bit-identical to the container-only score).
+    ///
+    /// The reclaim order is pre-sorted by descending score, so this is
+    /// the first log-safe entry: O(1) on the common path (acks are
+    /// synchronous with completion, so the head is log-safe), O(unsafe
+    /// prefix) worst case — no longer O(idle).
     pub fn best_reclaim_score(&self, now: Micros) -> Option<f64> {
-        let mut best: Option<f64> = None;
-        for fi in &self.fns {
-            for &(_, cid) in &fi.idle {
-                if !self.log.all_completed(cid) {
-                    continue;
-                }
-                let s = self.containers[&cid].reclaim_score(now);
-                best = Some(best.map_or(s, |a: f64| a.max(s)));
-            }
-        }
-        best
+        let s = self
+            .reclaim_order
+            .iter()
+            .find(|&&(_, cid)| self.log.all_completed(cid))
+            .map(|&(_, cid)| self.containers[&cid].reclaim_score(now))?;
+        let w = self.cfg.reclaim_pressure_weight;
+        Some(if w > 0.0 { s + w * self.mem_pressure() } else { s })
+    }
+
+    /// Whether `cid` is live on this node. The fleet's stale-event guard
+    /// after a node rejoin: Ready/Done events for containers lost in the
+    /// drain may still be in flight when the node is back online.
+    pub fn has_container(&self, cid: ContainerId) -> bool {
+        self.containers.contains_key(&cid)
     }
 
     /// Ready times of in-flight cold starts (the MPC's readyCold input).
@@ -513,30 +583,23 @@ impl Platform {
     /// first, log-safe only) until a container of `func` fits. Returns
     /// whether room was made. Never fires in a single-tenant run: any
     /// idle container there would have warm-served the request instead.
-    /// Candidates come from the idle indices, so each round is O(idle),
-    /// not O(all containers).
+    /// The victim is the first qualifying entry of the pre-sorted reclaim
+    /// order (ascending key = descending score, ties to the lower id —
+    /// the scan-era ranking), so each round is O(skipped candidates), not
+    /// O(idle).
     fn evict_for(&mut self, func: FunctionId, now: Micros) -> bool {
         loop {
             if self.can_admit(func) {
                 return true;
             }
-            let mut victim: Option<(f64, ContainerId)> = None;
-            for (fid, fi) in self.fns.iter().enumerate() {
-                if fid as FunctionId == func {
-                    continue;
-                }
-                for &(_, cid) in &fi.idle {
-                    if !self.log.all_completed(cid) {
-                        continue;
-                    }
-                    let cand = (self.containers[&cid].reclaim_score(now), cid);
-                    victim = Some(match victim {
-                        None => cand,
-                        Some(best) => better_reclaim(best, cand),
-                    });
-                }
-            }
-            let Some((_, vid)) = victim else { return false };
+            let victim = self
+                .reclaim_order
+                .iter()
+                .map(|&(_, cid)| cid)
+                .find(|&cid| {
+                    self.containers[&cid].func != func && self.log.all_completed(cid)
+                });
+            let Some(vid) = victim else { return false };
             let vfunc = self.containers[&vid].func;
             self.remove(vid, now);
             self.counters.evictions += 1;
@@ -737,34 +800,28 @@ impl Platform {
     /// (line 1), safety via the activation log (lines 5-6), then drain
     /// (lines 7-9). Returns the reclaimed ids.
     ///
-    /// Candidates come from the idle indices; the top-`n` prefix is
-    /// isolated with `select_nth_unstable_by` and only that prefix is
-    /// sorted — O(idle + n log n) instead of O(idle log idle). The
-    /// comparator is a strict total order (score, then id), so the
-    /// selected prefix and its order are identical to a full sort.
+    /// The reclaim order *is* the ranking (ascending now-independent key
+    /// = descending score, equal keys tie to the lower id — the scan-era
+    /// `select_nth_unstable` + sort order, except that candidates whose
+    /// *distinct* keys round to bitwise-equal scores now tie by key
+    /// instead of id; see [`reclaim_bits`]), so this is O(n log idle) in
+    /// the **requested** count: output-sensitive, independent of how
+    /// many idle containers exist. As before, an unsafe candidate inside
+    /// the top-`n` slice consumes its budget slot (selection happens
+    /// before the log filter).
     pub fn try_reclaim(&mut self, n: u32, now: Micros) -> Vec<ContainerId> {
         if n == 0 {
             return Vec::new();
         }
-        // rankPods: idle candidates by descending reclaim score
-        let mut candidates: Vec<(f64, ContainerId)> =
-            Vec::with_capacity(self.idle_total as usize);
-        for fi in &self.fns {
-            for &(_, cid) in &fi.idle {
-                candidates.push((self.containers[&cid].reclaim_score(now), cid));
-            }
-        }
-        let cmp = |a: &(f64, ContainerId), b: &(f64, ContainerId)| {
-            b.0.total_cmp(&a.0).then(a.1.cmp(&b.1))
-        };
-        let k = (n as usize).min(candidates.len());
-        if k > 0 && k < candidates.len() {
-            let _ = candidates.select_nth_unstable_by(k - 1, cmp);
-            candidates.truncate(k);
-        }
-        candidates.sort_unstable_by(cmp);
+        // rankPods: the top-n prefix of the pre-sorted order
+        let top: Vec<ContainerId> = self
+            .reclaim_order
+            .iter()
+            .take(n as usize)
+            .map(|&(_, cid)| cid)
+            .collect();
         let mut reclaimed = Vec::new();
-        for (_, cid) in candidates {
+        for cid in top {
             // safety: the log must show completion for all assigned work
             if !self.log.all_completed(cid) {
                 continue;
@@ -774,6 +831,71 @@ impl Platform {
             reclaimed.push(cid);
         }
         reclaimed
+    }
+
+    // ---- cross-node migration (fleet elasticity) ----------------------------
+
+    /// Source-side migration victim for `func`: the LRU (coldest) idle
+    /// container of that function whose activation log is clear — the
+    /// replica whose departure costs the least warm-reuse affinity
+    /// (dispatch binds MRU-first, so the LRU end is the least likely to
+    /// be reused next). O(1) typically (`.first()` of the per-function
+    /// idle set), O(unsafe prefix) worst case.
+    pub fn migrate_out_candidate(&self, func: FunctionId) -> Option<ContainerId> {
+        self.fns
+            .get(func as usize)?
+            .idle
+            .iter()
+            .map(|&(_, cid)| cid)
+            .find(|&cid| self.log.all_completed(cid))
+    }
+
+    /// Function of the node's overall coldest log-safe idle container
+    /// (the head of the reclaim order) — the idle-spread planner's
+    /// victim function. O(1) on the common path.
+    pub fn coldest_idle_function(&self) -> Option<FunctionId> {
+        self.reclaim_order
+            .iter()
+            .find(|&&(_, cid)| self.log.all_completed(cid))
+            .map(|&(_, cid)| self.containers[&cid].func)
+    }
+
+    /// Migration-out: release an idle container so its warm state can
+    /// move to another node. The source's books treat this like a drain —
+    /// keep-alive and idle-time records close here (resource-time up to
+    /// the departure is charged to this node). Returns false when the
+    /// container is unknown, not idle, or log-unsafe.
+    pub fn migrate_out(&mut self, cid: ContainerId, now: Micros) -> bool {
+        match self.containers.get(&cid) {
+            Some(c) if c.is_idle() && self.log.all_completed(cid) => {}
+            _ => return false,
+        }
+        self.remove(cid, now);
+        self.counters.migrations_out += 1;
+        true
+    }
+
+    /// Migration-in: admit a container of `func` arriving from another
+    /// node. It claims a replica slot and memory immediately (the
+    /// in-flight transfer is counted in resource-time) and re-enters
+    /// service after the jittered transfer `latency`, modeled as a
+    /// cold-starting container whose "init" is the transfer — with **no**
+    /// cold start counted: `latency ≪ L_cold(func)` is the reason to
+    /// migrate warm state instead of respawning. Returns None when the
+    /// node cannot admit the function (migrations never evict).
+    pub fn migrate_in(
+        &mut self,
+        func: FunctionId,
+        now: Micros,
+        latency: Micros,
+    ) -> Option<(ContainerId, Micros)> {
+        if !self.can_admit(func) {
+            return None;
+        }
+        let ready_at = now + self.jitter(latency);
+        let cid = self.spawn(func, now, ready_at, None);
+        self.counters.migrations_in += 1;
+        Some((cid, ready_at))
     }
 
     /// Keep-alive window of a live container (its function's profile) —
@@ -847,6 +969,7 @@ impl Platform {
             fi.cold.clear();
             backlog.extend(fi.backlog.drain(..));
         }
+        self.reclaim_order.clear();
         backlog.sort_unstable_by_key(|&(seq, _)| seq);
         lost.extend(backlog.into_iter().map(|(_, req)| req));
         self.idle_total = 0;
@@ -919,12 +1042,34 @@ impl Platform {
             .values()
             .filter(|c| c.is_idle() && self.log.all_completed(c.id))
             .map(|c| c.reclaim_score(now))
-            .fold(None, |acc: Option<f64>, s| Some(acc.map_or(s, |a| a.max(s))));
+            .fold(None, |acc: Option<f64>, s| Some(acc.map_or(s, |a| a.max(s))))
+            .map(|s| {
+                let w = self.cfg.reclaim_pressure_weight;
+                if w > 0.0 {
+                    s + w * self.mem_pressure()
+                } else {
+                    s
+                }
+            });
         prop_assert!(
             best == self.best_reclaim_score(now),
             "best_reclaim {:?} != scan {:?}",
             self.best_reclaim_score(now),
             best
+        );
+        // the reclaim order must hold exactly the idle containers, keyed
+        // by their (bit-encoded) now-independent reclaim keys
+        let mut scan_order: Vec<(u64, ContainerId)> = self
+            .containers
+            .values()
+            .filter(|c| c.is_idle())
+            .map(|c| (c.reclaim_key().to_bits(), c.id))
+            .collect();
+        scan_order.sort_unstable();
+        let idx_order: Vec<(u64, ContainerId)> = self.reclaim_order.iter().copied().collect();
+        prop_assert!(
+            idx_order == scan_order,
+            "reclaim order mismatch at t={now}: {idx_order:?} != {scan_order:?}"
         );
         let mut scan_cold: Vec<Micros> = self
             .containers
@@ -1435,14 +1580,151 @@ mod tests {
         assert_eq!(p.counters.prewarms_rejected, 1);
     }
 
+    // ---- elasticity: migration + pressure-aware, indexed reclaim ------------
+
+    #[test]
+    fn migrate_out_releases_idle_and_records_keepalive() {
+        let mut p = platform();
+        let (cid, r) = p.prewarm_one(0).unwrap();
+        p.container_ready(cid, r);
+        assert_eq!(p.migrate_out_candidate(0), Some(cid));
+        assert!(p.migrate_out(cid, r + 5_000_000));
+        assert_eq!(p.total(), 0);
+        assert_eq!(p.counters.migrations_out, 1);
+        // the source charges the idle span up to the departure
+        assert_eq!(p.keepalive_records(), &[5_000_000]);
+        // gone: a repeated release is refused, and no candidate remains
+        assert!(!p.migrate_out(cid, r + 6_000_000));
+        assert!(p.migrate_out_candidate(0).is_none());
+        assert_eq!(p.spawned, p.removed + p.total() as u64);
+    }
+
+    #[test]
+    fn migrate_in_counts_no_cold_start_and_respects_capacity() {
+        let cfg = PlatformConfig {
+            max_containers: 1,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let mut p = Platform::new(cfg, 1);
+        let (cid, ready_at) = p.migrate_in(0, 0, 2_000_000).unwrap();
+        assert_eq!(ready_at, 2_000_000);
+        assert_eq!(p.cold_starting_count(), 1);
+        assert_eq!(p.counters.migrations_in, 1);
+        // a migration is neither a cold start nor a prewarm
+        assert_eq!(p.counters.cold_starts, 0);
+        assert_eq!(p.counters.prewarms_started, 0);
+        // the in-flight transfer occupies the only replica slot
+        assert!(p.migrate_in(0, 100, 2_000_000).is_none());
+        // it lands idle and warm-serves like any warm container
+        assert_eq!(p.container_ready(cid, ready_at), ReadyOutcome::Idle);
+        assert!(matches!(
+            p.invoke(1, ready_at + 10),
+            InvokeOutcome::WarmStart { .. }
+        ));
+    }
+
+    #[test]
+    fn migrate_out_candidate_prefers_lru() {
+        let mut p = platform();
+        let (c1, r1) = p.prewarm_one(0).unwrap();
+        p.container_ready(c1, r1);
+        let (c2, r2) = p.prewarm_one(r1 + 1_000_000).unwrap();
+        p.container_ready(c2, r2);
+        // c1 has idled longest (coldest) → the migration victim; the MRU
+        // c2 stays to serve the next dispatch
+        assert_eq!(p.migrate_out_candidate(0), Some(c1));
+        assert!(p.migrate_out(c1, r2 + 1));
+        assert_eq!(p.migrate_out_candidate(0), Some(c2));
+    }
+
+    #[test]
+    fn pressure_bias_raises_best_reclaim_score() {
+        // identical container state, different ledger weight/pressure
+        let peek = |weight: f64, mem: u32| {
+            let cfg = PlatformConfig {
+                latency_jitter: 0.0,
+                reclaim_pressure_weight: weight,
+                node_mem_mib: 1024,
+                container_mem_mib: mem,
+                ..Default::default()
+            };
+            let mut p = Platform::new(cfg, 1);
+            let (cid, r) = p.prewarm_one(0).unwrap();
+            p.container_ready(cid, r);
+            p.best_reclaim_score(r + 1_000_000).unwrap()
+        };
+        let unbiased = peek(0.0, 256);
+        let light = peek(2.0, 256); // pressure 0.25 → +0.5
+        let heavy = peek(2.0, 512); // pressure 0.50 → +1.0
+        assert!((light - unbiased - 0.5).abs() < 1e-9, "{light} vs {unbiased}");
+        assert!((heavy - unbiased - 1.0).abs() < 1e-9, "{heavy} vs {unbiased}");
+    }
+
+    /// The indexed reclaim order must reproduce the scan-era ranking:
+    /// descending score at reclaim time, score ties broken by ascending
+    /// key then id. (The old comparator broke score ties by id alone;
+    /// bitwise-equal scores from *distinct* keys — a few-ulp rounding
+    /// collapse — now canonically tie by key, so the reference ranking
+    /// here includes the key as the middle tie-break. For equal keys
+    /// the two rules coincide.)
+    #[test]
+    fn try_reclaim_matches_scan_era_ranking() {
+        use crate::prop_assert;
+        prop_check("indexed reclaim == scan-era ranking", 30, |g| {
+            let cfg = PlatformConfig {
+                latency_jitter: 0.0,
+                ..Default::default()
+            };
+            let mut p = Platform::new(cfg, g.u64(0, 1 << 32));
+            let m = g.usize(2, 12);
+            let mut now = 0u64;
+            for _ in 0..m {
+                now += g.u64(1, 5_000_000);
+                let (cid, ready_at) = p.prewarm_one(now).expect("capacity");
+                now = ready_at;
+                p.container_ready(cid, now);
+                // vary activations/last_used via MRU-bound executions
+                for req in 0..g.u64(0, 3) {
+                    now += g.u64(1, 1_000_000);
+                    let InvokeOutcome::WarmStart { cid: c, done_at } = p.invoke(req, now)
+                    else {
+                        return Err("expected warm start".into());
+                    };
+                    now = done_at;
+                    p.exec_complete(c, now);
+                }
+            }
+            now += g.u64(1, 10_000_000);
+            let mut expect: Vec<(f64, f64, ContainerId)> = p
+                .containers
+                .values()
+                .filter(|c| c.is_idle())
+                .map(|c| (c.reclaim_score(now), c.reclaim_key(), c.id))
+                .collect();
+            expect.sort_by(|a, b| {
+                b.0.total_cmp(&a.0)
+                    .then(a.1.total_cmp(&b.1))
+                    .then(a.2.cmp(&b.2))
+            });
+            let n = g.usize(1, m);
+            let want: Vec<ContainerId> =
+                expect.iter().take(n).map(|&(_, _, id)| id).collect();
+            let got = p.try_reclaim(n as u32, now);
+            prop_assert!(got == want, "reclaim picked {got:?}, scan ranking {want:?}");
+            Ok(())
+        });
+    }
+
     // ---- index vs. reference-scan property ----------------------------------
 
     use crate::util::prop::prop_check;
 
     /// After an arbitrary interleaving of invoke / prewarm / ready /
-    /// complete / keep-alive / reclaim operations, every indexed counter
-    /// and MRU/recency/ready-time query must equal the brute-force scan
-    /// over the container map (see [`Platform::assert_matches_scan`]).
+    /// complete / keep-alive / reclaim / migrate operations, every
+    /// indexed counter and MRU/recency/ready-time/reclaim-order query
+    /// must equal the brute-force scan over the container map (see
+    /// [`Platform::assert_matches_scan`]).
     #[test]
     fn indices_match_reference_scan_after_random_ops() {
         prop_check("platform index == reference scan", 40, |g| {
@@ -1452,6 +1734,9 @@ mod tests {
                 // small ledger so eviction/respawn paths actually fire
                 node_mem_mib: g.usize(256, 2048) as u32,
                 latency_jitter: 0.0,
+                // sometimes bias the reclaim peek with node pressure so
+                // the scan-vs-index equality covers that path too
+                reclaim_pressure_weight: if g.bool(0.5) { g.f64(0.1, 4.0) } else { 0.0 },
                 ..Default::default()
             };
             let registry = FunctionRegistry::synthesize(nf, 1.1, &cfg, g.u64(0, 1 << 32));
@@ -1464,7 +1749,7 @@ mod tests {
             for _ in 0..steps {
                 now += g.u64(1, 2_000_000);
                 let func = g.u64(0, (nf - 1) as u64) as FunctionId;
-                match g.usize(0, 5) {
+                match g.usize(0, 7) {
                     0 => {
                         req += 1;
                         match p.invoke_for(req, func, now) {
@@ -1514,6 +1799,22 @@ mod tests {
                     }
                     4 => {
                         p.try_reclaim(g.usize(0, 3) as u32, now);
+                    }
+                    5 => {
+                        // migration-out: the function's LRU idle candidate
+                        // leaves for a (phantom) peer node
+                        if let Some(cid) = p.migrate_out_candidate(func) {
+                            assert!(p.migrate_out(cid, now));
+                        }
+                    }
+                    6 => {
+                        // migration-in from a phantom peer: occupies a slot
+                        // now, serviceable after the transfer latency
+                        if let Some((cid, ready_at)) =
+                            p.migrate_in(func, now, g.u64(1, 3_000_000))
+                        {
+                            pending_ready.push((cid, ready_at));
+                        }
                     }
                     _ => {
                         // keep-alive probe on an arbitrary (possibly gone)

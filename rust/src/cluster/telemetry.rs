@@ -21,6 +21,12 @@ pub struct Counters {
     /// Idle containers of one function removed to make room for another
     /// (multi-tenant contention; always 0 in a single-tenant run).
     pub evictions: u64,
+    /// Idle containers released to migrate to another node (counted on
+    /// the source; always 0 with `MigrationPolicy::Off`).
+    pub migrations_out: u64,
+    /// Containers admitted from another node's migration (counted on the
+    /// destination; fleet-wide `migrations_in == migrations_out`).
+    pub migrations_in: u64,
 }
 
 impl Counters {
@@ -37,6 +43,8 @@ impl Counters {
             keepalive_expiries,
             capacity_queued,
             evictions,
+            migrations_out,
+            migrations_in,
         } = *o;
         self.invocations += invocations;
         self.cold_starts += cold_starts;
@@ -46,6 +54,8 @@ impl Counters {
         self.keepalive_expiries += keepalive_expiries;
         self.capacity_queued += capacity_queued;
         self.evictions += evictions;
+        self.migrations_out += migrations_out;
+        self.migrations_in += migrations_in;
     }
 }
 

@@ -40,6 +40,13 @@ pub struct PlatformConfig {
     pub keep_alive: Micros,
     /// Jitter fraction applied to execution/init latencies (0 = exact).
     pub latency_jitter: f64,
+    /// Weight of the node's memory-pressure term in the fleet-level
+    /// reclaim ranking (Algorithm 2 extension): a node's best reclaim
+    /// candidate scores `container score + weight × mem_used/node_mem`,
+    /// so draining prefers pressured nodes. `0.0` (the default) disables
+    /// the term entirely — the ranking is then bit-identical to the
+    /// container-only score.
+    pub reclaim_pressure_weight: f64,
 }
 
 impl Default for PlatformConfig {
@@ -54,6 +61,7 @@ impl Default for PlatformConfig {
             container_mem_mib: 256,
             keep_alive: secs(600.0),
             latency_jitter: 0.05,
+            reclaim_pressure_weight: 0.0,
         }
     }
 }
@@ -116,6 +124,93 @@ pub struct NodeFailure {
     pub at: Micros,
 }
 
+/// A scheduled node restore (the rejoin scenario): the previously drained
+/// `node` re-enters the fleet at `at`, starting cold (no containers, no
+/// backlog). Placement sees it immediately; the MPC's prewarm budget and
+/// `w_max` re-scale to the restored live capacity at the next control
+/// step (see `coordinator::controller`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeRestore {
+    pub node: u32,
+    pub at: Micros,
+}
+
+/// Parse a CLI restore spec `<node>@<seconds>` (e.g. `1@900`).
+pub fn parse_restore_spec(s: &str) -> Option<NodeRestore> {
+    let (node, at) = s.split_once('@')?;
+    let node: u32 = node.trim().parse().ok()?;
+    let at_s: f64 = at.trim().parse().ok()?;
+    (at_s.is_finite() && at_s >= 0.0).then(|| NodeRestore {
+        node,
+        at: secs(at_s),
+    })
+}
+
+/// Cross-node container migration policy used by the fleet's rebalancing
+/// pass (see `cluster::fleet::migration`). `Off` (the default) skips the
+/// pass entirely, keeping runs bit-identical to the pre-elasticity code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationPolicy {
+    /// No migrations — the legacy fixed-placement fleet.
+    Off,
+    /// Forecast-driven rebalancing: move idle warm containers toward
+    /// nodes whose capacity-proportional share of the per-function
+    /// demand forecast exceeds their provisioned supply.
+    DemandGap,
+    /// Demand-agnostic rebalancing: level the total idle-container count
+    /// across online nodes (move from the most- to the least-stocked).
+    IdleSpread,
+}
+
+impl MigrationPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MigrationPolicy::Off => "off",
+            MigrationPolicy::DemandGap => "demand-gap",
+            MigrationPolicy::IdleSpread => "idle-spread",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MigrationPolicy> {
+        match s {
+            "off" | "none" => Some(MigrationPolicy::Off),
+            "demand-gap" | "dg" => Some(MigrationPolicy::DemandGap),
+            "idle-spread" | "is" => Some(MigrationPolicy::IdleSpread),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [MigrationPolicy; 3] = [
+        MigrationPolicy::Off,
+        MigrationPolicy::DemandGap,
+        MigrationPolicy::IdleSpread,
+    ];
+}
+
+/// Cross-node migration parameters. A migrated container is off-pool on
+/// the source immediately and re-enters service on the destination after
+/// `latency` (it occupies a replica slot and memory there while in
+/// flight, so migration time is counted in resource-time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationConfig {
+    pub policy: MigrationPolicy,
+    /// Warm-state transfer latency (checkpoint/restore — far below a cold
+    /// start, which is the point of migrating instead of respawning).
+    pub latency: Micros,
+    /// Cap on moves per rebalancing pass (one pass per control step).
+    pub max_moves_per_step: u32,
+}
+
+impl Default for MigrationConfig {
+    fn default() -> Self {
+        MigrationConfig {
+            policy: MigrationPolicy::Off,
+            latency: secs(2.0),
+            max_moves_per_step: 4,
+        }
+    }
+}
+
 /// Invoker-fleet shape: how many nodes, their capacities, and the
 /// dispatch placement policy. With `nodes == 1` the fleet reproduces the
 /// single-platform results bit-for-bit (same seed → same metrics).
@@ -129,6 +224,10 @@ pub struct FleetConfig {
     pub placement: PlacementPolicy,
     /// Optional mid-run node outage scenario.
     pub failure: Option<NodeFailure>,
+    /// Optional node restore/rejoin scenario (pairs with `failure`).
+    pub restore: Option<NodeRestore>,
+    /// Cross-node container migration (rebalancing) parameters.
+    pub migration: MigrationConfig,
 }
 
 impl Default for FleetConfig {
@@ -138,6 +237,8 @@ impl Default for FleetConfig {
             capacities: None,
             placement: PlacementPolicy::WarmFirst,
             failure: None,
+            restore: None,
+            migration: MigrationConfig::default(),
         }
     }
 }
@@ -462,6 +563,44 @@ mod tests {
         assert!(f.capacities.is_none());
         assert_eq!(f.placement, PlacementPolicy::WarmFirst);
         assert!(f.failure.is_none());
+        // elasticity is opt-in: no restore, no migration, no pressure term
+        assert!(f.restore.is_none());
+        assert_eq!(f.migration.policy, MigrationPolicy::Off);
+        assert_eq!(f.migration.latency, secs(2.0));
+        assert_eq!(f.migration.max_moves_per_step, 4);
+        assert_eq!(PlatformConfig::default().reclaim_pressure_weight, 0.0);
+    }
+
+    #[test]
+    fn migration_policy_parse_and_names_roundtrip() {
+        for p in MigrationPolicy::ALL {
+            assert_eq!(MigrationPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(MigrationPolicy::parse("dg"), Some(MigrationPolicy::DemandGap));
+        assert_eq!(MigrationPolicy::parse("none"), Some(MigrationPolicy::Off));
+        assert_eq!(MigrationPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn restore_spec_parses_id_at_seconds() {
+        assert_eq!(
+            parse_restore_spec("1@900"),
+            Some(NodeRestore {
+                node: 1,
+                at: secs(900.0)
+            })
+        );
+        assert_eq!(
+            parse_restore_spec("0@0.5"),
+            Some(NodeRestore {
+                node: 0,
+                at: secs(0.5)
+            })
+        );
+        assert_eq!(parse_restore_spec("1"), None);
+        assert_eq!(parse_restore_spec("x@900"), None);
+        assert_eq!(parse_restore_spec("1@-5"), None);
+        assert_eq!(parse_restore_spec("1@abc"), None);
     }
 
     #[test]

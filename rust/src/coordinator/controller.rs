@@ -16,12 +16,31 @@
 //! window, and the dispatcher releases queued requests against *their
 //! function's* idle warm pool. With one function all of this collapses
 //! to the single-tenant controller bit-for-bit.
+//!
+//! **Elasticity (live-capacity control).** The planning pool bound is
+//! re-scaled to the fleet's *live* online capacity at every control
+//! step, not once at startup:
+//!
+//! ```text
+//! w_max(t) = w_max^node × C_live(t) / C_node
+//! ```
+//!
+//! where `C_node` is one node's replica cap and `C_live(t)` sums the
+//! caps of currently-online nodes ([`crate::cluster::Fleet::resource_cap`]).
+//! The expression is the startup scaling evaluated with live capacity,
+//! so a fully-online fleet reproduces the startup bound bit-for-bit; a
+//! drain shrinks the prewarm plan immediately and a rejoin grows it
+//! back (the repair stage's hard pool cap tracks the same live sum).
+//! After actuation the controller runs the fleet's migration
+//! rebalancing pass ([`Ctx::migrate_rebalance`]), feeding it the same
+//! per-function lead-window demand the prewarm split uses — a no-op
+//! under the default `MigrationPolicy::Off`.
 
 use std::time::Instant;
 
 use crate::cluster::platform::InvokeOutcome;
 use crate::cluster::RequestId;
-use crate::config::{ControllerConfig, Micros};
+use crate::config::{ControllerConfig, Micros, MigrationPolicy};
 use crate::coordinator::queue::RequestQueue;
 use crate::coordinator::{Ctx, Scheduler};
 use crate::forecast::{Forecaster, FourierForecaster};
@@ -48,6 +67,12 @@ pub struct MpcScheduler {
     /// Per-function demand trackers; empty in a single-tenant run (the
     /// aggregate machinery is then the whole controller).
     tenants: Vec<TenantDemand>,
+    /// Live-capacity scaling `(C_node, w_max^node)`: when set, the
+    /// planning pool bound is recomputed as
+    /// `w_max^node × C_live / C_node` at every replan (see the module
+    /// doc). None = the startup-scaled bound stays fixed (the HLO path,
+    /// and direct constructions that predate elasticity).
+    live_capacity: Option<(u32, f64)>,
     /// Scratch: per-function idle snapshot for the dispatcher's drain
     /// (reused every call instead of allocating per arrival).
     idle_scratch: Vec<u32>,
@@ -83,6 +108,7 @@ impl MpcScheduler {
             warm_start: vec![0.0; 3 * horizon],
             x_prev: 0.0,
             tenants: Vec::new(),
+            live_capacity: None,
             idle_scratch: Vec::new(),
             rdy_scratch: Vec::new(),
             cold_scratch: Vec::new(),
@@ -91,6 +117,17 @@ impl MpcScheduler {
             emergency_replans: 0,
             last_solve_at: None,
         }
+    }
+
+    /// Enable live-capacity re-scaling of the planning pool bound:
+    /// `node_cap` is one node's replica cap `C_node` and `base_w_max`
+    /// the *unscaled* per-node bound `w_max^node`. At every replan the
+    /// effective bound becomes `base_w_max × C_live / C_node` — exactly
+    /// the startup scaling when the whole fleet is online (bit-identical
+    /// f64 expression), smaller during a drain, restored on rejoin.
+    pub fn with_live_capacity(mut self, node_cap: u32, base_w_max: f64) -> Self {
+        self.live_capacity = Some((node_cap.max(1), base_w_max));
+        self
     }
 
     /// Enable per-function demand tracking for an `n`-function workload.
@@ -255,6 +292,15 @@ impl MpcScheduler {
     /// The control cycle (Fig. 3): forecast → optimize → actuate step 0.
     fn replan(&mut self, ctx: &mut Ctx) {
         self.last_solve_at = Some(ctx.now);
+        // 0. elasticity: re-scale the planning pool bound to the live
+        // online capacity (the module doc's w_max(t) formula — the same
+        // f64 expression as the startup scaling, so a fully-online fleet
+        // reproduces the startup bound bit-for-bit)
+        if let Some((node_cap, base)) = self.live_capacity {
+            let w = base * (ctx.fleet.resource_cap() as f64 / node_cap as f64);
+            self.cc.weights.w_max = w;
+            self.solver.set_w_max(w);
+        }
         // 1. forecast over the horizon (aggregate + per-function demand
         // shares, both inside the reported forecast overhead)
         let pad = self.history.recent_mean(self.cc.window);
@@ -269,6 +315,22 @@ impl MpcScheduler {
         } else {
             None
         };
+        // migration demand: the same per-function lead-window forecast
+        // the prewarm split uses (a one-element aggregate when
+        // single-tenant). Only materialized when a migration policy is
+        // active, so the default path allocates nothing extra.
+        let mig_demand: Option<Vec<f64>> =
+            if ctx.cfg.fleet.migration.policy != MigrationPolicy::Off {
+                Some(match &shares {
+                    Some(sh) => sh.clone(),
+                    None => {
+                        let lead = self.cc.cold_steps + 2;
+                        vec![lam.iter().take(lead).sum::<f64>().max(0.0)]
+                    }
+                })
+            } else {
+                None
+            };
         let forecast_ns = t0.elapsed().as_nanos() as f64;
 
         // 2. optimize
@@ -320,6 +382,14 @@ impl MpcScheduler {
         self.last_plan = Some(plan);
 
         self.try_dispatch(ctx);
+        // 4. elasticity: rebalance idle warm capacity across nodes under
+        // the configured migration policy (no-op when Off). Runs after
+        // the dispatch drain so queued work binds warm capacity before
+        // any of it moves; an in-flight transfer then counts as an
+        // imminent cold-ready for the force-dispatch guard below.
+        if let Some(demand) = mig_demand {
+            ctx.migrate_rebalance(&demand);
+        }
         self.force_stale(ctx);
     }
 
@@ -507,6 +577,102 @@ mod tests {
         assert_eq!(sched.queue_len(), 0);
         assert!(sched.forced_dispatches >= 1);
         assert_eq!(ctx.fleet.counters().invocations, 1);
+    }
+
+    #[test]
+    fn w_max_tracks_live_capacity_across_drain_and_rejoin() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.fleet.nodes = 4;
+        let cc = cfg.controller.clone();
+        let base = cc.weights.w_max;
+        let node_cap = cfg.platform.resource_cap();
+        let mut sched = MpcScheduler::new(
+            cc.clone(),
+            Box::new(FourierForecaster::default()),
+            Box::new(RustSolver::new(Weights::default(), 20, cc.cold_steps)),
+        )
+        .with_live_capacity(node_cap, base);
+        let mut fleet = Fleet::new(&cfg.fleet, &cfg.platform, 7);
+        let mut events = EventQueue::new();
+        let mut rec = Recorder::new(4);
+        {
+            let mut ctx = Ctx {
+                now: 30_000_000,
+                fleet: &mut fleet,
+                events: &mut events,
+                recorder: &mut rec,
+                cfg: &cfg,
+            };
+            sched.on_control_tick(&mut ctx);
+        }
+        assert_eq!(sched.cc.weights.w_max, base * 4.0);
+        // a drain shrinks the planning bound at the next step...
+        fleet.fail_node(2, 31_000_000);
+        {
+            let mut ctx = Ctx {
+                now: 60_000_000,
+                fleet: &mut fleet,
+                events: &mut events,
+                recorder: &mut rec,
+                cfg: &cfg,
+            };
+            sched.on_control_tick(&mut ctx);
+        }
+        assert_eq!(sched.cc.weights.w_max, base * 3.0);
+        // ...and the rejoin restores it (bit-identical to startup)
+        fleet.restore_node(2, 61_000_000);
+        {
+            let mut ctx = Ctx {
+                now: 90_000_000,
+                fleet: &mut fleet,
+                events: &mut events,
+                recorder: &mut rec,
+                cfg: &cfg,
+            };
+            sched.on_control_tick(&mut ctx);
+        }
+        assert_eq!(sched.cc.weights.w_max, base * 4.0);
+    }
+
+    #[test]
+    fn migration_pass_rebalances_on_tick_when_enabled() {
+        use crate::config::{MigrationConfig, MigrationPolicy};
+        let mut cfg = ExperimentConfig::default();
+        cfg.fleet.nodes = 2;
+        cfg.fleet.migration = MigrationConfig {
+            policy: MigrationPolicy::IdleSpread,
+            ..Default::default()
+        };
+        cfg.platform.latency_jitter = 0.0;
+        let cc = cfg.controller.clone();
+        let mut sched = MpcScheduler::new(
+            cc.clone(),
+            Box::new(FourierForecaster::default()),
+            Box::new(RustSolver::new(Weights::default(), 20, cc.cold_steps)),
+        );
+        let mut fleet = Fleet::new(&cfg.fleet, &cfg.platform, 7);
+        // all idle capacity piled on node 0
+        for i in 0..4u64 {
+            let (cid, r) = fleet.node_mut(0).platform.prewarm_one(i).unwrap();
+            fleet.node_mut(0).platform.container_ready(cid, r);
+        }
+        // prime demand history so the plan sustains (not reclaims) the pool
+        for _ in 0..10 {
+            sched.history.push(50.0);
+        }
+        let mut events = EventQueue::new();
+        let mut rec = Recorder::new(4);
+        let mut ctx = Ctx {
+            now: 30_000_000,
+            fleet: &mut fleet,
+            events: &mut events,
+            recorder: &mut rec,
+            cfg: &cfg,
+        };
+        sched.on_control_tick(&mut ctx);
+        let c = ctx.fleet.counters();
+        assert!(c.migrations_out >= 1, "no rebalancing happened: {c:?}");
+        assert_eq!(c.migrations_out, c.migrations_in);
     }
 
     #[test]

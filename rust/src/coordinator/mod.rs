@@ -38,6 +38,8 @@ pub enum Ev {
     KeepAlive(NodeId, ContainerId),
     /// Invoker node goes offline (drain scenario).
     NodeFail(NodeId),
+    /// A drained invoker node rejoins the fleet, cold (restore scenario).
+    NodeRestore(NodeId),
 }
 
 /// Everything a policy may touch while handling an event. Provides the
@@ -112,6 +114,34 @@ impl Ctx<'_> {
     /// count.
     pub fn reclaim(&mut self, n: u32) -> u32 {
         self.fleet.try_reclaim(n, self.now).len() as u32
+    }
+
+    /// Migration actuator (fleet elasticity): run one rebalancing pass
+    /// under the configured [`crate::config::MigrationPolicy`], moving
+    /// idle warm containers toward nodes whose capacity-proportional
+    /// share of `demand` (the caller's per-function forecast over the
+    /// cold-start lead window) exceeds their provisioned supply. Each
+    /// landed transfer schedules its Ready event at the migration
+    /// latency. Returns the number of moves executed. A no-op (zero
+    /// fleet probes) with the default `MigrationPolicy::Off`.
+    pub fn migrate_rebalance(&mut self, demand: &[f64]) -> u32 {
+        let mc = &self.cfg.fleet.migration;
+        if mc.policy == crate::config::MigrationPolicy::Off {
+            return 0;
+        }
+        let moves = crate::cluster::fleet::migration::plan(mc, &*self.fleet, demand);
+        let mut moved = 0;
+        for m in moves {
+            // the plan is a heuristic over a snapshot; migrate()
+            // re-validates and refuses rather than forcing a stale move
+            if let Some((cid, ready_at)) =
+                self.fleet.migrate(m.from, m.to, m.func, self.now, mc.latency)
+            {
+                self.events.push(ready_at, Ev::Ready(m.to, cid));
+                moved += 1;
+            }
+        }
+        moved
     }
 
     /// Schedule the keep-alive check for a container that just went idle,

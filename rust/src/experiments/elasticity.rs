@@ -1,0 +1,218 @@
+//! Fleet-elasticity sweep (the `elasticity-sweep` CLI subcommand and the
+//! fig12 bench target): one drain → rejoin scenario, swept across
+//! migration policies for a scheduling policy.
+//!
+//! The scenario exercises the full capacity lifecycle from the
+//! "Fleet elasticity" chapter of docs/ARCHITECTURE.md: a node drains
+//! mid-run (its work redistributes), the fleet serves on reduced
+//! capacity with the MPC's `w_max` re-scaled down, the node rejoins cold
+//! at the restore time (budget re-scales back up), and — when a
+//! migration policy is active — the rebalancing pass moves idle warm
+//! capacity toward the forecast demand, including onto the cold
+//! rejoiner. The per-node report's post-restore counters are the
+//! acceptance signal: a healthy rejoin shows nonzero post-restore
+//! dispatches and prewarms on the drained node.
+
+use crate::config::{
+    secs, ExperimentConfig, FleetConfig, MigrationConfig, MigrationPolicy, NodeFailure,
+    NodeRestore, PlacementPolicy, Policy, TenantConfig, TraceKind,
+};
+use crate::experiments::runner::run_tenant;
+use crate::metrics::RunReport;
+use crate::util::bench::Table;
+use crate::workload::TenantWorkload;
+
+/// Shared scenario shape for every cell of an elasticity sweep.
+#[derive(Debug, Clone)]
+pub struct ElasticityParams {
+    pub trace: TraceKind,
+    pub duration_s: f64,
+    pub seed: u64,
+    pub nodes: u32,
+    pub functions: u32,
+    pub placement: PlacementPolicy,
+    /// Node that drains at `fail_at_s` and rejoins at `restore_at_s`.
+    pub fail_node: u32,
+    pub fail_at_s: f64,
+    pub restore_at_s: f64,
+    pub migration_latency_s: f64,
+}
+
+impl Default for ElasticityParams {
+    fn default() -> Self {
+        ElasticityParams {
+            trace: TraceKind::SyntheticBursty,
+            duration_s: 3600.0,
+            seed: 42,
+            nodes: 4,
+            functions: 4,
+            placement: PlacementPolicy::WarmFirst,
+            fail_node: 1,
+            fail_at_s: 600.0,
+            restore_at_s: 1200.0,
+            migration_latency_s: 2.0,
+        }
+    }
+}
+
+/// One sweep cell: the run report for (scheduling policy, migration
+/// policy) under the shared drain → rejoin scenario.
+#[derive(Debug, Clone)]
+pub struct ElasticityCell {
+    pub policy: Policy,
+    pub migration: MigrationPolicy,
+    pub report: RunReport,
+}
+
+/// Experiment config for one cell of the scenario.
+pub fn cell_config(p: &ElasticityParams, migration: MigrationPolicy) -> ExperimentConfig {
+    ExperimentConfig {
+        trace: p.trace,
+        fleet: FleetConfig {
+            nodes: p.nodes,
+            placement: p.placement,
+            failure: Some(NodeFailure {
+                node: p.fail_node,
+                at: secs(p.fail_at_s),
+            }),
+            restore: Some(NodeRestore {
+                node: p.fail_node,
+                at: secs(p.restore_at_s),
+            }),
+            migration: MigrationConfig {
+                policy: migration,
+                latency: secs(p.migration_latency_s),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        tenancy: TenantConfig {
+            functions: p.functions,
+            ..Default::default()
+        },
+        duration: secs(p.duration_s),
+        seed: p.seed,
+        ..Default::default()
+    }
+}
+
+/// Run one (policy, migration) cell of the scenario.
+pub fn run_cell(p: &ElasticityParams, policy: Policy, migration: MigrationPolicy) -> ElasticityCell {
+    let cfg = cell_config(p, migration);
+    let workload = TenantWorkload::generate(
+        p.trace,
+        cfg.duration,
+        p.seed,
+        p.functions,
+        cfg.tenancy.zipf_s,
+        &cfg.platform,
+    );
+    ElasticityCell {
+        policy,
+        migration,
+        report: run_tenant(&cfg, policy, &workload),
+    }
+}
+
+/// Sweep every (policy × migration) combination over one scenario.
+pub fn run_sweep(
+    p: &ElasticityParams,
+    policies: &[Policy],
+    migrations: &[MigrationPolicy],
+) -> Vec<ElasticityCell> {
+    let mut cells = Vec::new();
+    for &policy in policies {
+        for &migration in migrations {
+            cells.push(run_cell(p, policy, migration));
+        }
+    }
+    cells
+}
+
+/// Print the sweep table: latency/cold-start columns plus the elasticity
+/// evidence — fleet-wide migrations, and the drained node's post-restore
+/// dispatch and prewarm counts.
+pub fn print_table(cells: &[ElasticityCell], fail_node: u32) {
+    let mut t = Table::new(&[
+        "policy",
+        "migration",
+        "p50 ms",
+        "p99 ms",
+        "cold %",
+        "migrations",
+        "rejoin invocations",
+        "rejoin prewarms",
+    ]);
+    for c in cells {
+        let r = &c.report;
+        let cold_pct = if r.completed > 0 {
+            100.0 * r.cold_requests as f64 / r.completed as f64
+        } else {
+            0.0
+        };
+        let post = r
+            .per_node
+            .iter()
+            .find(|n| n.node == fail_node)
+            .and_then(|n| n.post_restore());
+        let (ri, rp) = post.map_or((0, 0), |p| (p.invocations, p.prewarms_started));
+        t.row(&[
+            c.policy.name().to_string(),
+            c.migration.name().to_string(),
+            format!("{:.0}", r.p50_ms),
+            format!("{:.0}", r.p99_ms),
+            format!("{cold_pct:.1}"),
+            r.counters.migrations_in.to_string(),
+            ri.to_string(),
+            rp.to_string(),
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> ElasticityParams {
+        ElasticityParams {
+            duration_s: 900.0,
+            nodes: 3,
+            functions: 2,
+            fail_at_s: 200.0,
+            restore_at_s: 400.0,
+            seed: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cell_config_schedules_fail_and_restore() {
+        let p = quick();
+        let cfg = cell_config(&p, MigrationPolicy::DemandGap);
+        let f = cfg.fleet.failure.unwrap();
+        let r = cfg.fleet.restore.unwrap();
+        assert_eq!(f.node, r.node);
+        assert!(f.at < r.at, "restore must come after the drain");
+        assert_eq!(cfg.fleet.migration.policy, MigrationPolicy::DemandGap);
+        assert_eq!(cfg.fleet.migration.latency, secs(2.0));
+    }
+
+    #[test]
+    fn sweep_covers_the_grid_and_completes() {
+        let p = quick();
+        let cells = run_sweep(
+            &p,
+            &[Policy::OpenWhisk],
+            &[MigrationPolicy::Off, MigrationPolicy::IdleSpread],
+        );
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert_eq!(c.report.dropped, 0, "{:?}/{:?}", c.policy, c.migration);
+            assert_eq!(c.report.per_node.len(), 3);
+        }
+        // the Off cell never migrates
+        assert_eq!(cells[0].report.counters.migrations_in, 0);
+        print_table(&cells, p.fail_node); // table rendering must not panic
+    }
+}

@@ -29,14 +29,20 @@ pub fn grace() -> Micros {
 
 /// Build the default (in-process solver) scheduler for a policy.
 ///
-/// Two config-derived adjustments happen here: the MPC's planning pool
-/// bound `w_max` scales with the fleet's total capacity (the ROADMAP
+/// Config-derived adjustments happen here: the MPC's planning pool bound
+/// `w_max` scales with the fleet's total capacity (the ROADMAP
 /// `w_max × nodes` follow-up — exactly 1× for the legacy single node,
 /// and 1× in capacity-preserving sweeps where a fixed total is split
 /// across nodes), and both proactive policies learn the workload's
-/// function count for their per-function prewarm splits.
+/// function count for their per-function prewarm splits. The MPC
+/// additionally gets live-capacity scaling (elasticity): it re-derives
+/// the same bound from the *online* capacity at every control step, so a
+/// drained node shrinks the prewarm plan and a rejoined one grows it
+/// back — with the whole fleet online the re-derived value is
+/// bit-identical to the startup scaling below.
 pub fn make_scheduler(cfg: &ExperimentConfig, policy: Policy) -> Box<dyn Scheduler> {
     let mut cc = cfg.controller.clone();
+    let base_w_max = cc.weights.w_max;
     let scale =
         cfg.fleet.total_capacity(&cfg.platform) as f64 / cfg.platform.resource_cap().max(1) as f64;
     cc.weights.w_max *= scale;
@@ -62,7 +68,8 @@ pub fn make_scheduler(cfg: &ExperimentConfig, policy: Policy) -> Box<dyn Schedul
                 }),
                 Box::new(RustSolver::new(cc.weights, cc.pgd_iters, cc.cold_steps)),
             )
-            .with_functions(functions),
+            .with_functions(functions)
+            .with_live_capacity(cfg.platform.resource_cap(), base_w_max),
         ),
     }
 }
@@ -117,6 +124,9 @@ pub fn run_tenant_with_scheduler(
     events.push(cfg.sample_interval, Ev::Sample);
     if let Some(f) = cfg.fleet.failure {
         events.push(f.at, Ev::NodeFail(f.node));
+    }
+    if let Some(r) = cfg.fleet.restore {
+        events.push(r.at, Ev::NodeRestore(r.node));
     }
 
     let cutoff = cfg.duration + grace();
@@ -229,11 +239,22 @@ pub fn run_tenant_with_scheduler(
                     ctx.dispatch(req);
                 }
             }
+            Ev::NodeRestore(node) => {
+                // rejoin scenario: the node comes back cold; placement
+                // sees it immediately, and the MPC's live-capacity
+                // re-scaling grows the prewarm budget back at its next
+                // control step (which is when the node starts reabsorbing
+                // load through prewarms and spill placement)
+                fleet.restore_node(node, now);
+            }
         }
     }
 
     let wall_secs = wall_start.elapsed().as_secs_f64();
     let end = cutoff.max(events.now());
+    // per-node snapshot before finalize drains the idle pools, so the
+    // report shows the end-of-run container population
+    let per_node = fleet.node_reports();
     let (keepalive, idle_totals) = fleet.finalize(end);
     let mut report = RunReport::from_recorder(
         sched.name(),
@@ -246,6 +267,7 @@ pub fn run_tenant_with_scheduler(
     );
     report.nodes = fleet.node_count() as u32;
     report.placement = cfg.fleet.placement.name().to_string();
+    report.per_node = per_node;
     report.set_throughput(events.processed(), wall_secs);
     report
 }

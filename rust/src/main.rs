@@ -1,10 +1,12 @@
 //! `mpc-serverless` CLI — leader entrypoint.
 //!
 //! Subcommands:
-//!   simulate     run one policy on one trace (optionally multi-node / multi-tenant), print the run report
+//!   simulate     run one policy on one trace (optionally multi-node / multi-tenant /
+//!                elastic: drain + rejoin + migration), print the run report
 //!   matrix       run the full Fig. 5-7 policy x trace matrix (parallel cells)
 //!   fleet-sweep  sweep node count x placement policy at fixed total capacity
 //!   tenant-sweep run every policy on one multi-tenant workload, per-function P50/P99
+//!   elasticity-sweep  drain → rejoin scenario swept across migration policies
 //!   bench-throughput  sweep nodes x functions x load, report simulator events/sec (BENCH JSON)
 //!   forecast     Fig. 4 forecast comparison
 //!   overhead     Fig. 8 control overhead (rust mirror + HLO if available)
@@ -14,9 +16,10 @@
 //! The full flag-by-flag reference lives in README.md ("CLI reference").
 
 use mpc_serverless::config::{
-    secs, ExperimentConfig, FleetConfig, NodeFailure, PlacementPolicy, Policy, TenantConfig,
-    TraceKind,
+    parse_restore_spec, secs, ExperimentConfig, FleetConfig, MigrationConfig, MigrationPolicy,
+    NodeFailure, PlacementPolicy, Policy, TenantConfig, TraceKind,
 };
+use mpc_serverless::experiments::elasticity::{self, ElasticityParams};
 use mpc_serverless::experiments::tenant::run_tenant_matrix;
 use mpc_serverless::experiments::{fig1, fig4, fig5_7, fig8, run_experiment, run_tenant};
 use mpc_serverless::util::bench::Table;
@@ -34,6 +37,7 @@ fn main() {
         "matrix" => matrix(&rest),
         "fleet-sweep" => fleet_sweep(&rest),
         "tenant-sweep" => tenant_sweep(&rest),
+        "elasticity-sweep" => elasticity_sweep(&rest),
         "bench-throughput" => bench_throughput(&rest),
         "forecast" => forecast(&rest),
         "overhead" => overhead(),
@@ -45,7 +49,7 @@ fn main() {
         }
         "gen-trace" => gen_trace(&rest),
         _ => {
-            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
+            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|elasticity-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
                       mpc_serverless::version());
             if cmd == "help" { 0 } else { 2 }
         }
@@ -98,7 +102,11 @@ fn simulate(rest: &[String]) -> i32 {
         .flag("skew", "zipf:1.1", "function popularity: zipf:<s> | uniform")
         .flag("trace-file", "", "replay an arrival CSV (overrides --trace)")
         .flag("fail-node", "", "node id to take offline mid-run (drain scenario)")
-        .flag("fail-at-s", "600", "outage time for --fail-node (seconds)");
+        .flag("fail-at-s", "600", "outage time for --fail-node (seconds)")
+        .flag("restore-node", "", "rejoin a drained node: <id>@<seconds>, e.g. 1@900 (needs --fail-node)")
+        .flag("migration", "off", "cross-node rebalancing: off | demand-gap | idle-spread")
+        .flag("migration-latency-s", "2", "warm-state transfer latency (seconds)")
+        .flag("reclaim-pressure", "0", "memory-pressure weight in the fleet reclaim ranking (0 = off)");
     let a = parse_or_exit(&cli, rest);
     let policy = match Policy::parse(a.get("policy")) {
         Some(p) => p,
@@ -149,6 +157,72 @@ fn simulate(rest: &[String]) -> i32 {
         }
         failure = Some(NodeFailure { node, at });
     }
+    // restore/rejoin: only meaningful against a scheduled drain of the
+    // same node, strictly after it
+    if !a.get("restore-node").is_empty() {
+        let Some(restore) = parse_restore_spec(a.get("restore-node")) else {
+            eprintln!(
+                "bad --restore-node '{}' (expected <id>@<seconds>, e.g. 1@900)",
+                a.get("restore-node")
+            );
+            return 2;
+        };
+        let Some(f) = failure else {
+            eprintln!("--restore-node needs --fail-node (nothing is drained otherwise)");
+            return 2;
+        };
+        if restore.node != f.node {
+            eprintln!(
+                "--restore-node {} does not match --fail-node {}",
+                restore.node, f.node
+            );
+            return 2;
+        }
+        if restore.at <= f.at {
+            eprintln!("--restore-node must rejoin strictly after the drain at {:.0} s",
+                      f.at as f64 / 1e6);
+            return 2;
+        }
+        fleet.restore = Some(restore);
+    }
+    let migration_policy = match MigrationPolicy::parse(a.get("migration")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown migration policy '{}'", a.get("migration"));
+            return 2;
+        }
+    };
+    // a migration policy that can never actuate must be an error, not a
+    // silent no-op run masquerading as a rebalancing measurement: the
+    // pass runs from the MPC control loop (it consumes the controller's
+    // per-function forecasts), so reactive policies never migrate
+    if migration_policy != MigrationPolicy::Off && policy != Policy::Mpc {
+        eprintln!(
+            "--migration {} only actuates under --policy mpc (the rebalancing pass runs from the MPC control loop); use --migration off with --policy {}",
+            migration_policy.name(),
+            policy.name()
+        );
+        return 2;
+    }
+    let migration_latency = match a.get_f64("migration-latency-s") {
+        Ok(s) if s > 0.0 => secs(s),
+        _ => {
+            eprintln!("--migration-latency-s must be a positive number");
+            return 2;
+        }
+    };
+    fleet.migration = MigrationConfig {
+        policy: migration_policy,
+        latency: migration_latency,
+        ..Default::default()
+    };
+    let reclaim_pressure = match a.get_f64("reclaim-pressure") {
+        Ok(w) if w >= 0.0 && w.is_finite() => w,
+        _ => {
+            eprintln!("--reclaim-pressure must be a non-negative number");
+            return 2;
+        }
+    };
     let functions = match a.get_u64("functions") {
         Ok(n) if n >= 1 => n as u32,
         _ => {
@@ -204,7 +278,18 @@ fn simulate(rest: &[String]) -> i32 {
         }
         fleet.failure = failure;
     }
-    let cfg = ExperimentConfig {
+    if let Some(r) = fleet.restore {
+        // a rejoin scheduled past the end would silently never happen
+        if r.at >= duration {
+            eprintln!(
+                "--restore-node at {:.0} s is at/after the run end ({:.0} s); the rejoin would never happen",
+                r.at as f64 / 1e6,
+                duration as f64 / 1e6
+            );
+            return 2;
+        }
+    }
+    let mut cfg = ExperimentConfig {
         trace: trace_kind,
         fleet,
         tenancy: TenantConfig {
@@ -215,6 +300,7 @@ fn simulate(rest: &[String]) -> i32 {
         seed,
         ..Default::default()
     };
+    cfg.platform.reclaim_pressure_weight = reclaim_pressure;
     // --functions 1 takes the untouched legacy path: bit-identical to the
     // pre-tenancy simulator (regression-tested)
     let mut r = if functions > 1 {
@@ -358,6 +444,101 @@ fn tenant_sweep(rest: &[String]) -> i32 {
         "\naggregate P99: mpc {:.0} ms vs openwhisk {:.0} ms vs icebreaker {:.0} ms — {}",
         mpc.p99_ms, ow.p99_ms, ib.p99_ms, verdict
     );
+    0
+}
+
+fn elasticity_sweep(rest: &[String]) -> i32 {
+    let cli = Cli::new(
+        "elasticity-sweep",
+        "drain -> rejoin scenario swept across migration policies; per-node rejoin evidence",
+    )
+    .flag("policy", "mpc", "openwhisk | icebreaker | mpc (migration actuates under mpc)")
+    .flag("trace", "synthetic", "azure | synthetic")
+    .flag("duration-s", "3600", "experiment duration (seconds)")
+    .flag("seed", "42", "rng seed")
+    .flag("nodes", "4", "invoker node count (>= 2: one of them drains)")
+    .flag("placement", "warm-first", "round-robin | least-loaded | warm-first")
+    .flag("functions", "4", "distinct functions sharing the fleet")
+    .flag("fail-node", "1", "node that drains and later rejoins")
+    .flag("fail-at-s", "600", "drain time (seconds)")
+    .flag("restore-at-s", "1200", "rejoin time (seconds, after the drain)")
+    .flag("migrations", "off,demand-gap,idle-spread", "comma-separated migration policies to sweep")
+    .flag("migration-latency-s", "2", "warm-state transfer latency (seconds)");
+    let a = parse_or_exit(&cli, rest);
+    let policy = match Policy::parse(a.get("policy")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown policy '{}'", a.get("policy"));
+            return 2;
+        }
+    };
+    let trace = match TraceKind::parse(a.get("trace")) {
+        Some(t) => t,
+        None => {
+            eprintln!("unknown trace '{}'", a.get("trace"));
+            return 2;
+        }
+    };
+    let placement = match PlacementPolicy::parse(a.get("placement")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown placement '{}'", a.get("placement"));
+            return 2;
+        }
+    };
+    let migrations: Vec<MigrationPolicy> = {
+        let mut v = Vec::new();
+        for tok in a.get("migrations").split(',') {
+            match MigrationPolicy::parse(tok.trim()) {
+                Some(m) => v.push(m),
+                None => {
+                    eprintln!("unknown migration policy '{tok}' in --migrations");
+                    return 2;
+                }
+            }
+        }
+        v
+    };
+    let nodes = a.get_u64("nodes").unwrap_or(4) as u32;
+    let fail_node = a.get_u64("fail-node").unwrap_or(1) as u32;
+    let fail_at_s = a.get_f64("fail-at-s").unwrap_or(600.0);
+    let restore_at_s = a.get_f64("restore-at-s").unwrap_or(1200.0);
+    let duration_s = a.get_f64("duration-s").unwrap_or(3600.0);
+    if nodes < 2 || fail_node >= nodes {
+        eprintln!("need --nodes >= 2 and --fail-node < --nodes (the fleet must keep serving)");
+        return 2;
+    }
+    if !(fail_at_s < restore_at_s && restore_at_s < duration_s) {
+        eprintln!("need fail-at-s < restore-at-s < duration-s, got {fail_at_s} / {restore_at_s} / {duration_s}");
+        return 2;
+    }
+    let params = ElasticityParams {
+        trace,
+        duration_s,
+        seed: a.get_u64("seed").unwrap_or(42),
+        nodes,
+        functions: a.get_u64("functions").unwrap_or(4).max(1) as u32,
+        placement,
+        fail_node,
+        fail_at_s,
+        restore_at_s,
+        migration_latency_s: a.get_f64("migration-latency-s").unwrap_or(2.0).max(0.001),
+    };
+    println!(
+        "elasticity-sweep: policy={} trace={} nodes={} drain node {} @ {:.0}s, rejoin @ {:.0}s",
+        policy.name(),
+        trace.name(),
+        nodes,
+        fail_node,
+        fail_at_s,
+        restore_at_s
+    );
+    let cells = elasticity::run_sweep(&params, &[policy], &migrations);
+    elasticity::print_table(&cells, fail_node);
+    println!(
+        "\nrejoin columns = the drained node's post-restore activity (nonzero = it reabsorbed load);"
+    );
+    println!("migration policies actuate from the MPC control loop (off under reactive policies).");
     0
 }
 
@@ -556,7 +737,7 @@ fn fleet_sweep(rest: &[String]) -> i32 {
                     nodes,
                     capacities: Some(capacities.clone()),
                     placement,
-                    failure: None,
+                    ..Default::default()
                 },
                 duration: secs(duration_s),
                 seed,

@@ -2,6 +2,7 @@
 //! keep-alive accounting, control overhead — everything the paper's
 //! evaluation section (Figs. 1, 5-8) reports.
 
+use crate::cluster::fleet::NodeReport;
 use crate::cluster::telemetry::{Counters, GaugeSample};
 use crate::cluster::RequestId;
 use crate::config::{to_secs, Micros};
@@ -162,6 +163,11 @@ pub struct RunReport {
     /// Per-function P50/P99 breakdown, ordered by function id (one entry
     /// per function that received at least one request).
     pub per_function: Vec<FnReport>,
+    /// Per-node accounting (set by the runner; empty for unit tests that
+    /// build reports directly). This is where elasticity shows up: a
+    /// rejoined node's post-restore dispatches/prewarms, and the
+    /// migration in/out counters per invoker.
+    pub per_node: Vec<NodeReport>,
 }
 
 impl RunReport {
@@ -246,6 +252,7 @@ impl RunReport {
             events_per_sec: 0.0,
             response_times_s: rt.samples().to_vec(),
             per_function,
+            per_node: Vec::new(),
         }
     }
 
@@ -296,6 +303,7 @@ impl RunReport {
             ("wall_clock_ms", Json::Num(self.wall_clock_ms)),
             ("events_per_sec", Json::Num(self.events_per_sec)),
             ("evictions", Json::Num(self.counters.evictions as f64)),
+            ("migrations", Json::Num(self.counters.migrations_in as f64)),
             ("functions", Json::Num(self.per_function.len() as f64)),
             (
                 "per_function",
@@ -312,6 +320,50 @@ impl RunReport {
                                 ("p50_ms", Json::Num(f.p50_ms)),
                                 ("p99_ms", Json::Num(f.p99_ms)),
                             ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "per_node",
+                Json::Arr(
+                    self.per_node
+                        .iter()
+                        .map(|n| {
+                            let mut fields = vec![
+                                ("node", Json::Num(n.node as f64)),
+                                ("online", Json::Bool(n.online)),
+                                ("capacity", Json::Num(n.capacity as f64)),
+                                ("containers", Json::Num(n.containers as f64)),
+                                ("invocations", Json::Num(n.counters.invocations as f64)),
+                                ("cold_starts", Json::Num(n.counters.cold_starts as f64)),
+                                (
+                                    "prewarms_started",
+                                    Json::Num(n.counters.prewarms_started as f64),
+                                ),
+                                ("evictions", Json::Num(n.counters.evictions as f64)),
+                                (
+                                    "migrations_in",
+                                    Json::Num(n.counters.migrations_in as f64),
+                                ),
+                                (
+                                    "migrations_out",
+                                    Json::Num(n.counters.migrations_out as f64),
+                                ),
+                            ];
+                            if let Some(pr) = n.post_restore() {
+                                // the rejoin evidence: work done after the
+                                // node's most recent drain
+                                fields.push((
+                                    "post_restore_invocations",
+                                    Json::Num(pr.invocations as f64),
+                                ));
+                                fields.push((
+                                    "post_restore_prewarms",
+                                    Json::Num(pr.prewarms_started as f64),
+                                ));
+                            }
+                            Json::obj(fields)
                         })
                         .collect(),
                 ),
@@ -435,6 +487,55 @@ mod tests {
         let arr = j.path("per_function").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[1].path("cold_requests").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn per_node_json_surface() {
+        let rec = Recorder::new(0);
+        let mut report = RunReport::from_recorder(
+            "mpc",
+            "azure",
+            secs(1.0),
+            &rec,
+            Counters::default(),
+            &[],
+            &[],
+        );
+        assert!(report.per_node.is_empty(), "unit reports carry no nodes");
+        report.per_node = vec![NodeReport {
+            node: 1,
+            online: true,
+            capacity: 32,
+            containers: 3,
+            counters: Counters {
+                invocations: 7,
+                prewarms_started: 4,
+                migrations_in: 2,
+                ..Default::default()
+            },
+            counters_at_drain: Some(Counters {
+                invocations: 5,
+                prewarms_started: 1,
+                ..Default::default()
+            }),
+        }];
+        let j = report.to_json();
+        let arr = j.path("per_node").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].path("node").unwrap().as_f64(), Some(1.0));
+        assert_eq!(arr[0].path("online").unwrap().as_bool(), Some(true));
+        assert_eq!(arr[0].path("invocations").unwrap().as_f64(), Some(7.0));
+        assert_eq!(arr[0].path("prewarms_started").unwrap().as_f64(), Some(4.0));
+        assert_eq!(arr[0].path("migrations_in").unwrap().as_f64(), Some(2.0));
+        // drained-then-restored nodes expose their post-rejoin activity
+        assert_eq!(
+            arr[0].path("post_restore_invocations").unwrap().as_f64(),
+            Some(2.0)
+        );
+        assert_eq!(
+            arr[0].path("post_restore_prewarms").unwrap().as_f64(),
+            Some(3.0)
+        );
     }
 
     #[test]

@@ -30,7 +30,10 @@
 //! [`repair::verify`] in property tests). Only step 0 actuates
 //! (receding horizon); in a multi-tenant run the coordinator splits that
 //! first-step prewarm budget across functions by predicted demand, with
-//! `w_max` pre-scaled to the fleet's total capacity.
+//! `w_max` re-scaled to the fleet's *live* online capacity at every
+//! control step (elasticity — see `coordinator::controller`; the HLO
+//! artifact path keeps the startup-scaled bound, its weights are baked
+//! at lowering time).
 
 pub mod problem;
 pub mod repair;

@@ -19,6 +19,13 @@ pub trait MpcSolver {
     /// Solve from warm start `z0`; returns (z*, final objective value).
     fn solve(&mut self, z0: &[f64], input: &MpcInput) -> (Vec<f64>, f64);
     fn name(&self) -> &str;
+
+    /// Re-scale the planning pool bound `w_max` to the fleet's *live*
+    /// capacity (elasticity: the bound shrinks when a node drains and
+    /// grows back when it rejoins, at every control step). Default no-op:
+    /// the AOT HLO artifact bakes its weights at lowering time, so the
+    /// HLO path keeps the startup-scaled bound.
+    fn set_w_max(&mut self, _w_max: f64) {}
 }
 
 /// In-process PGD solver.
@@ -77,6 +84,10 @@ impl MpcSolver for RustSolver {
 
     fn name(&self) -> &str {
         "rust-pgd"
+    }
+
+    fn set_w_max(&mut self, w_max: f64) {
+        self.weights.w_max = w_max;
     }
 }
 

@@ -1,0 +1,224 @@
+//! Fleet-elasticity integration tests: the drain → rejoin scenario end
+//! to end, cross-node migration under the MPC control loop,
+//! pressure-aware fleet reclaim, and the regression guard that a fleet
+//! which never drains, rejoins, or migrates behaves exactly like the
+//! pre-elasticity system (the new knobs are inert at their defaults —
+//! the `--nodes 1` bit-identity anchor lives in `integration.rs`,
+//! which compares against an inline reimplementation of the pre-fleet
+//! event loop).
+
+use mpc_serverless::cluster::Fleet;
+use mpc_serverless::config::{
+    secs, ExperimentConfig, FleetConfig, MigrationConfig, MigrationPolicy, NodeFailure,
+    NodeRestore, PlacementPolicy, PlatformConfig, Policy, TraceKind,
+};
+use mpc_serverless::experiments::run_experiment;
+use mpc_serverless::metrics::RunReport;
+use mpc_serverless::workload::synthetic::{generate, SyntheticConfig};
+use mpc_serverless::workload::Trace;
+
+fn cfg(nodes: u32, duration_s: f64, seed: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        trace: TraceKind::SyntheticBursty,
+        fleet: FleetConfig {
+            nodes,
+            placement: PlacementPolicy::RoundRobin,
+            ..Default::default()
+        },
+        duration: secs(duration_s),
+        seed,
+        ..Default::default()
+    }
+}
+
+fn trace_for(c: &ExperimentConfig) -> Trace {
+    generate(&SyntheticConfig::default(), c.duration, c.seed)
+}
+
+fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
+    assert_eq!(a.completed, b.completed, "{ctx}: completed");
+    assert_eq!(a.mean_ms, b.mean_ms, "{ctx}: mean");
+    assert_eq!(a.p99_ms, b.p99_ms, "{ctx}: p99");
+    assert_eq!(a.counters.cold_starts, b.counters.cold_starts, "{ctx}: cold");
+    assert_eq!(a.warm_series, b.warm_series, "{ctx}: warm series");
+    assert_eq!(a.keepalive_total_s, b.keepalive_total_s, "{ctx}: keepalive");
+}
+
+/// The headline acceptance scenario: a drained node rejoins mid-run and
+/// must *reabsorb load* — nonzero post-restore dispatches and prewarms
+/// in the per-node report. The control is the same run without the
+/// restore, where the node stays dark and its post-drain activity is
+/// exactly zero.
+#[test]
+fn restored_node_reabsorbs_load() {
+    let node = 1u32;
+    let mut with_restore = cfg(4, 1800.0, 7);
+    with_restore.fleet.failure = Some(NodeFailure {
+        node,
+        at: secs(400.0),
+    });
+    with_restore.fleet.restore = Some(NodeRestore {
+        node,
+        at: secs(800.0),
+    });
+    let trace = trace_for(&with_restore);
+    let restored = run_experiment(&with_restore, Policy::Mpc, &trace);
+    assert_eq!(restored.dropped, 0, "{restored:?}");
+    assert_eq!(restored.completed, trace.len());
+
+    let mut no_restore = with_restore.clone();
+    no_restore.fleet.restore = None;
+    let dark = run_experiment(&no_restore, Policy::Mpc, &trace);
+    assert_eq!(dark.completed, trace.len());
+
+    let post = |r: &RunReport| {
+        r.per_node
+            .iter()
+            .find(|n| n.node == node)
+            .expect("per-node report")
+            .post_restore()
+            .expect("the node drained, so the snapshot exists")
+    };
+    let dark_post = post(&dark);
+    assert_eq!(dark_post.invocations, 0, "an offline node does no work");
+    assert_eq!(dark_post.prewarms_started, 0);
+    let rejoined = post(&restored);
+    assert!(
+        rejoined.invocations > 0,
+        "rejoined node got no dispatches: {rejoined:?}"
+    );
+    assert!(
+        rejoined.prewarms_started > 0,
+        "rejoined node got no prewarm budget: {rejoined:?}"
+    );
+    // the rejoined node is back in the online report
+    let nr = restored.per_node.iter().find(|n| n.node == node).unwrap();
+    assert!(nr.online);
+}
+
+/// A rejoin shortly after the drain: Ready events for containers lost in
+/// the drain arrive while the node is online again and must be dropped,
+/// not panic — and every request still completes.
+#[test]
+fn stale_inflight_events_survive_an_early_rejoin() {
+    let mut c = cfg(4, 1200.0, 11);
+    c.fleet.failure = Some(NodeFailure {
+        node: 2,
+        at: secs(300.0),
+    });
+    // restore inside the L_cold = 10.5 s window, so any cold start lost
+    // at the drain has its stale Ready land on the rejoined node
+    c.fleet.restore = Some(NodeRestore {
+        node: 2,
+        at: secs(305.0),
+    });
+    let trace = trace_for(&c);
+    for policy in [Policy::OpenWhisk, Policy::Mpc] {
+        let r = run_experiment(&c, policy, &trace);
+        assert_eq!(r.dropped, 0, "{}: {r:?}", r.policy);
+        assert_eq!(r.completed, trace.len(), "{}", r.policy);
+    }
+}
+
+/// Cross-node migration under the MPC control loop: with the drain →
+/// rejoin scenario the survivors hold all warm capacity while the
+/// rejoiner is cold, so the idle-spread pass must move containers —
+/// conserving them fleet-wide (every migration-out lands as a
+/// migration-in, nothing is double-counted as a cold start).
+#[test]
+fn migration_moves_warm_capacity_in_the_drain_scenario() {
+    let mut c = cfg(4, 1800.0, 7);
+    c.fleet.placement = PlacementPolicy::WarmFirst;
+    c.fleet.failure = Some(NodeFailure {
+        node: 1,
+        at: secs(400.0),
+    });
+    c.fleet.restore = Some(NodeRestore {
+        node: 1,
+        at: secs(800.0),
+    });
+    c.fleet.migration = MigrationConfig {
+        policy: MigrationPolicy::IdleSpread,
+        ..Default::default()
+    };
+    let trace = trace_for(&c);
+    let r = run_experiment(&c, Policy::Mpc, &trace);
+    assert_eq!(r.dropped, 0, "{r:?}");
+    assert_eq!(r.completed, trace.len());
+    assert!(
+        r.counters.migrations_in > 0,
+        "idle-spread never moved a container: {:?}",
+        r.counters
+    );
+    assert_eq!(
+        r.counters.migrations_in, r.counters.migrations_out,
+        "fleet-wide migration conservation"
+    );
+    // demand-gap also runs the scenario to completion
+    let mut dg = c.clone();
+    dg.fleet.migration.policy = MigrationPolicy::DemandGap;
+    let r2 = run_experiment(&dg, Policy::Mpc, &trace);
+    assert_eq!(r2.dropped, 0);
+    assert_eq!(r2.counters.migrations_in, r2.counters.migrations_out);
+}
+
+/// Pressure-aware reclaim at fleet level: with equal-scoring candidates
+/// on both nodes, the memory-pressure bias must steer Algorithm 2's
+/// cross-node pick toward the pressured node (and without the bias the
+/// tie breaks to the lower node id, as before).
+#[test]
+fn fleet_reclaim_prefers_the_pressured_node() {
+    let run = |weight: f64| {
+        let pc = PlatformConfig {
+            latency_jitter: 0.0,
+            reclaim_pressure_weight: weight,
+            ..Default::default()
+        };
+        let fc = FleetConfig {
+            nodes: 2,
+            ..Default::default()
+        };
+        let mut f = Fleet::new(&fc, &pc, 9);
+        // one idle container on node 0, two on node 1 (more ledger
+        // pressure); the *oldest* container on each node has the same
+        // age, so the container scores tie exactly
+        let (c0, r0) = f.node_mut(0).platform.prewarm_one(0).unwrap();
+        f.node_mut(0).platform.container_ready(c0, r0);
+        let (c1, r1) = f.node_mut(1).platform.prewarm_one(0).unwrap();
+        f.node_mut(1).platform.container_ready(c1, r1);
+        let (c2, r2) = f.node_mut(1).platform.prewarm_one(1_000_000).unwrap();
+        f.node_mut(1).platform.container_ready(c2, r2);
+        let got = f.try_reclaim(1, r2 + 5_000_000);
+        assert_eq!(got.len(), 1);
+        got[0].0
+    };
+    assert_eq!(run(0.0), 0, "unbiased tie breaks to the lower node id");
+    assert_eq!(run(1.0), 1, "pressure bias steers reclaim to the loaded node");
+}
+
+/// Regression guard: the elasticity knobs are inert at their defaults.
+/// With `MigrationPolicy::Off` the migration latency must not matter
+/// (nothing reads it), no migrations happen, and no drain snapshots
+/// exist — the pre-elasticity fleet behavior, bit for bit.
+#[test]
+fn elasticity_disabled_is_inert() {
+    let base = cfg(4, 1200.0, 23);
+    let trace = trace_for(&base);
+    let mut weird_latency = base.clone();
+    weird_latency.fleet.migration = MigrationConfig {
+        policy: MigrationPolicy::Off,
+        latency: secs(999.0),
+        max_moves_per_step: 99,
+    };
+    for policy in [Policy::OpenWhisk, Policy::Mpc] {
+        let a = run_experiment(&base, policy, &trace);
+        let b = run_experiment(&weird_latency, policy, &trace);
+        assert_reports_identical(&a, &b, &format!("{policy:?}: Off must ignore its knobs"));
+        assert_eq!(a.counters.migrations_in, 0);
+        assert_eq!(a.counters.migrations_out, 0);
+        assert!(
+            a.per_node.iter().all(|n| n.post_restore().is_none()),
+            "no node ever drained"
+        );
+    }
+}
