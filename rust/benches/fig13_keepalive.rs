@@ -1,0 +1,40 @@
+//! Fig. 13 (new scenario axis): adaptive per-function keep-alive — the
+//! retention leg of the control triangle — vs the fixed profile windows,
+//! on the resource-time vs P99 frontier.
+//!
+//! What to look for (docs/ARCHITECTURE.md "Retention control"):
+//!
+//! * the adaptive rows must show materially lower idle / keep-alive
+//!   container-seconds than their fixed twins — during forecast lulls
+//!   the horizon clamps to the floor and the sweep drains the idle pool
+//!   the fixed policy would have held for the full profile window;
+//! * `saved s` / `early exp` quantify the earlier-than-profile expiries
+//!   (structurally zero on the fixed rows);
+//! * P99 should hold roughly level: the forecasts that shrink a
+//!   function's horizon during a lull are the same ones that re-prewarm
+//!   it before the next burst, so the trade is asymmetric — that is the
+//!   SPES (arXiv:2403.17574) observation this axis reproduces, and the
+//!   paper's 34% resource-usage headline is the target.
+
+use mpc_serverless::experiments::keepalive::{
+    print_table, run_sweep, KeepAliveParams, DEFAULT_SCENARIOS,
+};
+
+fn main() {
+    let params = KeepAliveParams {
+        duration_s: 1800.0,
+        seed: 3,
+        ..Default::default()
+    };
+    println!(
+        "=== Fig. 13: adaptive keep-alive (MPC, {:.0} min, floor {:.0}s, idle-cost {} / cold-weight {}) ===",
+        params.duration_s / 60.0,
+        params.min_s,
+        params.idle_cost,
+        params.cold_weight
+    );
+    let cells = run_sweep(&params, &DEFAULT_SCENARIOS);
+    print_table(&cells);
+    println!("\nadaptive rows should sit strictly left on the resource axis (idle/keep-alive s)");
+    println!("at equal-or-better P99 — the resource-time vs tail-latency frontier.");
+}

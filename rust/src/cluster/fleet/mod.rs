@@ -145,6 +145,7 @@ impl NodeReport {
             prewarms_rejected: c.prewarms_rejected - at.prewarms_rejected,
             reclaims: c.reclaims - at.reclaims,
             keepalive_expiries: c.keepalive_expiries - at.keepalive_expiries,
+            adaptive_expiries: c.adaptive_expiries - at.adaptive_expiries,
             capacity_queued: c.capacity_queued - at.capacity_queued,
             evictions: c.evictions - at.evictions,
             migrations_out: c.migrations_out - at.migrations_out,
@@ -338,6 +339,49 @@ impl Fleet {
             return None;
         }
         nd.platform.keepalive_of(cid)
+    }
+
+    // ---- retention control (adaptive keep-alive) ----------------------------
+
+    /// Install (or clear) the live keep-alive override for `func` on
+    /// every node — offline nodes included, so a rejoiner serves new
+    /// containers under the controller's current horizon immediately.
+    pub fn set_keepalive_override(&mut self, func: FunctionId, horizon: Option<Micros>) {
+        for n in &mut self.nodes {
+            n.platform.set_keepalive_override(func, horizon);
+        }
+    }
+
+    /// Expire idle containers of `func` already past `horizon` on every
+    /// online node (the retention planner's sweep after shrinking a
+    /// horizon). Returns how many expired fleet-wide.
+    pub fn expire_idle_older_than(&mut self, func: FunctionId, horizon: Micros, now: Micros) -> u32 {
+        self.nodes
+            .iter_mut()
+            .filter(|n| n.online)
+            .map(|n| n.platform.expire_idle_older_than(func, horizon, now).len() as u32)
+            .sum()
+    }
+
+    /// Total idle container-time saved by adaptive retention, fleet-wide
+    /// (offline nodes keep their history).
+    pub fn idle_saved(&self) -> Micros {
+        self.nodes.iter().map(|n| n.platform.idle_saved()).sum()
+    }
+
+    /// Fleet memory-ledger pressure in `[0, 1]`: claimed MiB over node
+    /// memory, summed across *online* capacity (the retention planner's
+    /// budget-awareness input).
+    pub fn mem_pressure(&self) -> f64 {
+        let used: u64 = self.online().map(|n| n.platform.mem_used_mib() as u64).sum();
+        let cap: u64 = self.online().map(|n| n.platform.cfg.node_mem_mib as u64).sum();
+        used as f64 / cap.max(1) as f64
+    }
+
+    /// Profile of one function (every node clones the same registry, so
+    /// node 0's copy is authoritative).
+    pub fn profile(&self, func: FunctionId) -> &crate::workload::tenant::FunctionProfile {
+        self.nodes[0].platform.profile(func)
     }
 
     /// Ready times of in-flight cold starts across the fleet (readyCold).

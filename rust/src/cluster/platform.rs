@@ -48,6 +48,17 @@
 //! so intra-node ranking is unchanged; at the default weight `0.0` the
 //! scores are bit-identical to the container-only ranking.
 //!
+//! **Retention control (adaptive keep-alive).** Expiry consults a *live*
+//! per-function horizon ([`Platform::effective_keepalive`]): the
+//! registry's profile window unless the MPC's retention planner
+//! installed an override ([`Platform::set_keepalive_override`]). Idle
+//! containers always satisfy `since == last_used`, so the per-function
+//! idle MRU set doubles as a sorted idle-age index — a shrunk horizon is
+//! actuated by a prefix sweep ([`Platform::expire_idle_older_than`]),
+//! O(matches), never a container scan. With no overrides (the default
+//! `fixed` policy) every expiry path is bit-identical to the
+//! profile-window code it replaced.
+//!
 //! **Elasticity hooks.** [`Platform::migrate_out`] /
 //! [`Platform::migrate_in`] move an idle container's warm state between
 //! nodes (the fleet's rebalancing pass): the source books it like a
@@ -199,6 +210,17 @@ pub struct Platform {
     /// Per-function activation accounting (multi-tenant telemetry).
     fn_counters: BTreeMap<FunctionId, FnCounters>,
     pub log: ActivationLog,
+    /// Live per-function keep-alive overrides set by the retention
+    /// planner (None = the function's profile window). Every expiry
+    /// check consults this at check time, so a horizon update takes
+    /// effect for already-idle containers too — nothing is frozen into
+    /// the container at creation.
+    ka_overrides: Vec<Option<Micros>>,
+    /// Idle container-time saved by adaptive retention: for every expiry
+    /// that fired before the function's *profile* window would have, the
+    /// span between the actual and the profile-scheduled removal.
+    /// Structurally zero under the fixed policy.
+    idle_saved: Micros,
     /// keep-alive durations (last activation → removal) of removed containers
     removed_keepalive: Vec<Micros>,
     /// total idle (warm-unused) time of removed containers
@@ -220,6 +242,7 @@ impl Platform {
     /// Multi-tenant platform serving `registry`'s function set.
     pub fn with_registry(cfg: PlatformConfig, registry: FunctionRegistry, seed: u64) -> Self {
         let fns = (0..registry.len()).map(|_| FnIndex::default()).collect();
+        let ka_overrides = vec![None; registry.len()];
         Platform {
             cfg,
             registry,
@@ -236,6 +259,8 @@ impl Platform {
             counters: Counters::default(),
             fn_counters: BTreeMap::new(),
             log: ActivationLog::new(),
+            ka_overrides,
+            idle_saved: 0,
             removed_keepalive: Vec::new(),
             removed_idle_total: Vec::new(),
             mem_used: 0,
@@ -898,16 +923,91 @@ impl Platform {
         Some((cid, ready_at))
     }
 
-    /// Keep-alive window of a live container (its function's profile) —
-    /// the runner's scheduling hint for the KeepAlive event.
+    // ---- retention control (adaptive keep-alive) ----------------------------
+
+    /// Live keep-alive horizon of one function: the retention planner's
+    /// override when set, the profile window otherwise. Every expiry
+    /// path consults this at *check time* — the horizon is never frozen
+    /// into a container.
+    pub fn effective_keepalive(&self, func: FunctionId) -> Micros {
+        self.ka_overrides
+            .get(func as usize)
+            .copied()
+            .flatten()
+            .unwrap_or_else(|| self.registry.get(func).keep_alive)
+    }
+
+    /// Install (or clear, with None) the live keep-alive override for
+    /// `func`. Unknown functions are ignored. No container state moves
+    /// here — already-idle containers past a shortened horizon expire at
+    /// their next check or via [`Platform::expire_idle_older_than`].
+    pub fn set_keepalive_override(&mut self, func: FunctionId, horizon: Option<Micros>) {
+        if let Some(slot) = self.ka_overrides.get_mut(func as usize) {
+            *slot = horizon;
+        }
+    }
+
+    /// Idle container-time saved by earlier-than-profile expiries (the
+    /// adaptive policy's resource win; structurally 0 under fixed).
+    pub fn idle_saved(&self) -> Micros {
+        self.idle_saved
+    }
+
+    /// Idle containers of `func` already past the live keep-alive
+    /// horizon — exactly the set an expiry sweep at `now` would remove.
+    /// Idle containers satisfy `since == last_used`, so this is a
+    /// sorted-prefix count on the per-function idle set, O(log idle).
+    pub fn idle_due_for(&self, func: FunctionId, now: Micros) -> u32 {
+        let eff = self.effective_keepalive(func);
+        let Some(cutoff) = now.checked_sub(eff) else {
+            return 0;
+        };
+        self.fns
+            .get(func as usize)
+            .map_or(0, |fi| fi.idle.range(..=(cutoff, ContainerId::MAX)).count() as u32)
+    }
+
+    /// Expire every idle container of `func` idle for at least `horizon`
+    /// at `now` — the retention planner's immediate sweep after it
+    /// shrinks a horizon (scheduled KeepAlive events would only catch
+    /// them at the old due times). Each removal is a keep-alive expiry;
+    /// the prefix drain off the sorted idle set is O(matches log idle).
+    /// Returns the expired ids.
+    pub fn expire_idle_older_than(
+        &mut self,
+        func: FunctionId,
+        horizon: Micros,
+        now: Micros,
+    ) -> Vec<ContainerId> {
+        let Some(cutoff) = now.checked_sub(horizon) else {
+            return Vec::new();
+        };
+        let Some(fi) = self.fns.get(func as usize) else {
+            return Vec::new();
+        };
+        let victims: Vec<ContainerId> = fi
+            .idle
+            .range(..=(cutoff, ContainerId::MAX))
+            .map(|&(_, cid)| cid)
+            .collect();
+        for &cid in &victims {
+            self.expire(cid, now);
+        }
+        victims
+    }
+
+    /// Keep-alive window of a live container (its function's *live*
+    /// horizon) — the runner's scheduling hint for the KeepAlive event.
     pub fn keepalive_of(&self, cid: ContainerId) -> Option<Micros> {
         self.containers
             .get(&cid)
-            .map(|c| self.registry.get(c.func).keep_alive)
+            .map(|c| self.effective_keepalive(c.func))
     }
 
-    /// Keep-alive check for one container, scheduled at `last_used +
-    /// keep_alive` of the container's function.
+    /// Keep-alive check for one container, due at `last_used +` the
+    /// function's live horizon (the profile window unless the retention
+    /// planner overrode it — so a shrunk horizon expires the container
+    /// at its next check, and a grown one reschedules it).
     pub fn keepalive_check(&mut self, cid: ContainerId, now: Micros) -> KeepAliveVerdict {
         let Some(c) = self.containers.get(&cid) else {
             return KeepAliveVerdict::NotApplicable;
@@ -915,14 +1015,29 @@ impl Platform {
         if !c.is_idle() {
             return KeepAliveVerdict::NotApplicable;
         }
-        let due = c.last_used + self.registry.get(c.func).keep_alive;
+        let due = c.last_used + self.effective_keepalive(c.func);
         if now >= due {
-            self.remove(cid, now);
-            self.counters.keepalive_expiries += 1;
+            self.expire(cid, now);
             KeepAliveVerdict::Expired
         } else {
             KeepAliveVerdict::Recheck(due)
         }
+    }
+
+    /// Remove an idle container as a keep-alive expiry, crediting the
+    /// idle time an earlier-than-profile horizon saved. Under the fixed
+    /// policy every expiry fires at/after the profile due time, so the
+    /// adaptive accounting is zero by construction.
+    fn expire(&mut self, cid: ContainerId, now: Micros) {
+        if let Some(c) = self.containers.get(&cid) {
+            let profile_due = c.last_used + self.registry.get(c.func).keep_alive;
+            if now < profile_due {
+                self.idle_saved += profile_due - now;
+                self.counters.adaptive_expiries += 1;
+            }
+        }
+        self.remove(cid, now);
+        self.counters.keepalive_expiries += 1;
     }
 
     fn remove(&mut self, cid: ContainerId, now: Micros) {
@@ -1094,6 +1209,16 @@ impl Platform {
             let idle_f = scan(&|c| c.is_idle() && c.func == f);
             let warm_f = scan(&|c| c.is_warm() && c.func == f);
             let cold_f = scan(&|c| c.is_cold_starting() && c.func == f);
+            // retention audit: the expiry-due count under the *live*
+            // per-function horizon must match a brute-force scan (the
+            // set an expiry sweep at `now` would remove)
+            let eff = self.effective_keepalive(f);
+            let due = scan(&|c| c.is_idle() && c.func == f && c.idle_for(now) >= eff);
+            prop_assert!(
+                due == self.idle_due_for(f, now),
+                "idle_due[{f}] {} != scan {due} (horizon {eff})",
+                self.idle_due_for(f, now)
+            );
             prop_assert!(idle_f == self.idle_count_for(f), "idle[{f}] mismatch");
             prop_assert!(warm_f == self.warm_count_for(f), "warm[{f}] mismatch");
             prop_assert!(cold_f == self.cold_starting_for(f), "cold[{f}] mismatch");
@@ -1274,6 +1399,79 @@ mod tests {
         p.try_reclaim(1, reclaim_at);
         // last_used for a never-executed prewarm is its ready time
         assert_eq!(p.keepalive_records(), &[42_000_000]);
+    }
+
+    #[test]
+    fn live_horizon_override_shortens_expiry_and_credits_saved_idle() {
+        let mut p = platform();
+        let (cid, ready_at) = p.prewarm_one(0).unwrap();
+        p.container_ready(cid, ready_at);
+        assert_eq!(p.keepalive_of(cid), Some(600_000_000)); // profile window
+        // the retention planner shrinks the live horizon to 60 s — the
+        // already-idle container picks it up at its next check
+        p.set_keepalive_override(0, Some(60_000_000));
+        assert_eq!(p.effective_keepalive(0), 60_000_000);
+        assert_eq!(p.keepalive_of(cid), Some(60_000_000));
+        let due = ready_at + 60_000_000;
+        match p.keepalive_check(cid, due - 1) {
+            KeepAliveVerdict::Recheck(t) => assert_eq!(t, due),
+            v => panic!("{v:?}"),
+        }
+        assert_eq!(p.keepalive_check(cid, due), KeepAliveVerdict::Expired);
+        // early expiry credits the span to the profile-scheduled removal
+        assert_eq!(p.counters.keepalive_expiries, 1);
+        assert_eq!(p.counters.adaptive_expiries, 1);
+        assert_eq!(p.idle_saved(), 600_000_000 - 60_000_000);
+        // clearing the override restores the profile window
+        p.set_keepalive_override(0, None);
+        assert_eq!(p.effective_keepalive(0), 600_000_000);
+        // out-of-range functions are ignored, not panics
+        p.set_keepalive_override(99, Some(1));
+    }
+
+    #[test]
+    fn expire_sweep_drains_exactly_the_idle_prefix() {
+        let mut p = platform();
+        // two idle containers with different ages + one busy
+        let (c1, r1) = p.prewarm_one(0).unwrap();
+        p.container_ready(c1, r1);
+        let (c2, r2) = p.prewarm_one(r1 + 100_000_000).unwrap();
+        p.container_ready(c2, r2);
+        let (c3, r3) = p.prewarm_one(r2 + 1).unwrap();
+        p.container_ready(c3, r3);
+        let InvokeOutcome::WarmStart { cid: busy, .. } = p.invoke(1, r3 + 1) else {
+            panic!()
+        };
+        assert_eq!(busy, c3); // MRU bind
+        let now = r2 + 50_000_000;
+        // live horizon 60 s: only c1 (idle ~160 s) qualifies; c2 (50 s)
+        // and the busy c3 survive
+        p.set_keepalive_override(0, Some(60_000_000));
+        assert_eq!(p.idle_due_for(0, now), 1);
+        let expired = p.expire_idle_older_than(0, 60_000_000, now);
+        assert_eq!(expired, vec![c1]);
+        assert_eq!(p.idle_due_for(0, now), 0);
+        assert_eq!(p.counters.keepalive_expiries, 1);
+        // the early removal is credited vs the 600 s profile window
+        assert_eq!(p.counters.adaptive_expiries, 1);
+        assert!(p.idle_saved() > 0);
+        assert_eq!(p.warm_count(), 2);
+        assert_eq!(p.spawned, p.removed + p.total() as u64);
+        // an unknown function is a no-op, not a panic
+        assert!(p.expire_idle_older_than(9, 1, now).is_empty());
+    }
+
+    #[test]
+    fn fixed_policy_accrues_no_adaptive_accounting() {
+        let mut p = platform();
+        let (cid, ready_at) = p.prewarm_one(0).unwrap();
+        p.container_ready(cid, ready_at);
+        // profile-window expiry (the fixed path): no adaptive credit
+        let due = ready_at + 600_000_000;
+        assert_eq!(p.keepalive_check(cid, due), KeepAliveVerdict::Expired);
+        assert_eq!(p.counters.keepalive_expiries, 1);
+        assert_eq!(p.counters.adaptive_expiries, 0);
+        assert_eq!(p.idle_saved(), 0);
     }
 
     #[test]
@@ -1721,12 +1919,15 @@ mod tests {
     use crate::util::prop::prop_check;
 
     /// After an arbitrary interleaving of invoke / prewarm / ready /
-    /// complete / keep-alive / reclaim / migrate operations, every
-    /// indexed counter and MRU/recency/ready-time/reclaim-order query
-    /// must equal the brute-force scan over the container map (see
+    /// complete / keep-alive / reclaim / migrate operations — and, since
+    /// the retention-control PR, random per-step keep-alive horizon
+    /// updates with immediate expiry sweeps — every indexed counter and
+    /// MRU/recency/ready-time/reclaim-order/expiry-due query must equal
+    /// the brute-force scan over the container map (see
     /// [`Platform::assert_matches_scan`]).
     #[test]
     fn indices_match_reference_scan_after_random_ops() {
+        use crate::prop_assert;
         prop_check("platform index == reference scan", 40, |g| {
             let nf = g.usize(1, 4) as u32;
             let cfg = PlatformConfig {
@@ -1749,7 +1950,7 @@ mod tests {
             for _ in 0..steps {
                 now += g.u64(1, 2_000_000);
                 let func = g.u64(0, (nf - 1) as u64) as FunctionId;
-                match g.usize(0, 7) {
+                match g.usize(0, 9) {
                     0 => {
                         req += 1;
                         match p.invoke_for(req, func, now) {
@@ -1816,9 +2017,38 @@ mod tests {
                             pending_ready.push((cid, ready_at));
                         }
                     }
+                    7 => {
+                        // retention planner: install or clear a random live
+                        // horizon; every later expiry check must consult it
+                        let horizon =
+                            (!g.bool(0.3)).then(|| g.u64(1, 900_000_000));
+                        p.set_keepalive_override(func, horizon);
+                    }
+                    8 => {
+                        // retention sweep under a random horizon: the
+                        // expired set must equal the brute-force scan of
+                        // idle containers of the function past that age
+                        let h = g.u64(1, 600_000_000);
+                        let mut want: Vec<ContainerId> = p
+                            .containers
+                            .values()
+                            .filter(|c| {
+                                c.is_idle() && c.func == func && c.idle_for(now) >= h
+                            })
+                            .map(|c| c.id)
+                            .collect();
+                        want.sort_unstable();
+                        let mut got = p.expire_idle_older_than(func, h, now);
+                        got.sort_unstable();
+                        prop_assert!(
+                            got == want,
+                            "expiry sweep {got:?} != scan {want:?} (h={h})"
+                        );
+                    }
                     _ => {
                         // keep-alive probe on an arbitrary (possibly gone)
-                        // container id; expiry removes only idle ones
+                        // container id; expiry removes only idle ones —
+                        // under the container's *live* horizon
                         let cid = g.u64(1, p.spawned.max(1));
                         let _ = p.keepalive_check(cid, now + 600_000_000 * u64::from(g.bool(0.5)));
                     }

@@ -17,6 +17,11 @@ pub struct Counters {
     pub prewarms_rejected: u64,
     pub reclaims: u64,
     pub keepalive_expiries: u64,
+    /// Keep-alive expiries that fired *before* the function's profile
+    /// window would have — the adaptive retention planner's early
+    /// removals (a subset of `keepalive_expiries`; structurally 0 under
+    /// the fixed policy).
+    pub adaptive_expiries: u64,
     pub capacity_queued: u64,
     /// Idle containers of one function removed to make room for another
     /// (multi-tenant contention; always 0 in a single-tenant run).
@@ -41,6 +46,7 @@ impl Counters {
             prewarms_rejected,
             reclaims,
             keepalive_expiries,
+            adaptive_expiries,
             capacity_queued,
             evictions,
             migrations_out,
@@ -52,6 +58,7 @@ impl Counters {
         self.prewarms_rejected += prewarms_rejected;
         self.reclaims += reclaims;
         self.keepalive_expiries += keepalive_expiries;
+        self.adaptive_expiries += adaptive_expiries;
         self.capacity_queued += capacity_queued;
         self.evictions += evictions;
         self.migrations_out += migrations_out;

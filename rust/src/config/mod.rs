@@ -280,6 +280,75 @@ impl Default for TenantConfig {
     }
 }
 
+/// Container-retention (keep-alive) policy for the control loop.
+/// `Fixed` (the default) keeps the per-function profile windows the
+/// registry ships — the pre-retention-control system, bit for bit.
+/// `Adaptive` lets the MPC's retention planner re-derive every
+/// function's keep-alive horizon each control step from its forecast
+/// (see `coordinator::keepalive`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeepAlivePolicy {
+    /// Static per-function profile keep-alive windows (legacy).
+    Fixed,
+    /// Forecast-driven per-function horizons, clamped to
+    /// `[min, profile keep-alive]` by the break-even rule.
+    Adaptive,
+}
+
+impl KeepAlivePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KeepAlivePolicy::Fixed => "fixed",
+            KeepAlivePolicy::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<KeepAlivePolicy> {
+        match s {
+            "fixed" | "profile" => Some(KeepAlivePolicy::Fixed),
+            "adaptive" | "spes" => Some(KeepAlivePolicy::Adaptive),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [KeepAlivePolicy; 2] = [KeepAlivePolicy::Fixed, KeepAlivePolicy::Adaptive];
+}
+
+/// Retention-planner parameters (the break-even knobs). Holding an idle
+/// container one more second costs `idle_cost_per_s`; an arrival that
+/// would otherwise cold-start saves `cold_cost_weight × L_cold(f)`
+/// seconds of weighted user delay — so retention pays while the
+/// forecast arrival rate stays above
+/// `idle_cost_per_s / (cold_cost_weight × L_cold(f))`. All knobs are
+/// inert under `KeepAlivePolicy::Fixed`.
+#[derive(Debug, Clone, Copy)]
+pub struct KeepAliveConfig {
+    pub policy: KeepAlivePolicy,
+    /// Floor on any adaptive horizon (never evict faster than this).
+    pub min: Micros,
+    /// Cost rate of keeping an idle container (per container-second).
+    pub idle_cost_per_s: f64,
+    /// Cold-start cost weight: one avoided cold start is worth
+    /// `weight × L_cold(f)` idle-seconds (default mirrors the MPC's
+    /// cold-delay aversion `alpha`).
+    pub cold_cost_weight: f64,
+    /// Memory-pressure shrink weight: the planned horizon scales by
+    /// `1 − weight × mem_pressure` (floored at `min`); `0` disables.
+    pub pressure_weight: f64,
+}
+
+impl Default for KeepAliveConfig {
+    fn default() -> Self {
+        KeepAliveConfig {
+            policy: KeepAlivePolicy::Fixed,
+            min: secs(30.0),
+            idle_cost_per_s: 1.0,
+            cold_cost_weight: 16.0,
+            pressure_weight: 0.0,
+        }
+    }
+}
+
 /// MPC controller parameters (Sec. III; Table I weights).
 #[derive(Debug, Clone)]
 pub struct ControllerConfig {
@@ -300,6 +369,9 @@ pub struct ControllerConfig {
     /// Force-dispatch guard: max time a request may be shaped/queued before
     /// it is dispatched unconditionally (even onto a cold container).
     pub max_shaping_delay: Micros,
+    /// Container-retention policy + break-even knobs (the keep-alive leg
+    /// of the prewarm → dispatch → retain control triangle).
+    pub keepalive: KeepAliveConfig,
 }
 
 /// MPC objective weights (Table I). Layout mirrors
@@ -392,6 +464,7 @@ impl Default for ControllerConfig {
             // force-dispatch guard: a request never shapes longer than
             // slightly over L_cold — beyond that a cold start wins anyway
             max_shaping_delay: secs(12.0),
+            keepalive: KeepAliveConfig::default(),
         }
     }
 }
@@ -601,6 +674,27 @@ mod tests {
         assert_eq!(parse_restore_spec("x@900"), None);
         assert_eq!(parse_restore_spec("1@-5"), None);
         assert_eq!(parse_restore_spec("1@abc"), None);
+    }
+
+    #[test]
+    fn keepalive_policy_parse_and_names_roundtrip() {
+        for p in KeepAlivePolicy::ALL {
+            assert_eq!(KeepAlivePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(KeepAlivePolicy::parse("profile"), Some(KeepAlivePolicy::Fixed));
+        assert_eq!(KeepAlivePolicy::parse("spes"), Some(KeepAlivePolicy::Adaptive));
+        assert_eq!(KeepAlivePolicy::parse("nope"), None);
+        assert_eq!(KeepAlivePolicy::parse(""), None);
+    }
+
+    #[test]
+    fn keepalive_defaults_are_fixed_and_inert() {
+        let ka = ControllerConfig::default().keepalive;
+        assert_eq!(ka.policy, KeepAlivePolicy::Fixed);
+        assert_eq!(ka.min, secs(30.0));
+        assert_eq!(ka.idle_cost_per_s, 1.0);
+        assert_eq!(ka.cold_cost_weight, 16.0);
+        assert_eq!(ka.pressure_weight, 0.0);
     }
 
     #[test]

@@ -40,7 +40,8 @@ use std::time::Instant;
 
 use crate::cluster::platform::InvokeOutcome;
 use crate::cluster::RequestId;
-use crate::config::{ControllerConfig, Micros, MigrationPolicy};
+use crate::config::{ControllerConfig, KeepAliveConfig, KeepAlivePolicy, Micros, MigrationPolicy};
+use crate::coordinator::keepalive;
 use crate::coordinator::queue::RequestQueue;
 use crate::coordinator::{Ctx, Scheduler};
 use crate::forecast::{Forecaster, FourierForecaster};
@@ -67,6 +68,10 @@ pub struct MpcScheduler {
     /// Per-function demand trackers; empty in a single-tenant run (the
     /// aggregate machinery is then the whole controller).
     tenants: Vec<TenantDemand>,
+    /// Adaptive keep-alive knobs (Some = the retention planner runs each
+    /// control step; None = fixed profile windows, the bit-identical
+    /// default). See [`crate::coordinator::keepalive`].
+    retention: Option<KeepAliveConfig>,
     /// Live-capacity scaling `(C_node, w_max^node)`: when set, the
     /// planning pool bound is recomputed as
     /// `w_max^node × C_live / C_node` at every replan (see the module
@@ -108,6 +113,7 @@ impl MpcScheduler {
             warm_start: vec![0.0; 3 * horizon],
             x_prev: 0.0,
             tenants: Vec::new(),
+            retention: None,
             live_capacity: None,
             idle_scratch: Vec::new(),
             rdy_scratch: Vec::new(),
@@ -127,6 +133,18 @@ impl MpcScheduler {
     /// f64 expression), smaller during a drain, restored on rejoin.
     pub fn with_live_capacity(mut self, node_cap: u32, base_w_max: f64) -> Self {
         self.live_capacity = Some((node_cap.max(1), base_w_max));
+        self
+    }
+
+    /// Enable the adaptive retention planner: every control step the
+    /// per-function keep-alive horizons are re-derived from the same
+    /// forecasts the prewarm split consumes and actuated fleet-wide
+    /// ([`Ctx::apply_keepalive`]). A no-op under
+    /// [`KeepAlivePolicy::Fixed`], keeping the seed path bit-identical.
+    pub fn with_keepalive(mut self, ka: KeepAliveConfig) -> Self {
+        if ka.policy == KeepAlivePolicy::Adaptive {
+            self.retention = Some(ka);
+        }
         self
     }
 
@@ -302,7 +320,9 @@ impl MpcScheduler {
             self.solver.set_w_max(w);
         }
         // 1. forecast over the horizon (aggregate + per-function demand
-        // shares, both inside the reported forecast overhead)
+        // shares + the adaptive retention horizons, all inside the
+        // reported forecast overhead — each per-function forecast is
+        // computed once and feeds both the prewarm split and retention)
         let pad = self.history.recent_mean(self.cc.window);
         let hist = self.history.to_padded_vec(pad);
         let t0 = Instant::now();
@@ -310,9 +330,27 @@ impl MpcScheduler {
         // the open interval's arrivals are demand the closed-bin history
         // cannot see yet — fold them into the first forecast step
         lam[0] += self.arrivals_this_interval as f64;
+        let mut ka_horizons: Option<Vec<Micros>> = None;
         let shares = if self.tenants.len() > 1 {
-            Some(self.tenant_shares())
+            Some(if self.retention.is_some() {
+                let (sh, hz) = self.tenant_shares_and_horizons(ctx);
+                ka_horizons = Some(hz);
+                sh
+            } else {
+                self.tenant_shares()
+            })
         } else {
+            // single-tenant retention planning rides the aggregate
+            // forecast (function 0 *is* the workload)
+            if let Some(ka) = self.retention {
+                ka_horizons = Some(vec![keepalive::plan_horizon(
+                    &lam,
+                    self.cc.dt,
+                    ctx.fleet.profile(0),
+                    &ka,
+                    ctx.fleet.mem_pressure(),
+                )]);
+            }
             None
         };
         // migration demand: the same per-function lead-window forecast
@@ -382,6 +420,16 @@ impl MpcScheduler {
         self.last_plan = Some(plan);
 
         self.try_dispatch(ctx);
+        // 3b. retention actuation: install the planned horizons as the
+        // fleet's live keep-alive windows and expire idle containers
+        // already past them — after the drain, so queued work binds warm
+        // capacity before retention releases any of it (None under the
+        // fixed policy: the block never runs)
+        if let Some(horizons) = ka_horizons {
+            for (f, h) in horizons.into_iter().enumerate() {
+                ctx.apply_keepalive(f as FunctionId, h);
+            }
+        }
         // 4. elasticity: rebalance idle warm capacity across nodes under
         // the configured migration policy (no-op when Off). Runs after
         // the dispatch drain so queued work binds warm capacity before
@@ -391,6 +439,36 @@ impl MpcScheduler {
             ctx.migrate_rebalance(&demand);
         }
         self.force_stale(ctx);
+    }
+
+    /// The adaptive-retention twin of [`MpcScheduler::tenant_shares`]:
+    /// one Fourier forecast per function, feeding *both* the prewarm
+    /// split share (identical arithmetic to `tenant_shares`) and the
+    /// retention horizon (break-even rule over the same forecast, with
+    /// the open interval's arrivals folded into the first step exactly
+    /// as the aggregate path does). One forecast per function per
+    /// replan — never two. Only called under the adaptive policy.
+    fn tenant_shares_and_horizons(&mut self, ctx: &Ctx) -> (Vec<f64>, Vec<Micros>) {
+        let ka = self.retention.expect("called only under the adaptive policy");
+        let lead = self.cc.cold_steps + 2;
+        let horizon = self.cc.horizon;
+        let window = self.cc.window;
+        let dt = self.cc.dt;
+        let pressure = ctx.fleet.mem_pressure();
+        let mut shares = Vec::with_capacity(self.tenants.len());
+        let mut horizons = Vec::with_capacity(self.tenants.len());
+        for (f, t) in self.tenants.iter_mut().enumerate() {
+            let pad = t.history.recent_mean(window);
+            let hist = t.history.to_padded_vec(pad);
+            let mut lam_f = t.forecaster.forecast(&hist, horizon);
+            let demand: f64 =
+                lam_f.iter().take(lead).sum::<f64>() + t.arrivals_this_interval as f64;
+            shares.push(demand.max(0.0));
+            lam_f[0] += t.arrivals_this_interval as f64;
+            let profile = ctx.fleet.profile(f as FunctionId);
+            horizons.push(keepalive::plan_horizon(&lam_f, dt, profile, &ka, pressure));
+        }
+        (shares, horizons)
     }
 
     /// Per-function demand over the cold-start lead window (one Fourier
@@ -632,6 +710,72 @@ mod tests {
             sched.on_control_tick(&mut ctx);
         }
         assert_eq!(sched.cc.weights.w_max, base * 4.0);
+    }
+
+    #[test]
+    fn adaptive_retention_shrinks_horizon_and_expires_idle() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.platform.latency_jitter = 0.0;
+        cfg.controller.keepalive.policy = KeepAlivePolicy::Adaptive;
+        let cc = cfg.controller.clone();
+        let mut sched = MpcScheduler::new(
+            cc.clone(),
+            Box::new(FourierForecaster::default()),
+            Box::new(RustSolver::new(Weights::default(), 60, cc.cold_steps)),
+        )
+        .with_keepalive(cc.keepalive);
+        let mut fleet = Fleet::new(&cfg.fleet, &cfg.platform, 7);
+        // an idle container that has sat well past the 30 s floor
+        let (cid, r) = fleet.node_mut(0).platform.prewarm_one(0).unwrap();
+        fleet.node_mut(0).platform.container_ready(cid, r);
+        let mut events = EventQueue::new();
+        let mut rec = Recorder::new(4);
+        let mut ctx = Ctx {
+            now: r + 100_000_000,
+            fleet: &mut fleet,
+            events: &mut events,
+            recorder: &mut rec,
+            cfg: &cfg,
+        };
+        sched.on_control_tick(&mut ctx);
+        // a dead forecast clamps the horizon to the floor fleet-wide...
+        assert_eq!(
+            ctx.fleet.node(0).platform.effective_keepalive(0),
+            cc.keepalive.min
+        );
+        // ...and the long-idle container is drained (retention sweep, or
+        // the plan's own reclaim if it got there first)
+        assert_eq!(ctx.fleet.idle_count(), 0);
+        let c = ctx.fleet.counters();
+        assert!(c.keepalive_expiries + c.reclaims >= 1, "{c:?}");
+        // the horizon trajectory is recorded for the report
+        assert_eq!(rec.horizon_samples.len(), 1);
+        assert_eq!(rec.horizon_samples[0].1, 0);
+        assert_eq!(rec.horizon_samples[0].2, cc.keepalive.min);
+    }
+
+    #[test]
+    fn fixed_keepalive_policy_is_inert_in_the_controller() {
+        let (mut sched, mut fleet, mut events, mut rec, cfg) = make();
+        // with_keepalive under Fixed must be a no-op
+        sched = sched.with_keepalive(cfg.controller.keepalive);
+        let (cid, r) = fleet.node_mut(0).platform.prewarm_one(0).unwrap();
+        fleet.node_mut(0).platform.container_ready(cid, r);
+        let mut ctx = Ctx {
+            now: r + 100_000_000,
+            fleet: &mut fleet,
+            events: &mut events,
+            recorder: &mut rec,
+            cfg: &cfg,
+        };
+        sched.on_control_tick(&mut ctx);
+        // no override installed, no horizon samples, profile window live
+        assert_eq!(
+            ctx.fleet.node(0).platform.effective_keepalive(0),
+            cfg.platform.keep_alive
+        );
+        assert!(rec.horizon_samples.is_empty());
+        assert_eq!(ctx.fleet.counters().adaptive_expiries, 0);
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Adaptive per-function keep-alive (retention control) — the third leg
+//! of the control triangle the paper's MPC closes: prewarm (Eq. 14's
+//! `x_k`), dispatch (Algorithm 1), and now **retain**.
+//!
+//! The workload registry ships a static per-function keep-alive window
+//! (OpenWhisk's 10-minute default); SPES (arXiv:2403.17574) shows that
+//! most of the performance/resource trade-off lives in adapting that
+//! horizon to each function's predicted inter-arrival pattern. This
+//! module derives the horizon each control step from the *same*
+//! lead-window Fourier forecasts the prewarm split already consumes:
+//!
+//! ```text
+//! keep a warm container of f alive at forecast step k only while
+//!     λ_f(k) / Δt   ≥   idle_cost_per_s / (cold_cost_weight × L_cold(f))
+//!     └─ rate ──┘       └──────────── break-even rate ───────────────┘
+//! ```
+//!
+//! The left side is the forecast arrival rate (arrivals/second) at step
+//! `k`; the right side is the rate at which an idle container's holding
+//! cost is exactly repaid by the cold starts it is expected to absorb.
+//! The horizon is the span of *leading* forecast steps that pass the
+//! test, clamped to `[min, profile keep-alive]` (the planner may only
+//! shrink retention, never extend it past the profile) and optionally
+//! scaled down under memory pressure (`pressure_weight`).
+//!
+//! Degenerate inputs must never panic the control loop (cf. the
+//! `f64::total_cmp` NaN satellite of the indexed-platform PR): a
+//! non-finite or non-positive cold saving makes the break-even rate
+//! unbeatable (horizon clamps to `min`), a non-positive idle cost makes
+//! it free (horizon clamps to the profile window), and NaN forecast
+//! steps terminate the horizon instead of poisoning the comparison.
+//!
+//! Actuation lives in the controller ([`crate::coordinator::Ctx::apply_keepalive`]):
+//! the planned horizon becomes the fleet-wide *live* override consulted
+//! by every future expiry check, and idle containers already past it
+//! are expired immediately via the platform's indexed sweep
+//! (`Platform::expire_idle_older_than`). Under
+//! [`KeepAlivePolicy::Fixed`](crate::config::KeepAlivePolicy) none of
+//! this runs and the system is bit-identical to the pre-retention code.
+
+use crate::config::{to_secs, KeepAliveConfig, Micros};
+use crate::workload::tenant::FunctionProfile;
+
+/// Break-even arrival rate (arrivals per second): retention pays while
+/// the forecast rate is at least `idle_cost_per_s / cold_save_s`.
+///
+/// Guards (never panic, never produce NaN-poisoned comparisons):
+/// a non-positive or non-finite saving can never repay holding cost —
+/// the rate is `+∞` (nothing is retained past the floor); a
+/// non-positive or non-finite idle cost makes retention free — the rate
+/// is `0` (everything is retained to the profile window).
+pub fn break_even_rate(idle_cost_per_s: f64, cold_save_s: f64) -> f64 {
+    // NaN falls into the !is_finite arm, so no negated float comparison
+    // is ever evaluated on it
+    if !cold_save_s.is_finite() || cold_save_s <= 0.0 {
+        return f64::INFINITY;
+    }
+    if !idle_cost_per_s.is_finite() || idle_cost_per_s <= 0.0 {
+        return 0.0;
+    }
+    idle_cost_per_s / cold_save_s
+}
+
+/// Horizon from a per-step forecast: the span of leading steps of `lam`
+/// (arrivals per `dt` interval) whose per-second rate beats `be_rate`,
+/// clamped to `[min, max]`. A NaN forecast step fails the comparison
+/// and terminates the horizon (no panic, no `NaN >=` surprises).
+pub fn horizon_from_forecast(
+    lam: &[f64],
+    dt: Micros,
+    be_rate: f64,
+    min: Micros,
+    max: Micros,
+) -> Micros {
+    let lo = min.min(max);
+    let dt_s = to_secs(dt);
+    if dt_s <= 0.0 {
+        return lo;
+    }
+    let mut span: Micros = 0;
+    for &l in lam {
+        let rate = l / dt_s;
+        // NaN rate or NaN threshold both fail this test, ending the
+        // horizon — the conservative outcome
+        let keeps_paying = rate.is_finite() && rate >= be_rate;
+        if !keeps_paying {
+            break;
+        }
+        span = span.saturating_add(dt);
+    }
+    span.clamp(lo, max)
+}
+
+/// Shrink a planned horizon under memory pressure: scale by
+/// `1 − weight × pressure`, floored at `min` (and never above the
+/// unscaled horizon). Inert at `weight <= 0` or non-finite inputs.
+pub fn pressure_scaled(horizon: Micros, min: Micros, pressure: f64, weight: f64) -> Micros {
+    if !weight.is_finite() || weight <= 0.0 || !pressure.is_finite() {
+        return horizon;
+    }
+    let lo = min.min(horizon);
+    // weight and pressure are finite here, so the scale is a number
+    let scale = 1.0 - weight * pressure.max(0.0);
+    if scale <= 0.0 {
+        return lo;
+    }
+    let scaled = (horizon as f64 * scale.min(1.0)).round() as Micros;
+    scaled.clamp(lo, horizon)
+}
+
+/// One function's keep-alive horizon for this control step: break-even
+/// rule over its forecast, clamped to `[cfg.min, profile keep-alive]`,
+/// pressure-scaled. This is the whole retention planner — it is pure,
+/// so the controller can call it per function with whatever forecast
+/// vector drives that function (the aggregate λ single-tenant, the
+/// per-function Fourier forecast multi-tenant).
+pub fn plan_horizon(
+    lam: &[f64],
+    dt: Micros,
+    profile: &FunctionProfile,
+    cfg: &KeepAliveConfig,
+    pressure: f64,
+) -> Micros {
+    let max = profile.keep_alive;
+    let min = cfg.min.min(max);
+    let be = break_even_rate(cfg.idle_cost_per_s, cfg.cold_cost_weight * to_secs(profile.l_cold));
+    let h = horizon_from_forecast(lam, dt, be, min, max);
+    pressure_scaled(h, min, pressure, cfg.pressure_weight)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{secs, KeepAlivePolicy, PlatformConfig};
+    use crate::workload::tenant::FunctionRegistry;
+
+    fn profile() -> FunctionProfile {
+        // the paper profile: L_cold 10.5 s, keep-alive 600 s
+        FunctionRegistry::single(&PlatformConfig::default()).get(0).clone()
+    }
+
+    fn cfg() -> KeepAliveConfig {
+        KeepAliveConfig {
+            policy: KeepAlivePolicy::Adaptive,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn zero_forecast_clamps_to_min() {
+        let p = profile();
+        let lam = vec![0.0; 24];
+        assert_eq!(plan_horizon(&lam, secs(30.0), &p, &cfg(), 0.0), cfg().min);
+        // an empty forecast behaves the same
+        assert_eq!(plan_horizon(&[], secs(30.0), &p, &cfg(), 0.0), cfg().min);
+    }
+
+    #[test]
+    fn forecast_above_break_even_everywhere_clamps_to_profile() {
+        let p = profile();
+        // 24 steps × 30 s = 720 s of qualifying demand > the 600 s window
+        let lam = vec![100.0; 24];
+        assert_eq!(plan_horizon(&lam, secs(30.0), &p, &cfg(), 0.0), p.keep_alive);
+    }
+
+    #[test]
+    fn horizon_tracks_the_leading_qualifying_span() {
+        let be = break_even_rate(1.0, 16.0 * 10.5); // ≈ 0.00595 arrivals/s
+        // per-step count that exactly beats / misses the threshold
+        let hot = be * 30.0 + 1.0;
+        let lam = vec![hot, hot, hot, 0.0, hot];
+        // 3 leading qualifying steps → 90 s; the post-gap demand is the
+        // prewarm planner's problem, not retention's
+        let h = horizon_from_forecast(&lam, secs(30.0), be, secs(30.0), secs(600.0));
+        assert_eq!(h, secs(90.0));
+    }
+
+    #[test]
+    fn degenerate_costs_never_panic() {
+        let p = profile();
+        let lam = vec![1000.0; 24];
+        let dt = secs(30.0);
+        // zero / negative / NaN / infinite cold saving: a non-finite or
+        // non-positive saving never beats the break-even → the floor
+        for w in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let ka = KeepAliveConfig {
+                cold_cost_weight: w,
+                ..cfg()
+            };
+            assert_eq!(plan_horizon(&lam, dt, &p, &ka, 0.0), ka.min, "w={w}");
+        }
+        // zero / NaN idle cost: retention is free → profile window
+        for c in [0.0, -3.0, f64::NAN] {
+            let ka = KeepAliveConfig {
+                idle_cost_per_s: c,
+                ..cfg()
+            };
+            assert_eq!(plan_horizon(&lam, dt, &p, &ka, 0.0), p.keep_alive, "c={c}");
+        }
+        // NaN forecast steps terminate the horizon instead of poisoning it
+        let poisoned = vec![f64::NAN; 24];
+        assert_eq!(plan_horizon(&poisoned, dt, &p, &cfg(), 0.0), cfg().min);
+    }
+
+    #[test]
+    fn min_above_profile_caps_at_profile() {
+        let p = profile();
+        let ka = KeepAliveConfig {
+            min: secs(9_000.0),
+            ..cfg()
+        };
+        // the planner may never extend retention past the profile window
+        assert_eq!(plan_horizon(&[1e6; 24], secs(30.0), &p, &ka, 0.0), p.keep_alive);
+        assert_eq!(plan_horizon(&[0.0; 24], secs(30.0), &p, &ka, 0.0), p.keep_alive);
+    }
+
+    #[test]
+    fn pressure_scaling_shrinks_but_respects_the_floor() {
+        let min = secs(30.0);
+        let h = secs(600.0);
+        // weight 0 (the default) is inert
+        assert_eq!(pressure_scaled(h, min, 0.9, 0.0), h);
+        // halving pressure × unit weight halves the horizon
+        assert_eq!(pressure_scaled(h, min, 0.5, 1.0), secs(300.0));
+        // saturated pressure clamps at the floor, never below
+        assert_eq!(pressure_scaled(h, min, 1.0, 1.0), min);
+        assert_eq!(pressure_scaled(h, min, 5.0, 2.0), min);
+        // degenerate inputs are inert, not panics
+        assert_eq!(pressure_scaled(h, min, f64::NAN, 1.0), h);
+        assert_eq!(pressure_scaled(h, min, 0.5, f64::NAN), h);
+        // negative pressure never extends the horizon
+        assert_eq!(pressure_scaled(h, min, -3.0, 1.0), h);
+    }
+
+    #[test]
+    fn break_even_rate_edges() {
+        assert_eq!(break_even_rate(1.0, 168.0), 1.0 / 168.0);
+        assert_eq!(break_even_rate(1.0, 0.0), f64::INFINITY);
+        assert_eq!(break_even_rate(1.0, f64::NAN), f64::INFINITY);
+        assert_eq!(break_even_rate(1.0, f64::INFINITY), f64::INFINITY);
+        assert_eq!(break_even_rate(0.0, 10.0), 0.0);
+        assert_eq!(break_even_rate(f64::NAN, 10.0), 0.0);
+    }
+}

@@ -9,6 +9,7 @@
 //! legacy single-platform behavior.
 
 pub mod controller;
+pub mod keepalive;
 pub mod queue;
 
 use crate::cluster::container::ContainerId;
@@ -142,6 +143,20 @@ impl Ctx<'_> {
             }
         }
         moved
+    }
+
+    /// Retention actuator (adaptive keep-alive): install `horizon` as
+    /// the fleet-wide live keep-alive window for `func` — every future
+    /// expiry check consults it — and immediately expire idle containers
+    /// already past it (scheduled KeepAlive events would only catch them
+    /// at the old due times). Records the horizon sample for the
+    /// `RunReport` trajectory. Returns how many containers expired.
+    /// Never called under `KeepAlivePolicy::Fixed`, which is what keeps
+    /// the default path bit-identical.
+    pub fn apply_keepalive(&mut self, func: FunctionId, horizon: Micros) -> u32 {
+        self.recorder.on_keepalive_horizon(self.now, func, horizon);
+        self.fleet.set_keepalive_override(func, Some(horizon));
+        self.fleet.expire_idle_older_than(func, horizon, self.now)
     }
 
     /// Schedule the keep-alive check for a container that just went idle,

@@ -1,0 +1,256 @@
+//! Keep-alive sweep (the `keepalive-sweep` CLI subcommand and the fig13
+//! bench target): fixed profile retention vs the MPC's adaptive
+//! retention planner, across the scenarios the acceptance criteria name
+//! — a single-tenant bursty run and Zipf-skewed multi-tenant runs.
+//!
+//! The quantity under test is the **resource-time vs P99 frontier**:
+//! adaptive retention should strictly reduce idle/keep-alive
+//! container-seconds (the paper's headline 34% resource-usage axis)
+//! while the prewarm planner protects tail latency — the forecasts that
+//! shrink a function's horizon during a lull are the same ones that
+//! re-prewarm it before the next burst, so the trade is asymmetric by
+//! construction.
+
+use crate::config::{
+    secs, ExperimentConfig, FleetConfig, KeepAliveConfig, KeepAlivePolicy, Policy, TenantConfig,
+    TraceKind,
+};
+use crate::experiments::runner::run_tenant;
+use crate::metrics::RunReport;
+use crate::util::bench::Table;
+use crate::workload::TenantWorkload;
+
+/// One scenario of the sweep: a trace family and a tenancy shape.
+#[derive(Debug, Clone, Copy)]
+pub struct KeepAliveScenario {
+    pub name: &'static str,
+    pub trace: TraceKind,
+    pub functions: u32,
+}
+
+/// The acceptance grid: bursty single-tenant, bursty Zipf multi-tenant,
+/// azure Zipf multi-tenant.
+pub const DEFAULT_SCENARIOS: [KeepAliveScenario; 3] = [
+    KeepAliveScenario {
+        name: "bursty/1fn",
+        trace: TraceKind::SyntheticBursty,
+        functions: 1,
+    },
+    KeepAliveScenario {
+        name: "bursty/zipf",
+        trace: TraceKind::SyntheticBursty,
+        functions: 8,
+    },
+    KeepAliveScenario {
+        name: "azure/zipf",
+        trace: TraceKind::AzureLike,
+        functions: 8,
+    },
+];
+
+/// Shared knobs for every cell of a keep-alive sweep.
+#[derive(Debug, Clone)]
+pub struct KeepAliveParams {
+    pub duration_s: f64,
+    pub seed: u64,
+    pub nodes: u32,
+    pub zipf_s: f64,
+    /// Adaptive horizon floor (seconds).
+    pub min_s: f64,
+    pub idle_cost: f64,
+    pub cold_weight: f64,
+    pub pressure: f64,
+}
+
+impl Default for KeepAliveParams {
+    fn default() -> Self {
+        let ka = KeepAliveConfig::default();
+        KeepAliveParams {
+            duration_s: 3600.0,
+            seed: 42,
+            nodes: 1,
+            zipf_s: 1.1,
+            min_s: ka.min as f64 / 1e6,
+            idle_cost: ka.idle_cost_per_s,
+            cold_weight: ka.cold_cost_weight,
+            pressure: ka.pressure_weight,
+        }
+    }
+}
+
+/// One sweep cell: (scenario, retention policy) under the MPC scheduler.
+#[derive(Debug, Clone)]
+pub struct KeepAliveCell {
+    pub scenario: &'static str,
+    pub policy: KeepAlivePolicy,
+    pub report: RunReport,
+}
+
+/// Experiment config for one cell.
+pub fn cell_config(
+    p: &KeepAliveParams,
+    sc: &KeepAliveScenario,
+    policy: KeepAlivePolicy,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        trace: sc.trace,
+        fleet: FleetConfig {
+            nodes: p.nodes,
+            ..Default::default()
+        },
+        tenancy: TenantConfig {
+            functions: sc.functions,
+            zipf_s: p.zipf_s,
+        },
+        duration: secs(p.duration_s),
+        seed: p.seed,
+        ..Default::default()
+    };
+    cfg.controller.keepalive = KeepAliveConfig {
+        policy,
+        min: secs(p.min_s),
+        idle_cost_per_s: p.idle_cost,
+        cold_cost_weight: p.cold_weight,
+        pressure_weight: p.pressure,
+    };
+    cfg
+}
+
+/// Run every scenario under both retention policies (MPC scheduler; the
+/// fixed cell per scenario is the baseline its adaptive twin is judged
+/// against). Cells come back ordered scenario-major, fixed before
+/// adaptive.
+pub fn run_sweep(p: &KeepAliveParams, scenarios: &[KeepAliveScenario]) -> Vec<KeepAliveCell> {
+    let mut cells = Vec::with_capacity(scenarios.len() * 2);
+    for sc in scenarios {
+        let base = cell_config(p, sc, KeepAlivePolicy::Fixed);
+        let workload = TenantWorkload::generate(
+            sc.trace,
+            base.duration,
+            p.seed,
+            sc.functions,
+            p.zipf_s,
+            &base.platform,
+        );
+        for policy in KeepAlivePolicy::ALL {
+            let cfg = cell_config(p, sc, policy);
+            cells.push(KeepAliveCell {
+                scenario: sc.name,
+                policy,
+                report: run_tenant(&cfg, Policy::Mpc, &workload),
+            });
+        }
+    }
+    cells
+}
+
+/// Print the sweep table plus the per-scenario frontier verdict
+/// (resource-time delta at the P99 delta).
+pub fn print_table(cells: &[KeepAliveCell]) {
+    let mut t = Table::new(&[
+        "scenario",
+        "keep-alive",
+        "p50 ms",
+        "p99 ms",
+        "cold %",
+        "idle s",
+        "keep-alive s",
+        "saved s",
+        "early exp",
+        "mean horizon s",
+    ]);
+    for c in cells {
+        let r = &c.report;
+        let cold_pct = if r.completed > 0 {
+            100.0 * r.cold_requests as f64 / r.completed as f64
+        } else {
+            0.0
+        };
+        t.row(&[
+            c.scenario.to_string(),
+            c.policy.name().to_string(),
+            format!("{:.0}", r.p50_ms),
+            format!("{:.0}", r.p99_ms),
+            format!("{cold_pct:.1}"),
+            format!("{:.0}", r.idle_total_s),
+            format!("{:.0}", r.keepalive_total_s),
+            format!("{:.0}", r.idle_saved_s),
+            r.counters.adaptive_expiries.to_string(),
+            format!("{:.0}", r.mean_horizon_s),
+        ]);
+    }
+    t.print();
+    // frontier verdicts: adaptive vs its fixed twin, scenario by scenario
+    for pair in cells.chunks(2) {
+        let [fixed, adaptive] = pair else { continue };
+        let idle_red = 100.0 * (fixed.report.idle_total_s - adaptive.report.idle_total_s)
+            / fixed.report.idle_total_s.max(1e-9);
+        let p99_delta = adaptive.report.p99_ms - fixed.report.p99_ms;
+        let verdict = if idle_red > 0.0 && p99_delta <= 0.0 {
+            "strictly better (less resource-time at equal-or-better P99)"
+        } else if idle_red > 0.0 {
+            "resource win at a P99 cost (inspect the trade)"
+        } else {
+            "no resource win here"
+        };
+        println!(
+            "{}: adaptive idle-time {:+.1}% ({:.0} -> {:.0} s), P99 {:+.0} ms — {}",
+            fixed.scenario,
+            -idle_red,
+            fixed.report.idle_total_s,
+            adaptive.report.idle_total_s,
+            p99_delta,
+            verdict
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> KeepAliveParams {
+        KeepAliveParams {
+            duration_s: 600.0,
+            seed: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cell_config_threads_the_knobs() {
+        let p = KeepAliveParams {
+            min_s: 12.0,
+            idle_cost: 2.0,
+            cold_weight: 8.0,
+            pressure: 0.5,
+            ..quick()
+        };
+        let cfg = cell_config(&p, &DEFAULT_SCENARIOS[1], KeepAlivePolicy::Adaptive);
+        let ka = cfg.controller.keepalive;
+        assert_eq!(ka.policy, KeepAlivePolicy::Adaptive);
+        assert_eq!(ka.min, secs(12.0));
+        assert_eq!(ka.idle_cost_per_s, 2.0);
+        assert_eq!(ka.cold_cost_weight, 8.0);
+        assert_eq!(ka.pressure_weight, 0.5);
+        assert_eq!(cfg.tenancy.functions, 8);
+        assert_eq!(cfg.trace, TraceKind::SyntheticBursty);
+    }
+
+    #[test]
+    fn sweep_pairs_fixed_and_adaptive_per_scenario() {
+        let cells = run_sweep(&quick(), &DEFAULT_SCENARIOS[..1]);
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].policy, KeepAlivePolicy::Fixed);
+        assert_eq!(cells[1].policy, KeepAlivePolicy::Adaptive);
+        for c in &cells {
+            assert_eq!(c.report.dropped, 0, "{:?}", c.policy);
+            assert_eq!(c.report.keepalive_policy, c.policy.name());
+        }
+        // the fixed cell records no retention trajectory or savings
+        assert_eq!(cells[0].report.mean_horizon_s, 0.0);
+        assert_eq!(cells[0].report.idle_saved_s, 0.0);
+        assert_eq!(cells[0].report.counters.adaptive_expiries, 0);
+        print_table(&cells); // table rendering must not panic
+    }
+}

@@ -8,6 +8,7 @@ pub mod fig1;
 pub mod fig4;
 pub mod fig5_7;
 pub mod fig8;
+pub mod keepalive;
 pub mod runner;
 pub mod tenant;
 pub mod throughput;

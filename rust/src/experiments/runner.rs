@@ -12,7 +12,7 @@
 use crate::baselines::{IceBreaker, OpenWhiskDefault};
 use crate::cluster::fleet::Fleet;
 use crate::cluster::platform::{CompleteOutcome, KeepAliveVerdict, ReadyOutcome};
-use crate::config::{secs, ExperimentConfig, Micros, Policy};
+use crate::config::{secs, to_secs, ExperimentConfig, Micros, Policy};
 use crate::coordinator::controller::MpcScheduler;
 use crate::coordinator::{Ctx, Ev, Scheduler};
 use crate::forecast::FourierForecaster;
@@ -69,7 +69,11 @@ pub fn make_scheduler(cfg: &ExperimentConfig, policy: Policy) -> Box<dyn Schedul
                 Box::new(RustSolver::new(cc.weights, cc.pgd_iters, cc.cold_steps)),
             )
             .with_functions(functions)
-            .with_live_capacity(cfg.platform.resource_cap(), base_w_max),
+            .with_live_capacity(cfg.platform.resource_cap(), base_w_max)
+            // adaptive keep-alive rides the MPC control loop (a no-op
+            // under the default fixed policy); the reactive baselines
+            // keep their profile windows
+            .with_keepalive(cc.keepalive),
         ),
     }
 }
@@ -267,6 +271,8 @@ pub fn run_tenant_with_scheduler(
     );
     report.nodes = fleet.node_count() as u32;
     report.placement = cfg.fleet.placement.name().to_string();
+    report.keepalive_policy = cfg.controller.keepalive.policy.name().to_string();
+    report.idle_saved_s = to_secs(fleet.idle_saved());
     report.per_node = per_node;
     report.set_throughput(events.processed(), wall_secs);
     report

@@ -2,11 +2,12 @@
 //!
 //! Subcommands:
 //!   simulate     run one policy on one trace (optionally multi-node / multi-tenant /
-//!                elastic: drain + rejoin + migration), print the run report
+//!                elastic: drain + rejoin + migration; adaptive keep-alive), print the run report
 //!   matrix       run the full Fig. 5-7 policy x trace matrix (parallel cells)
 //!   fleet-sweep  sweep node count x placement policy at fixed total capacity
 //!   tenant-sweep run every policy on one multi-tenant workload, per-function P50/P99
 //!   elasticity-sweep  drain → rejoin scenario swept across migration policies
+//!   keepalive-sweep   fixed vs adaptive retention; resource-time vs P99 frontier
 //!   bench-throughput  sweep nodes x functions x load, report simulator events/sec (BENCH JSON)
 //!   forecast     Fig. 4 forecast comparison
 //!   overhead     Fig. 8 control overhead (rust mirror + HLO if available)
@@ -16,10 +17,12 @@
 //! The full flag-by-flag reference lives in README.md ("CLI reference").
 
 use mpc_serverless::config::{
-    parse_restore_spec, secs, ExperimentConfig, FleetConfig, MigrationConfig, MigrationPolicy,
-    NodeFailure, PlacementPolicy, Policy, TenantConfig, TraceKind,
+    parse_restore_spec, secs, ExperimentConfig, FleetConfig, KeepAliveConfig, KeepAlivePolicy,
+    MigrationConfig, MigrationPolicy, NodeFailure, PlacementPolicy, Policy, TenantConfig,
+    TraceKind,
 };
 use mpc_serverless::experiments::elasticity::{self, ElasticityParams};
+use mpc_serverless::experiments::keepalive::{self, KeepAliveParams};
 use mpc_serverless::experiments::tenant::run_tenant_matrix;
 use mpc_serverless::experiments::{fig1, fig4, fig5_7, fig8, run_experiment, run_tenant};
 use mpc_serverless::util::bench::Table;
@@ -38,6 +41,7 @@ fn main() {
         "fleet-sweep" => fleet_sweep(&rest),
         "tenant-sweep" => tenant_sweep(&rest),
         "elasticity-sweep" => elasticity_sweep(&rest),
+        "keepalive-sweep" => keepalive_sweep(&rest),
         "bench-throughput" => bench_throughput(&rest),
         "forecast" => forecast(&rest),
         "overhead" => overhead(),
@@ -49,7 +53,7 @@ fn main() {
         }
         "gen-trace" => gen_trace(&rest),
         _ => {
-            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|elasticity-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
+            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|elasticity-sweep|keepalive-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
                       mpc_serverless::version());
             if cmd == "help" { 0 } else { 2 }
         }
@@ -106,7 +110,12 @@ fn simulate(rest: &[String]) -> i32 {
         .flag("restore-node", "", "rejoin a drained node: <id>@<seconds>, e.g. 1@900 (needs --fail-node)")
         .flag("migration", "off", "cross-node rebalancing: off | demand-gap | idle-spread")
         .flag("migration-latency-s", "2", "warm-state transfer latency (seconds)")
-        .flag("reclaim-pressure", "0", "memory-pressure weight in the fleet reclaim ranking (0 = off)");
+        .flag("reclaim-pressure", "0", "memory-pressure weight in the fleet reclaim ranking (0 = off)")
+        .flag("keepalive-policy", "fixed", "container retention: fixed | adaptive (adaptive needs --policy mpc)")
+        .flag("keepalive-min-s", "30", "adaptive retention horizon floor (seconds)")
+        .flag("keepalive-idle-cost", "1", "idle cost rate in the retention break-even (per container-second)")
+        .flag("keepalive-cold-weight", "16", "cold-start cost weight (x L_cold) in the retention break-even")
+        .flag("keepalive-pressure", "0", "memory-pressure shrink weight on adaptive horizons (0 = off)");
     let a = parse_or_exit(&cli, rest);
     let policy = match Policy::parse(a.get("policy")) {
         Some(p) => p,
@@ -223,6 +232,13 @@ fn simulate(rest: &[String]) -> i32 {
             return 2;
         }
     };
+    let keepalive = match parse_keepalive_flags(&a, policy) {
+        Ok(ka) => ka,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let functions = match a.get_u64("functions") {
         Ok(n) if n >= 1 => n as u32,
         _ => {
@@ -301,6 +317,7 @@ fn simulate(rest: &[String]) -> i32 {
         ..Default::default()
     };
     cfg.platform.reclaim_pressure_weight = reclaim_pressure;
+    cfg.controller.keepalive = keepalive;
     // --functions 1 takes the untouched legacy path: bit-identical to the
     // pre-tenancy simulator (regression-tested)
     let mut r = if functions > 1 {
@@ -539,6 +556,143 @@ fn elasticity_sweep(rest: &[String]) -> i32 {
         "\nrejoin columns = the drained node's post-restore activity (nonzero = it reabsorbed load);"
     );
     println!("migration policies actuate from the MPC control loop (off under reactive policies).");
+    0
+}
+
+/// Parse the shared retention flags (`--keepalive-*`). Adaptive
+/// retention actuates from the MPC control loop (the planner consumes
+/// the controller's forecasts), so — mirroring `--migration` — it must
+/// be an error under a reactive policy, not a silent fixed-window run
+/// masquerading as an adaptive measurement.
+fn parse_keepalive_flags(a: &Args, policy: Policy) -> Result<KeepAliveConfig, String> {
+    let ka_policy = KeepAlivePolicy::parse(a.get("keepalive-policy")).ok_or_else(|| {
+        format!(
+            "unknown keep-alive policy '{}' (expected fixed | adaptive)",
+            a.get("keepalive-policy")
+        )
+    })?;
+    if ka_policy == KeepAlivePolicy::Adaptive && policy != Policy::Mpc {
+        return Err(format!(
+            "--keepalive-policy adaptive only actuates under --policy mpc (the retention planner consumes the controller's forecasts); use --keepalive-policy fixed with --policy {}",
+            policy.name()
+        ));
+    }
+    let (min_s, idle_cost, cold_weight, pressure) = parse_keepalive_knobs(a)?;
+    Ok(KeepAliveConfig {
+        policy: ka_policy,
+        min: secs(min_s),
+        idle_cost_per_s: idle_cost,
+        cold_cost_weight: cold_weight,
+        pressure_weight: pressure,
+    })
+}
+
+/// Validate the four shared `--keepalive-*` numeric knobs — one rule
+/// set for every subcommand that carries them (the floor strictly
+/// positive, costs/weights finite and non-negative). Returns
+/// `(min_s, idle_cost, cold_weight, pressure)`.
+fn parse_keepalive_knobs(a: &Args) -> Result<(f64, f64, f64, f64), String> {
+    let min_s = match a.get_f64("keepalive-min-s") {
+        Ok(s) if s > 0.0 && s.is_finite() => s,
+        _ => return Err("--keepalive-min-s must be a positive number".into()),
+    };
+    let idle_cost = match a.get_f64("keepalive-idle-cost") {
+        Ok(c) if c >= 0.0 && c.is_finite() => c,
+        _ => return Err("--keepalive-idle-cost must be a non-negative number".into()),
+    };
+    let cold_weight = match a.get_f64("keepalive-cold-weight") {
+        Ok(w) if w >= 0.0 && w.is_finite() => w,
+        _ => return Err("--keepalive-cold-weight must be a non-negative number".into()),
+    };
+    let pressure = match a.get_f64("keepalive-pressure") {
+        Ok(w) if w >= 0.0 && w.is_finite() => w,
+        _ => return Err("--keepalive-pressure must be a non-negative number".into()),
+    };
+    Ok((min_s, idle_cost, cold_weight, pressure))
+}
+
+fn keepalive_sweep(rest: &[String]) -> i32 {
+    let cli = Cli::new(
+        "keepalive-sweep",
+        "fixed vs adaptive retention (MPC) across bursty/Zipf scenarios; resource-time vs P99 frontier",
+    )
+    .flag("duration-s", "3600", "experiment duration (seconds)")
+    .flag("seed", "42", "rng seed")
+    .flag("nodes", "1", "invoker node count")
+    .flag("functions", "8", "functions in the multi-tenant scenarios")
+    .flag("skew", "zipf:1.1", "function popularity: zipf:<s> | uniform")
+    .flag("keepalive-min-s", "30", "adaptive retention horizon floor (seconds)")
+    .flag("keepalive-idle-cost", "1", "idle cost rate in the retention break-even (per container-second)")
+    .flag("keepalive-cold-weight", "16", "cold-start cost weight (x L_cold) in the retention break-even")
+    .flag("keepalive-pressure", "0", "memory-pressure shrink weight on adaptive horizons (0 = off)");
+    let a = parse_or_exit(&cli, rest);
+    let nodes = match a.get_u64("nodes") {
+        Ok(n) if n >= 1 => n as u32,
+        _ => {
+            eprintln!("--nodes must be at least 1");
+            return 2;
+        }
+    };
+    let functions = match a.get_u64("functions") {
+        Ok(n) if n >= 1 => n as u32,
+        _ => {
+            eprintln!("--functions must be a positive integer");
+            return 2;
+        }
+    };
+    let zipf_s = match parse_skew(a.get("skew")) {
+        Some(s) => s,
+        None => {
+            eprintln!("bad --skew '{}' (expected zipf:<s> or uniform)", a.get("skew"));
+            return 2;
+        }
+    };
+    let (min_s, idle_cost, cold_weight, pressure) = match parse_keepalive_knobs(&a) {
+        Ok(knobs) => knobs,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let params = KeepAliveParams {
+        duration_s: a.get_f64("duration-s").unwrap_or(3600.0),
+        seed: a.get_u64("seed").unwrap_or(42),
+        nodes,
+        zipf_s,
+        min_s,
+        idle_cost,
+        cold_weight,
+        pressure,
+    };
+    // the acceptance scenarios, with the multi-tenant cells at the
+    // requested function count
+    let scenarios = [
+        keepalive::DEFAULT_SCENARIOS[0],
+        keepalive::KeepAliveScenario {
+            functions,
+            ..keepalive::DEFAULT_SCENARIOS[1]
+        },
+        keepalive::KeepAliveScenario {
+            functions,
+            ..keepalive::DEFAULT_SCENARIOS[2]
+        },
+    ];
+    println!(
+        "keepalive-sweep: policy=mpc nodes={} functions={} skew={} min={}s idle-cost={} cold-weight={} pressure={}",
+        nodes,
+        functions,
+        a.get("skew"),
+        min_s,
+        idle_cost,
+        cold_weight,
+        pressure
+    );
+    let cells = keepalive::run_sweep(&params, &scenarios);
+    keepalive::print_table(&cells);
+    println!(
+        "\nidle/keep-alive s = resource-time the retention policy controls; saved s + early exp = adaptive's"
+    );
+    println!("earlier-than-profile expiries; the frontier lines above judge each scenario.");
     0
 }
 

@@ -41,6 +41,10 @@ pub struct Recorder {
     samples: Vec<GaugeSample>,
     pub forecast_ns: Vec<f64>,
     pub solve_ns: Vec<f64>,
+    /// Per-function keep-alive horizon trajectory `(time, func,
+    /// horizon)`, one sample per retention actuation (control step).
+    /// Empty under the fixed policy.
+    pub horizon_samples: Vec<(Micros, FunctionId, Micros)>,
 }
 
 impl Recorder {
@@ -94,6 +98,12 @@ impl Recorder {
         self.solve_ns.push(solve_ns);
     }
 
+    /// Record one retention-planner horizon decision (adaptive
+    /// keep-alive trajectory).
+    pub fn on_keepalive_horizon(&mut self, t: Micros, func: FunctionId, horizon: Micros) {
+        self.horizon_samples.push((t, func, horizon));
+    }
+
     pub fn requests(&self) -> &[RequestRecord] {
         &self.requests
     }
@@ -116,6 +126,10 @@ pub struct FnReport {
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Mean keep-alive horizon the retention planner held for this
+    /// function (seconds; 0 under the fixed policy, which records no
+    /// trajectory).
+    pub mean_horizon_s: f64,
 }
 
 /// Aggregated results of one experiment run (one policy, one trace).
@@ -146,6 +160,15 @@ pub struct RunReport {
     pub keepalive_total_s: f64,
     /// Total idle (warm-unused) container-seconds.
     pub idle_total_s: f64,
+    /// Retention policy of the run (`fixed` | `adaptive`; set by the
+    /// runner, `fixed` for directly-built reports).
+    pub keepalive_policy: String,
+    /// Idle container-seconds saved by adaptive retention (expiries
+    /// fired before the profile window would have; 0 under fixed).
+    pub idle_saved_s: f64,
+    /// Mean planned keep-alive horizon across all functions and control
+    /// steps (seconds; 0 under the fixed policy).
+    pub mean_horizon_s: f64,
     pub counters: Counters,
     pub forecast_overhead_ms: f64,
     pub solve_overhead_ms: f64,
@@ -206,6 +229,21 @@ impl RunReport {
                 }
             }
         }
+        // retention trajectory: per-function mean horizon + overall mean
+        let mut horizon_by_fn: std::collections::BTreeMap<FunctionId, (f64, u32)> =
+            std::collections::BTreeMap::new();
+        let mut horizon_sum = 0.0;
+        for &(_, f, h) in &rec.horizon_samples {
+            let e = horizon_by_fn.entry(f).or_insert((0.0, 0));
+            e.0 += to_secs(h);
+            e.1 += 1;
+            horizon_sum += to_secs(h);
+        }
+        let mean_horizon_s = if rec.horizon_samples.is_empty() {
+            0.0
+        } else {
+            horizon_sum / rec.horizon_samples.len() as f64
+        };
         let per_function = by_fn
             .into_iter()
             .map(|(func, (mut s, fdropped, fcold))| FnReport {
@@ -216,6 +254,9 @@ impl RunReport {
                 mean_ms: s.mean() * 1e3,
                 p50_ms: s.p50() * 1e3,
                 p99_ms: s.p99() * 1e3,
+                mean_horizon_s: horizon_by_fn
+                    .get(&func)
+                    .map_or(0.0, |&(sum, n)| sum / n as f64),
             })
             .collect();
         let mean_warm = if rec.samples().is_empty() {
@@ -244,6 +285,9 @@ impl RunReport {
             warm_series: rec.samples().iter().map(|s| (s.time, s.warm)).collect(),
             keepalive_total_s: keepalive.iter().map(|&k| to_secs(k)).sum(),
             idle_total_s: idle_totals.iter().map(|&k| to_secs(k)).sum(),
+            keepalive_policy: "fixed".to_string(),
+            idle_saved_s: 0.0,
+            mean_horizon_s,
             counters,
             forecast_overhead_ms: mean(&rec.forecast_ns) / 1e6,
             solve_overhead_ms: mean(&rec.solve_ns) / 1e6,
@@ -297,6 +341,13 @@ impl RunReport {
             ("mean_warm", Json::Num(self.mean_warm)),
             ("keepalive_total_s", Json::Num(self.keepalive_total_s)),
             ("idle_total_s", Json::Num(self.idle_total_s)),
+            ("keepalive_policy", Json::Str(self.keepalive_policy.clone())),
+            ("idle_saved_s", Json::Num(self.idle_saved_s)),
+            ("mean_horizon_s", Json::Num(self.mean_horizon_s)),
+            (
+                "adaptive_expiries",
+                Json::Num(self.counters.adaptive_expiries as f64),
+            ),
             ("forecast_overhead_ms", Json::Num(self.forecast_overhead_ms)),
             ("solve_overhead_ms", Json::Num(self.solve_overhead_ms)),
             ("events_processed", Json::Num(self.events_processed as f64)),
@@ -319,6 +370,7 @@ impl RunReport {
                                 ("mean_ms", Json::Num(f.mean_ms)),
                                 ("p50_ms", Json::Num(f.p50_ms)),
                                 ("p99_ms", Json::Num(f.p99_ms)),
+                                ("mean_horizon_s", Json::Num(f.mean_horizon_s)),
                             ])
                         })
                         .collect(),
@@ -487,6 +539,39 @@ mod tests {
         let arr = j.path("per_function").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[1].path("cold_requests").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn keepalive_horizon_trajectory_lands_in_the_report() {
+        let mut rec = Recorder::new(2);
+        for (req, func) in [(0u64, 0u32), (1, 1)] {
+            rec.on_arrival_for(req, secs(0.0), func);
+            rec.on_dispatch(req, secs(0.0));
+            rec.on_complete(req, secs(1.0));
+        }
+        rec.on_keepalive_horizon(secs(30.0), 0, secs(600.0));
+        rec.on_keepalive_horizon(secs(60.0), 0, secs(300.0));
+        rec.on_keepalive_horizon(secs(30.0), 1, secs(30.0));
+        let report = RunReport::from_recorder(
+            "mpc",
+            "unit",
+            secs(60.0),
+            &rec,
+            Counters::default(),
+            &[],
+            &[],
+        );
+        assert!((report.per_function[0].mean_horizon_s - 450.0).abs() < 1e-9);
+        assert!((report.per_function[1].mean_horizon_s - 30.0).abs() < 1e-9);
+        assert!((report.mean_horizon_s - 310.0).abs() < 1e-9);
+        // the runner stamps the policy; directly-built reports are fixed
+        assert_eq!(report.keepalive_policy, "fixed");
+        let j = report.to_json();
+        assert_eq!(j.path("keepalive_policy").unwrap().as_str(), Some("fixed"));
+        assert_eq!(j.path("idle_saved_s").unwrap().as_f64(), Some(0.0));
+        assert_eq!(j.path("adaptive_expiries").unwrap().as_f64(), Some(0.0));
+        let arr = j.path("per_function").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].path("mean_horizon_s").unwrap().as_f64(), Some(450.0));
     }
 
     #[test]

@@ -155,6 +155,109 @@ fn simulate_rejects_bad_skew() {
 }
 
 #[test]
+fn simulate_accepts_adaptive_keepalive_flags() {
+    let out = bin()
+        .args([
+            "simulate",
+            "--policy",
+            "mpc",
+            "--trace",
+            "synthetic",
+            "--duration-s",
+            "300",
+            "--seed",
+            "9",
+            "--functions",
+            "2",
+            "--keepalive-policy",
+            "adaptive",
+            "--keepalive-min-s",
+            "20",
+            "--keepalive-idle-cost",
+            "1.5",
+            "--keepalive-cold-weight",
+            "12",
+            "--keepalive-pressure",
+            "0.5",
+        ])
+        .output()
+        .expect("spawn simulate");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let report = Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap();
+    assert_eq!(
+        report.path("keepalive_policy").and_then(Json::as_str),
+        Some("adaptive")
+    );
+    assert_eq!(report.path("dropped").and_then(Json::as_f64), Some(0.0));
+    // the retention telemetry fields are on the JSON surface
+    assert!(report.path("idle_saved_s").and_then(Json::as_f64).unwrap() >= 0.0);
+    assert!(report.path("mean_horizon_s").and_then(Json::as_f64).unwrap() >= 0.0);
+    assert!(report.path("adaptive_expiries").and_then(Json::as_f64).unwrap() >= 0.0);
+    let per_fn = report.path("per_function").unwrap().as_arr().unwrap();
+    assert!(per_fn
+        .iter()
+        .all(|f| f.path("mean_horizon_s").and_then(Json::as_f64).is_some()));
+}
+
+#[test]
+fn simulate_rejects_bad_keepalive_flags() {
+    // an unknown retention policy must be an error
+    let out = bin()
+        .args(["simulate", "--keepalive-policy", "nope"])
+        .output()
+        .expect("spawn simulate");
+    assert!(!out.status.success());
+    // adaptive retention actuates from the MPC loop only
+    let out = bin()
+        .args([
+            "simulate",
+            "--policy",
+            "openwhisk",
+            "--keepalive-policy",
+            "adaptive",
+        ])
+        .output()
+        .expect("spawn simulate");
+    assert!(!out.status.success());
+    // a non-positive floor must be rejected
+    let out = bin()
+        .args(["simulate", "--keepalive-policy", "adaptive", "--keepalive-min-s", "0"])
+        .output()
+        .expect("spawn simulate");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn keepalive_sweep_runs_end_to_end() {
+    let out = bin()
+        .args([
+            "keepalive-sweep",
+            "--duration-s",
+            "180",
+            "--seed",
+            "9",
+            "--functions",
+            "2",
+        ])
+        .output()
+        .expect("spawn keepalive-sweep");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8(out.stdout).unwrap();
+    assert!(text.contains("keepalive-sweep:"), "{text}");
+    // one fixed + one adaptive row per scenario, plus the frontier lines
+    for needle in ["fixed", "adaptive", "bursty/1fn", "bursty/zipf", "azure/zipf"] {
+        assert!(text.contains(needle), "missing {needle}: {text}");
+    }
+    assert!(text.contains("idle-time"), "no frontier verdict: {text}");
+    // an invalid knob is rejected
+    let out = bin()
+        .args(["keepalive-sweep", "--keepalive-min-s", "-3"])
+        .output()
+        .expect("spawn keepalive-sweep");
+    assert!(!out.status.success());
+}
+
+#[test]
 fn tenant_sweep_runs_end_to_end() {
     let out = bin()
         .args([
