@@ -150,6 +150,11 @@ impl NodeReport {
             evictions: c.evictions - at.evictions,
             migrations_out: c.migrations_out - at.migrations_out,
             migrations_in: c.migrations_in - at.migrations_in,
+            layer_hits: c.layer_hits - at.layer_hits,
+            layer_misses: c.layer_misses - at.layer_misses,
+            pull_mib: c.pull_mib - at.pull_mib,
+            cold_cost_us: c.cold_cost_us - at.cold_cost_us,
+            cold_charges: c.cold_charges - at.cold_charges,
         })
     }
 }
@@ -384,6 +389,20 @@ impl Fleet {
         self.nodes[0].platform.profile(func)
     }
 
+    /// Effective cold-start latency of `func` under the image-cache
+    /// model: the worst case over online nodes (init + pull of whatever
+    /// that node's layer store is missing). Conservative by design — the
+    /// controller plans retention horizons and prewarm lead against the
+    /// cost a request would pay if placement had to spill to the
+    /// cache-coldest node. With `--image-cache off` every node reports
+    /// the profile constant, so this degenerates to `profile.l_cold`.
+    pub fn effective_l_cold(&self, func: FunctionId) -> Micros {
+        self.online()
+            .map(|n| n.platform.effective_l_cold(func))
+            .max()
+            .unwrap_or_else(|| self.profile(func).l_cold)
+    }
+
     /// Ready times of in-flight cold starts across the fleet (readyCold).
     pub fn cold_ready_times(&self) -> Vec<Micros> {
         let mut out = Vec::new();
@@ -513,7 +532,10 @@ impl Fleet {
     /// Prewarm one container of `func` on the online node least
     /// provisioned *for that function* (with room for it) — this is how
     /// the MPC's fleet-scaled prewarm budget x_k lands on nodes from
-    /// per-node, per-function telemetry. When no node can admit the
+    /// per-node, per-function telemetry. Ties on provisioning break
+    /// toward the node that would pull the fewest image bytes (cache
+    /// affinity; structurally 0 everywhere with `--image-cache off`, so
+    /// the off path picks exactly as before). When no node can admit the
     /// function the least-provisioned node registers the rejection.
     pub fn prewarm_for(
         &mut self,
@@ -528,6 +550,7 @@ impl Fleet {
             .min_by_key(|(i, n)| {
                 (
                     n.platform.warm_count_for(func) + n.platform.cold_starting_for(func),
+                    n.platform.pull_cost_mib(func),
                     *i,
                 )
             })
@@ -677,10 +700,19 @@ impl Fleet {
     /// cold — no containers, no backlog, counters (history) intact. The
     /// controller's prewarm budget and `w_max` pick up the restored
     /// capacity at its next control step (live-capacity re-scaling).
-    /// Returns whether the node actually transitioned offline → online.
-    pub fn restore_node(&mut self, node: NodeId, _now: Micros) -> bool {
+    ///
+    /// `cap` rebinds the node's replica capacity for the rest of the run
+    /// (heterogeneous restore: the replacement machine need not match the
+    /// one that failed). `None` keeps the pre-drain capacity. Returns
+    /// whether the node actually transitioned offline → online.
+    pub fn restore_node(&mut self, node: NodeId, _now: Micros, cap: Option<u32>) -> bool {
         match self.nodes.get_mut(node as usize) {
             Some(nd) if !nd.online => {
+                if let Some(cap) = cap {
+                    // the drained node holds no containers, so the
+                    // override precondition (empty platform) holds
+                    nd.platform.override_capacity(cap);
+                }
                 nd.online = true;
                 true
             }
@@ -906,9 +938,9 @@ mod tests {
         f.fail_node(0, 1000);
         assert_eq!(f.online_count(), 1);
         // restoring an online node is a no-op, an offline one rejoins
-        assert!(!f.restore_node(1, 2000));
-        assert!(f.restore_node(0, 2000));
-        assert!(!f.restore_node(0, 2001), "already online");
+        assert!(!f.restore_node(1, 2000, None));
+        assert!(f.restore_node(0, 2000, None));
+        assert!(!f.restore_node(0, 2001, None), "already online");
         assert_eq!(f.online_count(), 2);
         // the node rejoined cold: no containers, but capacity counts again
         assert_eq!(f.node(0).platform.total(), 0);
@@ -934,7 +966,7 @@ mod tests {
         };
         assert_eq!(n0, 0);
         f.fail_node(0, 1000);
-        assert!(f.restore_node(0, 2000));
+        assert!(f.restore_node(0, 2000, None));
         // the pre-drain Ready event arrives at the now-online node: the
         // container died with the drain, so the event must be dropped
         assert!(f.container_ready(0, cid, ready_at).is_none());
@@ -1019,7 +1051,7 @@ mod tests {
         let pr = reports[1].post_restore().expect("drained node has snapshot");
         assert_eq!(pr.invocations, 0, "no post-rejoin work yet");
         // after a restore, new work shows up as post-restore activity
-        assert!(f.restore_node(1, 200));
+        assert!(f.restore_node(1, 200, None));
         f.invoke(2, 300); // round-robin continues on node 0 or 1
         f.invoke(3, 310);
         let pr = f.node_reports()[1].post_restore().unwrap();
@@ -1060,6 +1092,8 @@ mod tests {
                 keep_alive: 60_000_000,
                 mem_mib: 128,
                 share: 0.5,
+                idle_cost: None,
+                cold_cost_weight: None,
             },
         ]);
         let fc = FleetConfig {
@@ -1113,5 +1147,73 @@ mod tests {
         assert_eq!(f.cold_starting_count(), 1);
         assert_eq!(f.spawned(), 2);
         assert_eq!(f.removed(), 1);
+    }
+
+    // ---- image cache across the fleet ---------------------------------------
+
+    fn cached_fleet(nodes: u32) -> Fleet {
+        use crate::config::{ImageCacheConfig, ImageCacheMode};
+        let pc = PlatformConfig {
+            latency_jitter: 0.0,
+            image: ImageCacheConfig {
+                mode: ImageCacheMode::Lru,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let fc = FleetConfig {
+            nodes,
+            placement: PlacementPolicy::WarmFirst,
+            ..Default::default()
+        };
+        Fleet::new(&fc, &pc, 11)
+    }
+
+    #[test]
+    fn effective_l_cold_is_worst_case_over_online_nodes() {
+        let mut f = cached_fleet(2);
+        // default single-function image: 64+192+256+16 = 528 MiB at
+        // 100 MiB/s + 25% of the 10.5 s constant as init
+        let cache_cold = 2_625_000 + 5_280_000;
+        assert_eq!(f.effective_l_cold(0), cache_cold);
+        // warming one node does not change the fleet's worst case...
+        f.node_mut(0).platform.warm_image_for(0);
+        assert_eq!(f.node(0).platform.effective_l_cold(0), 2_625_000);
+        assert_eq!(f.effective_l_cold(0), cache_cold);
+        // ...until the cache-cold node leaves the online set
+        f.fail_node(1, 1000);
+        assert_eq!(f.effective_l_cold(0), 2_625_000);
+        // off mode reports the profile constant
+        let off = fleet(2, PlacementPolicy::WarmFirst);
+        assert_eq!(off.effective_l_cold(0), off.profile(0).l_cold);
+    }
+
+    #[test]
+    fn prewarm_ties_break_toward_the_cache_warm_node() {
+        let mut f = cached_fleet(3);
+        // equal provisioning everywhere; only node 2 holds the image
+        f.node_mut(2).platform.warm_image_for(0);
+        let (n, _, _) = f.prewarm_for(0, 0).unwrap();
+        assert_eq!(n, 2, "cache-affine node must win the tie");
+        // with node 2 now provisioned, the remaining tie (nodes 0, 1)
+        // falls back to the index order — both are equally cache-cold
+        let (n, _, _) = f.prewarm_for(0, 10).unwrap();
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn restore_with_capacity_override_rebinds_the_cap() {
+        let mut f = fleet(2, PlacementPolicy::LeastLoaded);
+        let base = f.node(0).platform.cfg.resource_cap();
+        f.fail_node(0, 1000);
+        assert!(f.restore_node(0, 2000, Some(3)));
+        assert_eq!(f.node(0).platform.cfg.resource_cap(), 3);
+        assert_ne!(f.node(0).platform.cfg.resource_cap(), base);
+        assert_eq!(f.node(1).platform.cfg.resource_cap(), base, "peer untouched");
+        assert_eq!(f.resource_cap(), base + 3);
+        // the rebind is sticky: a later drain/rejoin keeps the new cap
+        f.fail_node(0, 3000);
+        assert!(f.restore_node(0, 4000, None));
+        assert_eq!(f.node(0).platform.cfg.resource_cap(), 3);
     }
 }

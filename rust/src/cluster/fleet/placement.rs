@@ -51,9 +51,13 @@ pub fn warm_first(nodes: &[InvokerNode]) -> Option<usize> {
 /// across the fleet. A foreign function's warm pool is useless to this
 /// request, so it never attracts it. With no matching idle container
 /// anywhere, spill to the least-loaded node that can still admit the
-/// function; with the whole fleet saturated, fall back to least-loaded
-/// (the request joins that node's FCFS backlog or evicts a foreign
-/// idle container there).
+/// function, breaking load ties toward the node whose image cache would
+/// pull the fewest bytes for it (cache affinity — the spill is a cold
+/// start, so the missing layers are exactly its extra latency; the
+/// probe is structurally 0 with `--image-cache off`, leaving the legacy
+/// order untouched). With the whole fleet saturated, fall back to
+/// least-loaded (the request joins that node's FCFS backlog or evicts a
+/// foreign idle container there).
 pub fn warm_first_for(nodes: &[InvokerNode], func: FunctionId) -> Option<usize> {
     let warmest = nodes
         .iter()
@@ -68,7 +72,7 @@ pub fn warm_first_for(nodes: &[InvokerNode], func: FunctionId) -> Option<usize> 
         .iter()
         .enumerate()
         .filter(|(_, n)| n.online && n.platform.can_admit(func))
-        .min_by_key(|(i, n)| (n.load(), *i))
+        .min_by_key(|(i, n)| (n.load(), n.platform.pull_cost_mib(func), *i))
         .map(|(i, _)| i);
     if spill.is_some() {
         return spill;
@@ -137,6 +141,32 @@ mod tests {
         // MRU affinity: fresher idle container on node 1 wins
         prewarm_on(&mut f, 1, 5_000_000);
         assert_eq!(warm_first(f.nodes()), Some(1));
+    }
+
+    #[test]
+    fn cold_spill_prefers_the_cache_warm_node() {
+        use crate::config::{ImageCacheConfig, ImageCacheMode};
+        let fc = FleetConfig {
+            nodes: 3,
+            placement: PlacementPolicy::WarmFirst,
+            ..Default::default()
+        };
+        let pc = PlatformConfig {
+            latency_jitter: 0.0,
+            image: ImageCacheConfig {
+                mode: ImageCacheMode::Lru,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut f = Fleet::new(&fc, &pc, 7);
+        // no idle containers anywhere and equal load: the spill tie
+        // breaks toward the node already holding the image layers
+        f.node_mut(1).platform.warm_image_for(0);
+        assert_eq!(warm_first(f.nodes()), Some(1));
+        // a genuine idle warm container still dominates cache affinity
+        prewarm_on(&mut f, 2, 0);
+        assert_eq!(warm_first(f.nodes()), Some(2));
     }
 
     #[test]

@@ -1,0 +1,312 @@
+//! Per-node content-addressed image/layer cache — the cold-start
+//! fidelity model (ISSUE 6 tentpole).
+//!
+//! The paper charges every cold start a constant `L_cold(f)`, but the
+//! cold-start taxonomy literature splits that latency into *image
+//! distribution* (dominant, and a function of what the node's layer
+//! store already holds) and *runtime init* (irreducible). This module
+//! models the distribution half: each `FunctionProfile` maps to an
+//! [`ImageManifest`] of content-addressed layers (base runtime layers
+//! shared across functions, per-function app layers), and every node
+//! carries an [`ImageCache`] — a capacity-bounded LRU layer store. A
+//! cold start pulls exactly the layers the node is missing, so the
+//! effective `L_cold(f, n)` is node-local state the controller can
+//! *manage*: prewarms and migrations warm the destination cache,
+//! placement prefers cache-affine nodes, and the retention/prewarm
+//! rules consume the dynamic cost each control step.
+//!
+//! Determinism: the cache holds no RNG and iterates only over ordered
+//! `BTreeMap`/`BTreeSet` state; recency is a monotone operation
+//! sequence number (not simulation time), so identical operation
+//! sequences reproduce identical eviction orders bit for bit.
+
+use crate::config::ImageCacheConfig;
+
+/// Content digest of one image layer (the content-addressed identity:
+/// two functions naming the same `LayerId` share the bytes on disk).
+pub type LayerId = u64;
+
+/// One image layer: a content digest plus its size on disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Layer {
+    pub id: LayerId,
+    pub size_mib: u32,
+}
+
+/// A function's image: the ordered layer list its container is built
+/// from. Order is cosmetic (pulls are charged by total missing bytes);
+/// identity is per layer.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ImageManifest {
+    pub layers: Vec<Layer>,
+}
+
+impl ImageManifest {
+    pub fn new(layers: Vec<Layer>) -> Self {
+        ImageManifest { layers }
+    }
+
+    /// Total image size in MiB (the pull cost against an empty cache).
+    pub fn total_mib(&self) -> u64 {
+        self.layers.iter().map(|l| l.size_mib as u64).sum()
+    }
+}
+
+/// What one [`ImageCache::admit`] call did: per-layer hit/miss tallies
+/// and the bytes actually pulled from the registry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmitOutcome {
+    pub hits: u64,
+    pub misses: u64,
+    pub pulled_mib: u64,
+}
+
+/// A node's layer store: content-addressed, capacity-bounded, LRU.
+///
+/// The store outlives the node's containers — layers live on the node's
+/// disk, not inside any container, so a drain (`fail_all`) that kills
+/// every container leaves the cache intact; a rejoining node is
+/// container-cold but image-warm, exactly like a restarted invoker.
+#[derive(Debug, Clone)]
+pub struct ImageCache {
+    cfg: ImageCacheConfig,
+    /// layer id → (size, recency sequence number of the last touch)
+    cached: std::collections::BTreeMap<LayerId, (u32, u64)>,
+    /// (recency seq, layer id) mirror of `cached`, ordered oldest-first
+    /// so eviction pops the front deterministically.
+    lru: std::collections::BTreeSet<(u64, LayerId)>,
+    used_mib: u64,
+    /// Monotone operation counter driving recency (never simulation
+    /// time: two ops in the same microsecond must still order).
+    seq: u64,
+}
+
+impl ImageCache {
+    pub fn new(cfg: ImageCacheConfig) -> Self {
+        ImageCache {
+            cfg,
+            cached: std::collections::BTreeMap::new(),
+            lru: std::collections::BTreeSet::new(),
+            used_mib: 0,
+            seq: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    pub fn capacity_mib(&self) -> u64 {
+        self.cfg.capacity_mib as u64
+    }
+
+    pub fn used_mib(&self) -> u64 {
+        self.used_mib
+    }
+
+    pub fn len(&self) -> usize {
+        self.cached.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cached.is_empty()
+    }
+
+    pub fn contains(&self, layer: LayerId) -> bool {
+        self.cached.contains_key(&layer)
+    }
+
+    /// Bytes of `manifest` this node would have to pull right now — the
+    /// read-only affinity probe placement and the controller use. Does
+    /// not touch recency.
+    pub fn missing_mib(&self, manifest: &ImageManifest) -> u64 {
+        if !self.enabled() {
+            return 0;
+        }
+        manifest
+            .layers
+            .iter()
+            .filter(|l| !self.cached.contains_key(&l.id))
+            .map(|l| l.size_mib as u64)
+            .sum()
+    }
+
+    /// Admit `manifest` into the store: pull every missing layer, touch
+    /// every layer (hit or pulled) to most-recently-used, then LRU-evict
+    /// back under capacity. Layers of the image being admitted are
+    /// touched *before* eviction runs, so an image larger than the whole
+    /// store evicts everything else first and only then sheds its own
+    /// oldest layers — deterministic, never panicking.
+    pub fn admit(&mut self, manifest: &ImageManifest) -> AdmitOutcome {
+        if !self.enabled() {
+            return AdmitOutcome::default();
+        }
+        let mut out = AdmitOutcome::default();
+        for l in &manifest.layers {
+            self.seq += 1;
+            match self.cached.insert(l.id, (l.size_mib, self.seq)) {
+                Some((size, old_seq)) => {
+                    out.hits += 1;
+                    debug_assert_eq!(size, l.size_mib, "content-addressed: same id, same bytes");
+                    self.lru.remove(&(old_seq, l.id));
+                }
+                None => {
+                    out.misses += 1;
+                    out.pulled_mib += l.size_mib as u64;
+                    self.used_mib += l.size_mib as u64;
+                }
+            }
+            self.lru.insert((self.seq, l.id));
+        }
+        while self.used_mib > self.capacity_mib() {
+            let Some(&(seq, id)) = self.lru.iter().next() else {
+                break;
+            };
+            self.lru.remove(&(seq, id));
+            let (size, _) = self.cached.remove(&id).expect("lru mirrors cached");
+            self.used_mib -= size as u64;
+        }
+        out
+    }
+
+    /// Ledger invariants, for `assert_matches_scan`-style property
+    /// checks: the LRU mirror and the byte ledger must agree with the
+    /// store exactly, and the store never sits over capacity.
+    pub fn check_ledger(&self) -> Result<(), String> {
+        if self.lru.len() != self.cached.len() {
+            return Err(format!(
+                "lru len {} != cached len {}",
+                self.lru.len(),
+                self.cached.len()
+            ));
+        }
+        for &(seq, id) in &self.lru {
+            match self.cached.get(&id) {
+                Some(&(_, s)) if s == seq => {}
+                other => return Err(format!("lru entry ({seq}, {id}) vs cached {other:?}")),
+            }
+        }
+        let sum: u64 = self.cached.values().map(|&(size, _)| size as u64).sum();
+        if sum != self.used_mib {
+            return Err(format!("used_mib ledger {} != scan {}", self.used_mib, sum));
+        }
+        if self.enabled() && self.used_mib > self.capacity_mib() {
+            return Err(format!(
+                "over capacity: used {} > cap {}",
+                self.used_mib,
+                self.capacity_mib()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ImageCacheMode;
+
+    fn lru(capacity_mib: u32) -> ImageCache {
+        ImageCache::new(ImageCacheConfig {
+            mode: ImageCacheMode::Lru,
+            capacity_mib,
+            ..Default::default()
+        })
+    }
+
+    fn manifest(layers: &[(LayerId, u32)]) -> ImageManifest {
+        ImageManifest::new(
+            layers
+                .iter()
+                .map(|&(id, size_mib)| Layer { id, size_mib })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn first_admit_pulls_everything_second_hits() {
+        let mut c = lru(1024);
+        let m = manifest(&[(1, 64), (2, 192), (10, 256)]);
+        assert_eq!(c.missing_mib(&m), 512);
+        let a = c.admit(&m);
+        assert_eq!(a, AdmitOutcome { hits: 0, misses: 3, pulled_mib: 512 });
+        assert_eq!(c.used_mib(), 512);
+        assert_eq!(c.missing_mib(&m), 0);
+        let b = c.admit(&m);
+        assert_eq!(b, AdmitOutcome { hits: 3, misses: 0, pulled_mib: 0 });
+        assert_eq!(c.used_mib(), 512);
+        c.check_ledger().unwrap();
+    }
+
+    #[test]
+    fn shared_layers_are_stored_once() {
+        let mut c = lru(1024);
+        c.admit(&manifest(&[(1, 64), (2, 192), (10, 100)]));
+        let a = c.admit(&manifest(&[(1, 64), (2, 192), (11, 100)]));
+        // the base layers hit, only the second function's app layer pulls
+        assert_eq!(a, AdmitOutcome { hits: 2, misses: 1, pulled_mib: 100 });
+        assert_eq!(c.used_mib(), 64 + 192 + 100 + 100);
+        assert_eq!(c.len(), 4);
+        c.check_ledger().unwrap();
+    }
+
+    #[test]
+    fn eviction_is_lru_and_respects_touches() {
+        let mut c = lru(300);
+        c.admit(&manifest(&[(1, 100)]));
+        c.admit(&manifest(&[(2, 100)]));
+        c.admit(&manifest(&[(1, 100)])); // touch 1: now 2 is oldest
+        c.admit(&manifest(&[(3, 200)])); // 400 > 300 → evict 2 then... still 400-100=300 ok
+        assert!(c.contains(1));
+        assert!(!c.contains(2), "layer 2 was least recently used");
+        assert!(c.contains(3));
+        assert_eq!(c.used_mib(), 300);
+        c.check_ledger().unwrap();
+    }
+
+    #[test]
+    fn oversized_image_sheds_its_own_oldest_layers_without_panic() {
+        let mut c = lru(150);
+        c.admit(&manifest(&[(9, 50)]));
+        let a = c.admit(&manifest(&[(1, 100), (2, 100)]));
+        assert_eq!(a.pulled_mib, 200);
+        // 250 used > 150 cap: evicts 9 (oldest), then layer 1
+        assert!(!c.contains(9));
+        assert!(!c.contains(1));
+        assert!(c.contains(2));
+        assert_eq!(c.used_mib(), 100);
+        c.check_ledger().unwrap();
+    }
+
+    #[test]
+    fn off_mode_is_inert() {
+        let mut c = ImageCache::new(ImageCacheConfig::default());
+        assert!(!c.enabled());
+        let m = manifest(&[(1, 64), (2, 9999)]);
+        assert_eq!(c.missing_mib(&m), 0);
+        assert_eq!(c.admit(&m), AdmitOutcome::default());
+        assert!(c.is_empty());
+        assert_eq!(c.used_mib(), 0);
+        c.check_ledger().unwrap();
+    }
+
+    #[test]
+    fn identical_op_sequences_reproduce_identical_state() {
+        let script: &[&[(LayerId, u32)]] = &[
+            &[(1, 64), (2, 192), (10, 128)],
+            &[(1, 64), (2, 192), (11, 300)],
+            &[(1, 64), (2, 192), (10, 128)],
+            &[(12, 500)],
+        ];
+        let run = || {
+            let mut c = lru(700);
+            let mut log = Vec::new();
+            for m in script {
+                log.push(c.admit(&manifest(m)));
+            }
+            c.check_ledger().unwrap();
+            (log, c.used_mib(), c.len())
+        };
+        assert_eq!(run(), run());
+    }
+}

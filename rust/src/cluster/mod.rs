@@ -7,10 +7,13 @@
 //!   layer and the node-failure/drain scenario
 //! - [`activation_log`]: Grafana Loki analog (reclaim-safety protocol)
 //! - [`telemetry`]: Prometheus analog (gauges + counters)
+//! - [`image`]: per-node content-addressed image/layer cache (dynamic
+//!   cold-start cost model)
 
 pub mod activation_log;
 pub mod container;
 pub mod fleet;
+pub mod image;
 pub mod platform;
 pub mod telemetry;
 
@@ -19,5 +22,6 @@ pub type RequestId = u64;
 
 pub use container::{Container, ContainerId, ContainerState};
 pub use fleet::{Fleet, InvokerNode, NodeId, NodeReport};
+pub use image::{AdmitOutcome, ImageCache, ImageManifest, Layer, LayerId};
 pub use platform::{CompleteOutcome, InvokeOutcome, KeepAliveVerdict, Platform, ReadyOutcome};
 pub use telemetry::{Counters, FnCounterMap, FnCounters, GaugeSample, Telemetry};

@@ -75,6 +75,7 @@ use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::cluster::activation_log::ActivationLog;
 use crate::cluster::container::{Container, ContainerId, ContainerState};
+use crate::cluster::image::{AdmitOutcome, ImageCache, ImageManifest};
 use crate::cluster::telemetry::{Counters, FnCounters, GaugeSample};
 use crate::cluster::RequestId;
 use crate::config::{Micros, PlatformConfig};
@@ -230,6 +231,15 @@ pub struct Platform {
     /// containers ever created (for conservation checks)
     pub spawned: u64,
     pub removed: u64,
+    /// This node's image/layer store (the cold-start fidelity model;
+    /// inert under `ImageCacheMode::Off`). Layers live on the node's
+    /// disk, not in containers, so the store deliberately survives
+    /// `fail_all`: a crashed invoker restarts container-cold but
+    /// image-warm.
+    image: ImageCache,
+    /// Per-function image manifests, indexed by [`FunctionId`]. Empty
+    /// when the cache is off (nothing ever reads them then).
+    manifests: Vec<ImageManifest>,
 }
 
 impl Platform {
@@ -243,6 +253,12 @@ impl Platform {
     pub fn with_registry(cfg: PlatformConfig, registry: FunctionRegistry, seed: u64) -> Self {
         let fns = (0..registry.len()).map(|_| FnIndex::default()).collect();
         let ka_overrides = vec![None; registry.len()];
+        let image = ImageCache::new(cfg.image);
+        let manifests = if image.enabled() {
+            registry.profiles().iter().map(|p| p.image()).collect()
+        } else {
+            Vec::new()
+        };
         Platform {
             cfg,
             registry,
@@ -266,6 +282,8 @@ impl Platform {
             mem_used: 0,
             spawned: 0,
             removed: 0,
+            image,
+            manifests,
         }
     }
 
@@ -294,6 +312,81 @@ impl Platform {
         }
         let f = self.rng.range_f64(1.0 - j, 1.0 + j);
         (base as f64 * f).round().max(1.0) as Micros
+    }
+
+    // ---- image/layer cache (cold-start fidelity) ----------------------------
+
+    /// This node's layer store (read-only view).
+    pub fn image_cache(&self) -> &ImageCache {
+        &self.image
+    }
+
+    /// Replace the per-function manifests (property tests exercise the
+    /// cache under randomized layer compositions; production manifests
+    /// are derived from the profiles in the constructor). No-op with the
+    /// cache off. Panics if the length does not match the registry.
+    pub fn set_image_manifests(&mut self, manifests: Vec<ImageManifest>) {
+        if !self.image.enabled() {
+            return;
+        }
+        assert_eq!(manifests.len(), self.registry.len(), "one manifest per function");
+        self.manifests = manifests;
+    }
+
+    /// MiB this node would pull to start `func` right now — the
+    /// cache-affinity signal placement and prewarm tie-breaks consume.
+    /// Exactly 0 with the cache off, so every off-mode comparison key is
+    /// bit-identical to the pre-cache code.
+    pub fn pull_cost_mib(&self, func: FunctionId) -> u64 {
+        if !self.image.enabled() {
+            return 0;
+        }
+        self.image.missing_mib(&self.manifests[func as usize])
+    }
+
+    /// Dynamic cold-start cost `L_cold(f, this node)` — `pull(missing) +
+    /// init` against the current cache, the profile constant with the
+    /// cache off. Read-only (no pull happens); the controller feeds this
+    /// into the break-even retention rule and the prewarm lead window.
+    pub fn effective_l_cold(&self, func: FunctionId) -> Micros {
+        let base = self.profile(func).l_cold;
+        if !self.image.enabled() {
+            return base;
+        }
+        let missing = self.image.missing_mib(&self.manifests[func as usize]);
+        self.cfg.image.effective_l_cold(base, missing)
+    }
+
+    /// Warm this node's layer store with `func`'s image (migrations and
+    /// cold starts both land the layers on disk). Books the hit/miss and
+    /// pull-byte telemetry; returns what was pulled. Inert when off.
+    pub fn warm_image_for(&mut self, func: FunctionId) -> AdmitOutcome {
+        if !self.image.enabled() {
+            return AdmitOutcome::default();
+        }
+        let out = self.image.admit(&self.manifests[func as usize]);
+        self.counters.layer_hits += out.hits;
+        self.counters.layer_misses += out.misses;
+        self.counters.pull_mib += out.pulled_mib;
+        out
+    }
+
+    /// The cold-start charge for `func` on this node: pulls the missing
+    /// layers into the cache and returns the effective init latency the
+    /// spawn should pay. With the cache off this is *exactly*
+    /// `profile.l_cold` with no counter traffic — the constant-cost seed
+    /// path, bit for bit (the jitter draw downstream is base-independent,
+    /// so the RNG stream is unchanged either way).
+    fn charge_cold_start(&mut self, func: FunctionId) -> Micros {
+        let base = self.profile(func).l_cold;
+        if !self.image.enabled() {
+            return base;
+        }
+        let pulled = self.warm_image_for(func).pulled_mib;
+        let eff = self.cfg.image.effective_l_cold(base, pulled);
+        self.counters.cold_cost_us += eff;
+        self.counters.cold_charges += 1;
+        eff
     }
 
     // ---- index transitions --------------------------------------------------
@@ -590,7 +683,7 @@ impl Platform {
             return InvokeOutcome::WarmStart { cid, done_at };
         }
         if self.can_admit(func) || self.evict_for(func, now) {
-            let l_cold = self.profile(func).l_cold;
+            let l_cold = self.charge_cold_start(func);
             let ready_at = now + self.jitter(l_cold);
             let cid = self.spawn(func, now, ready_at, Some(req));
             self.counters.cold_starts += 1;
@@ -663,7 +756,7 @@ impl Platform {
             self.counters.prewarms_rejected += 1;
             return None;
         }
-        let l_cold = self.profile(func).l_cold;
+        let l_cold = self.charge_cold_start(func);
         let ready_at = now + self.jitter(l_cold);
         let cid = self.spawn(func, now, ready_at, None);
         self.counters.prewarms_started += 1;
@@ -811,7 +904,7 @@ impl Platform {
         let (_, req) = self.fns[fidx].backlog.pop_front().expect("head checked above");
         self.fcfs_total -= 1;
         let func = fidx as FunctionId;
-        let l_cold = self.profile(func).l_cold;
+        let l_cold = self.charge_cold_start(func);
         let ready_at = now + self.jitter(l_cold);
         let ncid = self.spawn(func, now, ready_at, Some(req));
         self.counters.cold_starts += 1;
@@ -917,6 +1010,9 @@ impl Platform {
         if !self.can_admit(func) {
             return None;
         }
+        // the transfer ships the container image too: the destination's
+        // layer store warms, so later cold starts of `func` here pull less
+        self.warm_image_for(func);
         let ready_at = now + self.jitter(latency);
         let cid = self.spawn(func, now, ready_at, None);
         self.counters.migrations_in += 1;
@@ -1054,6 +1150,22 @@ impl Platform {
             self.log.forget(cid);
             self.removed += 1;
         }
+    }
+
+    /// Re-cap this node's replica capacity (heterogeneous restore: the
+    /// node rejoined after a hardware swap). Mirrors the fleet
+    /// constructor's per-node override idiom — the derived CPU/memory
+    /// floors are raised so the explicit cap is what binds. Only
+    /// meaningful on a drained (empty) node; the memory ledger is not
+    /// re-audited against live containers.
+    pub fn override_capacity(&mut self, cap: u32) {
+        debug_assert_eq!(self.total(), 0, "capacity override on a non-empty node");
+        self.cfg.max_containers = cap;
+        self.cfg.node_cpu_millis = self
+            .cfg
+            .node_cpu_millis
+            .max(cap * self.cfg.container_cpu_millis);
+        self.cfg.node_mem_mib = self.cfg.node_mem_mib.max(cap * self.cfg.container_mem_mib);
     }
 
     /// Node-crash semantics: every container is lost instantly; requests
@@ -1255,6 +1367,27 @@ impl Platform {
         prop_assert!(mem == self.mem_used_mib(), "mem ledger {} != {mem}", self.mem_used_mib());
         let backlog_total: usize = self.fns.iter().map(|fi| fi.backlog.len()).sum();
         prop_assert!(backlog_total == self.fcfs_len(), "fcfs_len mismatch");
+        // image-cache ledger: LRU mirror, byte ledger, and capacity bound
+        // must agree with the layer store after every operation
+        self.image.check_ledger()?;
+        // the dynamic cold-start probe must equal its definition against
+        // the scanned cache state (and collapse to the profile constant
+        // when the cache is off)
+        for f in 0..self.registry.len() as FunctionId {
+            let base = self.registry.get(f).l_cold;
+            let want = if self.image.enabled() {
+                self.cfg
+                    .image
+                    .effective_l_cold(base, self.image.missing_mib(&self.manifests[f as usize]))
+            } else {
+                base
+            };
+            prop_assert!(
+                self.effective_l_cold(f) == want,
+                "effective_l_cold[{f}] {} != {want}",
+                self.effective_l_cold(f)
+            );
+        }
         prop_assert!(
             self.spawned == self.removed + self.total() as u64,
             "conservation broken: spawned {} removed {} live {}",
@@ -1614,6 +1747,8 @@ mod tests {
                 keep_alive: 60_000_000,    // 1 min
                 mem_mib: 128,
                 share: 0.3,
+                idle_cost: None,
+                cold_cost_weight: None,
             },
         ]);
         Platform::with_registry(cfg, registry, 1)
@@ -1836,6 +1971,127 @@ mod tests {
         assert_eq!(p.migrate_out_candidate(0), Some(c2));
     }
 
+    // ---- image/layer cache (cold-start fidelity) ----------------------------
+
+    use crate::config::{ImageCacheConfig, ImageCacheMode};
+
+    /// Single-tenant platform with the layer cache on. The paper-profile
+    /// image is 64 + 192 (base) + 256 (deps = mem footprint) + 16 (code)
+    /// = 528 MiB; at the default 100 MiB/s and init fraction 0.25 a
+    /// cache-cold start costs 2.625 s init + 5.28 s pull.
+    fn cached_platform(capacity_mib: u32) -> Platform {
+        let cfg = PlatformConfig {
+            latency_jitter: 0.0,
+            image: ImageCacheConfig {
+                mode: ImageCacheMode::Lru,
+                capacity_mib,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        Platform::new(cfg, 1)
+    }
+
+    #[test]
+    fn cold_start_charges_pull_plus_init_and_warms_the_cache() {
+        let mut p = cached_platform(2048);
+        assert_eq!(p.pull_cost_mib(0), 528);
+        assert_eq!(p.effective_l_cold(0), 2_625_000 + 5_280_000);
+        // first cold start pays the full pull
+        let InvokeOutcome::ColdStart { ready_at, .. } = p.invoke(1, 0) else {
+            panic!()
+        };
+        assert_eq!(ready_at, 7_905_000);
+        assert_eq!(p.counters.pull_mib, 528);
+        assert_eq!(p.counters.layer_misses, 4);
+        assert_eq!(p.counters.layer_hits, 0);
+        // the layers are on disk now: the next cold start is init-only
+        assert_eq!(p.pull_cost_mib(0), 0);
+        assert_eq!(p.effective_l_cold(0), 2_625_000);
+        let (_, r2) = p.prewarm_one(0).unwrap();
+        assert_eq!(r2, 2_625_000);
+        assert_eq!(p.counters.layer_hits, 4);
+        assert_eq!(p.counters.pull_mib, 528); // nothing new pulled
+        // mean effective charge: (7.905 + 2.625) / 2 seconds
+        assert_eq!(p.counters.cold_charges, 2);
+        assert_eq!(p.counters.cold_cost_us, 7_905_000 + 2_625_000);
+    }
+
+    #[test]
+    fn migrate_in_warms_the_destination_cache() {
+        let mut p = cached_platform(2048);
+        let (cid, ready_at) = p.migrate_in(0, 0, 2_000_000).unwrap();
+        // the transfer shipped the image: cold starts here are cheap now
+        assert_eq!(p.counters.pull_mib, 528);
+        assert_eq!(p.effective_l_cold(0), 2_625_000);
+        // a migration is still not a cold-start charge
+        assert_eq!(p.counters.cold_charges, 0);
+        assert_eq!(p.container_ready(cid, ready_at), ReadyOutcome::Idle);
+    }
+
+    #[test]
+    fn image_cache_survives_a_node_crash() {
+        let mut p = cached_platform(2048);
+        p.warm_image_for(0);
+        assert_eq!(p.effective_l_cold(0), 2_625_000);
+        let lost = p.fail_all(1_000_000);
+        assert!(lost.is_empty());
+        assert_eq!(p.total(), 0);
+        // layers live on the node's disk, not in containers: the restarted
+        // invoker is container-cold but image-warm
+        assert_eq!(p.pull_cost_mib(0), 0);
+        assert_eq!(p.effective_l_cold(0), 2_625_000);
+    }
+
+    #[test]
+    fn tiny_cache_re_pulls_evicted_layers() {
+        // a store smaller than the image: every cold start re-pulls
+        let mut p = cached_platform(100);
+        let (_, r1) = p.prewarm_one(0).unwrap();
+        assert_eq!(r1, 7_905_000);
+        assert!(p.pull_cost_mib(0) > 0, "the store cannot hold the image");
+        let before = p.counters.pull_mib;
+        let (_, _r2) = p.prewarm_one(0).unwrap();
+        assert!(p.counters.pull_mib > before, "second start re-pulled");
+    }
+
+    #[test]
+    fn off_mode_charges_the_constant_and_stays_silent() {
+        let mut p = platform(); // default: cache off
+        let InvokeOutcome::ColdStart { ready_at, .. } = p.invoke(1, 0) else {
+            panic!()
+        };
+        assert_eq!(ready_at, 10_500_000);
+        assert_eq!(p.effective_l_cold(0), 10_500_000);
+        assert_eq!(p.pull_cost_mib(0), 0);
+        let c = p.counters;
+        assert_eq!(c.layer_hits, 0);
+        assert_eq!(c.layer_misses, 0);
+        assert_eq!(c.pull_mib, 0);
+        assert_eq!(c.cold_cost_us, 0);
+        assert_eq!(c.cold_charges, 0);
+        // warming is a no-op too
+        assert_eq!(p.warm_image_for(0), AdmitOutcome::default());
+    }
+
+    #[test]
+    fn override_capacity_rebinds_the_replica_cap() {
+        let cfg = PlatformConfig {
+            max_containers: 2,
+            latency_jitter: 0.0,
+            ..Default::default()
+        };
+        let mut p = Platform::new(cfg, 1);
+        assert_eq!(p.headroom(), 2);
+        p.override_capacity(4);
+        assert_eq!(p.cfg.resource_cap(), 4);
+        assert_eq!(p.headroom(), 4);
+        p.override_capacity(1);
+        assert_eq!(p.cfg.resource_cap(), 1);
+        assert!(p.prewarm_one(0).is_some());
+        assert!(p.prewarm_one(0).is_none(), "the shrunk cap binds");
+    }
+
     #[test]
     fn pressure_bias_raises_best_reclaim_score() {
         // identical container state, different ledger weight/pressure
@@ -1929,6 +2185,8 @@ mod tests {
     fn indices_match_reference_scan_after_random_ops() {
         use crate::prop_assert;
         prop_check("platform index == reference scan", 40, |g| {
+            use crate::cluster::image::{ImageManifest, Layer};
+            use crate::config::{ImageCacheConfig, ImageCacheMode};
             let nf = g.usize(1, 4) as u32;
             let cfg = PlatformConfig {
                 max_containers: g.usize(1, 10) as u32,
@@ -1938,10 +2196,44 @@ mod tests {
                 // sometimes bias the reclaim peek with node pressure so
                 // the scan-vs-index equality covers that path too
                 reclaim_pressure_weight: if g.bool(0.5) { g.f64(0.1, 4.0) } else { 0.0 },
+                // sometimes run with the layer cache on, small enough
+                // that admissions evict (the interesting ledger paths)
+                image: if g.bool(0.5) {
+                    ImageCacheConfig {
+                        mode: ImageCacheMode::Lru,
+                        capacity_mib: g.usize(64, 1024) as u32,
+                        ..Default::default()
+                    }
+                } else {
+                    ImageCacheConfig::default()
+                },
                 ..Default::default()
             };
             let registry = FunctionRegistry::synthesize(nf, 1.1, &cfg, g.u64(0, 1 << 32));
             let mut p = Platform::with_registry(cfg, registry, g.u64(0, 1 << 32));
+            if p.image_cache().enabled() && g.bool(0.5) {
+                // randomized layer manifests: arbitrary sharing patterns
+                // (including repeated ids) over a small id space; sizes
+                // derive from the id so content-addressing holds — the
+                // same digest always names the same bytes
+                let manifests = (0..nf)
+                    .map(|_| {
+                        let n = g.usize(1, 5);
+                        ImageManifest::new(
+                            (0..n)
+                                .map(|_| {
+                                    let id = g.u64(1, 12);
+                                    Layer {
+                                        id,
+                                        size_mib: (id * 97 % 600 + 1) as u32,
+                                    }
+                                })
+                                .collect(),
+                        )
+                    })
+                    .collect();
+                p.set_image_manifests(manifests);
+            }
             let mut now: Micros = 0;
             let mut req: RequestId = 0;
             let mut pending_ready: Vec<(ContainerId, Micros)> = Vec::new();
@@ -1950,7 +2242,7 @@ mod tests {
             for _ in 0..steps {
                 now += g.u64(1, 2_000_000);
                 let func = g.u64(0, (nf - 1) as u64) as FunctionId;
-                match g.usize(0, 9) {
+                match g.usize(0, 10) {
                     0 => {
                         req += 1;
                         match p.invoke_for(req, func, now) {
@@ -2044,6 +2336,12 @@ mod tests {
                             got == want,
                             "expiry sweep {got:?} != scan {want:?} (h={h})"
                         );
+                    }
+                    9 => {
+                        // image-cache warm (registry prefetch / migration
+                        // landing): admits, touches, and possibly evicts —
+                        // the ledger audit below must survive all of it
+                        p.warm_image_for(func);
                     }
                     _ => {
                         // keep-alive probe on an arbitrary (possibly gone)

@@ -32,6 +32,20 @@ pub struct Counters {
     /// Containers admitted from another node's migration (counted on the
     /// destination; fleet-wide `migrations_in == migrations_out`).
     pub migrations_in: u64,
+    /// Image layers found already cached when an image was admitted
+    /// (always 0 with `--image-cache off`).
+    pub layer_hits: u64,
+    /// Image layers that had to be pulled from the registry.
+    pub layer_misses: u64,
+    /// Total MiB pulled from the registry (the image-distribution bytes
+    /// the cache failed to absorb).
+    pub pull_mib: u64,
+    /// Sum of effective cold-start charges (µs) under the image-cache
+    /// model, and how many charges contributed — together they yield the
+    /// mean effective `L_cold`. Only accumulated when the cache is
+    /// enabled, so the off path stays structurally silent.
+    pub cold_cost_us: u64,
+    pub cold_charges: u64,
 }
 
 impl Counters {
@@ -51,6 +65,11 @@ impl Counters {
             evictions,
             migrations_out,
             migrations_in,
+            layer_hits,
+            layer_misses,
+            pull_mib,
+            cold_cost_us,
+            cold_charges,
         } = *o;
         self.invocations += invocations;
         self.cold_starts += cold_starts;
@@ -63,6 +82,21 @@ impl Counters {
         self.evictions += evictions;
         self.migrations_out += migrations_out;
         self.migrations_in += migrations_in;
+        self.layer_hits += layer_hits;
+        self.layer_misses += layer_misses;
+        self.pull_mib += pull_mib;
+        self.cold_cost_us += cold_cost_us;
+        self.cold_charges += cold_charges;
+    }
+
+    /// Mean effective cold-start charge in seconds under the image-cache
+    /// model (0 when the cache never charged anything — i.e. off, or no
+    /// cold starts).
+    pub fn mean_effective_l_cold_s(&self) -> f64 {
+        if self.cold_charges == 0 {
+            return 0.0;
+        }
+        self.cold_cost_us as f64 / self.cold_charges as f64 / 1e6
     }
 }
 
@@ -174,5 +208,31 @@ mod tests {
         let t = Telemetry::new();
         assert_eq!(t.mean_warm(), 0.0);
         assert!(t.samples().is_empty());
+    }
+
+    #[test]
+    fn cache_counters_accumulate_and_average() {
+        let mut a = Counters {
+            layer_hits: 2,
+            layer_misses: 3,
+            pull_mib: 100,
+            cold_cost_us: 4_000_000,
+            cold_charges: 2,
+            ..Default::default()
+        };
+        let b = Counters {
+            layer_hits: 1,
+            pull_mib: 50,
+            cold_cost_us: 2_000_000,
+            cold_charges: 1,
+            ..Default::default()
+        };
+        a.accumulate(&b);
+        assert_eq!(a.layer_hits, 3);
+        assert_eq!(a.layer_misses, 3);
+        assert_eq!(a.pull_mib, 150);
+        // 6 s of charges over 3 cold charges → mean 2 s
+        assert_eq!(a.mean_effective_l_cold_s(), 2.0);
+        assert_eq!(Counters::default().mean_effective_l_cold_s(), 0.0);
     }
 }

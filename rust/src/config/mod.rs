@@ -47,6 +47,11 @@ pub struct PlatformConfig {
     /// the term entirely — the ranking is then bit-identical to the
     /// container-only score.
     pub reclaim_pressure_weight: f64,
+    /// Per-node image/layer cache model (cold-start fidelity). `Off` (the
+    /// default) charges the constant profile `l_cold` — the paper's model,
+    /// bit for bit; `Lru` makes a cold start cost
+    /// `pull(missing layers) + init` against the node's cache state.
+    pub image: ImageCacheConfig,
 }
 
 impl Default for PlatformConfig {
@@ -62,6 +67,7 @@ impl Default for PlatformConfig {
             keep_alive: secs(600.0),
             latency_jitter: 0.05,
             reclaim_pressure_weight: 0.0,
+            image: ImageCacheConfig::default(),
         }
     }
 }
@@ -73,6 +79,91 @@ impl PlatformConfig {
         let by_cpu = self.node_cpu_millis / self.container_cpu_millis.max(1);
         let by_mem = self.node_mem_mib / self.container_mem_mib.max(1);
         by_cpu.min(by_mem).min(self.max_containers)
+    }
+}
+
+/// Image/layer cache mode for the per-node cold-start model (see
+/// `cluster::image`). `Off` (the default) is the paper's constant-`l_cold`
+/// world, bit for bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ImageCacheMode {
+    /// No cache model: every cold start charges the profile `l_cold`.
+    Off,
+    /// Content-addressed per-node layer cache with LRU eviction: a cold
+    /// start charges `pull(missing layers) + init`.
+    Lru,
+}
+
+impl ImageCacheMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ImageCacheMode::Off => "off",
+            ImageCacheMode::Lru => "lru",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ImageCacheMode> {
+        match s {
+            "off" | "none" => Some(ImageCacheMode::Off),
+            "lru" | "on" => Some(ImageCacheMode::Lru),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [ImageCacheMode; 2] = [ImageCacheMode::Off, ImageCacheMode::Lru];
+}
+
+/// Per-node image/layer cache parameters. With the cache enabled, a cold
+/// start of function `f` on node `n` charges
+/// `init_fraction × l_cold(f) + missing_mib(f, n) / bandwidth_mibps`
+/// instead of the constant `l_cold(f)` — the split the cold-start
+/// taxonomy literature measures (image distribution dominates; runtime
+/// init is the remainder). All knobs are inert under `Off`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ImageCacheConfig {
+    pub mode: ImageCacheMode,
+    /// Per-node layer-store capacity in MiB (LRU-evicted beyond this).
+    pub capacity_mib: u32,
+    /// Registry pull bandwidth in MiB/s (shared fleet registry).
+    pub bandwidth_mibps: f64,
+    /// Fraction of the profile `l_cold` attributed to runtime init (the
+    /// part a warm layer cache cannot remove), in `[0, 1]`.
+    pub init_fraction: f64,
+}
+
+impl Default for ImageCacheConfig {
+    fn default() -> Self {
+        ImageCacheConfig {
+            mode: ImageCacheMode::Off,
+            capacity_mib: 2048,
+            bandwidth_mibps: 100.0,
+            init_fraction: 0.25,
+        }
+    }
+}
+
+impl ImageCacheConfig {
+    pub fn enabled(&self) -> bool {
+        self.mode != ImageCacheMode::Off
+    }
+
+    /// The dynamic cold-start cost formula: `init + pull(missing)`. Under
+    /// `Off` this is exactly the profile `l_cold` (the caller never
+    /// consults the cache then, but the identity keeps the coupling sites
+    /// honest). The pull term is deliberately uncapped — a cache-cold node
+    /// behind a slow registry can cost *more* than the paper's constant,
+    /// which is what drives the controller to prewarm it earlier.
+    pub fn effective_l_cold(&self, l_cold: Micros, missing_mib: u64) -> Micros {
+        if !self.enabled() {
+            return l_cold;
+        }
+        let init = (l_cold as f64 * self.init_fraction.clamp(0.0, 1.0)).round() as Micros;
+        let pull = if self.bandwidth_mibps.is_finite() && self.bandwidth_mibps > 0.0 {
+            secs(missing_mib as f64 / self.bandwidth_mibps)
+        } else {
+            0 // degenerate bandwidth: charge init only, never overflow
+        };
+        init.saturating_add(pull)
     }
 }
 
@@ -133,16 +224,32 @@ pub struct NodeFailure {
 pub struct NodeRestore {
     pub node: u32,
     pub at: Micros,
+    /// Optional replica-cap override for the rejoined node (heterogeneous
+    /// restore: hardware swapped or partially degraded while offline).
+    /// None = the node keeps the capacity it drained with.
+    pub cap: Option<u32>,
 }
 
-/// Parse a CLI restore spec `<node>@<seconds>` (e.g. `1@900`).
+/// Parse a CLI restore spec `<node>@<seconds>[:cap]` (e.g. `1@900`,
+/// `1@900:32` for a rejoin at a different replica cap).
 pub fn parse_restore_spec(s: &str) -> Option<NodeRestore> {
-    let (node, at) = s.split_once('@')?;
+    let (node, rest) = s.split_once('@')?;
     let node: u32 = node.trim().parse().ok()?;
+    let (at, cap) = match rest.split_once(':') {
+        Some((at, cap)) => {
+            let cap: u32 = cap.trim().parse().ok()?;
+            if cap == 0 {
+                return None;
+            }
+            (at, Some(cap))
+        }
+        None => (rest, None),
+    };
     let at_s: f64 = at.trim().parse().ok()?;
     (at_s.is_finite() && at_s >= 0.0).then(|| NodeRestore {
         node,
         at: secs(at_s),
+        cap,
     })
 }
 
@@ -660,20 +767,100 @@ mod tests {
             parse_restore_spec("1@900"),
             Some(NodeRestore {
                 node: 1,
-                at: secs(900.0)
+                at: secs(900.0),
+                cap: None
             })
         );
         assert_eq!(
             parse_restore_spec("0@0.5"),
             Some(NodeRestore {
                 node: 0,
-                at: secs(0.5)
+                at: secs(0.5),
+                cap: None
             })
         );
         assert_eq!(parse_restore_spec("1"), None);
         assert_eq!(parse_restore_spec("x@900"), None);
         assert_eq!(parse_restore_spec("1@-5"), None);
         assert_eq!(parse_restore_spec("1@abc"), None);
+    }
+
+    #[test]
+    fn restore_spec_parses_optional_capacity() {
+        assert_eq!(
+            parse_restore_spec("1@900:32"),
+            Some(NodeRestore {
+                node: 1,
+                at: secs(900.0),
+                cap: Some(32)
+            })
+        );
+        assert_eq!(
+            parse_restore_spec("2@1200.5:1"),
+            Some(NodeRestore {
+                node: 2,
+                at: secs(1200.5),
+                cap: Some(1)
+            })
+        );
+        // a zero cap would be a permanently useless node, not a restore
+        assert_eq!(parse_restore_spec("1@900:0"), None);
+        assert_eq!(parse_restore_spec("1@900:"), None);
+        assert_eq!(parse_restore_spec("1@900:abc"), None);
+        assert_eq!(parse_restore_spec("1@900:-4"), None);
+    }
+
+    #[test]
+    fn image_cache_mode_parse_and_names_roundtrip() {
+        for m in ImageCacheMode::ALL {
+            assert_eq!(ImageCacheMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ImageCacheMode::parse("on"), Some(ImageCacheMode::Lru));
+        assert_eq!(ImageCacheMode::parse("none"), Some(ImageCacheMode::Off));
+        assert_eq!(ImageCacheMode::parse("nope"), None);
+    }
+
+    #[test]
+    fn image_cache_defaults_are_off_and_inert() {
+        let ic = PlatformConfig::default().image;
+        assert_eq!(ic.mode, ImageCacheMode::Off);
+        assert!(!ic.enabled());
+        assert_eq!(ic.capacity_mib, 2048);
+        assert_eq!(ic.bandwidth_mibps, 100.0);
+        assert_eq!(ic.init_fraction, 0.25);
+        // Off charges the constant profile l_cold, whatever the cache state
+        assert_eq!(ic.effective_l_cold(secs(10.5), 0), secs(10.5));
+        assert_eq!(ic.effective_l_cold(secs(10.5), 9999), secs(10.5));
+    }
+
+    #[test]
+    fn effective_l_cold_is_init_plus_pull() {
+        let ic = ImageCacheConfig {
+            mode: ImageCacheMode::Lru,
+            ..Default::default()
+        };
+        // fully cached: init only (0.25 × 10.5 s)
+        assert_eq!(ic.effective_l_cold(secs(10.5), 0), secs(2.625));
+        // 512 MiB missing at 100 MiB/s: +5.12 s of pull
+        assert_eq!(ic.effective_l_cold(secs(10.5), 512), secs(2.625) + secs(5.12));
+        // cache-cold behind a slow registry exceeds the paper constant
+        let slow = ImageCacheConfig {
+            bandwidth_mibps: 10.0,
+            ..ic
+        };
+        assert!(slow.effective_l_cold(secs(10.5), 2048) > secs(10.5));
+        // degenerate knobs never panic or overflow
+        let weird = ImageCacheConfig {
+            bandwidth_mibps: 0.0,
+            init_fraction: 7.0,
+            ..ic
+        };
+        assert_eq!(weird.effective_l_cold(secs(10.5), u64::MAX), secs(10.5));
+        let nan = ImageCacheConfig {
+            bandwidth_mibps: f64::NAN,
+            ..ic
+        };
+        assert_eq!(nan.effective_l_cold(secs(10.5), 100), secs(2.625));
     }
 
     #[test]

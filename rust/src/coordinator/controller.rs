@@ -49,6 +49,24 @@ use crate::mpc::{repair, MpcInput, MpcSolver, Plan};
 use crate::util::timeseries::RingBuffer;
 use crate::workload::tenant::{split_budget, FunctionId};
 
+/// Prewarm lead window in control steps: how far ahead of predicted
+/// demand a prewarm must launch so the container is warm when the
+/// demand lands. The constant-cost path uses the configured
+/// `cold_steps` plus two slack steps (the legacy margin). Under the
+/// image-cache model (`dynamic`) the effective cold start of a
+/// cache-cold node can exceed the paper constant — registry pull on top
+/// of init — so the window stretches to cover `l_cold_eff`; it never
+/// shrinks below the configured `cold_steps`, and with `dynamic` false
+/// it is exactly the legacy expression, keeping `--image-cache off`
+/// byte-identical.
+pub fn lead_steps(cold_steps: usize, dt: Micros, l_cold_eff: Micros, dynamic: bool) -> usize {
+    if !dynamic || dt == 0 {
+        return cold_steps + 2;
+    }
+    let eff_steps = (l_cold_eff / dt + (l_cold_eff % dt != 0) as u64) as usize;
+    cold_steps.max(eff_steps) + 2
+}
+
 /// Per-function demand tracker driving the multi-tenant prewarm split.
 struct TenantDemand {
     history: RingBuffer,
@@ -337,18 +355,21 @@ impl MpcScheduler {
                 ka_horizons = Some(hz);
                 sh
             } else {
-                self.tenant_shares()
+                self.tenant_shares(ctx)
             })
         } else {
             // single-tenant retention planning rides the aggregate
-            // forecast (function 0 *is* the workload)
+            // forecast (function 0 *is* the workload); the break-even
+            // rule charges the fleet's live effective cold cost, which
+            // is exactly the profile constant with the cache off
             if let Some(ka) = self.retention {
-                ka_horizons = Some(vec![keepalive::plan_horizon(
+                ka_horizons = Some(vec![keepalive::plan_horizon_dynamic(
                     &lam,
                     self.cc.dt,
                     ctx.fleet.profile(0),
                     &ka,
                     ctx.fleet.mem_pressure(),
+                    ctx.fleet.effective_l_cold(0),
                 )]);
             }
             None
@@ -362,7 +383,12 @@ impl MpcScheduler {
                 Some(match &shares {
                     Some(sh) => sh.clone(),
                     None => {
-                        let lead = self.cc.cold_steps + 2;
+                        let lead = lead_steps(
+                            self.cc.cold_steps,
+                            self.cc.dt,
+                            ctx.fleet.effective_l_cold(0),
+                            ctx.cfg.platform.image.enabled(),
+                        );
                         vec![lam.iter().take(lead).sum::<f64>().max(0.0)]
                     }
                 })
@@ -450,7 +476,7 @@ impl MpcScheduler {
     /// replan — never two. Only called under the adaptive policy.
     fn tenant_shares_and_horizons(&mut self, ctx: &Ctx) -> (Vec<f64>, Vec<Micros>) {
         let ka = self.retention.expect("called only under the adaptive policy");
-        let lead = self.cc.cold_steps + 2;
+        let dynamic = ctx.cfg.platform.image.enabled();
         let horizon = self.cc.horizon;
         let window = self.cc.window;
         let dt = self.cc.dt;
@@ -458,6 +484,12 @@ impl MpcScheduler {
         let mut shares = Vec::with_capacity(self.tenants.len());
         let mut horizons = Vec::with_capacity(self.tenants.len());
         for (f, t) in self.tenants.iter_mut().enumerate() {
+            // the function's live effective cold cost feeds both control
+            // rules: the lead window stretches so prewarms launched now
+            // land before the demand they cover, and the break-even rule
+            // charges what a cold start would actually cost this step
+            let eff = ctx.fleet.effective_l_cold(f as FunctionId);
+            let lead = lead_steps(self.cc.cold_steps, dt, eff, dynamic);
             let pad = t.history.recent_mean(window);
             let hist = t.history.to_padded_vec(pad);
             let mut lam_f = t.forecaster.forecast(&hist, horizon);
@@ -466,7 +498,9 @@ impl MpcScheduler {
             shares.push(demand.max(0.0));
             lam_f[0] += t.arrivals_this_interval as f64;
             let profile = ctx.fleet.profile(f as FunctionId);
-            horizons.push(keepalive::plan_horizon(&lam_f, dt, profile, &ka, pressure));
+            horizons.push(keepalive::plan_horizon_dynamic(
+                &lam_f, dt, profile, &ka, pressure, eff,
+            ));
         }
         (shares, horizons)
     }
@@ -476,13 +510,22 @@ impl MpcScheduler {
     /// shares the plan's first-step prewarm budget `x_0` is split by,
     /// via the largest-remainder method so the budget is conserved
     /// exactly.
-    fn tenant_shares(&mut self) -> Vec<f64> {
-        let lead = self.cc.cold_steps + 2;
+    fn tenant_shares(&mut self, ctx: &Ctx) -> Vec<f64> {
+        let dynamic = ctx.cfg.platform.image.enabled();
         let horizon = self.cc.horizon;
         let window = self.cc.window;
+        let dt = self.cc.dt;
+        let cold_steps = self.cc.cold_steps;
         self.tenants
             .iter_mut()
-            .map(|t| {
+            .enumerate()
+            .map(|(f, t)| {
+                let lead = lead_steps(
+                    cold_steps,
+                    dt,
+                    ctx.fleet.effective_l_cold(f as FunctionId),
+                    dynamic,
+                );
                 let pad = t.history.recent_mean(window);
                 let hist = t.history.to_padded_vec(pad);
                 let lam = t.forecaster.forecast(&hist, horizon);
@@ -698,7 +741,7 @@ mod tests {
         }
         assert_eq!(sched.cc.weights.w_max, base * 3.0);
         // ...and the rejoin restores it (bit-identical to startup)
-        fleet.restore_node(2, 61_000_000);
+        fleet.restore_node(2, 61_000_000, None);
         {
             let mut ctx = Ctx {
                 now: 90_000_000,
@@ -817,6 +860,76 @@ mod tests {
         let c = ctx.fleet.counters();
         assert!(c.migrations_out >= 1, "no rebalancing happened: {c:?}");
         assert_eq!(c.migrations_out, c.migrations_in);
+    }
+
+    #[test]
+    fn lead_window_stretches_with_the_effective_cold_cost() {
+        use crate::config::secs;
+        let dt = secs(30.0);
+        // cache off: the legacy margin, whatever the probe says
+        assert_eq!(lead_steps(1, dt, secs(10.5), false), 3);
+        assert_eq!(lead_steps(1, dt, secs(1000.0), false), 3);
+        // dynamic: a cache-warm cold start never shrinks the window
+        // below the configured cold_steps...
+        assert_eq!(lead_steps(1, dt, secs(2.625), true), 3);
+        // ...the paper constant rounds up to the same window...
+        assert_eq!(lead_steps(1, dt, secs(10.5), true), 3);
+        // ...and a slow-registry pull (108.2 s effective) stretches it
+        // to cover the pull: ceil(108.2/30) = 4 steps + 2 slack
+        assert_eq!(lead_steps(1, dt, secs(108.225), true), 6);
+        assert_eq!(lead_steps(1, 0, secs(10.5), true), 3, "degenerate dt");
+    }
+
+    #[test]
+    fn retention_charges_the_live_effective_cold_cost() {
+        use crate::config::{to_secs, ImageCacheConfig, ImageCacheMode};
+        // slow registry: a cache-cold node pays 2.625 s init + 528 MiB
+        // at 5 MiB/s = 108.225 s per cold start — an order of magnitude
+        // above the 10.5 s constant
+        let mut cfg = ExperimentConfig::default();
+        cfg.platform.latency_jitter = 0.0;
+        cfg.platform.image = ImageCacheConfig {
+            mode: ImageCacheMode::Lru,
+            bandwidth_mibps: 5.0,
+            ..Default::default()
+        };
+        cfg.controller.keepalive.policy = KeepAlivePolicy::Adaptive;
+        let ka = cfg.controller.keepalive;
+        // demand between the two break-even rates: too sparse to retain
+        // against the constant, worth retaining against the slow pull
+        let be_const = ka.idle_cost_per_s / (ka.cold_cost_weight * 10.5);
+        let be_eff = ka.idle_cost_per_s / (ka.cold_cost_weight * 108.225);
+        let per_step = (be_const + be_eff) / 2.0 * to_secs(cfg.controller.dt);
+        let run = |cfg: &ExperimentConfig| {
+            let cc = cfg.controller.clone();
+            let mut sched = MpcScheduler::new(
+                cc.clone(),
+                Box::new(FourierForecaster::default()),
+                Box::new(RustSolver::new(Weights::default(), 60, cc.cold_steps)),
+            )
+            .with_keepalive(cc.keepalive);
+            for _ in 0..10 {
+                sched.history.push(per_step);
+            }
+            let mut fleet = Fleet::new(&cfg.fleet, &cfg.platform, 7);
+            let mut events = EventQueue::new();
+            let mut rec = Recorder::new(4);
+            let mut ctx = Ctx {
+                now: 30_000_000,
+                fleet: &mut fleet,
+                events: &mut events,
+                recorder: &mut rec,
+                cfg,
+            };
+            sched.on_control_tick(&mut ctx);
+            fleet.node(0).platform.effective_keepalive(0)
+        };
+        // cache-cold fleet: the same sparse demand clears the (much
+        // lower) dynamic break-even → retained past the floor
+        assert!(run(&cfg) > ka.min, "dynamic cost must extend retention");
+        // constant-cost control (cache off): below break-even → floor
+        cfg.platform.image = ImageCacheConfig::default();
+        assert_eq!(run(&cfg), ka.min);
     }
 
     #[test]

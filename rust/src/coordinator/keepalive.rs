@@ -114,6 +114,11 @@ pub fn pressure_scaled(horizon: Micros, min: Micros, pressure: f64, weight: f64)
 /// so the controller can call it per function with whatever forecast
 /// vector drives that function (the aggregate λ single-tenant, the
 /// per-function Fourier forecast multi-tenant).
+///
+/// Charges the profile's *constant* `L_cold` — the paper's model. Under
+/// the image-cache cold-start model the controller calls
+/// [`plan_horizon_dynamic`] with the fleet's live effective cost
+/// instead.
 pub fn plan_horizon(
     lam: &[f64],
     dt: Micros,
@@ -121,9 +126,34 @@ pub fn plan_horizon(
     cfg: &KeepAliveConfig,
     pressure: f64,
 ) -> Micros {
+    plan_horizon_dynamic(lam, dt, profile, cfg, pressure, profile.l_cold)
+}
+
+/// [`plan_horizon`] with the cold-start cost supplied by the caller —
+/// the image-cache coupling point. `l_cold_eff` is the fleet's live
+/// effective `L_cold(f)` (init + worst-case pull) this control step, so
+/// a cache-cold fleet (big saving per absorbed cold start) lowers the
+/// break-even rate and retains longer, while a cache-warm fleet (cold
+/// starts are cheap anyway) retains less.
+///
+/// Per-function deployment knobs: a profile may override the global
+/// `idle_cost_per_s` / `cold_cost_weight` economics
+/// ([`FunctionProfile::idle_cost`] / [`FunctionProfile::cold_cost_weight`]);
+/// `None` falls back to the config's globals, so registries that never
+/// set them plan exactly as before.
+pub fn plan_horizon_dynamic(
+    lam: &[f64],
+    dt: Micros,
+    profile: &FunctionProfile,
+    cfg: &KeepAliveConfig,
+    pressure: f64,
+    l_cold_eff: Micros,
+) -> Micros {
     let max = profile.keep_alive;
     let min = cfg.min.min(max);
-    let be = break_even_rate(cfg.idle_cost_per_s, cfg.cold_cost_weight * to_secs(profile.l_cold));
+    let idle_cost = profile.idle_cost.unwrap_or(cfg.idle_cost_per_s);
+    let weight = profile.cold_cost_weight.unwrap_or(cfg.cold_cost_weight);
+    let be = break_even_rate(idle_cost, weight * to_secs(l_cold_eff));
     let h = horizon_from_forecast(lam, dt, be, min, max);
     pressure_scaled(h, min, pressure, cfg.pressure_weight)
 }
@@ -230,6 +260,72 @@ mod tests {
         assert_eq!(pressure_scaled(h, min, 0.5, f64::NAN), h);
         // negative pressure never extends the horizon
         assert_eq!(pressure_scaled(h, min, -3.0, 1.0), h);
+    }
+
+    #[test]
+    fn dynamic_cold_cost_moves_the_retention_horizon() {
+        let p = profile();
+        let ka = cfg();
+        let dt = secs(30.0);
+        // an arrival rate that beats break-even at the paper constant
+        // (10.5 s) but not when the fleet is cache-warm and a cold start
+        // costs only the init slice (2.625 s)
+        let be_const = break_even_rate(ka.idle_cost_per_s, ka.cold_cost_weight * 10.5);
+        let be_warm = break_even_rate(ka.idle_cost_per_s, ka.cold_cost_weight * 2.625);
+        let rate = (be_const + be_warm) / 2.0;
+        let lam = vec![rate * 30.0; 4];
+        assert_eq!(
+            plan_horizon_dynamic(&lam, dt, &p, &ka, 0.0, secs(10.5)),
+            secs(120.0),
+            "cache-cold cost retains through the whole forecast"
+        );
+        assert_eq!(
+            plan_horizon_dynamic(&lam, dt, &p, &ka, 0.0, secs(2.625)),
+            ka.min,
+            "cache-warm cost drops the same demand to the floor"
+        );
+        // the static entry point is the dynamic one at the constant
+        assert_eq!(
+            plan_horizon(&lam, dt, &p, &ka, 0.0),
+            plan_horizon_dynamic(&lam, dt, &p, &ka, 0.0, p.l_cold)
+        );
+        // monotone: a costlier cold start never shortens retention
+        let mut prev = 0;
+        for eff in [1.0, 2.625, 5.0, 7.905, 10.5, 20.0] {
+            let h = plan_horizon_dynamic(&lam, dt, &p, &ka, 0.0, secs(eff));
+            assert!(h >= prev, "horizon shrank as L_cold grew to {eff}s");
+            prev = h;
+        }
+    }
+
+    #[test]
+    fn per_function_knobs_override_the_global_economics() {
+        let ka = cfg();
+        let dt = secs(30.0);
+        let base = profile();
+        assert_eq!(base.idle_cost, None);
+        assert_eq!(base.cold_cost_weight, None);
+        // demand comfortably above the global break-even: full retention
+        let be = break_even_rate(ka.idle_cost_per_s, ka.cold_cost_weight * to_secs(base.l_cold));
+        let lam = vec![be * 30.0 * 1.5; 24];
+        assert_eq!(plan_horizon(&lam, dt, &base, &ka, 0.0), base.keep_alive);
+        // a 10× idle-cost premium pushes the same demand under break-even
+        let pricey = FunctionProfile {
+            idle_cost: Some(ka.idle_cost_per_s * 10.0),
+            ..base.clone()
+        };
+        assert_eq!(plan_horizon(&lam, dt, &pricey, &ka, 0.0), ka.min);
+        // a near-zero cold-cost weight (cold starts barely hurt) too
+        let tolerant = FunctionProfile {
+            cold_cost_weight: Some(ka.cold_cost_weight / 100.0),
+            ..base.clone()
+        };
+        assert_eq!(plan_horizon(&lam, dt, &tolerant, &ka, 0.0), ka.min);
+        // overrides compose with the dynamic cost path unchanged
+        assert_eq!(
+            plan_horizon_dynamic(&lam, dt, &pricey, &ka, 0.0, base.l_cold),
+            ka.min
+        );
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! Image-cache sweep (the `cache-sweep` CLI subcommand and the fig14
+//! bench target): the constant-`L_cold` baseline (`--image-cache off`)
+//! against the LRU layer cache across a capacity ladder, under the MPC
+//! scheduler on a multi-node, multi-function workload.
+//!
+//! The quantity under test is the **cache-size vs P99 frontier**: a
+//! larger per-node layer store absorbs more of each cold start's image
+//! distribution (pulled MiB falls, layer hit-rate rises), so the
+//! effective `L_cold(f, n)` the controller plans against shrinks toward
+//! the irreducible init slice and the tail follows. The sweep reports
+//! the hit/miss and pull-byte telemetry alongside the latency columns
+//! so the trend is auditable, not inferred.
+
+use crate::config::{
+    secs, ExperimentConfig, FleetConfig, ImageCacheConfig, ImageCacheMode, PlacementPolicy,
+    Policy, TenantConfig, TraceKind,
+};
+use crate::experiments::runner::run_tenant;
+use crate::metrics::RunReport;
+use crate::util::bench::Table;
+use crate::workload::TenantWorkload;
+
+/// Shared knobs for every cell of a cache sweep.
+#[derive(Debug, Clone)]
+pub struct CacheParams {
+    pub duration_s: f64,
+    pub seed: u64,
+    pub nodes: u32,
+    pub functions: u32,
+    pub zipf_s: f64,
+    pub trace: TraceKind,
+    /// Registry pull bandwidth (MiB/s) for the enabled cells.
+    pub bandwidth_mibps: f64,
+    /// Fraction of the profile `L_cold` that is runtime init.
+    pub init_fraction: f64,
+    /// The capacity ladder (MiB per node); each entry is one LRU cell.
+    pub capacities_mib: Vec<u32>,
+}
+
+impl Default for CacheParams {
+    fn default() -> Self {
+        let ic = ImageCacheConfig::default();
+        CacheParams {
+            duration_s: 3600.0,
+            seed: 42,
+            nodes: 4,
+            functions: 8,
+            zipf_s: 1.1,
+            trace: TraceKind::SyntheticBursty,
+            bandwidth_mibps: ic.bandwidth_mibps,
+            init_fraction: ic.init_fraction,
+            capacities_mib: vec![256, 512, 1024, 2048, 4096],
+        }
+    }
+}
+
+/// One sweep cell: the off baseline (`capacity_mib == None`) or one LRU
+/// capacity rung.
+#[derive(Debug, Clone)]
+pub struct CacheCell {
+    pub capacity_mib: Option<u32>,
+    pub report: RunReport,
+}
+
+impl CacheCell {
+    /// Layer hit rate in percent (0 when the cache never ran).
+    pub fn hit_pct(&self) -> f64 {
+        let c = &self.report.counters;
+        let total = c.layer_hits + c.layer_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        100.0 * c.layer_hits as f64 / total as f64
+    }
+}
+
+/// Experiment config for one cell. `capacity_mib == None` is the
+/// constant-`L_cold` baseline (cache off — the regression-pinned seed
+/// path); `Some(mib)` enables the LRU store at that per-node capacity.
+pub fn cell_config(p: &CacheParams, capacity_mib: Option<u32>) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        trace: p.trace,
+        fleet: FleetConfig {
+            nodes: p.nodes,
+            placement: PlacementPolicy::WarmFirst,
+            ..Default::default()
+        },
+        tenancy: TenantConfig {
+            functions: p.functions,
+            zipf_s: p.zipf_s,
+        },
+        duration: secs(p.duration_s),
+        seed: p.seed,
+        ..Default::default()
+    };
+    cfg.platform.image = match capacity_mib {
+        None => ImageCacheConfig::default(),
+        Some(mib) => ImageCacheConfig {
+            mode: ImageCacheMode::Lru,
+            capacity_mib: mib,
+            bandwidth_mibps: p.bandwidth_mibps,
+            init_fraction: p.init_fraction,
+        },
+    };
+    cfg
+}
+
+/// Run the sweep under the MPC scheduler: the off baseline first, then
+/// one cell per capacity rung, all against the *same* generated
+/// workload (the image model changes costs, never arrivals).
+pub fn run_sweep(p: &CacheParams) -> Vec<CacheCell> {
+    let base = cell_config(p, None);
+    let workload = TenantWorkload::generate(
+        p.trace,
+        base.duration,
+        p.seed,
+        p.functions,
+        p.zipf_s,
+        &base.platform,
+    );
+    let mut cells = Vec::with_capacity(p.capacities_mib.len() + 1);
+    cells.push(CacheCell {
+        capacity_mib: None,
+        report: run_tenant(&base, Policy::Mpc, &workload),
+    });
+    for &mib in &p.capacities_mib {
+        let cfg = cell_config(p, Some(mib));
+        cells.push(CacheCell {
+            capacity_mib: Some(mib),
+            report: run_tenant(&cfg, Policy::Mpc, &workload),
+        });
+    }
+    cells
+}
+
+/// Print the sweep table plus the capacity-frontier verdict.
+pub fn print_table(cells: &[CacheCell]) {
+    let mut t = Table::new(&[
+        "cache MiB",
+        "p50 ms",
+        "p99 ms",
+        "cold %",
+        "eff L_cold s",
+        "hits",
+        "misses",
+        "hit %",
+        "pulled MiB",
+    ]);
+    for c in cells {
+        let r = &c.report;
+        let cold_pct = if r.completed > 0 {
+            100.0 * r.cold_requests as f64 / r.completed as f64
+        } else {
+            0.0
+        };
+        t.row(&[
+            c.capacity_mib
+                .map_or("off".to_string(), |m| m.to_string()),
+            format!("{:.0}", r.p50_ms),
+            format!("{:.0}", r.p99_ms),
+            format!("{cold_pct:.1}"),
+            format!("{:.2}", r.counters.mean_effective_l_cold_s()),
+            r.counters.layer_hits.to_string(),
+            r.counters.layer_misses.to_string(),
+            format!("{:.1}", c.hit_pct()),
+            r.counters.pull_mib.to_string(),
+        ]);
+    }
+    t.print();
+    // frontier verdict over the LRU rungs: pulled bytes must trend down
+    // as capacity grows (LRU inclusion), and P99 should follow
+    let lru: Vec<&CacheCell> = cells.iter().filter(|c| c.capacity_mib.is_some()).collect();
+    if lru.len() >= 2 {
+        let first = lru.first().unwrap();
+        let last = lru.last().unwrap();
+        let pull_monotone = lru
+            .windows(2)
+            .all(|w| w[1].report.counters.pull_mib <= w[0].report.counters.pull_mib);
+        println!(
+            "capacity {} -> {} MiB: pulled {} -> {} MiB ({}), hit-rate {:.1}% -> {:.1}%, \
+             P99 {:.0} -> {:.0} ms",
+            first.capacity_mib.unwrap(),
+            last.capacity_mib.unwrap(),
+            first.report.counters.pull_mib,
+            last.report.counters.pull_mib,
+            if pull_monotone {
+                "monotone frontier"
+            } else {
+                "non-monotone: inspect the ladder"
+            },
+            first.hit_pct(),
+            last.hit_pct(),
+            first.report.p99_ms,
+            last.report.p99_ms,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> CacheParams {
+        CacheParams {
+            duration_s: 600.0,
+            seed: 5,
+            nodes: 2,
+            functions: 4,
+            capacities_mib: vec![64, 4096],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cell_config_threads_the_knobs() {
+        let p = CacheParams {
+            bandwidth_mibps: 25.0,
+            init_fraction: 0.5,
+            ..quick()
+        };
+        let off = cell_config(&p, None);
+        assert!(!off.platform.image.enabled());
+        assert_eq!(off.platform.image, ImageCacheConfig::default());
+        let on = cell_config(&p, Some(512));
+        assert_eq!(on.platform.image.mode, ImageCacheMode::Lru);
+        assert_eq!(on.platform.image.capacity_mib, 512);
+        assert_eq!(on.platform.image.bandwidth_mibps, 25.0);
+        assert_eq!(on.platform.image.init_fraction, 0.5);
+        assert_eq!(on.fleet.nodes, 2);
+        assert_eq!(on.tenancy.functions, 4);
+    }
+
+    #[test]
+    fn sweep_baseline_is_silent_and_capacity_shrinks_pulls() {
+        let cells = run_sweep(&quick());
+        assert_eq!(cells.len(), 3);
+        // the off baseline never touches the cache counters
+        let off = &cells[0].report.counters;
+        assert_eq!(cells[0].capacity_mib, None);
+        assert_eq!(off.layer_hits, 0);
+        assert_eq!(off.layer_misses, 0);
+        assert_eq!(off.pull_mib, 0);
+        assert_eq!(off.cold_charges, 0);
+        assert_eq!(cells[0].report.counters.mean_effective_l_cold_s(), 0.0);
+        // enabled cells pull real bytes and charge effective costs
+        for c in &cells[1..] {
+            let r = &c.report.counters;
+            assert!(r.pull_mib > 0, "{:?}", c.capacity_mib);
+            assert!(r.layer_misses > 0);
+            assert!(r.cold_charges > 0);
+            assert!(c.report.counters.mean_effective_l_cold_s() > 0.0);
+            assert_eq!(c.report.dropped, 0);
+        }
+        // a thrashing 64 MiB store (smaller than the runtime layer) must
+        // pull far more than a store that holds the whole layer set
+        let tiny = &cells[1].report.counters;
+        let big = &cells[2].report.counters;
+        assert!(
+            big.pull_mib < tiny.pull_mib,
+            "pulls did not shrink: {} -> {}",
+            tiny.pull_mib,
+            big.pull_mib
+        );
+        assert!(cells[2].hit_pct() > cells[1].hit_pct());
+        print_table(&cells); // table rendering must not panic
+    }
+}

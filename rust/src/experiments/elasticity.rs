@@ -78,6 +78,7 @@ pub fn cell_config(p: &ElasticityParams, migration: MigrationPolicy) -> Experime
             restore: Some(NodeRestore {
                 node: p.fail_node,
                 at: secs(p.restore_at_s),
+                cap: None,
             }),
             migration: MigrationConfig {
                 policy: migration,

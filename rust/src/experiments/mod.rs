@@ -3,6 +3,7 @@
 //! targets, the examples, and the CLI.
 
 pub mod ablations;
+pub mod cache;
 pub mod elasticity;
 pub mod fig1;
 pub mod fig4;

@@ -248,8 +248,11 @@ pub fn run_tenant_with_scheduler(
                 // sees it immediately, and the MPC's live-capacity
                 // re-scaling grows the prewarm budget back at its next
                 // control step (which is when the node starts reabsorbing
-                // load through prewarms and spill placement)
-                fleet.restore_node(node, now);
+                // load through prewarms and spill placement). A capacity
+                // suffix on the restore spec rebinds the node's replica
+                // cap (heterogeneous replacement hardware).
+                let cap = cfg.fleet.restore.and_then(|r| r.cap);
+                fleet.restore_node(node, now, cap);
             }
         }
     }

@@ -8,6 +8,7 @@
 //!   tenant-sweep run every policy on one multi-tenant workload, per-function P50/P99
 //!   elasticity-sweep  drain → rejoin scenario swept across migration policies
 //!   keepalive-sweep   fixed vs adaptive retention; resource-time vs P99 frontier
+//!   cache-sweep       image-cache capacity ladder vs the constant-L_cold baseline
 //!   bench-throughput  sweep nodes x functions x load, report simulator events/sec (BENCH JSON)
 //!   forecast     Fig. 4 forecast comparison
 //!   overhead     Fig. 8 control overhead (rust mirror + HLO if available)
@@ -17,10 +18,11 @@
 //! The full flag-by-flag reference lives in README.md ("CLI reference").
 
 use mpc_serverless::config::{
-    parse_restore_spec, secs, ExperimentConfig, FleetConfig, KeepAliveConfig, KeepAlivePolicy,
-    MigrationConfig, MigrationPolicy, NodeFailure, PlacementPolicy, Policy, TenantConfig,
-    TraceKind,
+    parse_restore_spec, secs, ExperimentConfig, FleetConfig, ImageCacheConfig, ImageCacheMode,
+    KeepAliveConfig, KeepAlivePolicy, MigrationConfig, MigrationPolicy, NodeFailure,
+    PlacementPolicy, Policy, TenantConfig, TraceKind,
 };
+use mpc_serverless::experiments::cache::{self, CacheParams};
 use mpc_serverless::experiments::elasticity::{self, ElasticityParams};
 use mpc_serverless::experiments::keepalive::{self, KeepAliveParams};
 use mpc_serverless::experiments::tenant::run_tenant_matrix;
@@ -42,6 +44,7 @@ fn main() {
         "tenant-sweep" => tenant_sweep(&rest),
         "elasticity-sweep" => elasticity_sweep(&rest),
         "keepalive-sweep" => keepalive_sweep(&rest),
+        "cache-sweep" => cache_sweep(&rest),
         "bench-throughput" => bench_throughput(&rest),
         "forecast" => forecast(&rest),
         "overhead" => overhead(),
@@ -53,7 +56,7 @@ fn main() {
         }
         "gen-trace" => gen_trace(&rest),
         _ => {
-            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|elasticity-sweep|keepalive-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
+            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|elasticity-sweep|keepalive-sweep|cache-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
                       mpc_serverless::version());
             if cmd == "help" { 0 } else { 2 }
         }
@@ -107,7 +110,7 @@ fn simulate(rest: &[String]) -> i32 {
         .flag("trace-file", "", "replay an arrival CSV (overrides --trace)")
         .flag("fail-node", "", "node id to take offline mid-run (drain scenario)")
         .flag("fail-at-s", "600", "outage time for --fail-node (seconds)")
-        .flag("restore-node", "", "rejoin a drained node: <id>@<seconds>, e.g. 1@900 (needs --fail-node)")
+        .flag("restore-node", "", "rejoin a drained node: <id>@<seconds>[:cap], e.g. 1@900 or 1@900:8 (needs --fail-node)")
         .flag("migration", "off", "cross-node rebalancing: off | demand-gap | idle-spread")
         .flag("migration-latency-s", "2", "warm-state transfer latency (seconds)")
         .flag("reclaim-pressure", "0", "memory-pressure weight in the fleet reclaim ranking (0 = off)")
@@ -115,7 +118,11 @@ fn simulate(rest: &[String]) -> i32 {
         .flag("keepalive-min-s", "30", "adaptive retention horizon floor (seconds)")
         .flag("keepalive-idle-cost", "1", "idle cost rate in the retention break-even (per container-second)")
         .flag("keepalive-cold-weight", "16", "cold-start cost weight (x L_cold) in the retention break-even")
-        .flag("keepalive-pressure", "0", "memory-pressure shrink weight on adaptive horizons (0 = off)");
+        .flag("keepalive-pressure", "0", "memory-pressure shrink weight on adaptive horizons (0 = off)")
+        .flag("image-cache", "off", "per-node image/layer cache: off | lru (dynamic per-node L_cold)")
+        .flag("image-cache-mib", "2048", "per-node layer store capacity (MiB) for --image-cache lru")
+        .flag("image-bandwidth-mibps", "100", "registry pull bandwidth (MiB/s) for missing layers")
+        .flag("image-init-frac", "0.25", "fraction of L_cold that is runtime init (the rest scales with pulled bytes)");
     let a = parse_or_exit(&cli, rest);
     let policy = match Policy::parse(a.get("policy")) {
         Some(p) => p,
@@ -171,7 +178,7 @@ fn simulate(rest: &[String]) -> i32 {
     if !a.get("restore-node").is_empty() {
         let Some(restore) = parse_restore_spec(a.get("restore-node")) else {
             eprintln!(
-                "bad --restore-node '{}' (expected <id>@<seconds>, e.g. 1@900)",
+                "bad --restore-node '{}' (expected <id>@<seconds>[:cap], e.g. 1@900 or 1@900:8)",
                 a.get("restore-node")
             );
             return 2;
@@ -234,6 +241,13 @@ fn simulate(rest: &[String]) -> i32 {
     };
     let keepalive = match parse_keepalive_flags(&a, policy) {
         Ok(ka) => ka,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let image = match parse_image_flags(&a) {
+        Ok(ic) => ic,
         Err(e) => {
             eprintln!("{e}");
             return 2;
@@ -317,6 +331,7 @@ fn simulate(rest: &[String]) -> i32 {
         ..Default::default()
     };
     cfg.platform.reclaim_pressure_weight = reclaim_pressure;
+    cfg.platform.image = image;
     cfg.controller.keepalive = keepalive;
     // --functions 1 takes the untouched legacy path: bit-identical to the
     // pre-tenancy simulator (regression-tested)
@@ -611,6 +626,44 @@ fn parse_keepalive_knobs(a: &Args) -> Result<(f64, f64, f64, f64), String> {
     Ok((min_s, idle_cost, cold_weight, pressure))
 }
 
+/// Parse the `--image-*` flags into a cache config. The numeric knobs
+/// are validated even with the cache off, so a typo never rides
+/// silently into a later `--image-cache lru` run.
+fn parse_image_flags(a: &Args) -> Result<ImageCacheConfig, String> {
+    let mode = ImageCacheMode::parse(a.get("image-cache")).ok_or_else(|| {
+        format!(
+            "unknown --image-cache '{}' (expected off | lru)",
+            a.get("image-cache")
+        )
+    })?;
+    let capacity_mib = match a.get_u64("image-cache-mib") {
+        Ok(m) if m >= 1 && m <= u32::MAX as u64 => m as u32,
+        _ => return Err("--image-cache-mib must be a positive integer (MiB)".into()),
+    };
+    let (bandwidth_mibps, init_fraction) = parse_image_knobs(a)?;
+    Ok(ImageCacheConfig {
+        mode,
+        capacity_mib,
+        bandwidth_mibps,
+        init_fraction,
+    })
+}
+
+/// Validate the two shared `--image-*` cost knobs (pull bandwidth
+/// strictly positive, init fraction inside [0, 1]). Returns
+/// `(bandwidth_mibps, init_fraction)`.
+fn parse_image_knobs(a: &Args) -> Result<(f64, f64), String> {
+    let bandwidth_mibps = match a.get_f64("image-bandwidth-mibps") {
+        Ok(b) if b > 0.0 && b.is_finite() => b,
+        _ => return Err("--image-bandwidth-mibps must be a positive number".into()),
+    };
+    let init_fraction = match a.get_f64("image-init-frac") {
+        Ok(f) if (0.0..=1.0).contains(&f) => f,
+        _ => return Err("--image-init-frac must be within [0, 1]".into()),
+    };
+    Ok((bandwidth_mibps, init_fraction))
+}
+
 fn keepalive_sweep(rest: &[String]) -> i32 {
     let cli = Cli::new(
         "keepalive-sweep",
@@ -693,6 +746,96 @@ fn keepalive_sweep(rest: &[String]) -> i32 {
         "\nidle/keep-alive s = resource-time the retention policy controls; saved s + early exp = adaptive's"
     );
     println!("earlier-than-profile expiries; the frontier lines above judge each scenario.");
+    0
+}
+
+fn cache_sweep(rest: &[String]) -> i32 {
+    let cli = Cli::new(
+        "cache-sweep",
+        "image-cache capacity ladder vs the constant-L_cold baseline (MPC); pull-byte + hit-rate telemetry",
+    )
+    .flag("trace", "synthetic", "azure | synthetic")
+    .flag("duration-s", "3600", "experiment duration (seconds)")
+    .flag("seed", "42", "rng seed")
+    .flag("nodes", "4", "invoker node count")
+    .flag("functions", "8", "distinct functions sharing the fleet")
+    .flag("skew", "zipf:1.1", "function popularity: zipf:<s> | uniform")
+    .flag("capacities-mib", "256,512,1024,2048,4096", "comma-separated per-node cache capacities (MiB), one LRU cell each")
+    .flag("image-bandwidth-mibps", "100", "registry pull bandwidth (MiB/s) for missing layers")
+    .flag("image-init-frac", "0.25", "fraction of L_cold that is runtime init (the rest scales with pulled bytes)");
+    let a = parse_or_exit(&cli, rest);
+    let trace = match TraceKind::parse(a.get("trace")) {
+        Some(t) => t,
+        None => {
+            eprintln!("unknown trace '{}'", a.get("trace"));
+            return 2;
+        }
+    };
+    let nodes = match a.get_u64("nodes") {
+        Ok(n) if n >= 1 => n as u32,
+        _ => {
+            eprintln!("--nodes must be at least 1");
+            return 2;
+        }
+    };
+    let functions = match a.get_u64("functions") {
+        Ok(n) if n >= 1 => n as u32,
+        _ => {
+            eprintln!("--functions must be a positive integer");
+            return 2;
+        }
+    };
+    let zipf_s = match parse_skew(a.get("skew")) {
+        Some(s) => s,
+        None => {
+            eprintln!("bad --skew '{}' (expected zipf:<s> or uniform)", a.get("skew"));
+            return 2;
+        }
+    };
+    let capacities_mib: Vec<u32> = {
+        let mut v = Vec::new();
+        for tok in a.get("capacities-mib").split(',') {
+            match tok.trim().parse::<u32>() {
+                Ok(m) if m >= 1 => v.push(m),
+                _ => {
+                    eprintln!("bad entry '{tok}' in --capacities-mib (positive integers, MiB)");
+                    return 2;
+                }
+            }
+        }
+        v
+    };
+    let (bandwidth_mibps, init_fraction) = match parse_image_knobs(&a) {
+        Ok(knobs) => knobs,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let params = CacheParams {
+        duration_s: a.get_f64("duration-s").unwrap_or(3600.0),
+        seed: a.get_u64("seed").unwrap_or(42),
+        nodes,
+        functions,
+        zipf_s,
+        trace,
+        bandwidth_mibps,
+        init_fraction,
+        capacities_mib,
+    };
+    println!(
+        "cache-sweep: policy=mpc trace={} nodes={} functions={} skew={} bandwidth={bandwidth_mibps} MiB/s init-frac={init_fraction}",
+        trace.name(),
+        nodes,
+        functions,
+        a.get("skew"),
+    );
+    let cells = cache::run_sweep(&params);
+    cache::print_table(&cells);
+    println!(
+        "\noff = the constant-L_cold baseline (regression-pinned); each LRU rung replans against the"
+    );
+    println!("dynamic per-node L_cold(f, n) the cache induces — the frontier line above judges the ladder.");
     0
 }
 

@@ -355,6 +355,15 @@ impl RunReport {
             ("events_per_sec", Json::Num(self.events_per_sec)),
             ("evictions", Json::Num(self.counters.evictions as f64)),
             ("migrations", Json::Num(self.counters.migrations_in as f64)),
+            // image-cache telemetry (all structurally 0 with the cache
+            // off, so the off path stays byte-identical to the seed)
+            ("layer_hits", Json::Num(self.counters.layer_hits as f64)),
+            ("layer_misses", Json::Num(self.counters.layer_misses as f64)),
+            ("pull_mib", Json::Num(self.counters.pull_mib as f64)),
+            (
+                "mean_effective_l_cold_s",
+                Json::Num(self.counters.mean_effective_l_cold_s()),
+            ),
             ("functions", Json::Num(self.per_function.len() as f64)),
             (
                 "per_function",
@@ -402,6 +411,14 @@ impl RunReport {
                                     "migrations_out",
                                     Json::Num(n.counters.migrations_out as f64),
                                 ),
+                                // per-node cache affinity evidence: which
+                                // invoker's layer store absorbed the pulls
+                                ("layer_hits", Json::Num(n.counters.layer_hits as f64)),
+                                (
+                                    "layer_misses",
+                                    Json::Num(n.counters.layer_misses as f64),
+                                ),
+                                ("pull_mib", Json::Num(n.counters.pull_mib as f64)),
                             ];
                             if let Some(pr) = n.post_restore() {
                                 // the rejoin evidence: work done after the
@@ -620,6 +637,67 @@ mod tests {
         assert_eq!(
             arr[0].path("post_restore_prewarms").unwrap().as_f64(),
             Some(3.0)
+        );
+    }
+
+    #[test]
+    fn cache_telemetry_lands_in_the_json_surface() {
+        let rec = Recorder::new(0);
+        let mut report = RunReport::from_recorder(
+            "mpc",
+            "azure",
+            secs(1.0),
+            &rec,
+            Counters {
+                layer_hits: 6,
+                layer_misses: 4,
+                pull_mib: 528,
+                cold_cost_us: 15_810_000,
+                cold_charges: 2,
+                ..Default::default()
+            },
+            &[],
+            &[],
+        );
+        report.per_node = vec![NodeReport {
+            node: 0,
+            online: true,
+            capacity: 32,
+            containers: 0,
+            counters: Counters {
+                pull_mib: 528,
+                layer_misses: 4,
+                ..Default::default()
+            },
+            counters_at_drain: None,
+        }];
+        let j = report.to_json();
+        assert_eq!(j.path("layer_hits").unwrap().as_f64(), Some(6.0));
+        assert_eq!(j.path("layer_misses").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.path("pull_mib").unwrap().as_f64(), Some(528.0));
+        assert_eq!(
+            j.path("mean_effective_l_cold_s").unwrap().as_f64(),
+            Some(7.905)
+        );
+        let arr = j.path("per_node").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].path("pull_mib").unwrap().as_f64(), Some(528.0));
+        assert_eq!(arr[0].path("layer_misses").unwrap().as_f64(), Some(4.0));
+        // the fields exist (as zeros) even when the cache never ran, so
+        // off-mode reports keep a stable schema
+        let off = RunReport::from_recorder(
+            "mpc",
+            "azure",
+            secs(1.0),
+            &Recorder::new(0),
+            Counters::default(),
+            &[],
+            &[],
+        )
+        .to_json();
+        assert_eq!(off.path("pull_mib").unwrap().as_f64(), Some(0.0));
+        assert_eq!(
+            off.path("mean_effective_l_cold_s").unwrap().as_f64(),
+            Some(0.0)
         );
     }
 

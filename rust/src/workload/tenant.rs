@@ -23,6 +23,7 @@
 //! legacy single-tenant trace (same generator, same seed, every request
 //! tagged function 0), which is what keeps all published figures valid.
 
+use crate::cluster::image::{ImageManifest, Layer, LayerId};
 use crate::config::{secs, Micros, PlatformConfig, TraceKind};
 use crate::util::rng::Rng;
 use crate::workload::{azure, synthetic, Trace};
@@ -47,6 +48,49 @@ pub struct FunctionProfile {
     pub mem_mib: u32,
     /// Popularity share in (0, 1]; shares sum to 1 across the registry.
     pub share: f64,
+    /// Per-function override of the retention planner's idle-cost rate
+    /// (None = the global `KeepAliveConfig::idle_cost_per_s`). Lets a
+    /// tenant declare its containers cheap/expensive to keep warm
+    /// independently of the fleet-wide CLI knob.
+    pub idle_cost: Option<f64>,
+    /// Per-function override of the retention planner's cold-start cost
+    /// weight (None = the global `KeepAliveConfig::cold_cost_weight`).
+    pub cold_cost_weight: Option<f64>,
+}
+
+/// First app-layer id: ids below are reserved for base runtime layers
+/// shared across every function's image.
+const APP_LAYER_BASE: LayerId = 0x1000;
+/// Base runtime layers every image shares (OS + language runtime): the
+/// content-addressed overlap that makes one function's pull warm the
+/// next function's cold start on the same node.
+const BASE_LAYERS: [Layer; 2] = [
+    Layer { id: 1, size_mib: 64 },   // OS base
+    Layer { id: 2, size_mib: 192 },  // language runtime
+];
+/// Per-function code layer size (the top writable-ish layer).
+const CODE_LAYER_MIB: u32 = 16;
+
+impl FunctionProfile {
+    /// The function's image manifest: the shared base runtime layers
+    /// plus two function-private app layers (dependencies sized by the
+    /// function's memory footprint — heavier functions ship heavier
+    /// images — and a small code layer). Purely derived from the
+    /// profile: no RNG, so adding the image model moves no seed stream.
+    pub fn image(&self) -> ImageManifest {
+        let deps = Layer {
+            id: APP_LAYER_BASE + 2 * self.id as LayerId,
+            size_mib: self.mem_mib,
+        };
+        let code = Layer {
+            id: APP_LAYER_BASE + 2 * self.id as LayerId + 1,
+            size_mib: CODE_LAYER_MIB,
+        };
+        let mut layers = BASE_LAYERS.to_vec();
+        layers.push(deps);
+        layers.push(code);
+        ImageManifest::new(layers)
+    }
 }
 
 /// The deployed function set. Cloned into every invoker node's platform
@@ -80,6 +124,8 @@ impl FunctionRegistry {
                 keep_alive: pc.keep_alive,
                 mem_mib: pc.container_mem_mib,
                 share: 1.0,
+                idle_cost: None,
+                cold_cost_weight: None,
             }],
         }
     }
@@ -110,6 +156,11 @@ impl FunctionRegistry {
                     keep_alive: pc.keep_alive,
                     mem_mib: *rng_pick(&mut rng, &[128, 256, 384]),
                     share: shares[id as usize],
+                    // per-function break-even overrides are deployment
+                    // metadata, not synthesized: None keeps the global
+                    // knobs (and the profile RNG stream untouched)
+                    idle_cost: None,
+                    cold_cost_weight: None,
                 }
             })
             .collect();
@@ -372,6 +423,51 @@ mod tests {
         assert_eq!(p.keep_alive, pc().keep_alive);
         assert_eq!(p.mem_mib, pc().container_mem_mib);
         assert_eq!(p.share, 1.0);
+        // per-function break-even overrides default to the global knobs
+        assert_eq!(p.idle_cost, None);
+        assert_eq!(p.cold_cost_weight, None);
+    }
+
+    #[test]
+    fn image_manifests_share_base_layers_and_scale_with_memory() {
+        let r = FunctionRegistry::synthesize(4, 1.1, &pc(), 42);
+        let imgs: Vec<ImageManifest> = r.profiles().iter().map(|p| p.image()).collect();
+        for (p, img) in r.profiles().iter().zip(&imgs) {
+            // base + deps + code, sized 64 + 192 + mem + 16
+            assert_eq!(img.layers.len(), 4);
+            assert_eq!(img.total_mib(), 64 + 192 + p.mem_mib as u64 + 16);
+            assert_eq!(img.layers[0].id, 1);
+            assert_eq!(img.layers[1].id, 2);
+        }
+        // base layers are content-identical across functions; app layers
+        // are function-private
+        for a in 0..imgs.len() {
+            for b in (a + 1)..imgs.len() {
+                assert_eq!(imgs[a].layers[0], imgs[b].layers[0]);
+                assert_eq!(imgs[a].layers[1], imgs[b].layers[1]);
+                assert_ne!(imgs[a].layers[2].id, imgs[b].layers[2].id);
+                assert_ne!(imgs[a].layers[3].id, imgs[b].layers[3].id);
+            }
+        }
+        // purely profile-derived: same registry, same manifests
+        let again: Vec<ImageManifest> = r.profiles().iter().map(|p| p.image()).collect();
+        assert_eq!(imgs, again);
+    }
+
+    #[test]
+    fn synthesized_profiles_are_identical_with_and_without_image_model() {
+        // deriving manifests consumes no RNG: the co-tenant profile
+        // stream is exactly the pre-image-model stream
+        let r = FunctionRegistry::synthesize(6, 1.1, &pc(), 42);
+        for p in r.profiles() {
+            let _ = p.image();
+        }
+        let again = FunctionRegistry::synthesize(6, 1.1, &pc(), 42);
+        for (x, y) in r.profiles().iter().zip(again.profiles()) {
+            assert_eq!(x.l_warm, y.l_warm);
+            assert_eq!(x.l_cold, y.l_cold);
+            assert_eq!(x.mem_mib, y.mem_mib);
+        }
     }
 
     #[test]

@@ -258,6 +258,140 @@ fn keepalive_sweep_runs_end_to_end() {
 }
 
 #[test]
+fn simulate_accepts_image_cache_flags() {
+    let out = bin()
+        .args([
+            "simulate",
+            "--policy",
+            "mpc",
+            "--trace",
+            "synthetic",
+            "--duration-s",
+            "300",
+            "--seed",
+            "9",
+            "--functions",
+            "2",
+            "--nodes",
+            "2",
+            "--image-cache",
+            "lru",
+            "--image-cache-mib",
+            "1024",
+            "--image-bandwidth-mibps",
+            "50",
+            "--image-init-frac",
+            "0.3",
+        ])
+        .output()
+        .expect("spawn simulate");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let report = Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap();
+    assert_eq!(report.path("dropped").and_then(Json::as_f64), Some(0.0));
+    // the cache telemetry is on the JSON surface and live: something
+    // cold-started, so layers were pulled and dynamic costs were billed
+    assert!(report.path("pull_mib").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(report.path("layer_misses").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(
+        report
+            .path("mean_effective_l_cold_s")
+            .and_then(Json::as_f64)
+            .unwrap()
+            > 0.0
+    );
+}
+
+#[test]
+fn simulate_rejects_bad_image_cache_flags() {
+    for args in [
+        vec!["simulate", "--image-cache", "nope"],
+        vec!["simulate", "--image-cache", "lru", "--image-cache-mib", "0"],
+        vec!["simulate", "--image-bandwidth-mibps", "0"],
+        vec!["simulate", "--image-init-frac", "1.5"],
+    ] {
+        let out = bin().args(&args).output().expect("spawn simulate");
+        assert!(!out.status.success(), "{args:?} should be rejected");
+    }
+}
+
+#[test]
+fn simulate_restore_with_capacity_override_roundtrips() {
+    let out = bin()
+        .args([
+            "simulate",
+            "--policy",
+            "mpc",
+            "--trace",
+            "synthetic",
+            "--duration-s",
+            "300",
+            "--seed",
+            "9",
+            "--nodes",
+            "4",
+            "--fail-node",
+            "1",
+            "--fail-at-s",
+            "60",
+            "--restore-node",
+            "1@120:8",
+        ])
+        .output()
+        .expect("spawn simulate");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let report = Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap();
+    assert_eq!(report.path("dropped").and_then(Json::as_f64), Some(0.0));
+    let per_node = report.path("per_node").unwrap().as_arr().unwrap();
+    let caps: Vec<f64> = per_node
+        .iter()
+        .map(|n| n.path("capacity").and_then(Json::as_f64).unwrap())
+        .collect();
+    assert_eq!(caps[1], 8.0, "the restore cap must bind: {caps:?}");
+    assert!(caps[0] > 8.0, "untouched nodes keep the default cap: {caps:?}");
+    // a zero cap is a parse error
+    let out = bin()
+        .args([
+            "simulate", "--nodes", "4", "--fail-node", "1", "--restore-node", "1@120:0",
+        ])
+        .output()
+        .expect("spawn simulate");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn cache_sweep_runs_end_to_end() {
+    let out = bin()
+        .args([
+            "cache-sweep",
+            "--duration-s",
+            "180",
+            "--seed",
+            "9",
+            "--nodes",
+            "2",
+            "--functions",
+            "2",
+            "--capacities-mib",
+            "64,1024",
+        ])
+        .output()
+        .expect("spawn cache-sweep");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8(out.stdout).unwrap();
+    assert!(text.contains("cache-sweep:"), "{text}");
+    // the off baseline row, both capacity rungs, and the frontier verdict
+    for needle in ["off", "pulled MiB", "capacity 64 -> 1024 MiB"] {
+        assert!(text.contains(needle), "missing {needle}: {text}");
+    }
+    // an invalid capacity ladder is rejected
+    let out = bin()
+        .args(["cache-sweep", "--capacities-mib", "256,0"])
+        .output()
+        .expect("spawn cache-sweep");
+    assert!(!out.status.success());
+}
+
+#[test]
 fn tenant_sweep_runs_end_to_end() {
     let out = bin()
         .args([

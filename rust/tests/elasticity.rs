@@ -60,6 +60,7 @@ fn restored_node_reabsorbs_load() {
     with_restore.fleet.restore = Some(NodeRestore {
         node,
         at: secs(800.0),
+        cap: None,
     });
     let trace = trace_for(&with_restore);
     let restored = run_experiment(&with_restore, Policy::Mpc, &trace);
@@ -96,6 +97,53 @@ fn restored_node_reabsorbs_load() {
     assert!(nr.online);
 }
 
+/// Heterogeneous restore (`--restore-node <id>@<t>:cap`): the node
+/// rejoins after a hardware swap with a *different* replica cap. The
+/// per-node report must show the overridden capacity binding on the
+/// rejoined node (every other node keeps the default), and the node
+/// must still reabsorb load end to end under the shrunk cap.
+#[test]
+fn restore_with_capacity_override_rebinds_the_reported_cap() {
+    let node = 1u32;
+    let mut c = cfg(4, 1800.0, 7);
+    c.fleet.failure = Some(NodeFailure {
+        node,
+        at: secs(400.0),
+    });
+    c.fleet.restore = Some(NodeRestore {
+        node,
+        at: secs(800.0),
+        cap: Some(8),
+    });
+    let trace = trace_for(&c);
+    let r = run_experiment(&c, Policy::Mpc, &trace);
+    assert_eq!(r.dropped, 0, "{r:?}");
+    assert_eq!(r.completed, trace.len());
+    for n in &r.per_node {
+        if n.node == node {
+            assert!(n.online);
+            assert_eq!(n.capacity, 8, "the restore cap must bind: {n:?}");
+        } else {
+            assert_eq!(n.capacity, 64, "untouched nodes keep the default cap");
+        }
+    }
+    let rejoined = r
+        .per_node
+        .iter()
+        .find(|n| n.node == node)
+        .unwrap()
+        .post_restore()
+        .expect("the node drained, so the snapshot exists");
+    assert!(
+        rejoined.invocations > 0,
+        "capped rejoiner got no dispatches: {rejoined:?}"
+    );
+    // the cap is real: the node can never hold more than 8 containers,
+    // so its post-restore container count in the final snapshot obeys it
+    let nr = r.per_node.iter().find(|n| n.node == node).unwrap();
+    assert!(nr.containers <= 8, "{nr:?}");
+}
+
 /// A rejoin shortly after the drain: Ready events for containers lost in
 /// the drain arrive while the node is online again and must be dropped,
 /// not panic — and every request still completes.
@@ -111,6 +159,7 @@ fn stale_inflight_events_survive_an_early_rejoin() {
     c.fleet.restore = Some(NodeRestore {
         node: 2,
         at: secs(305.0),
+        cap: None,
     });
     let trace = trace_for(&c);
     for policy in [Policy::OpenWhisk, Policy::Mpc] {
@@ -136,6 +185,7 @@ fn migration_moves_warm_capacity_in_the_drain_scenario() {
     c.fleet.restore = Some(NodeRestore {
         node: 1,
         at: secs(800.0),
+        cap: None,
     });
     c.fleet.migration = MigrationConfig {
         policy: MigrationPolicy::IdleSpread,

@@ -1,0 +1,164 @@
+//! Image-cache integration tests: the `--image-cache off` bit-identical
+//! regression that keeps every published figure valid (mirroring the
+//! tenant/elasticity/keep-alive inertness suites), the off path's
+//! structural telemetry silence, and the enabled path's end-to-end
+//! sanity — real pulls, real dynamic cold costs, same determinism
+//! guarantees as the rest of the simulator.
+
+use mpc_serverless::config::{
+    secs, ExperimentConfig, ImageCacheConfig, ImageCacheMode, Policy, TenantConfig, TraceKind,
+};
+use mpc_serverless::experiments::{run_experiment, run_tenant};
+use mpc_serverless::metrics::RunReport;
+use mpc_serverless::workload::TenantWorkload;
+
+fn cfg(kind: TraceKind, duration_s: f64, seed: u64, functions: u32) -> ExperimentConfig {
+    ExperimentConfig {
+        trace: kind,
+        duration: secs(duration_s),
+        seed,
+        tenancy: TenantConfig {
+            functions,
+            zipf_s: 1.1,
+        },
+        ..Default::default()
+    }
+}
+
+/// The full JSON surface with the only nondeterministic fields zeroed —
+/// the simulator's own wall clock and the measured control-loop
+/// overheads are host-timing artifacts; every simulated quantity must
+/// reproduce byte for byte.
+fn canonical_json(mut r: RunReport) -> String {
+    r.wall_clock_ms = 0.0;
+    r.events_per_sec = 0.0;
+    r.forecast_overhead_ms = 0.0;
+    r.solve_overhead_ms = 0.0;
+    r.to_json().to_string()
+}
+
+/// The headline regression: `--image-cache off` reproduces the
+/// seed-path `RunReport` JSON byte-for-byte even with every cache knob
+/// set to aggressive values — with the mode off, capacity, bandwidth,
+/// and init fraction must be completely inert. Pinned at `--nodes 1`
+/// (the legacy shape) and `--nodes 4 --functions 8` (the contended
+/// fleet), per the pattern of the inertness suites.
+#[test]
+fn image_cache_off_is_bit_identical() {
+    // a 1 MiB store, a 0.001 MiB/s registry link, and a 0.9 init slice
+    // would wreck every latency figure if anything read them
+    let weird = ImageCacheConfig {
+        mode: ImageCacheMode::Off,
+        capacity_mib: 1,
+        bandwidth_mibps: 0.001,
+        init_fraction: 0.9,
+    };
+    // --nodes 1, single-tenant
+    {
+        let base = cfg(TraceKind::SyntheticBursty, 1200.0, 23, 1);
+        let trace =
+            mpc_serverless::experiments::fig4::trace_for(base.trace, base.duration, base.seed);
+        let mut knobs = base.clone();
+        knobs.platform.image = weird;
+        let a = run_experiment(&base, Policy::Mpc, &trace);
+        let b = run_experiment(&knobs, Policy::Mpc, &trace);
+        assert_eq!(
+            canonical_json(a),
+            canonical_json(b),
+            "off mode must ignore the cache knobs (--nodes 1)"
+        );
+    }
+    // --nodes 4 --functions 8
+    {
+        let mut base = cfg(TraceKind::SyntheticBursty, 1200.0, 23, 8);
+        base.fleet.nodes = 4;
+        let w = TenantWorkload::generate(
+            base.trace,
+            base.duration,
+            base.seed,
+            8,
+            base.tenancy.zipf_s,
+            &base.platform,
+        );
+        let mut knobs = base.clone();
+        knobs.platform.image = weird;
+        let a = run_tenant(&base, Policy::Mpc, &w);
+        let b = run_tenant(&knobs, Policy::Mpc, &w);
+        assert_eq!(
+            canonical_json(a),
+            canonical_json(b),
+            "off mode must ignore the cache knobs (--nodes 4 --functions 8)"
+        );
+    }
+}
+
+/// With the cache off, the new telemetry surface is structurally silent:
+/// every layer/pull/cost counter stays zero (aggregate and per node) and
+/// the mean effective cold cost reports 0 — nothing on the seed path
+/// ever touches the cache.
+#[test]
+fn off_mode_report_is_silent_on_cache_telemetry() {
+    let mut c = cfg(TraceKind::SyntheticBursty, 900.0, 7, 4);
+    c.fleet.nodes = 2;
+    let w = TenantWorkload::generate(c.trace, c.duration, c.seed, 4, 1.1, &c.platform);
+    let r = run_tenant(&c, Policy::Mpc, &w);
+    assert!(r.counters.cold_starts > 0, "scenario must exercise cold starts");
+    assert_eq!(r.counters.layer_hits, 0);
+    assert_eq!(r.counters.layer_misses, 0);
+    assert_eq!(r.counters.pull_mib, 0);
+    assert_eq!(r.counters.cold_cost_us, 0);
+    assert_eq!(r.counters.cold_charges, 0);
+    assert_eq!(r.counters.mean_effective_l_cold_s(), 0.0);
+    for n in &r.per_node {
+        assert_eq!(n.counters.layer_hits, 0, "node {}", n.node);
+        assert_eq!(n.counters.layer_misses, 0, "node {}", n.node);
+        assert_eq!(n.counters.pull_mib, 0, "node {}", n.node);
+    }
+}
+
+fn with_cache(c: &ExperimentConfig, capacity_mib: u32) -> ExperimentConfig {
+    let mut e = c.clone();
+    e.platform.image = ImageCacheConfig {
+        mode: ImageCacheMode::Lru,
+        capacity_mib,
+        ..ImageCacheConfig::default()
+    };
+    e
+}
+
+/// The enabled path end to end: cold starts bill dynamic per-node costs
+/// (charges and pulled bytes are real), every cost the charging sites
+/// billed sits inside the model's bounds — at least the init slice,
+/// at most init + the full single-function image over the configured
+/// link — and the run is as deterministic as the rest of the simulator.
+#[test]
+fn enabled_cache_bills_bounded_dynamic_costs_deterministically() {
+    let mut c = cfg(TraceKind::SyntheticBursty, 1200.0, 23, 8);
+    c.fleet.nodes = 4;
+    let e = with_cache(&c, 2048);
+    let w = TenantWorkload::generate(c.trace, c.duration, c.seed, 8, 1.1, &c.platform);
+    let r = run_tenant(&e, Policy::Mpc, &w);
+    assert_eq!(r.dropped, 0, "{r:?}");
+    let ct = &r.counters;
+    assert!(ct.cold_charges > 0, "{ct:?}");
+    assert!(ct.pull_mib > 0, "cold images were never pulled: {ct:?}");
+    assert!(ct.layer_misses > 0);
+    // bounds of the cost model over the synthesized registry: the
+    // smallest init-only slice (cache fully warm) up to the largest
+    // init + whole-image pull over the configured link
+    let ic = e.platform.image;
+    let (mut floor_s, mut worst_s) = (f64::INFINITY, 0.0f64);
+    for p in w.registry.profiles() {
+        let init_s = ic.init_fraction * p.l_cold as f64 / 1e6;
+        floor_s = floor_s.min(init_s);
+        worst_s = worst_s.max(init_s + p.image().total_mib() as f64 / ic.bandwidth_mibps);
+    }
+    let mean_s = ct.mean_effective_l_cold_s();
+    assert!(
+        mean_s >= floor_s && mean_s <= worst_s,
+        "mean effective L_cold {mean_s} outside [{floor_s}, {worst_s}]"
+    );
+    // determinism: same config + workload, byte-identical report
+    let r2 = run_tenant(&e, Policy::Mpc, &w);
+    assert_eq!(canonical_json(r), canonical_json(r2));
+}
