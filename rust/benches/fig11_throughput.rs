@@ -33,6 +33,7 @@ fn main() {
             duration_s,
             seed,
             &[1, 2, 4, 8],
+            &[1],
             &[1, 8, 32],
             &[1, 4],
             PlacementPolicy::WarmFirst,

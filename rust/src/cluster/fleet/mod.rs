@@ -108,6 +108,46 @@ impl InvokerNode {
         (self.platform.busy_count() + self.platform.cold_starting_count()) as u64
             + self.platform.fcfs_len() as u64
     }
+
+    // Node-scoped event handlers with the fleet's stale-event guards
+    // (see the "node-scoped event handlers" section on [`Fleet`]): the
+    // sequential loop reaches them through the `Fleet` wrappers, the
+    // sharded workers directly through their `&mut InvokerNode` shard —
+    // one implementation, so the two paths cannot drift.
+
+    /// A cold start on this node finished initializing. None = stale
+    /// event (node offline, or the container was lost in a drain).
+    pub fn container_ready(&mut self, cid: ContainerId, now: Micros) -> Option<ReadyOutcome> {
+        if !self.online || (self.epoch > 0 && !self.platform.has_container(cid)) {
+            return None;
+        }
+        Some(self.platform.container_ready(cid, now))
+    }
+
+    /// An execution on this node completed. None = stale event.
+    pub fn exec_complete(&mut self, cid: ContainerId, now: Micros) -> Option<CompleteOutcome> {
+        if !self.online || (self.epoch > 0 && !self.platform.has_container(cid)) {
+            return None;
+        }
+        Some(self.platform.exec_complete(cid, now))
+    }
+
+    /// Keep-alive expiry check for a container on this node.
+    pub fn keepalive_check(&mut self, cid: ContainerId, now: Micros) -> KeepAliveVerdict {
+        if !self.online {
+            return KeepAliveVerdict::NotApplicable;
+        }
+        self.platform.keepalive_check(cid, now)
+    }
+
+    /// Keep-alive window of a live container's function (None for
+    /// unknown containers or an offline node).
+    pub fn keepalive_of(&self, cid: ContainerId) -> Option<Micros> {
+        if !self.online {
+            return None;
+        }
+        self.platform.keepalive_of(cid)
+    }
 }
 
 /// One node's slice of a run report: identity, liveness, live container
@@ -226,6 +266,15 @@ impl Fleet {
         &self.nodes
     }
 
+    /// Mutable access to the node arena — the sharded executor splits
+    /// this into disjoint contiguous shards (`chunks_mut`) so each
+    /// worker thread owns its nodes' platforms for one batch window.
+    /// Fleet-level state (placement cursor) is untouchable through it,
+    /// which is exactly the isolation the deterministic merge relies on.
+    pub fn nodes_mut(&mut self) -> &mut [InvokerNode] {
+        &mut self.nodes
+    }
+
     pub fn node_count(&self) -> usize {
         self.nodes.len()
     }
@@ -339,11 +388,7 @@ impl Fleet {
     /// Keep-alive window of a live container's function (None for
     /// unknown containers or offline nodes).
     pub fn keepalive_of(&self, node: NodeId, cid: ContainerId) -> Option<Micros> {
-        let nd = self.nodes.get(node as usize)?;
-        if !nd.online {
-            return None;
-        }
-        nd.platform.keepalive_of(cid)
+        self.nodes.get(node as usize)?.keepalive_of(cid)
     }
 
     // ---- retention control (adaptive keep-alive) ----------------------------
@@ -646,11 +691,7 @@ impl Fleet {
         cid: ContainerId,
         now: Micros,
     ) -> Option<ReadyOutcome> {
-        let nd = self.nodes.get_mut(node as usize)?;
-        if !nd.online || (nd.epoch > 0 && !nd.platform.has_container(cid)) {
-            return None;
-        }
-        Some(nd.platform.container_ready(cid, now))
+        self.nodes.get_mut(node as usize)?.container_ready(cid, now)
     }
 
     pub fn exec_complete(
@@ -659,17 +700,13 @@ impl Fleet {
         cid: ContainerId,
         now: Micros,
     ) -> Option<CompleteOutcome> {
-        let nd = self.nodes.get_mut(node as usize)?;
-        if !nd.online || (nd.epoch > 0 && !nd.platform.has_container(cid)) {
-            return None;
-        }
-        Some(nd.platform.exec_complete(cid, now))
+        self.nodes.get_mut(node as usize)?.exec_complete(cid, now)
     }
 
     pub fn keepalive_check(&mut self, node: NodeId, cid: ContainerId, now: Micros) -> KeepAliveVerdict {
         match self.nodes.get_mut(node as usize) {
-            Some(nd) if nd.online => nd.platform.keepalive_check(cid, now),
-            _ => KeepAliveVerdict::NotApplicable,
+            Some(nd) => nd.keepalive_check(cid, now),
+            None => KeepAliveVerdict::NotApplicable,
         }
     }
 

@@ -2356,4 +2356,172 @@ mod tests {
             Ok(())
         });
     }
+
+    /// The sharded runner's isolation premise, at the platform layer: a
+    /// random op sequence tagged by node and applied to N platforms gives
+    /// the same result whether the ops are interleaved on one thread (the
+    /// sequential loop) or partitioned per node and run on worker threads
+    /// (the shard workers) — platforms share no hidden state, and each
+    /// node's RNG stream depends only on its own call order. Both copies
+    /// must also still satisfy the index-vs-scan audit.
+    #[test]
+    fn shard_partitioned_ops_match_sequential_interleaving() {
+        use crate::prop_assert;
+
+        #[derive(Clone)]
+        struct ShardOp {
+            node: usize,
+            kind: usize,
+            func: FunctionId,
+            dt: Micros,
+            pick: usize,
+        }
+
+        #[derive(Default)]
+        struct NodeState {
+            now: Micros,
+            req: RequestId,
+            pending_ready: Vec<(ContainerId, Micros)>,
+            pending_done: Vec<(ContainerId, Micros)>,
+        }
+
+        // deterministic given (platform, state, op) — no ambient input,
+        // so sequential and partitioned application can only diverge if
+        // the platforms leak state into each other
+        fn apply(p: &mut Platform, st: &mut NodeState, op: &ShardOp) {
+            st.now += op.dt;
+            match op.kind {
+                0 => {
+                    st.req += 1;
+                    match p.invoke_for(st.req, op.func, st.now) {
+                        InvokeOutcome::ColdStart { cid, ready_at } => {
+                            st.pending_ready.push((cid, ready_at))
+                        }
+                        InvokeOutcome::WarmStart { cid, done_at } => {
+                            st.pending_done.push((cid, done_at))
+                        }
+                        InvokeOutcome::AtCapacity => {}
+                    }
+                }
+                1 => {
+                    if let Some((cid, ready_at)) = p.prewarm_for(op.func, st.now) {
+                        st.pending_ready.push((cid, ready_at));
+                    }
+                }
+                2 => {
+                    if !st.pending_ready.is_empty() {
+                        let i = op.pick % st.pending_ready.len();
+                        let (cid, t) = st.pending_ready.swap_remove(i);
+                        st.now = st.now.max(t);
+                        match p.container_ready(cid, st.now) {
+                            ReadyOutcome::Started { done_at, .. } => {
+                                st.pending_done.push((cid, done_at))
+                            }
+                            ReadyOutcome::Respawned {
+                                cid: ncid, ready_at, ..
+                            } => st.pending_ready.push((ncid, ready_at)),
+                            ReadyOutcome::Idle => {}
+                        }
+                    }
+                }
+                3 => {
+                    if !st.pending_done.is_empty() {
+                        let i = op.pick % st.pending_done.len();
+                        let (cid, t) = st.pending_done.swap_remove(i);
+                        st.now = st.now.max(t);
+                        let out = p.exec_complete(cid, st.now);
+                        if let Some((_, done_at)) = out.next {
+                            st.pending_done.push((cid, done_at));
+                        }
+                        if let Some((_, ncid, ready_at)) = out.respawn {
+                            st.pending_ready.push((ncid, ready_at));
+                        }
+                    }
+                }
+                4 => {
+                    p.try_reclaim((op.pick % 3) as u32, st.now);
+                }
+                _ => {
+                    let cid = (op.pick as u64 % p.spawned.max(1)) + 1;
+                    let _ = p.keepalive_check(cid, st.now);
+                }
+            }
+        }
+
+        prop_check("shard-partitioned == interleaved", 25, |g| {
+            let nodes = g.usize(2, 4);
+            let nf = g.usize(1, 3) as u32;
+            let seed = g.u64(0, 1 << 32);
+            let mk = |i: usize| {
+                // default latency_jitter stays on: identical RNG streams
+                // under per-node call order are part of the contract
+                let cfg = PlatformConfig {
+                    max_containers: 6,
+                    ..Default::default()
+                };
+                let registry = FunctionRegistry::synthesize(nf, 1.1, &cfg, seed);
+                Platform::with_registry(
+                    cfg,
+                    registry,
+                    seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                )
+            };
+            let ops: Vec<ShardOp> = (0..g.usize(30, 120))
+                .map(|_| ShardOp {
+                    node: g.usize(0, nodes - 1),
+                    kind: g.usize(0, 5),
+                    func: g.u64(0, (nf - 1) as u64) as FunctionId,
+                    dt: g.u64(1, 2_000_000),
+                    pick: g.usize(0, 1_000),
+                })
+                .collect();
+
+            // sequential reference: one thread, ops in global order
+            let mut seq_p: Vec<Platform> = (0..nodes).map(mk).collect();
+            let mut seq_st: Vec<NodeState> = (0..nodes).map(|_| NodeState::default()).collect();
+            for op in &ops {
+                apply(&mut seq_p[op.node], &mut seq_st[op.node], op);
+            }
+
+            // sharded: partition by node, one worker thread per node
+            let mut per_node: Vec<Vec<ShardOp>> = (0..nodes).map(|_| Vec::new()).collect();
+            for op in &ops {
+                per_node[op.node].push(op.clone());
+            }
+            let mut par_p: Vec<Platform> = (0..nodes).map(mk).collect();
+            let mut par_st: Vec<NodeState> = (0..nodes).map(|_| NodeState::default()).collect();
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for ((p, st), ops) in par_p.iter_mut().zip(par_st.iter_mut()).zip(&per_node) {
+                    handles.push(s.spawn(move || {
+                        for op in ops {
+                            apply(p, st, op);
+                        }
+                    }));
+                }
+                for h in handles {
+                    h.join().expect("shard worker panicked");
+                }
+            });
+
+            for i in 0..nodes {
+                par_p[i].assert_matches_scan(par_st[i].now)?;
+                prop_assert!(
+                    par_p[i].counters == seq_p[i].counters,
+                    "node {i} counters diverged: {:?} vs {:?}",
+                    par_p[i].counters,
+                    seq_p[i].counters
+                );
+                prop_assert!(par_p[i].idle_count() == seq_p[i].idle_count(), "node {i} idle");
+                prop_assert!(par_p[i].busy_count() == seq_p[i].busy_count(), "node {i} busy");
+                prop_assert!(par_p[i].spawned == seq_p[i].spawned, "node {i} spawn counter");
+                prop_assert!(
+                    par_st[i].pending_ready == seq_st[i].pending_ready
+                        && par_st[i].pending_done == seq_st[i].pending_done,
+                    "node {i} in-flight outcomes diverged"
+                );
+            }
+            Ok(())
+        });
+    }
 }

@@ -9,7 +9,7 @@ use crate::config::Micros;
 use crate::workload::tenant::FunctionId;
 
 /// Monotonic platform counters.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Counters {
     pub invocations: u64,
     pub cold_starts: u64,

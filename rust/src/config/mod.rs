@@ -645,6 +645,12 @@ pub struct ExperimentConfig {
     pub seed: u64,
     /// Sampling interval for container-usage metrics (paper: 1 minute).
     pub sample_interval: Micros,
+    /// Worker threads for the sharded event loop (`--threads`). `1` (the
+    /// default) runs the sequential seed-path loop; `N > 1` shards
+    /// node-local event windows across `N` workers with a deterministic
+    /// `(time, seq)` merge — results are bit-identical either way (see
+    /// `experiments::sharded`). Must be at least 1.
+    pub threads: u32,
 }
 
 impl Default for ExperimentConfig {
@@ -658,6 +664,7 @@ impl Default for ExperimentConfig {
             duration: secs(3600.0), // paper: 60-minute runs
             seed: 42,
             sample_interval: secs(60.0),
+            threads: 1,
         }
     }
 }
@@ -679,6 +686,7 @@ impl ExperimentConfig {
             ("l_cold_s", Json::Num(to_secs(self.platform.l_cold))),
             ("max_containers", Json::Num(self.platform.max_containers as f64)),
             ("keep_alive_s", Json::Num(to_secs(self.platform.keep_alive))),
+            ("threads", Json::Num(self.threads as f64)),
         ])
     }
 }
@@ -697,6 +705,22 @@ mod tests {
         assert_eq!(c.cold_steps, 1); // ceil(10.5 / 30.0)
         assert_eq!(c.dt, secs(30.0));
         assert_eq!(c.horizon, 24);
+    }
+
+    #[test]
+    fn threads_default_is_sequential_and_surfaces_in_json() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(cfg.threads, 1, "default must be the sequential seed path");
+        let j = cfg.to_json();
+        assert_eq!(j.path("threads").unwrap().as_f64(), Some(1.0));
+        let sharded = ExperimentConfig {
+            threads: 8,
+            ..Default::default()
+        };
+        assert_eq!(
+            sharded.to_json().path("threads").unwrap().as_f64(),
+            Some(8.0)
+        );
     }
 
     #[test]

@@ -822,6 +822,34 @@ mod tests {
     }
 
     #[test]
+    fn idle_capacity_callback_is_a_noop_while_the_queue_is_empty() {
+        // the sharded engine's batch precondition (experiments::sharded):
+        // while the shaping queue is empty, skipping on_idle_capacity
+        // must be observationally safe — no event pushed, no container
+        // touched, no metric recorded. An idle warm container makes the
+        // dispatch path *available*, proving the no-op is the empty
+        // queue, not missing capacity.
+        let (mut sched, mut fleet, mut events, mut rec, cfg) = make();
+        let (cid, r) = fleet.node_mut(0).platform.prewarm_one(0).unwrap();
+        fleet.node_mut(0).platform.container_ready(cid, r);
+        let idle_before = fleet.idle_count();
+        let counters_before = fleet.counters();
+        let mut ctx = Ctx {
+            now: r + 1_000_000,
+            fleet: &mut fleet,
+            events: &mut events,
+            recorder: &mut rec,
+            cfg: &cfg,
+        };
+        assert_eq!(sched.queue_len(), 0);
+        sched.on_idle_capacity(&mut ctx);
+        assert_eq!(ctx.events.len(), 0, "no event may be scheduled");
+        assert_eq!(ctx.events.processed(), 0);
+        assert_eq!(ctx.fleet.idle_count(), idle_before);
+        assert_eq!(ctx.fleet.counters(), counters_before);
+    }
+
+    #[test]
     fn migration_pass_rebalances_on_tick_when_enabled() {
         use crate::config::{MigrationConfig, MigrationPolicy};
         let mut cfg = ExperimentConfig::default();

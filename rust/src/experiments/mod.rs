@@ -11,6 +11,7 @@ pub mod fig5_7;
 pub mod fig8;
 pub mod keepalive;
 pub mod runner;
+pub mod sharded;
 pub mod tenant;
 pub mod throughput;
 

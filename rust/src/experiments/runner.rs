@@ -18,8 +18,10 @@ use crate::coordinator::{Ctx, Ev, Scheduler};
 use crate::forecast::FourierForecaster;
 use crate::metrics::{Recorder, RunReport};
 use crate::mpc::RustSolver;
-use crate::simulator::EventQueue;
+use crate::simulator::{EventQueue, Scheduled};
 use crate::workload::{TenantWorkload, Trace};
+
+use super::sharded;
 
 /// Post-duration grace for in-flight work (forced dispatch + cold start +
 /// execution all fit comfortably).
@@ -134,126 +136,30 @@ pub fn run_tenant_with_scheduler(
     }
 
     let cutoff = cfg.duration + grace();
+    let threads = cfg.threads.max(1);
 
-    while let Some(s) = events.pop_until(cutoff) {
-        let now = s.time;
-        match s.event {
-            Ev::Arrival(req) => {
-                recorder.on_arrival_for(req, now, workload.func_of(req));
-                let mut ctx = Ctx {
-                    now,
-                    fleet: &mut fleet,
-                    events: &mut events,
-                    recorder: &mut recorder,
-                    cfg,
-                };
-                sched.on_arrival(req, &mut ctx);
-            }
-            Ev::Ready(node, cid) => match fleet.container_ready(node, cid, now) {
-                Some(ReadyOutcome::Started { done_at, .. }) => {
-                    events.push(done_at, Ev::Done(node, cid));
-                }
-                Some(ReadyOutcome::Idle) => {
-                    let mut ctx = Ctx {
-                        now,
-                        fleet: &mut fleet,
-                        events: &mut events,
-                        recorder: &mut recorder,
-                        cfg,
-                    };
-                    ctx.schedule_keepalive(node, cid);
-                    sched.on_idle_capacity(&mut ctx);
-                }
-                Some(ReadyOutcome::Respawned { req, cid: ncid, ready_at }) => {
-                    // multi-tenant recycle: the container was traded for a
-                    // cold start bound to a stranded foreign-function
-                    // waiter, which therefore pays that cold start
-                    recorder.on_cold(req);
-                    events.push(ready_at, Ev::Ready(node, ncid));
-                }
-                None => {} // node went offline; stale event
-            },
-            Ev::Done(node, cid) => match fleet.exec_complete(node, cid, now) {
-                Some(CompleteOutcome {
-                    completed,
-                    next,
-                    respawn,
-                }) => {
-                    recorder.on_complete(completed, now);
-                    match (next, respawn) {
-                        (Some((_req, done_at)), _) => {
-                            events.push(done_at, Ev::Done(node, cid))
-                        }
-                        (None, Some((rreq, ncid, ready_at))) => {
-                            recorder.on_cold(rreq);
-                            events.push(ready_at, Ev::Ready(node, ncid));
-                        }
-                        (None, None) => {
-                            let mut ctx = Ctx {
-                                now,
-                                fleet: &mut fleet,
-                                events: &mut events,
-                                recorder: &mut recorder,
-                                cfg,
-                            };
-                            ctx.schedule_keepalive(node, cid);
-                            sched.on_idle_capacity(&mut ctx);
-                        }
-                    }
-                }
-                None => {} // node went offline; stale event
-            },
-            Ev::Control => {
-                let mut ctx = Ctx {
-                    now,
-                    fleet: &mut fleet,
-                    events: &mut events,
-                    recorder: &mut recorder,
-                    cfg,
-                };
-                sched.on_control_tick(&mut ctx);
-                // keep ticking through the grace window while work remains
-                let dt = sched.tick_interval().unwrap_or(cfg.controller.dt);
-                if now < cfg.duration || sched.queue_len() > 0 {
-                    events.push(now + dt, Ev::Control);
-                }
-            }
-            Ev::Sample => {
-                recorder.on_gauge(fleet.gauge(now, sched.queue_len()));
-                if now < cfg.duration {
-                    events.push(now + cfg.sample_interval, Ev::Sample);
-                }
-            }
-            Ev::KeepAlive(node, cid) => match fleet.keepalive_check(node, cid, now) {
-                KeepAliveVerdict::Recheck(t) => events.push(t, Ev::KeepAlive(node, cid)),
-                KeepAliveVerdict::Expired | KeepAliveVerdict::NotApplicable => {}
-            },
-            Ev::NodeFail(node) => {
-                // drain scenario: the node's in-flight work and backlog
-                // redistribute through the placement layer immediately
-                let lost = fleet.fail_node(node, now);
-                let mut ctx = Ctx {
-                    now,
-                    fleet: &mut fleet,
-                    events: &mut events,
-                    recorder: &mut recorder,
-                    cfg,
-                };
-                for req in lost {
-                    ctx.dispatch(req);
-                }
-            }
-            Ev::NodeRestore(node) => {
-                // rejoin scenario: the node comes back cold; placement
-                // sees it immediately, and the MPC's live-capacity
-                // re-scaling grows the prewarm budget back at its next
-                // control step (which is when the node starts reabsorbing
-                // load through prewarms and spill placement). A capacity
-                // suffix on the restore spec rebinds the node's replica
-                // cap (heterogeneous replacement hardware).
-                let cap = cfg.fleet.restore.and_then(|r| r.cap);
-                fleet.restore_node(node, now, cap);
-            }
+    if threads > 1 {
+        sharded::drive(
+            cfg,
+            workload,
+            &mut *sched,
+            &mut fleet,
+            &mut events,
+            &mut recorder,
+            cutoff,
+            threads as usize,
+        );
+    } else {
+        while let Some(s) = events.pop_until(cutoff) {
+            step(
+                s,
+                cfg,
+                workload,
+                &mut *sched,
+                &mut fleet,
+                &mut events,
+                &mut recorder,
+            );
         }
     }
 
@@ -273,12 +179,148 @@ pub fn run_tenant_with_scheduler(
         &idle_totals,
     );
     report.nodes = fleet.node_count() as u32;
+    report.threads = threads;
     report.placement = cfg.fleet.placement.name().to_string();
     report.keepalive_policy = cfg.controller.keepalive.policy.name().to_string();
     report.idle_saved_s = to_secs(fleet.idle_saved());
     report.per_node = per_node;
     report.set_throughput(events.processed(), wall_secs);
     report
+}
+
+/// Apply one popped event to the simulation — the sequential event
+/// loop's body, extracted so the sharded engine (`experiments::sharded`)
+/// can fall back to it verbatim for global events and unbatchable
+/// stretches. Any behavior change here changes *both* execution modes,
+/// which is what keeps them bit-identical.
+pub(crate) fn step(
+    s: Scheduled<Ev>,
+    cfg: &ExperimentConfig,
+    workload: &TenantWorkload,
+    sched: &mut dyn Scheduler,
+    fleet: &mut Fleet,
+    events: &mut EventQueue<Ev>,
+    recorder: &mut Recorder,
+) {
+    let now = s.time;
+    match s.event {
+        Ev::Arrival(req) => {
+            recorder.on_arrival_for(req, now, workload.func_of(req));
+            let mut ctx = Ctx {
+                now,
+                fleet: &mut *fleet,
+                events: &mut *events,
+                recorder: &mut *recorder,
+                cfg,
+            };
+            sched.on_arrival(req, &mut ctx);
+        }
+        Ev::Ready(node, cid) => match fleet.container_ready(node, cid, now) {
+            Some(ReadyOutcome::Started { done_at, .. }) => {
+                events.push(done_at, Ev::Done(node, cid));
+            }
+            Some(ReadyOutcome::Idle) => {
+                let mut ctx = Ctx {
+                    now,
+                    fleet: &mut *fleet,
+                    events: &mut *events,
+                    recorder: &mut *recorder,
+                    cfg,
+                };
+                ctx.schedule_keepalive(node, cid);
+                sched.on_idle_capacity(&mut ctx);
+            }
+            Some(ReadyOutcome::Respawned { req, cid: ncid, ready_at }) => {
+                // multi-tenant recycle: the container was traded for a
+                // cold start bound to a stranded foreign-function
+                // waiter, which therefore pays that cold start
+                recorder.on_cold(req);
+                events.push(ready_at, Ev::Ready(node, ncid));
+            }
+            None => {} // node went offline; stale event
+        },
+        Ev::Done(node, cid) => match fleet.exec_complete(node, cid, now) {
+            Some(CompleteOutcome {
+                completed,
+                next,
+                respawn,
+            }) => {
+                recorder.on_complete(completed, now);
+                match (next, respawn) {
+                    (Some((_req, done_at)), _) => {
+                        events.push(done_at, Ev::Done(node, cid))
+                    }
+                    (None, Some((rreq, ncid, ready_at))) => {
+                        recorder.on_cold(rreq);
+                        events.push(ready_at, Ev::Ready(node, ncid));
+                    }
+                    (None, None) => {
+                        let mut ctx = Ctx {
+                            now,
+                            fleet: &mut *fleet,
+                            events: &mut *events,
+                            recorder: &mut *recorder,
+                            cfg,
+                        };
+                        ctx.schedule_keepalive(node, cid);
+                        sched.on_idle_capacity(&mut ctx);
+                    }
+                }
+            }
+            None => {} // node went offline; stale event
+        },
+        Ev::Control => {
+            let mut ctx = Ctx {
+                now,
+                fleet: &mut *fleet,
+                events: &mut *events,
+                recorder: &mut *recorder,
+                cfg,
+            };
+            sched.on_control_tick(&mut ctx);
+            // keep ticking through the grace window while work remains
+            let dt = sched.tick_interval().unwrap_or(cfg.controller.dt);
+            if now < cfg.duration || sched.queue_len() > 0 {
+                events.push(now + dt, Ev::Control);
+            }
+        }
+        Ev::Sample => {
+            recorder.on_gauge(fleet.gauge(now, sched.queue_len()));
+            if now < cfg.duration {
+                events.push(now + cfg.sample_interval, Ev::Sample);
+            }
+        }
+        Ev::KeepAlive(node, cid) => match fleet.keepalive_check(node, cid, now) {
+            KeepAliveVerdict::Recheck(t) => events.push(t, Ev::KeepAlive(node, cid)),
+            KeepAliveVerdict::Expired | KeepAliveVerdict::NotApplicable => {}
+        },
+        Ev::NodeFail(node) => {
+            // drain scenario: the node's in-flight work and backlog
+            // redistribute through the placement layer immediately
+            let lost = fleet.fail_node(node, now);
+            let mut ctx = Ctx {
+                now,
+                fleet: &mut *fleet,
+                events: &mut *events,
+                recorder: &mut *recorder,
+                cfg,
+            };
+            for req in lost {
+                ctx.dispatch(req);
+            }
+        }
+        Ev::NodeRestore(node) => {
+            // rejoin scenario: the node comes back cold; placement
+            // sees it immediately, and the MPC's live-capacity
+            // re-scaling grows the prewarm budget back at its next
+            // control step (which is when the node starts reabsorbing
+            // load through prewarms and spill placement). A capacity
+            // suffix on the restore spec rebinds the node's replica
+            // cap (heterogeneous replacement hardware).
+            let cap = cfg.fleet.restore.and_then(|r| r.cap);
+            fleet.restore_node(node, now, cap);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,535 @@
+//! Sharded parallel execution of the fleet event loop.
+//!
+//! The sequential runner walks one event heap; at fleet scale the walk is
+//! dominated by *node-local* events — `Ready`/`Done`/`KeepAlive` touch
+//! only their node's [`Platform`](crate::cluster::platform::Platform) and
+//! spawn only same-node follow-ups. This module exploits that: it pops a
+//! *batch window* of consecutive node-local events off the heap,
+//! partitions the window's nodes into contiguous shards, processes each
+//! shard on a `std::thread::scope` worker, and then **commits** the
+//! workers' recorded effects back through the real event queue in the
+//! exact `(time, seq)` order the sequential loop would have produced.
+//! Results are bit-identical to `--threads 1` by construction:
+//!
+//! * **Window bound.** A batch extends at most `min_spawn_delay` past its
+//!   first event (and never past the next global event or the run
+//!   cutoff). Every event a node-local handler can spawn lands at least
+//!   that far in the future — warm completions (`jitter(l_warm)`), cold
+//!   readies (`jitter(l_cold)`, init-fraction-scaled when the image
+//!   cache is live), keep-alive windows (profile / adaptive floor) — so
+//!   nothing spawned inside the window can fire inside it, except
+//!   keep-alive *rechecks* (absolute due times), which workers consume
+//!   locally in order.
+//! * **Global state.** Arrival/Control/Sample/NodeFail/NodeRestore touch
+//!   placement, the scheduler, or the online set; they never enter a
+//!   batch (collection stops at the first one), and a batch only forms
+//!   while the shaping queue is empty — which makes the skipped
+//!   `on_idle_capacity` callback a provable no-op (see the contract test
+//!   in `coordinator::controller`). The queue only grows at `Arrival`, a
+//!   global event, so emptiness is stable across the window.
+//! * **Deterministic merge.** Workers record pushes and recorder ops;
+//!   the commit phase replays them in `(time, seq)` order (ties broken
+//!   by the global push sequence, exactly the heap's FIFO rule), calling
+//!   [`EventQueue::push`] in the sequential push order — so future seq
+//!   numbers, `processed()`, per-node RNG streams, and every recorded
+//!   metric match the sequential run byte for byte.
+//!
+//! `min_spawn_delay == 0` (e.g. a zero-latency profile under jitter, or
+//! an image cache with a zero init fraction) degrades to the sequential
+//! path permanently — correct, just unaccelerated.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::cluster::container::ContainerId;
+use crate::cluster::fleet::{Fleet, InvokerNode, NodeId};
+use crate::cluster::platform::{CompleteOutcome, KeepAliveVerdict, ReadyOutcome};
+use crate::cluster::RequestId;
+use crate::config::{ExperimentConfig, KeepAlivePolicy, Micros};
+use crate::coordinator::{Ev, Scheduler};
+use crate::metrics::Recorder;
+use crate::simulator::{EventQueue, Scheduled};
+use crate::workload::tenant::FunctionRegistry;
+use crate::workload::TenantWorkload;
+
+/// The node a shard-batchable event belongs to; None for global events
+/// (which never enter a batch).
+fn node_of(ev: &Ev) -> Option<NodeId> {
+    match *ev {
+        Ev::Ready(n, _) | Ev::Done(n, _) | Ev::KeepAlive(n, _) => Some(n),
+        Ev::Arrival(_) | Ev::Control | Ev::Sample | Ev::NodeFail(_) | Ev::NodeRestore(_) => None,
+    }
+}
+
+/// Conservative lower bound (µs) on the delay of *any* event a
+/// node-local handler can spawn: the minimum over every function's warm
+/// latency, cold-start cost floor (init fraction only when the image
+/// cache is live — a fully cached pull is free), and keep-alive window
+/// (including the adaptive planner's floor, which bounds every live
+/// override it can install), scaled by the worst-case downward jitter
+/// with a 2 µs rounding guard. Zero means "never batch".
+pub fn min_spawn_delay(cfg: &ExperimentConfig, registry: &FunctionRegistry) -> Micros {
+    let mut bound = cfg.platform.keep_alive;
+    for p in registry.profiles() {
+        bound = bound.min(p.l_warm);
+        let cold_floor = if cfg.platform.image.enabled() {
+            (p.l_cold as f64 * cfg.platform.image.init_fraction.clamp(0.0, 1.0)).floor() as Micros
+        } else {
+            p.l_cold
+        };
+        bound = bound.min(cold_floor);
+        bound = bound.min(p.keep_alive);
+    }
+    if cfg.controller.keepalive.policy == KeepAlivePolicy::Adaptive {
+        bound = bound.min(cfg.controller.keepalive.min);
+    }
+    let j = cfg.platform.latency_jitter.clamp(0.0, 1.0);
+    let scaled = (bound as f64 * (1.0 - j)).floor() as Micros;
+    scaled.saturating_sub(2)
+}
+
+/// One event popped into a batch window, with its original heap identity.
+struct BatchEv {
+    time: Micros,
+    seq: u64,
+    ev: Ev,
+}
+
+/// Where a processed record came from: a real heap event (carrying its
+/// original seq) or a keep-alive recheck consumed inside the window
+/// (its seq is assigned at commit, when its generating push replays).
+enum Origin {
+    Batch(u64),
+    Recheck,
+}
+
+/// One side effect of a processed event, recorded in handler order.
+enum Action {
+    /// Out-of-window event push, replayed through [`EventQueue::push`].
+    Push(Micros, Ev),
+    /// In-window keep-alive recheck, consumed locally: index of its
+    /// record in the same node's record list. Replaying this assigns the
+    /// seq the sequential push would have and schedules the record.
+    ConsumeRecheck(usize),
+    Cold(RequestId),
+    Complete(RequestId, Micros),
+}
+
+/// One processed event (batch event or consumed recheck) on one node.
+struct Rec {
+    time: Micros,
+    origin: Origin,
+    actions: Vec<Action>,
+}
+
+/// Pending locally consumed rechecks on one node: `(due, spawn order,
+/// container, record index)`, earliest first. Spawn order stands in for
+/// the global seq — within a node the sequential push order is exactly
+/// the worker's processing order, so it tie-breaks identically.
+type LocalHeap = BinaryHeap<Reverse<(Micros, u64, ContainerId, usize)>>;
+
+/// Drive the event loop to `cutoff` with `threads` shard workers.
+/// Sequential stretches (global events at the head, a non-empty shaping
+/// queue, or a zero spawn-delay bound) fall through to
+/// [`runner::step`](super::runner) — the literal `--threads 1` path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn drive(
+    cfg: &ExperimentConfig,
+    workload: &TenantWorkload,
+    sched: &mut dyn Scheduler,
+    fleet: &mut Fleet,
+    events: &mut EventQueue<Ev>,
+    recorder: &mut Recorder,
+    cutoff: Micros,
+    threads: usize,
+) {
+    let delta = min_spawn_delay(cfg, &workload.registry);
+    loop {
+        let (head_time, head_is_node) = match events.peek() {
+            Some(s) if s.time <= cutoff => (s.time, node_of(&s.event).is_some()),
+            _ => break,
+        };
+        if delta == 0 || !head_is_node || sched.queue_len() > 0 {
+            let s = events.pop_until(cutoff).expect("peeked event within cutoff");
+            super::runner::step(s, cfg, workload, sched, fleet, events, recorder);
+            continue;
+        }
+        // ---- batch window: consecutive node-local events in
+        // [head_time, t_end), never past the cutoff ----
+        let t_end = head_time.saturating_add(delta).min(cutoff.saturating_add(1));
+        let mut batch: Vec<Scheduled<Ev>> = Vec::new();
+        while let Some(s) = events.peek() {
+            if s.time >= t_end || node_of(&s.event).is_none() {
+                break;
+            }
+            batch.push(events.pop().expect("peeked event"));
+        }
+        run_batch(batch, t_end, threads, cfg, fleet, events, recorder);
+    }
+}
+
+/// Partition a batch by node, process each node's stream (threaded over
+/// contiguous node shards when more than one node has work), then commit
+/// the recorded effects in global `(time, seq)` order.
+fn run_batch(
+    batch: Vec<Scheduled<Ev>>,
+    t_end: Micros,
+    threads: usize,
+    cfg: &ExperimentConfig,
+    fleet: &mut Fleet,
+    events: &mut EventQueue<Ev>,
+    recorder: &mut Recorder,
+) {
+    let n_nodes = fleet.node_count();
+    let mut work: Vec<Vec<BatchEv>> = (0..n_nodes).map(|_| Vec::new()).collect();
+    for s in batch {
+        let node = node_of(&s.event).expect("batch holds only node events") as usize;
+        work[node].push(BatchEv {
+            time: s.time,
+            seq: s.seq,
+            ev: s.event,
+        });
+    }
+    let mut results: Vec<Vec<Rec>> = (0..n_nodes).map(|_| Vec::new()).collect();
+    let nodes = fleet.nodes_mut();
+    let active = work.iter().filter(|w| !w.is_empty()).count();
+    if active <= 1 {
+        // one busy node (or a single-event window): threading would only
+        // add scope overhead — process inline, same code path as a worker
+        for (i, w) in work.iter_mut().enumerate() {
+            if !w.is_empty() {
+                results[i] = process_node(&mut nodes[i], std::mem::take(w), t_end, cfg);
+            }
+        }
+    } else {
+        let shard = n_nodes.div_ceil(threads).max(1);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for ((node_shard, work_shard), res_shard) in nodes
+                .chunks_mut(shard)
+                .zip(work.chunks_mut(shard))
+                .zip(results.chunks_mut(shard))
+            {
+                if work_shard.iter().all(|w| w.is_empty()) {
+                    continue;
+                }
+                handles.push(scope.spawn(move || {
+                    for ((nd, w), res) in node_shard
+                        .iter_mut()
+                        .zip(work_shard.iter_mut())
+                        .zip(res_shard.iter_mut())
+                    {
+                        if !w.is_empty() {
+                            *res = process_node(nd, std::mem::take(w), t_end, cfg);
+                        }
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("shard worker panicked");
+            }
+        });
+    }
+    commit(&results, events, recorder);
+}
+
+/// Walk one node's batch events merged with its locally consumed
+/// keep-alive rechecks, in the order the sequential loop would pop them:
+/// `(time, seq)`, where every batch event outranks every in-window
+/// recheck at equal times (batch events were pushed — and so sequenced —
+/// before the window began).
+fn process_node(
+    nd: &mut InvokerNode,
+    work: Vec<BatchEv>,
+    t_end: Micros,
+    cfg: &ExperimentConfig,
+) -> Vec<Rec> {
+    let mut records: Vec<Rec> = Vec::with_capacity(work.len());
+    let mut local: LocalHeap = BinaryHeap::new();
+    let mut spawn_ctr = 0u64;
+    let mut wi = 0usize;
+    loop {
+        let batch_next = match (work.get(wi), local.peek()) {
+            (Some(w), Some(&Reverse((lt, _, _, _)))) => w.time <= lt,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => break,
+        };
+        if batch_next {
+            let w = &work[wi];
+            wi += 1;
+            let idx = records.len();
+            records.push(Rec {
+                time: w.time,
+                origin: Origin::Batch(w.seq),
+                actions: Vec::new(),
+            });
+            let actions = handle(
+                nd,
+                w.ev,
+                w.time,
+                t_end,
+                cfg,
+                &mut records,
+                &mut local,
+                &mut spawn_ctr,
+            );
+            records[idx].actions = actions;
+        } else {
+            let Reverse((due, _, cid, idx)) = local.pop().expect("peeked recheck");
+            let node = nd.id;
+            let mut actions = Vec::new();
+            match nd.keepalive_check(cid, due) {
+                KeepAliveVerdict::Recheck(t) => push_keepalive(
+                    t,
+                    node,
+                    cid,
+                    t_end,
+                    &mut actions,
+                    &mut records,
+                    &mut local,
+                    &mut spawn_ctr,
+                ),
+                KeepAliveVerdict::Expired | KeepAliveVerdict::NotApplicable => {}
+            }
+            records[idx].actions = actions;
+        }
+    }
+    records
+}
+
+/// The node-local mirror of the runner's `Ready`/`Done`/`KeepAlive` match
+/// arms (same handlers, through the same [`InvokerNode`] guards), with
+/// pushes and recorder ops *recorded* instead of applied. The
+/// `on_idle_capacity` callback is intentionally absent: batches only form
+/// while the shaping queue is empty, where it is a no-op.
+#[allow(clippy::too_many_arguments)]
+fn handle(
+    nd: &mut InvokerNode,
+    ev: Ev,
+    now: Micros,
+    t_end: Micros,
+    cfg: &ExperimentConfig,
+    records: &mut Vec<Rec>,
+    local: &mut LocalHeap,
+    spawn_ctr: &mut u64,
+) -> Vec<Action> {
+    let mut acts = Vec::new();
+    match ev {
+        Ev::Ready(node, cid) => match nd.container_ready(cid, now) {
+            Some(ReadyOutcome::Started { done_at, .. }) => {
+                acts.push(Action::Push(done_at, Ev::Done(node, cid)));
+            }
+            Some(ReadyOutcome::Idle) => {
+                let ka = nd.keepalive_of(cid).unwrap_or(cfg.platform.keep_alive);
+                push_keepalive(now + ka, node, cid, t_end, &mut acts, records, local, spawn_ctr);
+            }
+            Some(ReadyOutcome::Respawned {
+                req,
+                cid: ncid,
+                ready_at,
+            }) => {
+                acts.push(Action::Cold(req));
+                acts.push(Action::Push(ready_at, Ev::Ready(node, ncid)));
+            }
+            None => {} // stale event (offline node / drained container)
+        },
+        Ev::Done(node, cid) => match nd.exec_complete(cid, now) {
+            Some(CompleteOutcome {
+                completed,
+                next,
+                respawn,
+            }) => {
+                acts.push(Action::Complete(completed, now));
+                match (next, respawn) {
+                    (Some((_req, done_at)), _) => {
+                        acts.push(Action::Push(done_at, Ev::Done(node, cid)));
+                    }
+                    (None, Some((rreq, ncid, ready_at))) => {
+                        acts.push(Action::Cold(rreq));
+                        acts.push(Action::Push(ready_at, Ev::Ready(node, ncid)));
+                    }
+                    (None, None) => {
+                        let ka = nd.keepalive_of(cid).unwrap_or(cfg.platform.keep_alive);
+                        push_keepalive(
+                            now + ka,
+                            node,
+                            cid,
+                            t_end,
+                            &mut acts,
+                            records,
+                            local,
+                            spawn_ctr,
+                        );
+                    }
+                }
+            }
+            None => {} // stale event
+        },
+        Ev::KeepAlive(node, cid) => match nd.keepalive_check(cid, now) {
+            KeepAliveVerdict::Recheck(t) => {
+                push_keepalive(t, node, cid, t_end, &mut acts, records, local, spawn_ctr);
+            }
+            KeepAliveVerdict::Expired | KeepAliveVerdict::NotApplicable => {}
+        },
+        Ev::Arrival(_) | Ev::Control | Ev::Sample | Ev::NodeFail(_) | Ev::NodeRestore(_) => {
+            unreachable!("global events never enter a shard batch")
+        }
+    }
+    acts
+}
+
+/// Route a keep-alive push: inside the window it becomes a locally
+/// consumed recheck (placeholder record + local-heap entry, processed in
+/// merge order); at or past `t_end` it is a plain deferred push.
+#[allow(clippy::too_many_arguments)]
+fn push_keepalive(
+    at: Micros,
+    node: NodeId,
+    cid: ContainerId,
+    t_end: Micros,
+    acts: &mut Vec<Action>,
+    records: &mut Vec<Rec>,
+    local: &mut LocalHeap,
+    spawn_ctr: &mut u64,
+) {
+    if at < t_end {
+        let idx = records.len();
+        records.push(Rec {
+            time: at,
+            origin: Origin::Recheck,
+            actions: Vec::new(),
+        });
+        local.push(Reverse((at, *spawn_ctr, cid, idx)));
+        *spawn_ctr += 1;
+        acts.push(Action::ConsumeRecheck(idx));
+    } else {
+        acts.push(Action::Push(at, Ev::KeepAlive(node, cid)));
+    }
+}
+
+/// Replay every recorded effect in the order the sequential loop would
+/// have produced it: records pop in `(time, seq)` order, their pushes
+/// re-enter the real queue in the sequential push order (reproducing the
+/// seq stream), consumed rechecks take their seq via
+/// [`EventQueue::consume_inline`] (which also books the pop the
+/// sequential loop performed) and then schedule their own record.
+fn commit(results: &[Vec<Rec>], events: &mut EventQueue<Ev>, recorder: &mut Recorder) {
+    // (time, seq, node, record index); node can never tie-break (seqs
+    // are globally unique) but keeps the key total for clarity
+    let mut order: BinaryHeap<Reverse<(Micros, u64, usize, usize)>> = BinaryHeap::new();
+    for (node, recs) in results.iter().enumerate() {
+        for (idx, r) in recs.iter().enumerate() {
+            if let Origin::Batch(seq) = r.origin {
+                order.push(Reverse((r.time, seq, node, idx)));
+            }
+        }
+    }
+    while let Some(Reverse((_t, _seq, node, idx))) = order.pop() {
+        for act in &results[node][idx].actions {
+            match *act {
+                Action::Push(t, ev) => events.push(t, ev),
+                Action::ConsumeRecheck(ridx) => {
+                    let seq = events.consume_inline();
+                    order.push(Reverse((results[node][ridx].time, seq, node, ridx)));
+                }
+                Action::Cold(req) => recorder.on_cold(req),
+                Action::Complete(req, t) => recorder.on_complete(req, t),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{secs, ImageCacheConfig, ImageCacheMode};
+
+    #[test]
+    fn spawn_delay_floor_is_the_jittered_warm_latency_by_default() {
+        let cfg = ExperimentConfig::default();
+        let reg = FunctionRegistry::single(&cfg.platform);
+        // l_warm 280 ms is the binding floor; 5% downward jitter and the
+        // 2 µs rounding guard come off it
+        assert_eq!(min_spawn_delay(&cfg, &reg), 265_998);
+    }
+
+    #[test]
+    fn spawn_delay_respects_the_cached_cold_floor_and_degenerates_safely() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.platform.image = ImageCacheConfig {
+            mode: ImageCacheMode::Lru,
+            ..Default::default()
+        };
+        // a fully cached cold start floors at init_fraction × l_cold =
+        // 2.625 s — still above l_warm, so the bound is unchanged
+        let reg = FunctionRegistry::single(&cfg.platform);
+        assert_eq!(min_spawn_delay(&cfg, &reg), 265_998);
+        // zero init fraction → a cold ready can land arbitrarily soon →
+        // the engine must refuse to batch
+        cfg.platform.image.init_fraction = 0.0;
+        assert_eq!(min_spawn_delay(&cfg, &reg), 0);
+        // full jitter likewise
+        let mut jit = ExperimentConfig::default();
+        jit.platform.latency_jitter = 1.0;
+        let reg = FunctionRegistry::single(&jit.platform);
+        assert_eq!(min_spawn_delay(&jit, &reg), 0);
+    }
+
+    #[test]
+    fn spawn_delay_tracks_the_adaptive_keepalive_floor() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.controller.keepalive.min = secs(0.1); // 100 ms, below l_warm
+        let reg = FunctionRegistry::single(&cfg.platform);
+        // fixed policy: the override floor is never installed, so the
+        // warm latency still binds
+        assert_eq!(min_spawn_delay(&cfg, &reg), 265_998);
+        cfg.controller.keepalive.policy = crate::config::KeepAlivePolicy::Adaptive;
+        assert_eq!(min_spawn_delay(&cfg, &reg), 94_998);
+    }
+
+    #[test]
+    fn global_events_are_never_batchable() {
+        assert_eq!(node_of(&Ev::Ready(3, 7)), Some(3));
+        assert_eq!(node_of(&Ev::Done(0, 1)), Some(0));
+        assert_eq!(node_of(&Ev::KeepAlive(2, 9)), Some(2));
+        assert_eq!(node_of(&Ev::Arrival(0)), None);
+        assert_eq!(node_of(&Ev::Control), None);
+        assert_eq!(node_of(&Ev::Sample), None);
+        assert_eq!(node_of(&Ev::NodeFail(1)), None);
+        assert_eq!(node_of(&Ev::NodeRestore(1)), None);
+    }
+
+    /// The whole engine against the sequential loop on a real workload —
+    /// the in-crate smoke version of the `tests/sharded.rs` differential
+    /// suite (which sweeps policies × nodes × threads).
+    #[test]
+    fn sharded_run_matches_sequential_run() {
+        let mut cfg = ExperimentConfig {
+            duration: secs(600.0),
+            seed: 9,
+            ..Default::default()
+        };
+        cfg.fleet.nodes = 4;
+        cfg.tenancy.functions = 4;
+        let w = TenantWorkload::generate(
+            cfg.trace,
+            cfg.duration,
+            cfg.seed,
+            cfg.tenancy.functions,
+            cfg.tenancy.zipf_s,
+            &cfg.platform,
+        );
+        let seq = crate::experiments::run_tenant(&cfg, crate::config::Policy::Mpc, &w);
+        cfg.threads = 4;
+        let par = crate::experiments::run_tenant(&cfg, crate::config::Policy::Mpc, &w);
+        assert_eq!(par.threads, 4);
+        assert_eq!(par.completed, seq.completed);
+        assert_eq!(par.mean_ms, seq.mean_ms);
+        assert_eq!(par.p99_ms, seq.p99_ms);
+        assert_eq!(par.counters.cold_starts, seq.counters.cold_starts);
+        assert_eq!(par.events_processed, seq.events_processed);
+        assert_eq!(par.warm_series, seq.warm_series);
+        assert_eq!(par.keepalive_total_s, seq.keepalive_total_s);
+    }
+}

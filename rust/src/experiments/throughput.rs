@@ -24,6 +24,11 @@ use crate::workload::{TenantWorkload, Trace};
 #[derive(Debug, Clone)]
 pub struct ThroughputCell {
     pub nodes: u32,
+    /// Event-loop worker threads the cell ran with (the sharded engine's
+    /// scaling axis; 1 = the sequential seed path). Every simulated
+    /// column is bit-identical across thread counts — only the wall
+    /// clock may move.
+    pub threads: u32,
     pub functions: u32,
     /// Load multiplier: how many independent base traces are
     /// superimposed (1 = the paper's base arrival rate).
@@ -42,6 +47,7 @@ impl ThroughputCell {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("nodes", Json::Num(self.nodes as f64)),
+            ("threads", Json::Num(self.threads as f64)),
             ("functions", Json::Num(self.functions as f64)),
             ("load", Json::Num(self.load as f64)),
             ("requests", Json::Num(self.requests as f64)),
@@ -55,7 +61,7 @@ impl ThroughputCell {
 }
 
 /// A full sweep: the shared run parameters plus one cell per
-/// (nodes, functions, load) combination, in sweep order.
+/// (nodes, threads, functions, load) combination, in sweep order.
 #[derive(Debug, Clone)]
 pub struct ThroughputSweep {
     pub policy: Policy,
@@ -66,15 +72,16 @@ pub struct ThroughputSweep {
 }
 
 impl ThroughputSweep {
-    /// Print the sweep as the standard 7-column table (shared by the
+    /// Print the sweep as the standard 8-column table (shared by the
     /// `bench-throughput` CLI and the fig11 bench target).
     pub fn print_table(&self) {
         let mut t = crate::util::bench::Table::new(&[
-            "nodes", "functions", "load", "requests", "events", "wall ms", "events/sec",
+            "nodes", "threads", "functions", "load", "requests", "events", "wall ms", "events/sec",
         ]);
         for c in &self.cells {
             t.row(&[
                 c.nodes.to_string(),
+                c.threads.to_string(),
                 c.functions.to_string(),
                 c.load.to_string(),
                 c.requests.to_string(),
@@ -129,7 +136,9 @@ pub fn scaled_workload(
 
 /// Run one sweep cell. Nodes here add capacity (every node carries the
 /// full per-node replica budget) — this measures fleet *scale*, unlike
-/// `fleet-sweep`'s fixed-total-capacity fragmentation sweep.
+/// `fleet-sweep`'s fixed-total-capacity fragmentation sweep. `threads`
+/// picks the event-loop execution mode (1 = sequential; >1 = the
+/// sharded engine, same simulated results, different wall clock).
 #[allow(clippy::too_many_arguments)]
 pub fn run_cell(
     policy: Policy,
@@ -137,6 +146,7 @@ pub fn run_cell(
     duration_s: f64,
     seed: u64,
     nodes: u32,
+    threads: u32,
     functions: u32,
     load: u32,
     placement: PlacementPolicy,
@@ -154,12 +164,14 @@ pub fn run_cell(
         },
         duration: secs(duration_s),
         seed,
+        threads,
         ..Default::default()
     };
     let workload = scaled_workload(kind, cfg.duration, seed, functions, 1.1, load, &cfg.platform);
     let r = run_tenant(&cfg, policy, &workload);
     ThroughputCell {
         nodes,
+        threads,
         functions,
         load,
         requests: workload.len(),
@@ -171,8 +183,9 @@ pub fn run_cell(
     }
 }
 
-/// Sweep the full nodes × functions × load grid (cells run serially so
-/// wall-clock numbers are not polluted by core contention).
+/// Sweep the full nodes × threads × functions × load grid (cells run
+/// serially so wall-clock numbers are not polluted by core contention;
+/// the threads axis is the sharded engine's scaling measurement).
 #[allow(clippy::too_many_arguments)]
 pub fn run_sweep(
     policy: Policy,
@@ -180,17 +193,21 @@ pub fn run_sweep(
     duration_s: f64,
     seed: u64,
     nodes_list: &[u32],
+    threads_list: &[u32],
     functions_list: &[u32],
     load_list: &[u32],
     placement: PlacementPolicy,
 ) -> ThroughputSweep {
     let mut cells = Vec::new();
     for &nodes in nodes_list {
-        for &functions in functions_list {
-            for &load in load_list {
-                cells.push(run_cell(
-                    policy, kind, duration_s, seed, nodes, functions, load, placement,
-                ));
+        for &threads in threads_list {
+            for &functions in functions_list {
+                for &load in load_list {
+                    cells.push(run_cell(
+                        policy, kind, duration_s, seed, nodes, threads, functions, load,
+                        placement,
+                    ));
+                }
             }
         }
     }
@@ -234,6 +251,7 @@ mod tests {
             120.0,
             3,
             2,
+            1,
             2,
             1,
             PlacementPolicy::WarmFirst,
@@ -246,5 +264,31 @@ mod tests {
         assert!(c.events_per_sec > 0.0);
         let j = c.to_json();
         assert_eq!(j.path("nodes").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.path("threads").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn threads_axis_changes_only_the_wall_clock_columns() {
+        let run = |threads| {
+            run_cell(
+                Policy::Mpc,
+                TraceKind::SyntheticBursty,
+                120.0,
+                3,
+                4,
+                threads,
+                4,
+                1,
+                PlacementPolicy::WarmFirst,
+            )
+        };
+        let seq = run(1);
+        let par = run(4);
+        assert_eq!(par.threads, 4);
+        assert_eq!(par.requests, seq.requests);
+        assert_eq!(par.completed, seq.completed);
+        assert_eq!(par.events, seq.events, "event count must not depend on threads");
+        assert_eq!(par.p99_ms, seq.p99_ms, "simulated latency must not depend on threads");
+        assert_eq!(par.to_json().path("threads").unwrap().as_f64(), Some(4.0));
     }
 }

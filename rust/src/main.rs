@@ -104,6 +104,7 @@ fn fleet_from_args(a: &Args) -> Result<FleetConfig, String> {
 fn simulate(rest: &[String]) -> i32 {
     let cli = common_cli("simulate", "run one policy on one workload")
         .flag("nodes", "1", "invoker node count")
+        .flag("threads", "1", "event-loop worker threads (results are bit-identical to --threads 1)")
         .flag("placement", "warm-first", "round-robin | least-loaded | warm-first")
         .flag("functions", "1", "distinct functions sharing the fleet (1 = legacy single-tenant)")
         .flag("skew", "zipf:1.1", "function popularity: zipf:<s> | uniform")
@@ -260,6 +261,13 @@ fn simulate(rest: &[String]) -> i32 {
             return 2;
         }
     };
+    let threads = match a.get_u64("threads") {
+        Ok(n) if n >= 1 => n as u32,
+        _ => {
+            eprintln!("--threads must be at least 1");
+            return 2;
+        }
+    };
     let zipf_s = match parse_skew(a.get("skew")) {
         Some(s) => s,
         None => {
@@ -330,6 +338,7 @@ fn simulate(rest: &[String]) -> i32 {
         seed,
         ..Default::default()
     };
+    cfg.threads = threads;
     cfg.platform.reclaim_pressure_weight = reclaim_pressure;
     cfg.platform.image = image;
     cfg.controller.keepalive = keepalive;
@@ -850,6 +859,7 @@ fn bench_throughput(rest: &[String]) -> i32 {
     .flag("seed", "42", "rng seed")
     .flag("placement", "warm-first", "round-robin | least-loaded | warm-first")
     .flag("nodes-list", "1,2,4,8", "comma-separated node counts (each node adds full capacity)")
+    .flag("threads-list", "1", "comma-separated event-loop worker-thread counts (scaling axis)")
     .flag("functions-list", "1,8,32", "comma-separated function counts")
     .flag("load-list", "1,4", "comma-separated load multipliers (superimposed base traces)")
     .flag("out", "", "also write the sweep as a BENCH JSON file (e.g. BENCH_throughput.json)");
@@ -885,14 +895,15 @@ fn bench_throughput(rest: &[String]) -> i32 {
         }
         Ok(v)
     };
-    let (nodes_list, functions_list, load_list) = match (
+    let (nodes_list, threads_list, functions_list, load_list) = match (
         parse_list("nodes-list"),
+        parse_list("threads-list"),
         parse_list("functions-list"),
         parse_list("load-list"),
     ) {
-        (Ok(n), Ok(f), Ok(l)) => (n, f, l),
-        (n, f, l) => {
-            for e in [n.err(), f.err(), l.err()].into_iter().flatten() {
+        (Ok(n), Ok(t), Ok(f), Ok(l)) => (n, t, f, l),
+        (n, t, f, l) => {
+            for e in [n.err(), t.err(), f.err(), l.err()].into_iter().flatten() {
                 eprintln!("{e}");
             }
             return 2;
@@ -912,6 +923,7 @@ fn bench_throughput(rest: &[String]) -> i32 {
         duration_s,
         seed,
         &nodes_list,
+        &threads_list,
         &functions_list,
         &load_list,
         placement,
@@ -931,7 +943,7 @@ fn bench_throughput(rest: &[String]) -> i32 {
 }
 
 fn matrix(rest: &[String]) -> i32 {
-    let cli = Cli::new("matrix", "full policy x trace matrix (Figs. 5-7), one thread per cell")
+    let cli = Cli::new("matrix", "full policy x trace matrix (Figs. 5-7), cells in parallel up to the core count")
         .flag("duration-s", "3600", "experiment duration (seconds)")
         .flag("seed", "42", "rng seed")
         .flag("nodes", "1", "invoker node count")

@@ -140,6 +140,10 @@ pub struct RunReport {
     pub duration_s: f64,
     /// Invoker-node count of the fleet this run used (1 = legacy shape).
     pub nodes: u32,
+    /// Worker threads the event loop ran with (set by the runner; 1 =
+    /// sequential seed path). Purely provenance: every simulated metric
+    /// is bit-identical across thread counts by construction.
+    pub threads: u32,
     /// Placement policy name (set by the runner; empty for unit tests
     /// that build reports directly).
     pub placement: String,
@@ -270,6 +274,7 @@ impl RunReport {
             trace: trace.to_string(),
             duration_s: to_secs(duration),
             nodes: 1,
+            threads: 1,
             placement: String::new(),
             completed: rt.len(),
             dropped,
@@ -327,6 +332,7 @@ impl RunReport {
             ("trace", Json::Str(self.trace.clone())),
             ("duration_s", Json::Num(self.duration_s)),
             ("nodes", Json::Num(self.nodes as f64)),
+            ("threads", Json::Num(self.threads as f64)),
             ("placement", Json::Str(self.placement.clone())),
             ("completed", Json::Num(self.completed as f64)),
             ("dropped", Json::Num(self.dropped as f64)),

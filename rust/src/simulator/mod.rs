@@ -101,6 +101,26 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|s| s.time)
     }
 
+    /// Earliest scheduled event without popping it — the sharded batch
+    /// collector's lookahead (it must inspect the event *kind* to decide
+    /// whether the next event is node-local and batchable).
+    pub fn peek(&self) -> Option<&Scheduled<E>> {
+        self.heap.peek()
+    }
+
+    /// Account for an event that the sharded engine pushed and consumed
+    /// entirely inside one batch window without touching the heap:
+    /// assigns (and returns) the sequence number the sequential loop's
+    /// `push` would have handed out, and counts the pop the sequential
+    /// loop would have performed. Keeps both the FIFO tie-break stream
+    /// and `processed()` bit-identical to the sequential execution.
+    pub fn consume_inline(&mut self) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.popped += 1;
+        seq
+    }
+
     /// Pop the earliest event, advancing the virtual clock.
     pub fn pop(&mut self) -> Option<Scheduled<E>> {
         let s = self.heap.pop()?;
@@ -177,6 +197,43 @@ mod tests {
         q.pop();
         q.push_in(5, ());
         assert_eq!(q.peek_time(), Some(105));
+    }
+
+    #[test]
+    fn peek_exposes_the_next_pop_without_consuming() {
+        let mut q = EventQueue::new();
+        q.push(20, "b");
+        q.push(10, "a");
+        let s = q.peek().unwrap();
+        assert_eq!((s.time, s.event), (10, "a"));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.processed(), 0);
+        assert_eq!(q.pop().unwrap().event, "a");
+    }
+
+    #[test]
+    fn consume_inline_matches_push_then_pop_bookkeeping() {
+        // two queues driven identically, except one routes the middle
+        // event through consume_inline instead of push+pop: seq stream
+        // and processed() must stay in lockstep (the sharded engine's
+        // bit-identity contract)
+        let mut seq_q = EventQueue::new();
+        let mut inl_q = EventQueue::new();
+        seq_q.push(10, "a");
+        inl_q.push(10, "a");
+        seq_q.pop();
+        inl_q.pop();
+        // sequential: push the recheck, pop it
+        seq_q.push(15, "recheck");
+        seq_q.pop();
+        // sharded: the recheck never touches the heap
+        let seq = inl_q.consume_inline();
+        assert_eq!(seq, 1, "inline consume takes the seq push would have");
+        assert_eq!(seq_q.processed(), inl_q.processed());
+        // the next push on both queues gets the same seq
+        seq_q.push(20, "after");
+        inl_q.push(20, "after");
+        assert_eq!(seq_q.pop().unwrap().seq, inl_q.pop().unwrap().seq);
     }
 
     #[test]

@@ -418,6 +418,112 @@ fn tenant_sweep_runs_end_to_end() {
 }
 
 #[test]
+fn simulate_rejects_zero_threads() {
+    let out = bin()
+        .args(["simulate", "--threads", "0"])
+        .output()
+        .expect("spawn simulate");
+    assert!(!out.status.success(), "--threads 0 must be rejected");
+    let out = bin()
+        .args(["simulate", "--threads", "nope"])
+        .output()
+        .expect("spawn simulate");
+    assert!(!out.status.success(), "--threads nope must be rejected");
+}
+
+#[test]
+fn simulate_threads_roundtrip_and_reproduce_the_sequential_run() {
+    let run = |threads: &str| {
+        let out = bin()
+            .args([
+                "simulate",
+                "--policy",
+                "mpc",
+                "--trace",
+                "synthetic",
+                "--duration-s",
+                "300",
+                "--seed",
+                "9",
+                "--nodes",
+                "4",
+                "--functions",
+                "2",
+                "--threads",
+                threads,
+            ])
+            .output()
+            .expect("spawn simulate");
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        Json::parse(&String::from_utf8(out.stdout).unwrap()).expect("report is JSON")
+    };
+    let seq = run("1");
+    let par = run("2");
+    assert_eq!(seq.path("threads").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(par.path("threads").and_then(Json::as_f64), Some(2.0));
+    // every simulated field must match across execution modes (only the
+    // host-timing fields and the threads tag may move)
+    for field in ["completed", "dropped", "mean_ms", "p99_ms", "cold_starts", "keepalive_total_s"] {
+        assert_eq!(
+            seq.path(field).and_then(Json::as_f64),
+            par.path(field).and_then(Json::as_f64),
+            "{field} diverged between --threads 1 and --threads 2"
+        );
+    }
+}
+
+#[test]
+fn bench_throughput_accepts_a_threads_list() {
+    let path = tmp_path("bench-threads.json");
+    let out = bin()
+        .args([
+            "bench-throughput",
+            "--duration-s",
+            "60",
+            "--seed",
+            "9",
+            "--nodes-list",
+            "2",
+            "--threads-list",
+            "1,2",
+            "--functions-list",
+            "2",
+            "--load-list",
+            "1",
+            "--out",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("spawn bench-throughput");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8(out.stdout).unwrap();
+    assert!(text.contains("threads"), "no threads column: {text}");
+    let json = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    std::fs::remove_file(&path).ok();
+    let cells = json.path("cells").unwrap().as_arr().unwrap();
+    let threads: Vec<f64> = cells
+        .iter()
+        .map(|c| c.path("threads").and_then(Json::as_f64).unwrap())
+        .collect();
+    assert_eq!(threads, vec![1.0, 2.0], "one cell per threads rung");
+    // the simulated columns are bit-identical across the threads axis —
+    // only the wall-clock columns may move
+    for field in ["requests", "completed", "events", "p99_ms"] {
+        assert_eq!(
+            cells[0].path(field).and_then(Json::as_f64),
+            cells[1].path(field).and_then(Json::as_f64),
+            "{field} moved along the threads axis"
+        );
+    }
+    // a zero entry in the list is a parse error
+    let out = bin()
+        .args(["bench-throughput", "--threads-list", "0,2"])
+        .output()
+        .expect("spawn bench-throughput");
+    assert!(!out.status.success());
+}
+
+#[test]
 fn fleet_sweep_runs_end_to_end() {
     let out = bin()
         .args([

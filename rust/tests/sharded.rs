@@ -1,0 +1,144 @@
+//! Sharded-engine differential suite: `--threads N` is an execution-mode
+//! flag, not a modeling knob, so every simulated quantity in the
+//! `RunReport` JSON must reproduce the sequential loop byte for byte —
+//! across policies, fleet sizes, thread counts (including threads >
+//! nodes), and with every optional subsystem (migration, adaptive
+//! keep-alive, image cache) switched on at once. Only the host-timing
+//! fields and the `threads` tag itself may differ between modes.
+
+use mpc_serverless::config::{
+    secs, ExperimentConfig, ImageCacheMode, KeepAlivePolicy, MigrationPolicy, Policy,
+    TenantConfig, TraceKind,
+};
+use mpc_serverless::experiments::run_tenant;
+use mpc_serverless::metrics::RunReport;
+use mpc_serverless::workload::TenantWorkload;
+
+const POLICIES: [Policy; 3] = [Policy::OpenWhisk, Policy::IceBreaker, Policy::Mpc];
+/// The sharded counts under test; each is compared against `--threads 1`.
+const THREADS: [u32; 3] = [2, 4, 8];
+
+fn cfg(nodes: u32, seed: u64) -> ExperimentConfig {
+    let mut c = ExperimentConfig {
+        trace: TraceKind::SyntheticBursty,
+        duration: secs(600.0),
+        seed,
+        tenancy: TenantConfig {
+            functions: 8,
+            zipf_s: 1.1,
+        },
+        ..Default::default()
+    };
+    c.fleet.nodes = nodes;
+    c
+}
+
+fn with_threads(c: &ExperimentConfig, n: u32) -> ExperimentConfig {
+    let mut t = c.clone();
+    t.threads = n;
+    t
+}
+
+fn workload(c: &ExperimentConfig) -> TenantWorkload {
+    TenantWorkload::generate(
+        c.trace,
+        c.duration,
+        c.seed,
+        c.tenancy.functions,
+        c.tenancy.zipf_s,
+        &c.platform,
+    )
+}
+
+/// The full JSON surface with the host-timing artifacts zeroed (same
+/// pinning as `tests/keepalive.rs`) plus the `threads` tag — the one
+/// simulated-state-free field that legitimately differs between the two
+/// execution modes.
+fn canonical_json(mut r: RunReport) -> String {
+    r.wall_clock_ms = 0.0;
+    r.events_per_sec = 0.0;
+    r.forecast_overhead_ms = 0.0;
+    r.solve_overhead_ms = 0.0;
+    r.threads = 0;
+    r.to_json().to_string()
+}
+
+/// The headline differential: threads {2, 4, 8} × nodes {4, 16, 64} ×
+/// all three policies, each cell byte-compared against the sequential
+/// run of the same workload. The nodes-4 column exercises threads >
+/// nodes (some shard workers get no nodes at all).
+#[test]
+fn sharded_matches_sequential_across_policies_and_fleet_sizes() {
+    for nodes in [4u32, 16, 64] {
+        let base = cfg(nodes, 29);
+        let w = workload(&base);
+        for policy in POLICIES {
+            let seq = canonical_json(run_tenant(&base, policy, &w));
+            for threads in THREADS {
+                let r = run_tenant(&with_threads(&base, threads), policy, &w);
+                assert_eq!(
+                    r.threads, threads,
+                    "report must record the requested thread count"
+                );
+                assert_eq!(
+                    canonical_json(r),
+                    seq,
+                    "sharded run diverged: {policy:?}, {nodes} nodes, {threads} threads"
+                );
+            }
+        }
+    }
+}
+
+/// Every optional subsystem at once — forecast-driven migration,
+/// adaptive keep-alive, LRU image cache — under MPC. These are the
+/// subsystems whose state the control step must observe exactly as the
+/// sequential loop left it, so this is the strongest barrier test.
+#[test]
+fn sharded_matches_sequential_with_every_subsystem_enabled() {
+    let mut base = cfg(16, 31);
+    base.fleet.migration.policy = MigrationPolicy::DemandGap;
+    base.controller.keepalive.policy = KeepAlivePolicy::Adaptive;
+    base.platform.image.mode = ImageCacheMode::Lru;
+    let w = workload(&base);
+    let seq = canonical_json(run_tenant(&base, Policy::Mpc, &w));
+    for threads in THREADS {
+        let par = run_tenant(&with_threads(&base, threads), Policy::Mpc, &w);
+        assert_eq!(
+            canonical_json(par),
+            seq,
+            "all-subsystems run diverged at {threads} threads"
+        );
+    }
+}
+
+/// `--threads` round-trips into the report (default 1 on the seed path)
+/// and onto the JSON surface.
+#[test]
+fn report_records_the_thread_count() {
+    let base = cfg(4, 5);
+    let w = workload(&base);
+    let r1 = run_tenant(&base, Policy::Mpc, &w);
+    assert_eq!(r1.threads, 1, "sequential default must report threads=1");
+    let r4 = run_tenant(&with_threads(&base, 4), Policy::Mpc, &w);
+    assert_eq!(r4.threads, 4);
+    let j = r4.to_json().to_string();
+    assert!(j.contains("\"threads\""), "threads missing from JSON: {j}");
+}
+
+/// The sharded path is as reproducible as the sequential one: two runs
+/// of the same config must agree on every byte, independent of OS
+/// thread scheduling (the commit-time merge, not arrival order, decides
+/// event ordering).
+#[test]
+fn sharded_run_is_self_deterministic() {
+    let base = with_threads(&cfg(16, 13), 8);
+    let w = workload(&base);
+    let a = run_tenant(&base, Policy::Mpc, &w);
+    let b = run_tenant(&base, Policy::Mpc, &w);
+    assert_eq!(
+        canonical_json(a),
+        canonical_json(b),
+        "sharded runs of identical configs diverged"
+    );
+}
