@@ -1,0 +1,356 @@
+//! Chaos engine — deterministic fault injection for the gauntlet runs.
+//!
+//! Two layers compose:
+//!
+//! * **Correlated schedules** ([`schedule_for`]): named presets that
+//!   derive node-level fault timelines from the experiment shape —
+//!   failure storms (overlapping drains), rolling restarts (staggered
+//!   drain→restore waves), and flash crowds (the Zipf popularity inverts
+//!   mid-run, see [`flash_window`]/[`apply_flash`]).
+//! * **Invocation-level faults** ([`ChaosEngine`]): container spawn
+//!   failures, execution failures, and straggler executions bounded by
+//!   per-function timeouts, all governed by a retry/backoff policy.
+//!
+//! Everything is seeded: the engine carries its own salted xoshiro
+//! stream (`seed ^ CHAOS_SALT`), so chaos runs are exactly as
+//! reproducible as clean ones, and turning chaos off removes the stream
+//! entirely — the seed path never observes it (the PR 5–7 byte-identity
+//! pattern; see `rust/tests/chaos.rs`).
+
+use std::collections::HashMap;
+
+use crate::cluster::RequestId;
+use crate::config::{
+    ChaosConfig, ChaosMode, ExperimentConfig, Micros, NodeFailure, NodeRestore,
+};
+use crate::util::rng::Rng;
+use crate::workload::tenant::{FunctionId, FunctionRegistry, TenantWorkload};
+
+/// Salt separating the chaos RNG stream from the profile / assignment /
+/// trace streams (same idiom as `PROFILE_SALT` etc.).
+pub const CHAOS_SALT: u64 = 0xC4A0_5EED;
+
+/// What the chaos engine decided for one execution at dispatch time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecFate {
+    /// Runs to its scheduled completion.
+    Normal,
+    /// Straggler: completes late, at the given (timeout-safe) instant.
+    Stretched(Micros),
+    /// Killed at the per-function deadline; the request retries.
+    TimedOut(Micros),
+}
+
+/// Seeded invocation-level fault injector. Owned by the fleet (one per
+/// run) so every RNG draw happens in deterministic event order; when
+/// chaos is off the fleet simply holds `None` and none of this exists.
+#[derive(Debug, Clone)]
+pub struct ChaosEngine {
+    cfg: ChaosConfig,
+    rng: Rng,
+    /// Fault count per request (spawn failures, execution failures, and
+    /// timeouts all consume the same retry budget).
+    attempts: HashMap<RequestId, u32>,
+    /// Per-function execution deadline: `timeout_factor × l_warm(f)`.
+    timeouts: Vec<Micros>,
+}
+
+impl ChaosEngine {
+    pub fn new(cfg: ChaosConfig, seed: u64, registry: &FunctionRegistry) -> Self {
+        let timeouts = registry
+            .profiles()
+            .iter()
+            .map(|p| {
+                let t = p.l_warm as f64 * cfg.timeout_factor.max(1.0);
+                if t.is_finite() {
+                    t as Micros
+                } else {
+                    Micros::MAX
+                }
+            })
+            .collect();
+        ChaosEngine {
+            cfg,
+            rng: Rng::new(seed ^ CHAOS_SALT),
+            attempts: HashMap::new(),
+            timeouts,
+        }
+    }
+
+    fn timeout_for(&self, func: FunctionId) -> Micros {
+        self.timeouts
+            .get(func as usize)
+            .copied()
+            .unwrap_or(Micros::MAX)
+    }
+
+    /// Roll a request-bound container spawn: does it fail before ready?
+    pub fn spawn_fails(&mut self) -> bool {
+        self.rng.chance(self.cfg.spawn_fail_p)
+    }
+
+    /// Roll a finished execution: does its result fail anyway?
+    pub fn exec_fails(&mut self) -> bool {
+        self.rng.chance(self.cfg.exec_fail_p)
+    }
+
+    /// Roll an execution starting at `start` with nominal completion
+    /// `done_at`: normal, straggling (stretched duration), or killed at
+    /// the per-function deadline — whichever the stretch crosses first.
+    pub fn exec_fate(&mut self, func: FunctionId, start: Micros, done_at: Micros) -> ExecFate {
+        let deadline = start.saturating_add(self.timeout_for(func));
+        if self.rng.chance(self.cfg.straggler_p) {
+            let dur = done_at.saturating_sub(start);
+            let stretched = (dur as f64 * self.cfg.straggler_factor.max(1.0)) as u64;
+            let late = start.saturating_add(stretched.max(dur));
+            if late > deadline {
+                return ExecFate::TimedOut(deadline);
+            }
+            return ExecFate::Stretched(late);
+        }
+        if done_at > deadline {
+            // a nominal duration can still cross the deadline when the
+            // timeout knob is set aggressively low
+            return ExecFate::TimedOut(deadline);
+        }
+        ExecFate::Normal
+    }
+
+    /// A fault hit `req`: charge one attempt against its retry budget.
+    /// `Some(backoff)` schedules the retry that far in the future
+    /// (exponential: `retry_backoff × 2^(n−1)` for the n-th retry);
+    /// `None` means the budget is exhausted and the request is dropped.
+    pub fn retry_decision(&mut self, req: RequestId) -> Option<Micros> {
+        let n = self.attempts.entry(req).or_insert(0);
+        *n += 1;
+        if *n > self.cfg.max_retries {
+            return None;
+        }
+        let shift = (*n - 1).min(62) as u32;
+        Some(self.cfg.retry_backoff.saturating_mul(1u64 << shift))
+    }
+}
+
+/// Derive the preset node-fault timeline for an experiment. `Off`,
+/// `Faults`, and `FlashCrowd` schedule no node events; the storm and the
+/// rolling restart never touch node 0 and never leave the fleet without
+/// a survivor, so the result always passes
+/// [`crate::config::validate_fault_schedule`].
+pub fn schedule_for(cfg: &ExperimentConfig) -> (Vec<NodeFailure>, Vec<NodeRestore>) {
+    let nodes = cfg.fleet.nodes;
+    let d = cfg.duration;
+    let frac = |f: f64| -> Micros { (d as f64 * f) as Micros };
+    let mut failures = Vec::new();
+    let mut restores = Vec::new();
+    match cfg.chaos.mode {
+        ChaosMode::FailureStorm => {
+            // half the fleet (rounded up, but always leaving node 0 and
+            // at least one other survivor out) drains in a burst of
+            // 15 s-staggered failures starting at 30% of the run; each
+            // victim rejoins 120 s after it fell
+            if nodes >= 2 {
+                let k = nodes.div_ceil(2).min(nodes - 1);
+                for i in 0..k {
+                    let node = 1 + i;
+                    let at = frac(0.3) + i as Micros * 15_000_000;
+                    if at >= d {
+                        break;
+                    }
+                    failures.push(NodeFailure { node, at });
+                    let back = at + 120_000_000;
+                    if back < d {
+                        restores.push(NodeRestore {
+                            node,
+                            at: back,
+                            cap: None,
+                        });
+                    }
+                }
+            }
+        }
+        ChaosMode::RollingRestart => {
+            // one wave per node (node 0 excluded): 60 s down, waves 90 s
+            // apart so windows never overlap and at most one node is
+            // offline at a time
+            for node in 1..nodes {
+                let at = frac(0.2) + (node - 1) as Micros * 90_000_000;
+                let back = at + 60_000_000;
+                if back >= d {
+                    break;
+                }
+                failures.push(NodeFailure { node, at });
+                restores.push(NodeRestore {
+                    node,
+                    at: back,
+                    cap: None,
+                });
+            }
+        }
+        ChaosMode::Off | ChaosMode::Faults | ChaosMode::FlashCrowd => {}
+    }
+    (failures, restores)
+}
+
+/// The flash-crowd window: the middle fifth of the run, [40%, 60%) of
+/// the duration. `None` for every other mode.
+pub fn flash_window(cfg: &ExperimentConfig) -> Option<(Micros, Micros)> {
+    (cfg.chaos.mode == ChaosMode::FlashCrowd).then(|| {
+        let d = cfg.duration as f64;
+        ((d * 0.4) as Micros, (d * 0.6) as Micros)
+    })
+}
+
+/// Invert the Zipf popularity inside the flash window: every arrival in
+/// `[start, end)` has its function remapped `f → n−1−f`, so the cold
+/// tail becomes the hot head exactly when the forecasts least expect it.
+/// A no-op for single-tenant workloads (nothing to invert).
+pub fn apply_flash(w: &TenantWorkload, (start, end): (Micros, Micros)) -> TenantWorkload {
+    let mut out = w.clone();
+    let n = out.registry.len() as FunctionId;
+    if n <= 1 || out.funcs.is_empty() {
+        return out;
+    }
+    for (i, &at) in out.arrivals.iter().enumerate() {
+        if at >= start && at < end {
+            out.funcs[i] = n - 1 - out.funcs[i];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{secs, validate_fault_schedule, ChaosConfig, FleetConfig};
+    use crate::workload::Trace;
+
+    fn registry(n: u32) -> FunctionRegistry {
+        FunctionRegistry::synthesize(n, 1.1, &crate::config::PlatformConfig::default(), 7)
+    }
+
+    fn chaos_cfg(mode: ChaosMode) -> ExperimentConfig {
+        ExperimentConfig {
+            chaos: ChaosConfig {
+                mode,
+                ..Default::default()
+            },
+            fleet: FleetConfig {
+                nodes: 4,
+                ..Default::default()
+            },
+            duration: secs(1800.0),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn engine_is_deterministic_in_seed() {
+        let reg = registry(4);
+        let cfg = ChaosConfig {
+            mode: ChaosMode::Faults,
+            ..Default::default()
+        };
+        let mut a = ChaosEngine::new(cfg, 42, &reg);
+        let mut b = ChaosEngine::new(cfg, 42, &reg);
+        for i in 0..200 {
+            assert_eq!(a.spawn_fails(), b.spawn_fails());
+            assert_eq!(a.exec_fate(i % 4, 0, 280_000), b.exec_fate(i % 4, 0, 280_000));
+            assert_eq!(a.retry_decision(i as RequestId), b.retry_decision(i as RequestId));
+        }
+    }
+
+    #[test]
+    fn retry_budget_is_exponential_then_exhausted() {
+        let reg = registry(1);
+        let cfg = ChaosConfig {
+            mode: ChaosMode::Faults,
+            max_retries: 3,
+            retry_backoff: secs(1.0),
+            ..Default::default()
+        };
+        let mut e = ChaosEngine::new(cfg, 1, &reg);
+        assert_eq!(e.retry_decision(9), Some(secs(1.0)));
+        assert_eq!(e.retry_decision(9), Some(secs(2.0)));
+        assert_eq!(e.retry_decision(9), Some(secs(4.0)));
+        assert_eq!(e.retry_decision(9), None, "budget exhausted on the 4th fault");
+        // other requests carry their own budgets
+        assert_eq!(e.retry_decision(10), Some(secs(1.0)));
+    }
+
+    #[test]
+    fn exec_fate_respects_the_deadline() {
+        let reg = registry(1);
+        let l_warm = reg.get(0).l_warm;
+        let cfg = ChaosConfig {
+            mode: ChaosMode::Faults,
+            straggler_p: 1.0, // every execution straggles
+            straggler_factor: 100.0,
+            timeout_factor: 8.0,
+            ..Default::default()
+        };
+        let mut e = ChaosEngine::new(cfg, 3, &reg);
+        let deadline = (l_warm as f64 * 8.0) as Micros;
+        // a 100× stretch blows far past the 8× deadline → killed there
+        assert_eq!(
+            e.exec_fate(0, 0, l_warm),
+            ExecFate::TimedOut(deadline)
+        );
+        // a mild stretch below the deadline completes late
+        let mild = ChaosConfig {
+            straggler_factor: 2.0,
+            ..cfg
+        };
+        let mut e = ChaosEngine::new(mild, 3, &reg);
+        assert_eq!(e.exec_fate(0, 0, l_warm), ExecFate::Stretched(2 * l_warm));
+        // non-stragglers at nominal duration are always Normal
+        let never = ChaosConfig {
+            straggler_p: 0.0,
+            ..cfg
+        };
+        let mut e = ChaosEngine::new(never, 3, &reg);
+        assert_eq!(e.exec_fate(0, 0, l_warm), ExecFate::Normal);
+    }
+
+    #[test]
+    fn preset_schedules_pass_validation() {
+        for mode in ChaosMode::ALL {
+            for nodes in [1u32, 2, 3, 4, 8] {
+                let mut cfg = chaos_cfg(mode);
+                cfg.fleet.nodes = nodes;
+                let (f, r) = schedule_for(&cfg);
+                validate_fault_schedule(&f, &r, nodes, cfg.duration)
+                    .unwrap_or_else(|e| panic!("{} @ {nodes} nodes: {e}", mode.name()));
+                match mode {
+                    ChaosMode::FailureStorm if nodes >= 3 => {
+                        assert!(f.len() >= 2, "storm must drain several nodes")
+                    }
+                    ChaosMode::RollingRestart if nodes >= 2 => {
+                        assert_eq!(f.len(), r.len(), "every wave restores")
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flash_remap_inverts_only_inside_the_window() {
+        let trace = Trace {
+            arrivals: vec![secs(10.0), secs(800.0), secs(1700.0)],
+        };
+        let reg = registry(8);
+        let w = TenantWorkload::assign(&trace, reg, 42);
+        let cfg = chaos_cfg(ChaosMode::FlashCrowd);
+        let (start, end) = flash_window(&cfg).expect("flash mode has a window");
+        assert_eq!((start, end), (secs(720.0), secs(1080.0)));
+        let flashed = apply_flash(&w, (start, end));
+        assert_eq!(flashed.funcs[0], w.funcs[0], "before the window: untouched");
+        assert_eq!(flashed.funcs[1], 7 - w.funcs[1], "inside: inverted");
+        assert_eq!(flashed.funcs[2], w.funcs[2], "after: untouched");
+        // single-tenant workloads have nothing to invert
+        let single = TenantWorkload::assign(&trace, registry(1), 42);
+        assert_eq!(apply_flash(&single, (start, end)).funcs, single.funcs);
+        // other modes have no window at all
+        assert_eq!(flash_window(&chaos_cfg(ChaosMode::Faults)), None);
+    }
+}

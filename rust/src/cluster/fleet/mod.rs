@@ -53,6 +53,7 @@
 pub mod migration;
 pub mod placement;
 
+use crate::cluster::chaos::{ChaosEngine, ExecFate};
 use crate::cluster::container::ContainerId;
 use crate::cluster::platform::{CompleteOutcome, InvokeOutcome, KeepAliveVerdict, Platform, ReadyOutcome};
 use crate::cluster::telemetry::{Counters, FnCounterMap, GaugeSample};
@@ -116,17 +117,22 @@ impl InvokerNode {
     // one implementation, so the two paths cannot drift.
 
     /// A cold start on this node finished initializing. None = stale
-    /// event (node offline, or the container was lost in a drain).
+    /// event (node offline, or the container was lost to a drain or a
+    /// chaos abort). The liveness check is unconditional — not gated on
+    /// a nonzero drain epoch — because chaos spawn/exec aborts can
+    /// orphan in-flight events on a node that never drained; ids are
+    /// never reused, so a stale event can't collide with a live one.
     pub fn container_ready(&mut self, cid: ContainerId, now: Micros) -> Option<ReadyOutcome> {
-        if !self.online || (self.epoch > 0 && !self.platform.has_container(cid)) {
+        if !self.online || !self.platform.has_container(cid) {
             return None;
         }
         Some(self.platform.container_ready(cid, now))
     }
 
-    /// An execution on this node completed. None = stale event.
+    /// An execution on this node completed. None = stale event (same
+    /// unconditional liveness guard as [`Self::container_ready`]).
     pub fn exec_complete(&mut self, cid: ContainerId, now: Micros) -> Option<CompleteOutcome> {
-        if !self.online || (self.epoch > 0 && !self.platform.has_container(cid)) {
+        if !self.online || !self.platform.has_container(cid) {
             return None;
         }
         Some(self.platform.exec_complete(cid, now))
@@ -195,6 +201,9 @@ impl NodeReport {
             pull_mib: c.pull_mib - at.pull_mib,
             cold_cost_us: c.cold_cost_us - at.cold_cost_us,
             cold_charges: c.cold_charges - at.cold_charges,
+            retries: c.retries - at.retries,
+            timeouts: c.timeouts - at.timeouts,
+            spawn_failures: c.spawn_failures - at.spawn_failures,
         })
     }
 }
@@ -204,6 +213,10 @@ pub struct Fleet {
     nodes: Vec<InvokerNode>,
     placement: PlacementPolicy,
     rr_cursor: usize,
+    /// Invocation-level fault injector. None (the default, and always
+    /// under `--chaos off`) means no chaos: none of the roll methods
+    /// below touch any RNG, so the seed path is byte-identical.
+    chaos: Option<ChaosEngine>,
 }
 
 impl Fleet {
@@ -257,6 +270,7 @@ impl Fleet {
             nodes,
             placement: fleet_cfg.placement,
             rr_cursor: 0,
+            chaos: None,
         }
     }
 
@@ -755,6 +769,80 @@ impl Fleet {
             }
             _ => false,
         }
+    }
+
+    // ---- chaos (invocation-level fault injection) ---------------------------
+    //
+    // The fleet owns the engine so every RNG roll happens in determin-
+    // istic event order on the single simulation stream. With no engine
+    // installed (--chaos off) every wrapper is a constant: no RNG, no
+    // counters, no behavior — the seed path cannot observe the feature.
+
+    /// Install the fault injector for this run.
+    pub fn set_chaos(&mut self, engine: ChaosEngine) {
+        self.chaos = Some(engine);
+    }
+
+    pub fn chaos_enabled(&self) -> bool {
+        self.chaos.is_some()
+    }
+
+    /// Roll a request-bound container spawn: does it fail before ready?
+    pub fn chaos_spawn_fails(&mut self) -> bool {
+        self.chaos.as_mut().is_some_and(|c| c.spawn_fails())
+    }
+
+    /// Roll a finished execution: does its result fail anyway?
+    pub fn chaos_exec_fails(&mut self) -> bool {
+        self.chaos.as_mut().is_some_and(|c| c.exec_fails())
+    }
+
+    /// Roll an execution's fate at dispatch (normal / straggler /
+    /// timeout). Always [`ExecFate::Normal`] with chaos off.
+    pub fn chaos_exec_fate(
+        &mut self,
+        func: FunctionId,
+        start: Micros,
+        done_at: Micros,
+    ) -> ExecFate {
+        match self.chaos.as_mut() {
+            Some(c) => c.exec_fate(func, start, done_at),
+            None => ExecFate::Normal,
+        }
+    }
+
+    /// Charge one fault against `req`'s retry budget: `Some(backoff)`
+    /// schedules the retry, `None` drops the request.
+    pub fn chaos_retry_decision(&mut self, req: RequestId) -> Option<Micros> {
+        self.chaos.as_mut()?.retry_decision(req)
+    }
+
+    /// Count a scheduled retry on the node where the fault happened.
+    pub fn charge_retry(&mut self, node: NodeId) {
+        if let Some(nd) = self.nodes.get_mut(node as usize) {
+            nd.platform.counters.retries += 1;
+        }
+    }
+
+    /// Chaos spawn failure on `node`: tear down a cold-starting
+    /// container, returning the request it carried. None = stale (node
+    /// offline or container already gone), a logged drop at the caller.
+    pub fn abort_spawn(&mut self, node: NodeId, cid: ContainerId, now: Micros) -> Option<RequestId> {
+        let nd = self.nodes.get_mut(node as usize)?;
+        if !nd.online || !nd.platform.has_container(cid) {
+            return None;
+        }
+        nd.platform.abort_spawn(cid, now)
+    }
+
+    /// Chaos execution timeout on `node`: kill a busy container at its
+    /// deadline, returning the in-flight request. None = stale.
+    pub fn abort_exec(&mut self, node: NodeId, cid: ContainerId, now: Micros) -> Option<RequestId> {
+        let nd = self.nodes.get_mut(node as usize)?;
+        if !nd.online || !nd.platform.has_container(cid) {
+            return None;
+        }
+        nd.platform.abort_exec(cid, now)
     }
 
     /// Migration actuator: move one idle warm container of `func` from

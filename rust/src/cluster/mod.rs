@@ -9,8 +9,11 @@
 //! - [`telemetry`]: Prometheus analog (gauges + counters)
 //! - [`image`]: per-node content-addressed image/layer cache (dynamic
 //!   cold-start cost model)
+//! - [`chaos`]: seeded fault injection (correlated node-fault schedules
+//!   + invocation-level spawn/exec faults with retry/backoff/timeouts)
 
 pub mod activation_log;
+pub mod chaos;
 pub mod container;
 pub mod fleet;
 pub mod image;
@@ -20,6 +23,7 @@ pub mod telemetry;
 /// Request (activation) identifier, assigned by the workload in arrival order.
 pub type RequestId = u64;
 
+pub use chaos::{ChaosEngine, ExecFate};
 pub use container::{Container, ContainerId, ContainerState};
 pub use fleet::{Fleet, InvokerNode, NodeId, NodeReport};
 pub use image::{AdmitOutcome, ImageCache, ImageManifest, Layer, LayerId};

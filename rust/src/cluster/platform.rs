@@ -1206,6 +1206,51 @@ impl Platform {
         lost
     }
 
+    /// Chaos spawn failure: a cold-starting container is torn down before
+    /// it ever becomes ready. Crash semantics like [`fail_all`] — no
+    /// keep-alive record, the activation log just forgets it — and the
+    /// pending request (if any) is returned for retry. Returns `None`
+    /// without touching anything when `cid` is not cold-starting (the
+    /// stale-event case: the container was already lost to a drain).
+    ///
+    /// [`fail_all`]: Platform::fail_all
+    pub fn abort_spawn(&mut self, cid: ContainerId, _now: Micros) -> Option<RequestId> {
+        let pending = match self.containers.get(&cid).map(|c| &c.state) {
+            Some(&ContainerState::ColdStarting { pending, .. }) => pending,
+            _ => return None,
+        };
+        let c = self.containers.remove(&cid).expect("presence checked above");
+        self.deindex(&c);
+        self.mem_used = self
+            .mem_used
+            .saturating_sub(self.registry.get(c.func).mem_mib);
+        self.log.forget(cid);
+        self.removed += 1;
+        self.counters.spawn_failures += 1;
+        pending
+    }
+
+    /// Chaos execution timeout: a busy container is killed at its
+    /// per-function deadline, its in-flight request returned for retry.
+    /// Crash semantics (no keep-alive record); `None` without touching
+    /// anything when `cid` is not busy (stale timeout after a drain or an
+    /// earlier kill).
+    pub fn abort_exec(&mut self, cid: ContainerId, _now: Micros) -> Option<RequestId> {
+        let request = match self.containers.get(&cid).map(|c| &c.state) {
+            Some(&ContainerState::Busy { request, .. }) => request,
+            _ => return None,
+        };
+        let c = self.containers.remove(&cid).expect("presence checked above");
+        self.deindex(&c);
+        self.mem_used = self
+            .mem_used
+            .saturating_sub(self.registry.get(c.func).mem_mib);
+        self.log.forget(cid);
+        self.removed += 1;
+        self.counters.timeouts += 1;
+        Some(request)
+    }
+
     /// End-of-run accounting: treat still-alive idle containers as kept
     /// warm until `now`. Returns (keepalive durations, total idle times).
     pub fn finalize(&mut self, now: Micros) -> (Vec<Micros>, Vec<Micros>) {
@@ -2177,7 +2222,9 @@ mod tests {
     /// After an arbitrary interleaving of invoke / prewarm / ready /
     /// complete / keep-alive / reclaim / migrate operations — and, since
     /// the retention-control PR, random per-step keep-alive horizon
-    /// updates with immediate expiry sweeps — every indexed counter and
+    /// updates with immediate expiry sweeps, and since the chaos PR,
+    /// random spawn aborts, execution kills, and whole-node crashes —
+    /// every indexed counter and
     /// MRU/recency/ready-time/reclaim-order/expiry-due query must equal
     /// the brute-force scan over the container map (see
     /// [`Platform::assert_matches_scan`]).
@@ -2242,7 +2289,7 @@ mod tests {
             for _ in 0..steps {
                 now += g.u64(1, 2_000_000);
                 let func = g.u64(0, (nf - 1) as u64) as FunctionId;
-                match g.usize(0, 10) {
+                match g.usize(0, 13) {
                     0 => {
                         req += 1;
                         match p.invoke_for(req, func, now) {
@@ -2342,6 +2389,60 @@ mod tests {
                         // landing): admits, touches, and possibly evicts —
                         // the ledger audit below must survive all of it
                         p.warm_image_for(func);
+                    }
+                    10 => {
+                        // chaos spawn failure: kill a random in-flight cold
+                        // start (crash semantics), or probe an id that is
+                        // not cold-starting — which must be a no-op
+                        if !pending_ready.is_empty() && g.bool(0.7) {
+                            let i = g.usize(0, pending_ready.len() - 1);
+                            let (cid, _) = pending_ready.swap_remove(i);
+                            p.abort_spawn(cid, now);
+                        } else {
+                            let cid = g.u64(1, p.spawned.max(1));
+                            if !pending_ready.iter().any(|&(c, _)| c == cid)
+                                && !pending_done.iter().any(|&(c, _)| c == cid)
+                            {
+                                prop_assert!(
+                                    p.abort_spawn(cid, now).is_none(),
+                                    "abort_spawn({cid}) acted on a non-cold container"
+                                );
+                            }
+                        }
+                    }
+                    11 => {
+                        // chaos execution timeout: kill a random in-flight
+                        // execution; stale/idle ids must be a no-op
+                        if !pending_done.is_empty() && g.bool(0.7) {
+                            let i = g.usize(0, pending_done.len() - 1);
+                            let (cid, _) = pending_done.swap_remove(i);
+                            p.abort_exec(cid, now);
+                        } else {
+                            let cid = g.u64(1, p.spawned.max(1));
+                            if !pending_ready.iter().any(|&(c, _)| c == cid)
+                                && !pending_done.iter().any(|&(c, _)| c == cid)
+                            {
+                                prop_assert!(
+                                    p.abort_exec(cid, now).is_none(),
+                                    "abort_exec({cid}) acted on a non-busy container"
+                                );
+                            }
+                        }
+                    }
+                    12 => {
+                        // node crash (storm member): everything is lost at
+                        // once and the in-flight events go stale — the
+                        // coordinator drops those via the fleet's liveness
+                        // guard, so the test just forgets them here
+                        if g.bool(0.2) {
+                            p.fail_all(now);
+                            pending_ready.clear();
+                            pending_done.clear();
+                            if g.bool(0.5) {
+                                // heterogeneous restore on the empty node
+                                p.override_capacity(g.usize(1, 10) as u32);
+                            }
+                        }
                     }
                     _ => {
                         // keep-alive probe on an arbitrary (possibly gone)

@@ -46,6 +46,15 @@ pub struct Counters {
     /// enabled, so the off path stays structurally silent.
     pub cold_cost_us: u64,
     pub cold_charges: u64,
+    /// Invocation retries scheduled by the chaos engine after a spawn
+    /// failure, execution failure, or timeout (structurally 0 with
+    /// `--chaos off` — the engine is never constructed then).
+    pub retries: u64,
+    /// Executions killed at their per-function chaos timeout.
+    pub timeouts: u64,
+    /// Request-bound container spawns the chaos engine failed before
+    /// the container became ready.
+    pub spawn_failures: u64,
 }
 
 impl Counters {
@@ -70,6 +79,9 @@ impl Counters {
             pull_mib,
             cold_cost_us,
             cold_charges,
+            retries,
+            timeouts,
+            spawn_failures,
         } = *o;
         self.invocations += invocations;
         self.cold_starts += cold_starts;
@@ -87,6 +99,9 @@ impl Counters {
         self.pull_mib += pull_mib;
         self.cold_cost_us += cold_cost_us;
         self.cold_charges += cold_charges;
+        self.retries += retries;
+        self.timeouts += timeouts;
+        self.spawn_failures += spawn_failures;
     }
 
     /// Mean effective cold-start charge in seconds under the image-cache
@@ -234,5 +249,25 @@ mod tests {
         // 6 s of charges over 3 cold charges → mean 2 s
         assert_eq!(a.mean_effective_l_cold_s(), 2.0);
         assert_eq!(Counters::default().mean_effective_l_cold_s(), 0.0);
+    }
+
+    #[test]
+    fn chaos_counters_accumulate_and_default_to_zero() {
+        let d = Counters::default();
+        assert_eq!((d.retries, d.timeouts, d.spawn_failures), (0, 0, 0));
+        let mut a = Counters {
+            retries: 2,
+            timeouts: 1,
+            ..Default::default()
+        };
+        let b = Counters {
+            retries: 3,
+            spawn_failures: 4,
+            ..Default::default()
+        };
+        a.accumulate(&b);
+        assert_eq!(a.retries, 5);
+        assert_eq!(a.timeouts, 1);
+        assert_eq!(a.spawn_failures, 4);
     }
 }

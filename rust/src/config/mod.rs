@@ -167,6 +167,126 @@ impl ImageCacheConfig {
     }
 }
 
+/// Chaos/fault-injection mode (see `cluster::chaos`). `Off` (the
+/// default) runs none of the chaos machinery — no RNG stream, no event
+/// interception — and is byte-identical to the seed path. The named
+/// presets compose a correlated fault schedule on top of the
+/// invocation-level faults that `Faults` enables alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosMode {
+    /// No fault injection (the seed path, bit for bit).
+    Off,
+    /// Invocation-level faults only: spawn failures, execution failures,
+    /// stragglers/timeouts — no scheduled node events.
+    Faults,
+    /// Failure storm: several overlapping node drains in a window, each
+    /// restored later, plus the invocation-level faults.
+    FailureStorm,
+    /// Rolling restart: staggered non-overlapping drain→restore waves
+    /// across the fleet, plus the invocation-level faults.
+    RollingRestart,
+    /// Flash crowd: the workload's Zipf popularity inverts mid-run
+    /// (head and tail functions swap), plus the invocation-level faults.
+    FlashCrowd,
+}
+
+impl ChaosMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChaosMode::Off => "off",
+            ChaosMode::Faults => "faults",
+            ChaosMode::FailureStorm => "failure-storm",
+            ChaosMode::RollingRestart => "rolling-restart",
+            ChaosMode::FlashCrowd => "flash-crowd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ChaosMode> {
+        match s {
+            "off" | "none" => Some(ChaosMode::Off),
+            "faults" | "on" => Some(ChaosMode::Faults),
+            "failure-storm" | "storm" => Some(ChaosMode::FailureStorm),
+            "rolling-restart" | "rolling" => Some(ChaosMode::RollingRestart),
+            "flash-crowd" | "flash" => Some(ChaosMode::FlashCrowd),
+        _ => None,
+        }
+    }
+
+    pub const ALL: [ChaosMode; 5] = [
+        ChaosMode::Off,
+        ChaosMode::Faults,
+        ChaosMode::FailureStorm,
+        ChaosMode::RollingRestart,
+        ChaosMode::FlashCrowd,
+    ];
+
+    /// The named scenario presets (everything but `Off`/`Faults`).
+    pub const PRESETS: [ChaosMode; 3] = [
+        ChaosMode::FailureStorm,
+        ChaosMode::RollingRestart,
+        ChaosMode::FlashCrowd,
+    ];
+
+    /// Whether the mode generates its own correlated node-drain schedule
+    /// (and so refuses to merge with hand-written `--fail-node` flags).
+    pub fn has_node_schedule(&self) -> bool {
+        matches!(self, ChaosMode::FailureStorm | ChaosMode::RollingRestart)
+    }
+}
+
+/// Chaos-engine parameters: the invocation-level fault probabilities and
+/// the retry/backoff/timeout policy bounding them. All knobs are inert
+/// under `ChaosMode::Off` — the engine is never even constructed then,
+/// so no RNG stream moves and no counter can tick.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosConfig {
+    pub mode: ChaosMode,
+    /// Probability a request-bound container spawn fails (the cold start
+    /// is torn down before the container ever becomes ready). Prewarms
+    /// are exempt: a failed prewarm is indistinguishable from a smaller
+    /// budget, so only request-bound spawns are interesting to fault.
+    pub spawn_fail_p: f64,
+    /// Probability an execution that ran to completion still fails (the
+    /// container worked, the result did not) — charged in resource-time
+    /// but not recorded as a completion; the request retries.
+    pub exec_fail_p: f64,
+    /// Probability an execution straggles: its duration stretches by
+    /// `straggler_factor`, bounded by the per-function timeout.
+    pub straggler_p: f64,
+    /// Multiplier applied to a straggling execution's duration.
+    pub straggler_factor: f64,
+    /// Max retries per request across all fault kinds; a request that
+    /// exhausts them is dropped (surfaces in `RunReport.dropped`).
+    pub max_retries: u32,
+    /// Base retry backoff; attempt `n` waits `backoff × 2^(n−1)`.
+    pub retry_backoff: Micros,
+    /// Per-function execution timeout as a multiple of `l_warm(f)`: an
+    /// execution still running at `start + factor × l_warm(f)` is killed
+    /// and retried.
+    pub timeout_factor: f64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            mode: ChaosMode::Off,
+            spawn_fail_p: 0.05,
+            exec_fail_p: 0.05,
+            straggler_p: 0.02,
+            straggler_factor: 12.0,
+            max_retries: 3,
+            retry_backoff: secs(1.0),
+            timeout_factor: 8.0,
+        }
+    }
+}
+
+impl ChaosConfig {
+    pub fn enabled(&self) -> bool {
+        self.mode != ChaosMode::Off
+    }
+}
+
 /// Placement policy used by the fleet's dispatch layer to pick an invoker
 /// node for each request (see `cluster::fleet::placement`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -253,6 +373,105 @@ pub fn parse_restore_spec(s: &str) -> Option<NodeRestore> {
     })
 }
 
+/// Parse a CLI failure spec `<node>@<seconds>` (e.g. `1@600`).
+pub fn parse_failure_spec(s: &str) -> Option<NodeFailure> {
+    let (node, at) = s.split_once('@')?;
+    let node: u32 = node.trim().parse().ok()?;
+    let at_s: f64 = at.trim().parse().ok()?;
+    (at_s.is_finite() && at_s >= 0.0).then(|| NodeFailure {
+        node,
+        at: secs(at_s),
+    })
+}
+
+/// Cross-validate a fault schedule against the fleet shape. Rejects:
+/// out-of-range node ids, any drain on a single-node fleet, events at or
+/// past `duration`, a restore with no preceding drain of the same node,
+/// two drains of one node without a restore in between (duplicate /
+/// overlapping windows), non-increasing event times on one node, and any
+/// instant where every node would be offline at once (the fleet refuses
+/// to drain its last survivor, so such a schedule could never execute).
+pub fn validate_fault_schedule(
+    failures: &[NodeFailure],
+    restores: &[NodeRestore],
+    nodes: u32,
+    duration: Micros,
+) -> Result<(), String> {
+    if !failures.is_empty() && nodes < 2 {
+        return Err("--fail-node requires --nodes >= 2 (a drain must leave a survivor)".into());
+    }
+    for f in failures {
+        if f.node >= nodes {
+            return Err(format!("--fail-node {}: node id out of range (nodes = {nodes})", f.node));
+        }
+        if f.at >= duration {
+            return Err(format!("--fail-node {}: time is at or past the run duration", f.node));
+        }
+    }
+    for r in restores {
+        if r.node >= nodes {
+            return Err(format!("--restore-node {}: node id out of range (nodes = {nodes})", r.node));
+        }
+        if r.at >= duration {
+            return Err(format!("--restore-node {}: time is at or past the run duration", r.node));
+        }
+    }
+    // Per-node timeline: events must strictly alternate drain → restore →
+    // drain …, starting with a drain, at strictly increasing times.
+    // (+1 = drain, -1 = restore; sort is stable so same-time conflicts on
+    // one node surface as a non-increasing step.)
+    let mut timeline: Vec<(Micros, u32, i32)> = failures
+        .iter()
+        .map(|f| (f.at, f.node, 1))
+        .chain(restores.iter().map(|r| (r.at, r.node, -1)))
+        .collect();
+    timeline.sort_by_key(|&(at, node, _)| (at, node));
+    let mut state = vec![0i32; nodes as usize];
+    let mut last_at = vec![None::<Micros>; nodes as usize];
+    let mut offline = 0u32;
+    for &(at, node, delta) in &timeline {
+        let n = node as usize;
+        if let Some(prev) = last_at[n] {
+            if at <= prev {
+                return Err(format!(
+                    "node {node}: fault events at {:.1}s and {:.1}s must be strictly ordered",
+                    prev as f64 / 1e6,
+                    at as f64 / 1e6
+                ));
+            }
+        }
+        last_at[n] = Some(at);
+        match (state[n], delta) {
+            (0, 1) => {
+                state[n] = 1;
+                offline += 1;
+            }
+            (1, -1) => {
+                state[n] = 0;
+                offline -= 1;
+            }
+            (1, 1) => {
+                return Err(format!(
+                    "node {node}: drained twice without a restore in between (overlapping windows)"
+                ));
+            }
+            _ => {
+                return Err(format!(
+                    "node {node}: restore at {:.1}s has no preceding drain",
+                    at as f64 / 1e6
+                ));
+            }
+        }
+        if offline >= nodes {
+            return Err(format!(
+                "at {:.1}s every node would be offline at once; leave at least one survivor",
+                at as f64 / 1e6
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// Cross-node container migration policy used by the fleet's rebalancing
 /// pass (see `cluster::fleet::migration`). `Off` (the default) skips the
 /// pass entirely, keeping runs bit-identical to the pre-elasticity code.
@@ -329,10 +548,12 @@ pub struct FleetConfig {
     /// than `nodes`); None = every node uses `PlatformConfig`'s cap.
     pub capacities: Option<Vec<u32>>,
     pub placement: PlacementPolicy,
-    /// Optional mid-run node outage scenario.
-    pub failure: Option<NodeFailure>,
-    /// Optional node restore/rejoin scenario (pairs with `failure`).
-    pub restore: Option<NodeRestore>,
+    /// Scheduled mid-run node outages (empty = no drains). Repeatable:
+    /// the single-failure scenario of earlier PRs is a one-element vec.
+    pub failures: Vec<NodeFailure>,
+    /// Scheduled node restores/rejoins (each pairs with an earlier drain
+    /// of the same node — see `validate_fault_schedule`).
+    pub restores: Vec<NodeRestore>,
     /// Cross-node container migration (rebalancing) parameters.
     pub migration: MigrationConfig,
 }
@@ -343,8 +564,8 @@ impl Default for FleetConfig {
             nodes: 1,
             capacities: None,
             placement: PlacementPolicy::WarmFirst,
-            failure: None,
-            restore: None,
+            failures: Vec::new(),
+            restores: Vec::new(),
             migration: MigrationConfig::default(),
         }
     }
@@ -604,6 +825,8 @@ impl Policy {
             _ => None,
         }
     }
+
+    pub const ALL: [Policy; 3] = [Policy::OpenWhisk, Policy::IceBreaker, Policy::Mpc];
 }
 
 /// Workload selection for experiments.
@@ -651,6 +874,10 @@ pub struct ExperimentConfig {
     /// `(time, seq)` merge — results are bit-identical either way (see
     /// `experiments::sharded`). Must be at least 1.
     pub threads: u32,
+    /// Chaos/fault-injection parameters (`--chaos`). `Off` (the default)
+    /// constructs none of the machinery and is byte-identical to the
+    /// seed path (see `cluster::chaos`).
+    pub chaos: ChaosConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -665,6 +892,7 @@ impl Default for ExperimentConfig {
             seed: 42,
             sample_interval: secs(60.0),
             threads: 1,
+            chaos: ChaosConfig::default(),
         }
     }
 }
@@ -687,6 +915,7 @@ impl ExperimentConfig {
             ("max_containers", Json::Num(self.platform.max_containers as f64)),
             ("keep_alive_s", Json::Num(to_secs(self.platform.keep_alive))),
             ("threads", Json::Num(self.threads as f64)),
+            ("chaos", Json::Str(self.chaos.mode.name().into())),
         ])
     }
 }
@@ -766,9 +995,9 @@ mod tests {
         assert_eq!(f.nodes, 1);
         assert!(f.capacities.is_none());
         assert_eq!(f.placement, PlacementPolicy::WarmFirst);
-        assert!(f.failure.is_none());
-        // elasticity is opt-in: no restore, no migration, no pressure term
-        assert!(f.restore.is_none());
+        assert!(f.failures.is_empty());
+        // elasticity is opt-in: no restores, no migration, no pressure term
+        assert!(f.restores.is_empty());
         assert_eq!(f.migration.policy, MigrationPolicy::Off);
         assert_eq!(f.migration.latency, secs(2.0));
         assert_eq!(f.migration.max_moves_per_step, 4);
@@ -832,6 +1061,145 @@ mod tests {
         assert_eq!(parse_restore_spec("1@900:"), None);
         assert_eq!(parse_restore_spec("1@900:abc"), None);
         assert_eq!(parse_restore_spec("1@900:-4"), None);
+    }
+
+    #[test]
+    fn failure_spec_parses_id_at_seconds() {
+        assert_eq!(
+            parse_failure_spec("1@600"),
+            Some(NodeFailure {
+                node: 1,
+                at: secs(600.0)
+            })
+        );
+        assert_eq!(parse_failure_spec("2"), None);
+        assert_eq!(parse_failure_spec("x@600"), None);
+        assert_eq!(parse_failure_spec("1@-5"), None);
+        assert_eq!(parse_failure_spec("1@nan"), None);
+    }
+
+    #[test]
+    fn chaos_mode_parse_and_names_roundtrip() {
+        for m in ChaosMode::ALL {
+            assert_eq!(ChaosMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ChaosMode::parse("on"), Some(ChaosMode::Faults));
+        assert_eq!(ChaosMode::parse("storm"), Some(ChaosMode::FailureStorm));
+        assert_eq!(ChaosMode::parse("none"), Some(ChaosMode::Off));
+        assert_eq!(ChaosMode::parse("nope"), None);
+        for p in ChaosMode::PRESETS {
+            assert_ne!(p, ChaosMode::Off);
+            assert_ne!(p, ChaosMode::Faults);
+        }
+    }
+
+    #[test]
+    fn chaos_defaults_are_off_and_inert() {
+        let ch = ExperimentConfig::default().chaos;
+        assert_eq!(ch.mode, ChaosMode::Off);
+        assert!(!ch.enabled());
+        assert_eq!(ch.spawn_fail_p, 0.05);
+        assert_eq!(ch.exec_fail_p, 0.05);
+        assert_eq!(ch.straggler_p, 0.02);
+        assert_eq!(ch.straggler_factor, 12.0);
+        assert_eq!(ch.max_retries, 3);
+        assert_eq!(ch.retry_backoff, secs(1.0));
+        assert_eq!(ch.timeout_factor, 8.0);
+        // the mode surfaces in the config JSON as a stable field
+        let j = ExperimentConfig::default().to_json();
+        assert_eq!(j.path("chaos").unwrap().as_str(), Some("off"));
+    }
+
+    #[test]
+    fn fault_schedule_validation_accepts_legal_timelines() {
+        let dur = secs(3600.0);
+        // empty schedule is always fine
+        assert!(validate_fault_schedule(&[], &[], 1, dur).is_ok());
+        // the legacy single drain + restore pair
+        let f = [NodeFailure { node: 1, at: secs(600.0) }];
+        let r = [NodeRestore { node: 1, at: secs(900.0), cap: None }];
+        assert!(validate_fault_schedule(&f, &r, 2, dur).is_ok());
+        // drain without restore (permanent outage) is fine
+        assert!(validate_fault_schedule(&f, &[], 2, dur).is_ok());
+        // overlapping drains of *different* nodes with a survivor are fine
+        let storm = [
+            NodeFailure { node: 1, at: secs(100.0) },
+            NodeFailure { node: 2, at: secs(110.0) },
+        ];
+        let back = [
+            NodeRestore { node: 1, at: secs(400.0), cap: None },
+            NodeRestore { node: 2, at: secs(410.0), cap: Some(32) },
+        ];
+        assert!(validate_fault_schedule(&storm, &back, 4, dur).is_ok());
+        // re-drain after a restore (rolling restart revisits a node)
+        let roll = [
+            NodeFailure { node: 1, at: secs(100.0) },
+            NodeFailure { node: 1, at: secs(500.0) },
+        ];
+        let up = [NodeRestore { node: 1, at: secs(200.0), cap: None }];
+        assert!(validate_fault_schedule(&roll, &up, 2, dur).is_ok());
+    }
+
+    #[test]
+    fn fault_schedule_validation_rejects_malformed_timelines() {
+        let dur = secs(3600.0);
+        let f1 = [NodeFailure { node: 1, at: secs(600.0) }];
+        // single-node fleet cannot drain its only node
+        assert!(validate_fault_schedule(&f1, &[], 1, dur).is_err());
+        // out-of-range ids
+        assert!(validate_fault_schedule(
+            &[NodeFailure { node: 9, at: secs(10.0) }],
+            &[],
+            2,
+            dur
+        )
+        .is_err());
+        assert!(validate_fault_schedule(
+            &[],
+            &[NodeRestore { node: 9, at: secs(10.0), cap: None }],
+            2,
+            dur
+        )
+        .is_err());
+        // events at or past the run end never fire
+        assert!(validate_fault_schedule(
+            &[NodeFailure { node: 1, at: dur }],
+            &[],
+            2,
+            dur
+        )
+        .is_err());
+        // restore before (or without) a drain
+        assert!(validate_fault_schedule(
+            &[],
+            &[NodeRestore { node: 1, at: secs(10.0), cap: None }],
+            2,
+            dur
+        )
+        .is_err());
+        assert!(validate_fault_schedule(
+            &f1,
+            &[NodeRestore { node: 1, at: secs(100.0), cap: None }],
+            2,
+            dur
+        )
+        .is_err());
+        // duplicate drain of one node without a restore in between
+        let dup = [
+            NodeFailure { node: 1, at: secs(100.0) },
+            NodeFailure { node: 1, at: secs(200.0) },
+        ];
+        assert!(validate_fault_schedule(&dup, &[], 2, dur).is_err());
+        // same-instant drain + restore on one node is ambiguous
+        let f = [NodeFailure { node: 1, at: secs(100.0) }];
+        let r = [NodeRestore { node: 1, at: secs(100.0), cap: None }];
+        assert!(validate_fault_schedule(&f, &r, 2, dur).is_err());
+        // both nodes of a 2-node fleet offline at once
+        let both = [
+            NodeFailure { node: 0, at: secs(100.0) },
+            NodeFailure { node: 1, at: secs(150.0) },
+        ];
+        assert!(validate_fault_schedule(&both, &[], 2, dur).is_err());
     }
 
     #[test]

@@ -96,6 +96,15 @@ pub struct MpcScheduler {
     /// doc). None = the startup-scaled bound stays fixed (the HLO path,
     /// and direct constructions that predate elasticity).
     live_capacity: Option<(u32, f64)>,
+    /// Graceful degradation under fault injection (chaos runs only):
+    /// floors the live-capacity `w_max` re-scaling at one replica-slot
+    /// (a storm that drains most of the fleet must clamp the plan, not
+    /// drive the solver into an infeasible zero-capacity corner), and
+    /// discounts per-function forecasts whose window-long history has
+    /// diverged from the recent regime (a flash crowd inverts popularity
+    /// faster than the Fourier window can forget). False (the default)
+    /// leaves every expression byte-identical to the seed path.
+    degradation: bool,
     /// Scratch: per-function idle snapshot for the dispatcher's drain
     /// (reused every call instead of allocating per arrival).
     idle_scratch: Vec<u32>,
@@ -110,6 +119,10 @@ pub struct MpcScheduler {
     pub forced_dispatches: u64,
     /// Event-triggered replans (unforecasted load spikes).
     pub emergency_replans: u64,
+    /// Stale-forecast discounts applied (degradation mode only): one per
+    /// (function, replan) whose window-long history was overridden by
+    /// the recent-regime mean.
+    pub stale_discounts: u64,
     last_solve_at: Option<Micros>,
 }
 
@@ -133,12 +146,14 @@ impl MpcScheduler {
             tenants: Vec::new(),
             retention: None,
             live_capacity: None,
+            degradation: false,
             idle_scratch: Vec::new(),
             rdy_scratch: Vec::new(),
             cold_scratch: Vec::new(),
             last_plan: None,
             forced_dispatches: 0,
             emergency_replans: 0,
+            stale_discounts: 0,
             last_solve_at: None,
         }
     }
@@ -151,6 +166,14 @@ impl MpcScheduler {
     /// f64 expression), smaller during a drain, restored on rejoin.
     pub fn with_live_capacity(mut self, node_cap: u32, base_w_max: f64) -> Self {
         self.live_capacity = Some((node_cap.max(1), base_w_max));
+        self
+    }
+
+    /// Enable graceful degradation for chaos runs (see the field doc):
+    /// the `w_max` clamp and the stale-forecast discount. A no-op with
+    /// `on == false`, keeping the `--chaos off` path byte-identical.
+    pub fn with_degradation(mut self, on: bool) -> Self {
+        self.degradation = on;
         self
     }
 
@@ -333,7 +356,14 @@ impl MpcScheduler {
         // f64 expression as the startup scaling, so a fully-online fleet
         // reproduces the startup bound bit-for-bit)
         if let Some((node_cap, base)) = self.live_capacity {
-            let w = base * (ctx.fleet.resource_cap() as f64 / node_cap as f64);
+            let mut w = base * (ctx.fleet.resource_cap() as f64 / node_cap as f64);
+            if self.degradation {
+                // a failure storm can drop the live capacity to a sliver
+                // of the planning pool; floor the bound at one slot so
+                // the solver clamps and replans on the survivors instead
+                // of chasing an infeasible zero-capacity plan
+                w = w.max(1.0);
+            }
             self.cc.weights.w_max = w;
             self.solver.set_w_max(w);
         }
@@ -481,6 +511,8 @@ impl MpcScheduler {
         let window = self.cc.window;
         let dt = self.cc.dt;
         let pressure = ctx.fleet.mem_pressure();
+        let degradation = self.degradation;
+        let mut stale = 0u64;
         let mut shares = Vec::with_capacity(self.tenants.len());
         let mut horizons = Vec::with_capacity(self.tenants.len());
         for (f, t) in self.tenants.iter_mut().enumerate() {
@@ -493,8 +525,15 @@ impl MpcScheduler {
             let pad = t.history.recent_mean(window);
             let hist = t.history.to_padded_vec(pad);
             let mut lam_f = t.forecaster.forecast(&hist, horizon);
-            let demand: f64 =
+            let mut demand: f64 =
                 lam_f.iter().take(lead).sum::<f64>() + t.arrivals_this_interval as f64;
+            if degradation {
+                let recent = t.history.recent_mean(STALE_RECENT_BINS);
+                if forecast_is_stale(recent, pad) {
+                    stale += 1;
+                    demand = recent * lead as f64 + t.arrivals_this_interval as f64;
+                }
+            }
             shares.push(demand.max(0.0));
             lam_f[0] += t.arrivals_this_interval as f64;
             let profile = ctx.fleet.profile(f as FunctionId);
@@ -502,6 +541,7 @@ impl MpcScheduler {
                 &lam_f, dt, profile, &ka, pressure, eff,
             ));
         }
+        self.stale_discounts += stale;
         (shares, horizons)
     }
 
@@ -516,7 +556,10 @@ impl MpcScheduler {
         let window = self.cc.window;
         let dt = self.cc.dt;
         let cold_steps = self.cc.cold_steps;
-        self.tenants
+        let degradation = self.degradation;
+        let mut stale = 0u64;
+        let shares = self
+            .tenants
             .iter_mut()
             .enumerate()
             .map(|(f, t)| {
@@ -529,12 +572,41 @@ impl MpcScheduler {
                 let pad = t.history.recent_mean(window);
                 let hist = t.history.to_padded_vec(pad);
                 let lam = t.forecaster.forecast(&hist, horizon);
-                let demand: f64 =
+                let mut demand: f64 =
                     lam.iter().take(lead).sum::<f64>() + t.arrivals_this_interval as f64;
+                if degradation {
+                    let recent = t.history.recent_mean(STALE_RECENT_BINS);
+                    let full = t.history.recent_mean(window);
+                    if forecast_is_stale(recent, full) {
+                        stale += 1;
+                        demand = recent * lead as f64 + t.arrivals_this_interval as f64;
+                    }
+                }
                 demand.max(0.0)
             })
-            .collect()
+            .collect();
+        self.stale_discounts += stale;
+        shares
     }
+}
+
+/// Bins of the short "recent regime" window the stale-forecast guard
+/// compares against the full history window.
+const STALE_RECENT_BINS: usize = 4;
+
+/// Divergence factor between the recent-regime mean and the window-long
+/// mean beyond which the full-window Fourier forecast is considered
+/// stale (degradation mode only).
+const STALE_DIVERGENCE: f64 = 4.0;
+
+/// True when one mean dwarfs the other by [`STALE_DIVERGENCE`] — the
+/// signature of an abrupt popularity shift (a flash crowd inverting the
+/// Zipf head/tail) that the window-long history cannot reflect yet. The
+/// `> 1.0` floor keeps near-zero-rate noise from triggering it.
+fn forecast_is_stale(recent: f64, full: f64) -> bool {
+    let hi = recent.max(full);
+    let lo = recent.min(full);
+    hi.is_finite() && hi > 1.0 && hi > lo * STALE_DIVERGENCE
 }
 
 impl Scheduler for MpcScheduler {
@@ -753,6 +825,91 @@ mod tests {
             sched.on_control_tick(&mut ctx);
         }
         assert_eq!(sched.cc.weights.w_max, base * 4.0);
+    }
+
+    #[test]
+    fn degradation_floors_the_live_capacity_bound() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.fleet.nodes = 4;
+        let cc = cfg.controller.clone();
+        let node_cap = cfg.platform.resource_cap();
+        // base chosen so a 3-node storm drives the re-scaled bound well
+        // below one slot: 0.3 × 1 node online = 0.3
+        for (on, expect) in [(false, 0.3), (true, 1.0)] {
+            let mut sched = MpcScheduler::new(
+                cc.clone(),
+                Box::new(FourierForecaster::default()),
+                Box::new(RustSolver::new(Weights::default(), 20, cc.cold_steps)),
+            )
+            .with_live_capacity(node_cap, 0.3)
+            .with_degradation(on);
+            let mut fleet = Fleet::new(&cfg.fleet, &cfg.platform, 7);
+            fleet.fail_node(1, 1_000_000);
+            fleet.fail_node(2, 1_000_000);
+            fleet.fail_node(3, 1_000_000);
+            let mut events = EventQueue::new();
+            let mut rec = Recorder::new(4);
+            let mut ctx = Ctx {
+                now: 30_000_000,
+                fleet: &mut fleet,
+                events: &mut events,
+                recorder: &mut rec,
+                cfg: &cfg,
+            };
+            sched.on_control_tick(&mut ctx);
+            assert_eq!(sched.cc.weights.w_max, expect);
+        }
+    }
+
+    #[test]
+    fn stale_forecast_detection_requires_large_divergence() {
+        assert!(forecast_is_stale(8.0, 1.0)); // surging flash head
+        assert!(forecast_is_stale(0.0, 5.0)); // collapsed flash tail
+        assert!(!forecast_is_stale(3.0, 2.0)); // ordinary drift
+        assert!(!forecast_is_stale(0.9, 0.1)); // near-zero noise floor
+        assert!(!forecast_is_stale(0.0, 0.0));
+        assert!(!forecast_is_stale(f64::NAN, 1.0));
+    }
+
+    #[test]
+    fn stale_histories_are_discounted_to_the_recent_regime() {
+        let cfg = ExperimentConfig::default();
+        let cc = cfg.controller.clone();
+        let window = cc.window;
+        let mut sched = MpcScheduler::new(
+            cc.clone(),
+            Box::new(FourierForecaster::default()),
+            Box::new(RustSolver::new(Weights::default(), 60, cc.cold_steps)),
+        )
+        .with_functions(2)
+        .with_degradation(true);
+        let registry = crate::workload::FunctionRegistry::synthesize(2, 1.1, &cfg.platform, 7);
+        let mut fleet = Fleet::with_registry(&cfg.fleet, &cfg.platform, &registry, 7);
+        // function 0: long-quiet history, sudden surge (a new flash head)
+        for _ in 0..window.saturating_sub(STALE_RECENT_BINS) {
+            sched.tenants[0].history.push(0.0);
+        }
+        for _ in 0..STALE_RECENT_BINS {
+            sched.tenants[0].history.push(20.0);
+        }
+        // function 1: steady traffic — its forecast stays authoritative
+        for _ in 0..window {
+            sched.tenants[1].history.push(5.0);
+        }
+        let mut events = EventQueue::new();
+        let mut rec = Recorder::new(4);
+        let ctx = Ctx {
+            now: 0,
+            fleet: &mut fleet,
+            events: &mut events,
+            recorder: &mut rec,
+            cfg: &cfg,
+        };
+        let shares = sched.tenant_shares(&ctx);
+        assert_eq!(sched.stale_discounts, 1, "exactly the surged function discounts");
+        // the discounted share tracks the recent 20 req/interval regime,
+        // not the near-zero window mean the Fourier fit would produce
+        assert!(shares[0] > shares[1], "the flash head must out-demand steady traffic");
     }
 
     #[test]

@@ -39,8 +39,15 @@ pub enum Ev {
     KeepAlive(NodeId, ContainerId),
     /// Invoker node goes offline (drain scenario).
     NodeFail(NodeId),
-    /// A drained invoker node rejoins the fleet, cold (restore scenario).
-    NodeRestore(NodeId),
+    /// A drained invoker node rejoins the fleet, cold (restore
+    /// scenario). Carries the optional replica-cap override so multiple
+    /// scheduled restores need no side-channel config lookup.
+    NodeRestore(NodeId, Option<u32>),
+    /// A chaos-faulted request's backoff elapsed: redispatch it.
+    ChaosRetry(RequestId),
+    /// A chaos-straggling execution hit its per-function deadline: kill
+    /// the container and retry the request.
+    ChaosTimeout(NodeId, ContainerId),
 }
 
 /// Everything a policy may touch while handling an event. Provides the
@@ -73,11 +80,21 @@ impl Ctx<'_> {
         let (node, outcome) = self.fleet.invoke_for(req, func, self.now);
         match outcome {
             InvokeOutcome::WarmStart { cid, done_at } => {
-                self.events.push(done_at, Ev::Done(node, cid));
+                self.push_exec(node, cid, req, done_at);
             }
             InvokeOutcome::ColdStart { cid, ready_at } => {
-                self.recorder.on_cold(req);
-                self.events.push(ready_at, Ev::Ready(node, cid));
+                if self.fleet.chaos_spawn_fails() {
+                    // the spawn was attempted (the platform already
+                    // counted the cold start and consumed its jitter
+                    // roll) but the container dies before ready; the
+                    // request's cold flag reflects its eventual
+                    // successful attempt, so on_cold is skipped here
+                    self.fleet.abort_spawn(node, cid, self.now);
+                    self.chaos_retry_or_drop(req, node);
+                } else {
+                    self.recorder.on_cold(req);
+                    self.events.push(ready_at, Ev::Ready(node, cid));
+                }
             }
             InvokeOutcome::AtCapacity => {
                 // node-local FCFS backlog; completion events flow from the
@@ -85,6 +102,34 @@ impl Ctx<'_> {
             }
         }
         outcome
+    }
+
+    /// Schedule the completion of an execution that just started on
+    /// `(node, cid)`, letting the chaos engine stretch it (straggler) or
+    /// bound it at the per-function timeout. With chaos off this is
+    /// exactly `events.push(done_at, Done(node, cid))`.
+    pub fn push_exec(&mut self, node: NodeId, cid: ContainerId, req: RequestId, done_at: Micros) {
+        use crate::cluster::chaos::ExecFate;
+        let func = self.recorder.func_of(req);
+        match self.fleet.chaos_exec_fate(func, self.now, done_at) {
+            ExecFate::Normal => self.events.push(done_at, Ev::Done(node, cid)),
+            ExecFate::Stretched(late) => self.events.push(late, Ev::Done(node, cid)),
+            ExecFate::TimedOut(deadline) => {
+                self.events.push(deadline, Ev::ChaosTimeout(node, cid))
+            }
+        }
+    }
+
+    /// A chaos fault hit `req` on `node`: schedule its retry after the
+    /// policy backoff, or drop it when the budget is exhausted (the
+    /// request then never completes and surfaces in `RunReport.dropped`).
+    pub fn chaos_retry_or_drop(&mut self, req: RequestId, node: NodeId) {
+        let Some(backoff) = self.fleet.chaos_retry_decision(req) else {
+            return;
+        };
+        self.fleet.charge_retry(node);
+        self.events
+            .push(self.now + backoff, Ev::ChaosRetry(req));
     }
 
     /// Prewarm actuator (Listing 1) for function 0 — the single-tenant

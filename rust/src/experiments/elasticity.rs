@@ -71,15 +71,15 @@ pub fn cell_config(p: &ElasticityParams, migration: MigrationPolicy) -> Experime
         fleet: FleetConfig {
             nodes: p.nodes,
             placement: p.placement,
-            failure: Some(NodeFailure {
+            failures: vec![NodeFailure {
                 node: p.fail_node,
                 at: secs(p.fail_at_s),
-            }),
-            restore: Some(NodeRestore {
+            }],
+            restores: vec![NodeRestore {
                 node: p.fail_node,
                 at: secs(p.restore_at_s),
                 cap: None,
-            }),
+            }],
             migration: MigrationConfig {
                 policy: migration,
                 latency: secs(p.migration_latency_s),
@@ -191,8 +191,8 @@ mod tests {
     fn cell_config_schedules_fail_and_restore() {
         let p = quick();
         let cfg = cell_config(&p, MigrationPolicy::DemandGap);
-        let f = cfg.fleet.failure.unwrap();
-        let r = cfg.fleet.restore.unwrap();
+        let f = cfg.fleet.failures[0];
+        let r = cfg.fleet.restores[0];
         assert_eq!(f.node, r.node);
         assert!(f.at < r.at, "restore must come after the drain");
         assert_eq!(cfg.fleet.migration.policy, MigrationPolicy::DemandGap);

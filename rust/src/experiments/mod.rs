@@ -4,6 +4,7 @@
 
 pub mod ablations;
 pub mod cache;
+pub mod chaos;
 pub mod elasticity;
 pub mod fig1;
 pub mod fig4;

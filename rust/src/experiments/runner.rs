@@ -10,6 +10,7 @@
 //! redispatches its lost work through the placement layer.
 
 use crate::baselines::{IceBreaker, OpenWhiskDefault};
+use crate::cluster::chaos::{self, ChaosEngine};
 use crate::cluster::fleet::Fleet;
 use crate::cluster::platform::{CompleteOutcome, KeepAliveVerdict, ReadyOutcome};
 use crate::config::{secs, to_secs, ExperimentConfig, Micros, Policy};
@@ -75,7 +76,11 @@ pub fn make_scheduler(cfg: &ExperimentConfig, policy: Policy) -> Box<dyn Schedul
             // adaptive keep-alive rides the MPC control loop (a no-op
             // under the default fixed policy); the reactive baselines
             // keep their profile windows
-            .with_keepalive(cc.keepalive),
+            .with_keepalive(cc.keepalive)
+            // graceful degradation (chaos runs only): floor the live
+            // pool bound during storms and discount stale forecasts
+            // after flash crowds
+            .with_degradation(cfg.chaos.enabled()),
         ),
     }
 }
@@ -109,6 +114,17 @@ pub fn run_tenant_with_scheduler(
     mut sched: Box<dyn Scheduler>,
     workload: &TenantWorkload,
 ) -> RunReport {
+    // chaos: a flash-crowd run remaps the workload up front (the Zipf
+    // inversion is a property of the workload, not of the event loop) —
+    // with any other mode, including off, the borrow passes through
+    let flashed;
+    let workload = match chaos::flash_window(cfg) {
+        Some(win) => {
+            flashed = chaos::apply_flash(workload, win);
+            &flashed
+        }
+        None => workload,
+    };
     // the legacy single-platform seed; node 0 receives it unchanged so a
     // one-node fleet reproduces the pre-fleet metrics exactly
     let mut fleet = Fleet::with_registry(
@@ -117,6 +133,11 @@ pub fn run_tenant_with_scheduler(
         &workload.registry,
         cfg.seed ^ 0x9_1A7F0,
     );
+    if cfg.chaos.enabled() {
+        // the engine's salted RNG stream exists only on chaos runs, so
+        // the seed path never draws from it (byte-identity off-path)
+        fleet.set_chaos(ChaosEngine::new(cfg.chaos, cfg.seed, &workload.registry));
+    }
     let mut events: EventQueue<Ev> = EventQueue::new();
     let mut recorder = Recorder::new(workload.len());
     let wall_start = std::time::Instant::now();
@@ -128,11 +149,14 @@ pub fn run_tenant_with_scheduler(
         events.push(dt, Ev::Control);
     }
     events.push(cfg.sample_interval, Ev::Sample);
-    if let Some(f) = cfg.fleet.failure {
+    // node-fault timeline: the explicit --fail-node/--restore-node
+    // schedule plus whatever the chaos preset derives (empty for off)
+    let (preset_failures, preset_restores) = chaos::schedule_for(cfg);
+    for f in cfg.fleet.failures.iter().chain(preset_failures.iter()) {
         events.push(f.at, Ev::NodeFail(f.node));
     }
-    if let Some(r) = cfg.fleet.restore {
-        events.push(r.at, Ev::NodeRestore(r.node));
+    for r in cfg.fleet.restores.iter().chain(preset_restores.iter()) {
+        events.push(r.at, Ev::NodeRestore(r.node, r.cap));
     }
 
     let cutoff = cfg.duration + grace();
@@ -216,8 +240,15 @@ pub(crate) fn step(
             sched.on_arrival(req, &mut ctx);
         }
         Ev::Ready(node, cid) => match fleet.container_ready(node, cid, now) {
-            Some(ReadyOutcome::Started { done_at, .. }) => {
-                events.push(done_at, Ev::Done(node, cid));
+            Some(ReadyOutcome::Started { request, done_at }) => {
+                let mut ctx = Ctx {
+                    now,
+                    fleet: &mut *fleet,
+                    events: &mut *events,
+                    recorder: &mut *recorder,
+                    cfg,
+                };
+                ctx.push_exec(node, cid, request, done_at);
             }
             Some(ReadyOutcome::Idle) => {
                 let mut ctx = Ctx {
@@ -233,11 +264,31 @@ pub(crate) fn step(
             Some(ReadyOutcome::Respawned { req, cid: ncid, ready_at }) => {
                 // multi-tenant recycle: the container was traded for a
                 // cold start bound to a stranded foreign-function
-                // waiter, which therefore pays that cold start
-                recorder.on_cold(req);
-                events.push(ready_at, Ev::Ready(node, ncid));
+                // waiter, which therefore pays that cold start — and,
+                // being a request-bound spawn, rolls the chaos spawn
+                // fault like any other
+                let mut ctx = Ctx {
+                    now,
+                    fleet: &mut *fleet,
+                    events: &mut *events,
+                    recorder: &mut *recorder,
+                    cfg,
+                };
+                if ctx.fleet.chaos_spawn_fails() {
+                    ctx.fleet.abort_spawn(node, ncid, now);
+                    ctx.chaos_retry_or_drop(req, node);
+                } else {
+                    ctx.recorder.on_cold(req);
+                    ctx.events.push(ready_at, Ev::Ready(node, ncid));
+                }
             }
-            None => {} // node went offline; stale event
+            None => {
+                // stale event: the node drained, or chaos killed the
+                // container first — structurally dropped, never a panic
+                crate::log_debug!(
+                    "stale Ready dropped: node {node} container {cid} at t={now}us"
+                );
+            }
         },
         Ev::Done(node, cid) => match fleet.exec_complete(node, cid, now) {
             Some(CompleteOutcome {
@@ -245,29 +296,46 @@ pub(crate) fn step(
                 next,
                 respawn,
             }) => {
-                recorder.on_complete(completed, now);
+                let mut ctx = Ctx {
+                    now,
+                    fleet: &mut *fleet,
+                    events: &mut *events,
+                    recorder: &mut *recorder,
+                    cfg,
+                };
+                if ctx.fleet.chaos_exec_fails() {
+                    // execution-level fault: the container ran (and goes
+                    // idle normally, its resource-time charged) but the
+                    // result failed — the request retries instead of
+                    // completing
+                    ctx.chaos_retry_or_drop(completed, node);
+                } else {
+                    ctx.recorder.on_complete(completed, now);
+                }
                 match (next, respawn) {
-                    (Some((_req, done_at)), _) => {
-                        events.push(done_at, Ev::Done(node, cid))
+                    (Some((req, done_at)), _) => {
+                        ctx.push_exec(node, cid, req, done_at);
                     }
                     (None, Some((rreq, ncid, ready_at))) => {
-                        recorder.on_cold(rreq);
-                        events.push(ready_at, Ev::Ready(node, ncid));
+                        if ctx.fleet.chaos_spawn_fails() {
+                            ctx.fleet.abort_spawn(node, ncid, now);
+                            ctx.chaos_retry_or_drop(rreq, node);
+                        } else {
+                            ctx.recorder.on_cold(rreq);
+                            ctx.events.push(ready_at, Ev::Ready(node, ncid));
+                        }
                     }
                     (None, None) => {
-                        let mut ctx = Ctx {
-                            now,
-                            fleet: &mut *fleet,
-                            events: &mut *events,
-                            recorder: &mut *recorder,
-                            cfg,
-                        };
                         ctx.schedule_keepalive(node, cid);
                         sched.on_idle_capacity(&mut ctx);
                     }
                 }
             }
-            None => {} // node went offline; stale event
+            None => {
+                crate::log_debug!(
+                    "stale Done dropped: node {node} container {cid} at t={now}us"
+                );
+            }
         },
         Ev::Control => {
             let mut ctx = Ctx {
@@ -309,17 +377,48 @@ pub(crate) fn step(
                 ctx.dispatch(req);
             }
         }
-        Ev::NodeRestore(node) => {
+        Ev::NodeRestore(node, cap) => {
             // rejoin scenario: the node comes back cold; placement
             // sees it immediately, and the MPC's live-capacity
             // re-scaling grows the prewarm budget back at its next
             // control step (which is when the node starts reabsorbing
             // load through prewarms and spill placement). A capacity
             // suffix on the restore spec rebinds the node's replica
-            // cap (heterogeneous replacement hardware).
-            let cap = cfg.fleet.restore.and_then(|r| r.cap);
+            // cap (heterogeneous replacement hardware); the event
+            // carries it so repeated restores need no config lookup.
             fleet.restore_node(node, now, cap);
         }
+        Ev::ChaosRetry(req) => {
+            // a faulted request's backoff elapsed: redispatch through
+            // the placement layer like a fresh submission (its latency
+            // clock still runs from the original arrival)
+            let mut ctx = Ctx {
+                now,
+                fleet: &mut *fleet,
+                events: &mut *events,
+                recorder: &mut *recorder,
+                cfg,
+            };
+            ctx.dispatch(req);
+        }
+        Ev::ChaosTimeout(node, cid) => match fleet.abort_exec(node, cid, now) {
+            Some(req) => {
+                // straggler killed at its deadline; the request retries
+                let mut ctx = Ctx {
+                    now,
+                    fleet: &mut *fleet,
+                    events: &mut *events,
+                    recorder: &mut *recorder,
+                    cfg,
+                };
+                ctx.chaos_retry_or_drop(req, node);
+            }
+            None => {
+                crate::log_debug!(
+                    "stale ChaosTimeout dropped: node {node} container {cid} at t={now}us"
+                );
+            }
+        },
     }
 }
 
@@ -436,10 +535,10 @@ mod tests {
         let mut cfg = quick_cfg(120.0);
         cfg.fleet.nodes = 4;
         cfg.fleet.placement = PlacementPolicy::RoundRobin;
-        cfg.fleet.failure = Some(NodeFailure {
+        cfg.fleet.failures = vec![NodeFailure {
             node: 1,
             at: secs(40.0),
-        });
+        }];
         for policy in [Policy::OpenWhisk, Policy::Mpc] {
             let report = run_experiment(&cfg, policy, &steady_trace());
             assert_eq!(report.dropped, 0, "{}: {report:?}", report.policy);

@@ -57,7 +57,16 @@ use crate::workload::TenantWorkload;
 fn node_of(ev: &Ev) -> Option<NodeId> {
     match *ev {
         Ev::Ready(n, _) | Ev::Done(n, _) | Ev::KeepAlive(n, _) => Some(n),
-        Ev::Arrival(_) | Ev::Control | Ev::Sample | Ev::NodeFail(_) | Ev::NodeRestore(_) => None,
+        // ChaosTimeout names a node, but its abort feeds the retry
+        // dispatcher (cross-node placement), so it stays global — moot in
+        // practice: chaos forces min_spawn_delay to 0 (sequential path).
+        Ev::Arrival(_)
+        | Ev::Control
+        | Ev::Sample
+        | Ev::NodeFail(_)
+        | Ev::NodeRestore(_, _)
+        | Ev::ChaosRetry(_)
+        | Ev::ChaosTimeout(_, _) => None,
     }
 }
 
@@ -69,6 +78,13 @@ fn node_of(ev: &Ev) -> Option<NodeId> {
 /// override it can install), scaled by the worst-case downward jitter
 /// with a 2 µs rounding guard. Zero means "never batch".
 pub fn min_spawn_delay(cfg: &ExperimentConfig, registry: &FunctionRegistry) -> Micros {
+    if cfg.chaos.enabled() {
+        // chaos couples node-local handlers to global state (spawn/exec
+        // fault rolls advance one shared RNG stream, and retries re-enter
+        // cross-node placement), so shard isolation no longer holds —
+        // chaos runs always take the sequential stepper
+        return 0;
+    }
     let mut bound = cfg.platform.keep_alive;
     for p in registry.profiles() {
         bound = bound.min(p.l_warm);
@@ -372,7 +388,13 @@ fn handle(
             }
             KeepAliveVerdict::Expired | KeepAliveVerdict::NotApplicable => {}
         },
-        Ev::Arrival(_) | Ev::Control | Ev::Sample | Ev::NodeFail(_) | Ev::NodeRestore(_) => {
+        Ev::Arrival(_)
+        | Ev::Control
+        | Ev::Sample
+        | Ev::NodeFail(_)
+        | Ev::NodeRestore(_, _)
+        | Ev::ChaosRetry(_)
+        | Ev::ChaosTimeout(_, _) => {
             unreachable!("global events never enter a shard batch")
         }
     }
@@ -497,7 +519,9 @@ mod tests {
         assert_eq!(node_of(&Ev::Control), None);
         assert_eq!(node_of(&Ev::Sample), None);
         assert_eq!(node_of(&Ev::NodeFail(1)), None);
-        assert_eq!(node_of(&Ev::NodeRestore(1)), None);
+        assert_eq!(node_of(&Ev::NodeRestore(1, None)), None);
+        assert_eq!(node_of(&Ev::ChaosRetry(0)), None);
+        assert_eq!(node_of(&Ev::ChaosTimeout(1, 2)), None);
     }
 
     /// The whole engine against the sequential loop on a real workload —

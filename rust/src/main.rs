@@ -9,6 +9,8 @@
 //!   elasticity-sweep  drain → rejoin scenario swept across migration policies
 //!   keepalive-sweep   fixed vs adaptive retention; resource-time vs P99 frontier
 //!   cache-sweep       image-cache capacity ladder vs the constant-L_cold baseline
+//!   scenario     run one chaos preset (failure-storm | rolling-restart | flash-crowd) under one policy
+//!   chaos-sweep  every chaos preset x every policy; retry/timeout/drop telemetry
 //!   bench-throughput  sweep nodes x functions x load, report simulator events/sec (BENCH JSON)
 //!   forecast     Fig. 4 forecast comparison
 //!   overhead     Fig. 8 control overhead (rust mirror + HLO if available)
@@ -18,11 +20,13 @@
 //! The full flag-by-flag reference lives in README.md ("CLI reference").
 
 use mpc_serverless::config::{
-    parse_restore_spec, secs, ExperimentConfig, FleetConfig, ImageCacheConfig, ImageCacheMode,
-    KeepAliveConfig, KeepAlivePolicy, MigrationConfig, MigrationPolicy, NodeFailure,
-    PlacementPolicy, Policy, TenantConfig, TraceKind,
+    parse_failure_spec, parse_restore_spec, secs, validate_fault_schedule, ChaosConfig, ChaosMode,
+    ExperimentConfig, FleetConfig, ImageCacheConfig, ImageCacheMode, KeepAliveConfig,
+    KeepAlivePolicy, MigrationConfig, MigrationPolicy, NodeFailure, NodeRestore, PlacementPolicy,
+    Policy, TenantConfig, TraceKind,
 };
 use mpc_serverless::experiments::cache::{self, CacheParams};
+use mpc_serverless::experiments::chaos::{self as chaos_exp, ScenarioParams};
 use mpc_serverless::experiments::elasticity::{self, ElasticityParams};
 use mpc_serverless::experiments::keepalive::{self, KeepAliveParams};
 use mpc_serverless::experiments::tenant::run_tenant_matrix;
@@ -45,6 +49,8 @@ fn main() {
         "elasticity-sweep" => elasticity_sweep(&rest),
         "keepalive-sweep" => keepalive_sweep(&rest),
         "cache-sweep" => cache_sweep(&rest),
+        "scenario" => scenario(&rest),
+        "chaos-sweep" => chaos_sweep(&rest),
         "bench-throughput" => bench_throughput(&rest),
         "forecast" => forecast(&rest),
         "overhead" => overhead(),
@@ -56,7 +62,7 @@ fn main() {
         }
         "gen-trace" => gen_trace(&rest),
         _ => {
-            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|elasticity-sweep|keepalive-sweep|cache-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
+            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|elasticity-sweep|keepalive-sweep|cache-sweep|scenario|chaos-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
                       mpc_serverless::version());
             if cmd == "help" { 0 } else { 2 }
         }
@@ -109,9 +115,17 @@ fn simulate(rest: &[String]) -> i32 {
         .flag("functions", "1", "distinct functions sharing the fleet (1 = legacy single-tenant)")
         .flag("skew", "zipf:1.1", "function popularity: zipf:<s> | uniform")
         .flag("trace-file", "", "replay an arrival CSV (overrides --trace)")
-        .flag("fail-node", "", "node id to take offline mid-run (drain scenario)")
-        .flag("fail-at-s", "600", "outage time for --fail-node (seconds)")
-        .flag("restore-node", "", "rejoin a drained node: <id>@<seconds>[:cap], e.g. 1@900 or 1@900:8 (needs --fail-node)")
+        .multi_flag("fail-node", "drain a node mid-run: <id>@<seconds> (or a bare <id>, at --fail-at-s)")
+        .flag("fail-at-s", "600", "outage time for bare --fail-node ids (seconds)")
+        .multi_flag("restore-node", "rejoin a drained node: <id>@<seconds>[:cap], e.g. 1@900 or 1@900:8")
+        .flag("chaos", "off", "fault injection: off | faults | failure-storm | rolling-restart | flash-crowd")
+        .flag("chaos-spawn-fail-p", "0.05", "probability a request-bound container spawn fails")
+        .flag("chaos-exec-fail-p", "0.05", "probability a completed execution still fails and retries")
+        .flag("chaos-straggler-p", "0.02", "probability an execution straggles (duration stretches)")
+        .flag("chaos-straggler-factor", "12", "duration multiplier for straggling executions")
+        .flag("chaos-max-retries", "3", "retry budget per request across all fault kinds")
+        .flag("chaos-retry-backoff-s", "1", "base retry backoff; attempt n waits backoff x 2^(n-1)")
+        .flag("chaos-timeout-factor", "8", "per-function execution timeout as a multiple of L_warm")
         .flag("migration", "off", "cross-node rebalancing: off | demand-gap | idle-spread")
         .flag("migration-latency-s", "2", "warm-state transfer latency (seconds)")
         .flag("reclaim-pressure", "0", "memory-pressure weight in the fleet reclaim ranking (0 = off)")
@@ -146,61 +160,59 @@ fn simulate(rest: &[String]) -> i32 {
             return 2;
         }
     };
-    // a drain that cannot happen must be an error, not a silent healthy
-    // run masquerading as a resilience measurement
-    let mut failure: Option<NodeFailure> = None;
-    if !a.get("fail-node").is_empty() {
-        let node = match a.get_u64("fail-node") {
-            Ok(n) => n as u32,
-            Err(e) => {
-                eprintln!("{e}");
-                return 2;
+    // fault schedule: each --fail-node is <id>@<seconds> (or a bare <id>
+    // taking its time from --fail-at-s, the legacy single-drain form),
+    // each --restore-node is <id>@<seconds>[:cap]; the merged schedule is
+    // cross-validated against the fleet shape and run duration below,
+    // once the duration is final
+    let mut failures: Vec<NodeFailure> = Vec::new();
+    for spec in a.get_all("fail-node") {
+        let f = if spec.contains('@') {
+            parse_failure_spec(spec)
+        } else {
+            match (spec.trim().parse::<u32>(), a.get_f64("fail-at-s")) {
+                (Ok(node), Ok(t)) if t.is_finite() && t >= 0.0 => {
+                    Some(NodeFailure { node, at: secs(t) })
+                }
+                _ => None,
             }
         };
-        let at = match a.get_f64("fail-at-s") {
-            Ok(t) => secs(t),
-            Err(e) => {
-                eprintln!("{e}");
+        match f {
+            Some(f) => failures.push(f),
+            None => {
+                eprintln!("bad --fail-node '{spec}' (expected <id>@<seconds> or a bare <id>)");
                 return 2;
             }
-        };
-        if node >= fleet.nodes {
-            eprintln!("--fail-node {node} out of range for --nodes {}", fleet.nodes);
-            return 2;
         }
-        if fleet.nodes < 2 {
-            eprintln!("--fail-node needs --nodes >= 2 (the fleet must keep serving)");
-            return 2;
-        }
-        failure = Some(NodeFailure { node, at });
     }
-    // restore/rejoin: only meaningful against a scheduled drain of the
-    // same node, strictly after it
-    if !a.get("restore-node").is_empty() {
-        let Some(restore) = parse_restore_spec(a.get("restore-node")) else {
-            eprintln!(
-                "bad --restore-node '{}' (expected <id>@<seconds>[:cap], e.g. 1@900 or 1@900:8)",
-                a.get("restore-node")
-            );
-            return 2;
-        };
-        let Some(f) = failure else {
-            eprintln!("--restore-node needs --fail-node (nothing is drained otherwise)");
-            return 2;
-        };
-        if restore.node != f.node {
-            eprintln!(
-                "--restore-node {} does not match --fail-node {}",
-                restore.node, f.node
-            );
+    let mut restores: Vec<NodeRestore> = Vec::new();
+    for spec in a.get_all("restore-node") {
+        match parse_restore_spec(spec) {
+            Some(r) => restores.push(r),
+            None => {
+                eprintln!(
+                    "bad --restore-node '{spec}' (expected <id>@<seconds>[:cap], e.g. 1@900 or 1@900:8)"
+                );
+                return 2;
+            }
+        }
+    }
+    let chaos = match parse_chaos_flags(&a) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
             return 2;
         }
-        if restore.at <= f.at {
-            eprintln!("--restore-node must rejoin strictly after the drain at {:.0} s",
-                      f.at as f64 / 1e6);
-            return 2;
-        }
-        fleet.restore = Some(restore);
+    };
+    // the storm/rolling presets schedule their own drains; merging them
+    // with a hand-written schedule would need cross-validation against
+    // generated times the user cannot see — refuse the combination
+    if chaos.mode.has_node_schedule() && (!failures.is_empty() || !restores.is_empty()) {
+        eprintln!(
+            "--chaos {} schedules its own node drains; drop --fail-node/--restore-node (or use --chaos faults)",
+            chaos.mode.name()
+        );
+        return 2;
     }
     let migration_policy = match MigrationPolicy::parse(a.get("migration")) {
         Some(p) => p,
@@ -304,29 +316,15 @@ fn simulate(rest: &[String]) -> i32 {
     if let Some(t) = &trace {
         duration = duration.max(t.duration());
     }
-    if let Some(f) = failure {
-        // an outage scheduled past the end would silently never fire
-        if f.at >= duration {
-            eprintln!(
-                "--fail-at-s {:.0} is at/after the run end ({:.0} s); the drain would never happen",
-                f.at as f64 / 1e6,
-                duration as f64 / 1e6
-            );
-            return 2;
-        }
-        fleet.failure = failure;
+    // the merged schedule must be executable: in-range ids, a surviving
+    // node, strictly alternating drain -> restore per node, nothing at
+    // or past the (now final) run end
+    if let Err(e) = validate_fault_schedule(&failures, &restores, fleet.nodes, duration) {
+        eprintln!("{e}");
+        return 2;
     }
-    if let Some(r) = fleet.restore {
-        // a rejoin scheduled past the end would silently never happen
-        if r.at >= duration {
-            eprintln!(
-                "--restore-node at {:.0} s is at/after the run end ({:.0} s); the rejoin would never happen",
-                r.at as f64 / 1e6,
-                duration as f64 / 1e6
-            );
-            return 2;
-        }
-    }
+    fleet.failures = failures;
+    fleet.restores = restores;
     let mut cfg = ExperimentConfig {
         trace: trace_kind,
         fleet,
@@ -342,6 +340,7 @@ fn simulate(rest: &[String]) -> i32 {
     cfg.platform.reclaim_pressure_weight = reclaim_pressure;
     cfg.platform.image = image;
     cfg.controller.keepalive = keepalive;
+    cfg.chaos = chaos;
     // --functions 1 takes the untouched legacy path: bit-identical to the
     // pre-tenancy simulator (regression-tested)
     let mut r = if functions > 1 {
@@ -633,6 +632,176 @@ fn parse_keepalive_knobs(a: &Args) -> Result<(f64, f64, f64, f64), String> {
         _ => return Err("--keepalive-pressure must be a non-negative number".into()),
     };
     Ok((min_s, idle_cost, cold_weight, pressure))
+}
+
+/// Parse the `--chaos-*` knob flags into a chaos config around the
+/// already-parsed `mode`. The knobs are validated even with chaos off,
+/// so a typo never rides silently into a later `--chaos faults` run.
+fn parse_chaos_knobs(a: &Args, mode: ChaosMode) -> Result<ChaosConfig, String> {
+    let prob = |flag: &str| -> Result<f64, String> {
+        match a.get_f64(flag) {
+            Ok(p) if (0.0..=1.0).contains(&p) => Ok(p),
+            _ => Err(format!("--{flag} must be a probability within [0, 1]")),
+        }
+    };
+    let spawn_fail_p = prob("chaos-spawn-fail-p")?;
+    let exec_fail_p = prob("chaos-exec-fail-p")?;
+    let straggler_p = prob("chaos-straggler-p")?;
+    let straggler_factor = match a.get_f64("chaos-straggler-factor") {
+        Ok(f) if f >= 1.0 && f.is_finite() => f,
+        _ => return Err("--chaos-straggler-factor must be a finite number >= 1".into()),
+    };
+    let max_retries = match a.get_u64("chaos-max-retries") {
+        Ok(n) if n <= 64 => n as u32,
+        _ => return Err("--chaos-max-retries must be an integer within [0, 64]".into()),
+    };
+    let retry_backoff = match a.get_f64("chaos-retry-backoff-s") {
+        Ok(s) if s > 0.0 && s.is_finite() => secs(s),
+        _ => return Err("--chaos-retry-backoff-s must be a positive number".into()),
+    };
+    let timeout_factor = match a.get_f64("chaos-timeout-factor") {
+        Ok(f) if f >= 1.0 && f.is_finite() => f,
+        _ => return Err("--chaos-timeout-factor must be a finite number >= 1".into()),
+    };
+    Ok(ChaosConfig {
+        mode,
+        spawn_fail_p,
+        exec_fail_p,
+        straggler_p,
+        straggler_factor,
+        max_retries,
+        retry_backoff,
+        timeout_factor,
+    })
+}
+
+/// Parse `--chaos <mode>` plus the shared knob flags (simulate's form).
+fn parse_chaos_flags(a: &Args) -> Result<ChaosConfig, String> {
+    let mode = ChaosMode::parse(a.get("chaos")).ok_or_else(|| {
+        format!(
+            "unknown --chaos '{}' (expected off | faults | failure-storm | rolling-restart | flash-crowd)",
+            a.get("chaos")
+        )
+    })?;
+    parse_chaos_knobs(a, mode)
+}
+
+/// Register the shared `--chaos-*` knob flags on a chaos subcommand.
+fn chaos_knob_flags(cli: Cli) -> Cli {
+    cli.flag("chaos-spawn-fail-p", "0.05", "probability a request-bound container spawn fails")
+        .flag("chaos-exec-fail-p", "0.05", "probability a completed execution still fails and retries")
+        .flag("chaos-straggler-p", "0.02", "probability an execution straggles (duration stretches)")
+        .flag("chaos-straggler-factor", "12", "duration multiplier for straggling executions")
+        .flag("chaos-max-retries", "3", "retry budget per request across all fault kinds")
+        .flag("chaos-retry-backoff-s", "1", "base retry backoff; attempt n waits backoff x 2^(n-1)")
+        .flag("chaos-timeout-factor", "8", "per-function execution timeout as a multiple of L_warm")
+}
+
+fn scenario(rest: &[String]) -> i32 {
+    let cli = chaos_knob_flags(
+        common_cli("scenario", "one chaos preset under one policy; run report + chaos telemetry")
+            .flag("preset", "failure-storm", "failure-storm | rolling-restart | flash-crowd | faults")
+            .flag("nodes", "4", "invoker node count")
+            .flag("functions", "8", "distinct functions sharing the fleet"),
+    );
+    let a = parse_or_exit(&cli, rest);
+    let policy = match Policy::parse(a.get("policy")) {
+        Some(p) => p,
+        None => {
+            eprintln!("unknown policy '{}'", a.get("policy"));
+            return 2;
+        }
+    };
+    let mode = match ChaosMode::parse(a.get("preset")) {
+        Some(m) if m != ChaosMode::Off => m,
+        _ => {
+            eprintln!(
+                "unknown --preset '{}' (expected failure-storm | rolling-restart | flash-crowd | faults)",
+                a.get("preset")
+            );
+            return 2;
+        }
+    };
+    let params = match scenario_params(&a, mode) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    println!(
+        "scenario: preset={} policy={} trace={} nodes={} functions={} duration={:.0}s",
+        mode.name(),
+        policy.name(),
+        params.trace.name(),
+        params.nodes,
+        params.functions,
+        params.duration_s
+    );
+    let cell = chaos_exp::run_cell(&params, mode, policy);
+    chaos_exp::print_report(&cell);
+    0
+}
+
+fn chaos_sweep(rest: &[String]) -> i32 {
+    let cli = chaos_knob_flags(
+        Cli::new(
+            "chaos-sweep",
+            "every chaos preset x every policy on one workload; retry/timeout/drop telemetry",
+        )
+        .flag("trace", "synthetic", "azure | synthetic")
+        .flag("duration-s", "3600", "experiment duration (seconds)")
+        .flag("seed", "42", "rng seed")
+        .flag("nodes", "4", "invoker node count")
+        .flag("functions", "8", "distinct functions sharing the fleet"),
+    );
+    let a = parse_or_exit(&cli, rest);
+    let params = match scenario_params(&a, ChaosMode::Faults) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    println!(
+        "chaos-sweep: trace={} nodes={} functions={} duration={:.0}s",
+        params.trace.name(),
+        params.nodes,
+        params.functions,
+        params.duration_s
+    );
+    let cells = chaos_exp::run_sweep(&params, &ChaosMode::PRESETS, &Policy::ALL);
+    chaos_exp::print_table(&cells);
+    println!("\nretries/timeouts/spawn-fails = chaos counters (structurally zero with --chaos off);");
+    println!("dropped = requests whose retry budget was exhausted mid-storm.");
+    0
+}
+
+/// Parse the flags shared by `scenario` and `chaos-sweep` into params
+/// (the chaos mode inside is a placeholder — each cell overrides it).
+fn scenario_params(a: &Args, mode: ChaosMode) -> Result<ScenarioParams, String> {
+    let trace = TraceKind::parse(a.get("trace"))
+        .ok_or_else(|| format!("unknown trace '{}'", a.get("trace")))?;
+    let nodes = match a.get_u64("nodes") {
+        Ok(n) if n >= 1 => n as u32,
+        _ => return Err("--nodes must be at least 1".into()),
+    };
+    let functions = match a.get_u64("functions") {
+        Ok(n) if n >= 1 => n as u32,
+        _ => return Err("--functions must be a positive integer".into()),
+    };
+    let duration_s = match a.get_f64("duration-s") {
+        Ok(d) if d > 0.0 && d.is_finite() => d,
+        _ => return Err("--duration-s must be a positive number".into()),
+    };
+    Ok(ScenarioParams {
+        trace,
+        duration_s,
+        seed: a.get_u64("seed").map_err(|e| e.to_string())?,
+        nodes,
+        functions,
+        chaos: parse_chaos_knobs(a, mode)?,
+    })
 }
 
 /// Parse the `--image-*` flags into a cache config. The numeric knobs

@@ -361,6 +361,14 @@ impl RunReport {
             ("events_per_sec", Json::Num(self.events_per_sec)),
             ("evictions", Json::Num(self.counters.evictions as f64)),
             ("migrations", Json::Num(self.counters.migrations_in as f64)),
+            // chaos telemetry (all structurally 0 with --chaos off, so
+            // the off path stays byte-identical to the seed)
+            ("retries", Json::Num(self.counters.retries as f64)),
+            ("timeouts", Json::Num(self.counters.timeouts as f64)),
+            (
+                "spawn_failures",
+                Json::Num(self.counters.spawn_failures as f64),
+            ),
             // image-cache telemetry (all structurally 0 with the cache
             // off, so the off path stays byte-identical to the seed)
             ("layer_hits", Json::Num(self.counters.layer_hits as f64)),
@@ -425,6 +433,13 @@ impl RunReport {
                                     Json::Num(n.counters.layer_misses as f64),
                                 ),
                                 ("pull_mib", Json::Num(n.counters.pull_mib as f64)),
+                                // which invoker absorbed the chaos faults
+                                ("retries", Json::Num(n.counters.retries as f64)),
+                                ("timeouts", Json::Num(n.counters.timeouts as f64)),
+                                (
+                                    "spawn_failures",
+                                    Json::Num(n.counters.spawn_failures as f64),
+                                ),
                             ];
                             if let Some(pr) = n.post_restore() {
                                 // the rejoin evidence: work done after the

@@ -49,10 +49,17 @@ impl RustSolver {
 impl MpcSolver for RustSolver {
     fn solve(&mut self, z0: &[f64], input: &MpcInput) -> (Vec<f64>, f64) {
         let h = input.horizon();
-        assert_eq!(z0.len(), 3 * h, "warm start has wrong shape");
         let wts = &self.weights;
         let ub = upper_bounds(wts, h);
-        let mut z = z0.to_vec();
+        // a mis-shaped warm start degrades to a cold (zero) start instead
+        // of panicking: under fault injection the control plane must
+        // clamp and replan, and a cold start only costs extra iterations
+        // toward the same projected optimum
+        let mut z = if z0.len() == 3 * h {
+            z0.to_vec()
+        } else {
+            vec![0.0; 3 * h]
+        };
         // feasible serving seed (mirror of model.mpc_solve): avoids phantom
         // in-model backlog while the s-block ramps from zero
         for k in 0..h {
@@ -167,6 +174,18 @@ mod tests {
         for (i, v) in z.iter().enumerate() {
             assert!(*v >= 0.0 && *v <= ub[i] + 1e-9, "z[{i}]={v}");
         }
+    }
+
+    #[test]
+    fn mis_shaped_warm_start_degrades_to_cold_start() {
+        let mut s = solver();
+        let inp = input(vec![200.0; 24], 100.0, 0.0);
+        // a stale warm start (e.g. the horizon changed under it) must not
+        // panic — it solves exactly like the all-zero cold start
+        let (z_bad, c_bad) = s.solve(&vec![1.0; 7], &inp);
+        let (z_cold, c_cold) = s.solve(&vec![0.0; 72], &inp);
+        assert_eq!(z_bad, z_cold);
+        assert_eq!(c_bad, c_cold);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Declarative command-line flag parser (the vendored crate set has no clap).
 //!
-//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
-//! arguments, and auto-generated `--help`.
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeatable
+//! `--flag v1 --flag v2` collection, positional arguments, and
+//! auto-generated `--help`.
 
 use std::collections::BTreeMap;
 
@@ -11,6 +12,7 @@ struct FlagSpec {
     help: String,
     default: Option<String>,
     is_bool: bool,
+    is_multi: bool,
 }
 
 /// Builder for a subcommand's flags.
@@ -26,6 +28,7 @@ pub struct Cli {
 pub struct Args {
     values: BTreeMap<String, String>,
     bools: BTreeMap<String, bool>,
+    multis: BTreeMap<String, Vec<String>>,
     pub positional: Vec<String>,
 }
 
@@ -65,6 +68,7 @@ impl Cli {
             help: help.to_string(),
             default: Some(default.to_string()),
             is_bool: false,
+            is_multi: false,
         });
         self
     }
@@ -75,6 +79,20 @@ impl Cli {
             help: help.to_string(),
             default: None,
             is_bool: true,
+            is_multi: false,
+        });
+        self
+    }
+
+    /// A value flag that may repeat: every occurrence is collected, in
+    /// order, retrievable with [`Args::get_all`]. Defaults to empty.
+    pub fn multi_flag(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+            is_multi: true,
         });
         self
     }
@@ -82,9 +100,10 @@ impl Cli {
     pub fn usage(&self) -> String {
         let mut out = format!("{} — {}\n\nFLAGS:\n", self.program, self.about);
         for f in &self.flags {
-            let d = match (&f.default, f.is_bool) {
-                (_, true) => "  (boolean)".to_string(),
-                (Some(d), _) if !d.is_empty() => format!("  [default: {d}]"),
+            let d = match (&f.default, f.is_bool, f.is_multi) {
+                (_, true, _) => "  (boolean)".to_string(),
+                (_, _, true) => "  (repeatable)".to_string(),
+                (Some(d), _, _) if !d.is_empty() => format!("  [default: {d}]"),
                 _ => String::new(),
             };
             out.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
@@ -130,7 +149,11 @@ impl Cli {
                                 .ok_or_else(|| CliError::MissingValue(name.clone()))?
                         }
                     };
-                    args.values.insert(name, value);
+                    if spec.is_multi {
+                        args.multis.entry(name).or_default().push(value);
+                    } else {
+                        args.values.insert(name, value);
+                    }
                 }
             } else {
                 args.positional.push(a.clone());
@@ -148,6 +171,12 @@ impl Args {
 
     pub fn get_bool(&self, name: &str) -> bool {
         self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    /// Every value a repeatable flag was given, in command-line order
+    /// (empty when the flag never appeared).
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.multis.get(name).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
@@ -176,6 +205,7 @@ mod tests {
             .flag("seed", "42", "rng seed")
             .flag("trace", "azure", "trace kind")
             .bool_flag("verbose", "chatty")
+            .multi_flag("tag", "repeatable tag")
     }
 
     #[test]
@@ -217,6 +247,17 @@ mod tests {
     fn bad_numeric_value() {
         let a = cli().parse(&argv(&["--seed", "xyz"])).unwrap();
         assert!(matches!(a.get_u64("seed"), Err(CliError::BadValue(_, _))));
+    }
+
+    #[test]
+    fn multi_flag_collects_every_occurrence_in_order() {
+        let a = cli().parse(&argv(&[])).unwrap();
+        assert!(a.get_all("tag").is_empty());
+        let a = cli()
+            .parse(&argv(&["--tag", "x", "--tag=y", "--tag", "z"]))
+            .unwrap();
+        assert_eq!(a.get_all("tag"), ["x", "y", "z"]);
+        assert!(cli().usage().contains("(repeatable)"));
     }
 
     #[test]

@@ -1,0 +1,229 @@
+//! Chaos-engine integration tests: the `--chaos off` bit-identical
+//! regression that keeps every published figure valid (mirroring the
+//! tenant/elasticity/keep-alive/image-cache inertness suites), the off
+//! path's structural telemetry silence, preset determinism across
+//! repeated runs and across the sharded engine, and the retry/timeout
+//! counter conservation laws the fault injection must obey.
+
+use mpc_serverless::config::{
+    secs, ChaosConfig, ChaosMode, ExperimentConfig, Policy, TenantConfig, TraceKind,
+};
+use mpc_serverless::experiments::{run_experiment, run_tenant};
+use mpc_serverless::metrics::RunReport;
+use mpc_serverless::workload::TenantWorkload;
+
+fn cfg(duration_s: f64, seed: u64, functions: u32) -> ExperimentConfig {
+    ExperimentConfig {
+        trace: TraceKind::SyntheticBursty,
+        duration: secs(duration_s),
+        seed,
+        tenancy: TenantConfig {
+            functions,
+            zipf_s: 1.1,
+        },
+        ..Default::default()
+    }
+}
+
+/// The full JSON surface with the only nondeterministic fields zeroed —
+/// host-timing artifacts; every simulated quantity must reproduce byte
+/// for byte.
+fn canonical_json(mut r: RunReport) -> String {
+    r.wall_clock_ms = 0.0;
+    r.events_per_sec = 0.0;
+    r.forecast_overhead_ms = 0.0;
+    r.solve_overhead_ms = 0.0;
+    r.to_json().to_string()
+}
+
+/// Like [`canonical_json`] but also blind to the worker-thread count —
+/// for comparing a sharded run against the sequential engine, where
+/// `threads` is the one field that legitimately differs.
+fn canonical_json_any_threads(mut r: RunReport) -> String {
+    r.threads = 1;
+    canonical_json(r)
+}
+
+fn workload_for(c: &ExperimentConfig) -> TenantWorkload {
+    TenantWorkload::generate(
+        c.trace,
+        c.duration,
+        c.seed,
+        c.tenancy.functions,
+        c.tenancy.zipf_s,
+        &c.platform,
+    )
+}
+
+/// The headline regression: `--chaos off` reproduces the seed-path
+/// `RunReport` JSON byte-for-byte even with every chaos knob set to
+/// aggressive values — with the mode off the engine is never
+/// constructed, so no RNG stream moves and no probability can matter.
+/// Pinned at `--nodes 1` (the legacy shape) and `--nodes 4
+/// --functions 8` (the contended fleet), per the inertness-suite
+/// pattern.
+#[test]
+fn chaos_off_is_bit_identical() {
+    // knob values that would wreck every latency figure if anything
+    // read them: 90% fault rates, 50x stragglers, hair-trigger timeouts
+    let weird = ChaosConfig {
+        mode: ChaosMode::Off,
+        spawn_fail_p: 0.9,
+        exec_fail_p: 0.9,
+        straggler_p: 0.9,
+        straggler_factor: 50.0,
+        max_retries: 64,
+        retry_backoff: secs(0.001),
+        timeout_factor: 1.5,
+    };
+    // --nodes 1, single-tenant
+    {
+        let base = cfg(1200.0, 23, 1);
+        let trace =
+            mpc_serverless::experiments::fig4::trace_for(base.trace, base.duration, base.seed);
+        let mut knobs = base.clone();
+        knobs.chaos = weird;
+        let a = run_experiment(&base, Policy::Mpc, &trace);
+        let b = run_experiment(&knobs, Policy::Mpc, &trace);
+        assert_eq!(
+            canonical_json(a),
+            canonical_json(b),
+            "off mode must ignore the chaos knobs (--nodes 1)"
+        );
+    }
+    // --nodes 4 --functions 8
+    {
+        let mut base = cfg(1200.0, 23, 8);
+        base.fleet.nodes = 4;
+        let w = workload_for(&base);
+        let mut knobs = base.clone();
+        knobs.chaos = weird;
+        let a = run_tenant(&base, Policy::Mpc, &w);
+        let b = run_tenant(&knobs, Policy::Mpc, &w);
+        assert_eq!(
+            canonical_json(a),
+            canonical_json(b),
+            "off mode must ignore the chaos knobs (--nodes 4 --functions 8)"
+        );
+    }
+}
+
+/// With chaos off, the new telemetry surface is structurally silent:
+/// the retry/timeout/spawn-failure counters stay zero (aggregate and
+/// per node) — nothing on the seed path can ever tick them.
+#[test]
+fn off_mode_report_is_silent_on_chaos_telemetry() {
+    let mut c = cfg(900.0, 7, 4);
+    c.fleet.nodes = 2;
+    let w = workload_for(&c);
+    let r = run_tenant(&c, Policy::Mpc, &w);
+    assert!(r.completed > 0);
+    assert_eq!(r.counters.retries, 0);
+    assert_eq!(r.counters.timeouts, 0);
+    assert_eq!(r.counters.spawn_failures, 0);
+    for n in &r.per_node {
+        assert_eq!(n.counters.retries, 0, "node {}", n.node);
+        assert_eq!(n.counters.timeouts, 0, "node {}", n.node);
+        assert_eq!(n.counters.spawn_failures, 0, "node {}", n.node);
+    }
+}
+
+fn with_chaos(c: &ExperimentConfig, mode: ChaosMode) -> ExperimentConfig {
+    let mut e = c.clone();
+    e.chaos = ChaosConfig {
+        mode,
+        ..ChaosConfig::default()
+    };
+    e
+}
+
+/// Every preset × policy cell is deterministic: the same `(seed,
+/// preset, policy)` reproduces the canonical report byte for byte
+/// across repeated runs — the chaos RNG is one seeded stream rolled in
+/// event order, and the preset schedules are pure functions of the
+/// fleet shape. No cell may panic or wedge.
+#[test]
+fn presets_are_deterministic_under_every_policy() {
+    let mut base = cfg(900.0, 11, 4);
+    base.fleet.nodes = 4;
+    let w = workload_for(&base);
+    for mode in ChaosMode::PRESETS {
+        let c = with_chaos(&base, mode);
+        for policy in Policy::ALL {
+            let a = run_tenant(&c, policy, &w);
+            assert!(
+                a.completed > 0,
+                "{} under {} completed nothing",
+                mode.name(),
+                policy.name()
+            );
+            let b = run_tenant(&c, policy, &w);
+            assert_eq!(
+                canonical_json(a),
+                canonical_json(b),
+                "{} under {} is nondeterministic",
+                mode.name(),
+                policy.name()
+            );
+        }
+    }
+}
+
+/// `--threads 2` under chaos matches the sequential engine exactly: the
+/// chaos path forces the sharded engine's batch window to zero (the
+/// fault handlers couple node-local work to the shared RNG stream and
+/// cross-node retry placement), so the merge must replay the identical
+/// event order.
+#[test]
+fn sharded_engine_matches_sequential_under_chaos() {
+    let mut base = cfg(900.0, 11, 4);
+    base.fleet.nodes = 4;
+    let w = workload_for(&base);
+    for mode in [ChaosMode::Faults, ChaosMode::FailureStorm] {
+        let seq = with_chaos(&base, mode);
+        let mut sharded = seq.clone();
+        sharded.threads = 2;
+        let a = run_tenant(&seq, Policy::Mpc, &w);
+        let b = run_tenant(&sharded, Policy::Mpc, &w);
+        assert_eq!(
+            canonical_json_any_threads(a),
+            canonical_json_any_threads(b),
+            "{}: --threads 2 diverged from sequential",
+            mode.name()
+        );
+    }
+}
+
+/// Counter conservation with a single fault kind enabled: every spawn
+/// failure is answered by exactly one retry (none exhausts the budget
+/// at these rates), no execution ever times out, the per-node counters
+/// sum to the aggregate, and every request still completes.
+#[test]
+fn retry_counters_obey_conservation() {
+    let mut c = cfg(900.0, 13, 4);
+    c.fleet.nodes = 2;
+    c.chaos = ChaosConfig {
+        mode: ChaosMode::Faults,
+        spawn_fail_p: 0.2,
+        exec_fail_p: 0.0,
+        straggler_p: 0.0,
+        max_retries: 10,
+        ..ChaosConfig::default()
+    };
+    let w = workload_for(&c);
+    let r = run_tenant(&c, Policy::Mpc, &w);
+    assert_eq!(r.dropped, 0, "a 10-retry budget at p=0.2 must never exhaust");
+    assert_eq!(r.completed, w.len());
+    assert!(r.counters.spawn_failures > 0, "p=0.2 over 900 s never fired");
+    assert_eq!(
+        r.counters.retries, r.counters.spawn_failures,
+        "every spawn failure is answered by exactly one retry"
+    );
+    assert_eq!(r.counters.timeouts, 0, "no stragglers were injected");
+    let sum = |f: fn(&mpc_serverless::cluster::Counters) -> u64| -> u64 {
+        r.per_node.iter().map(|n| f(&n.counters)).sum()
+    };
+    assert_eq!(sum(|c| c.retries), r.counters.retries);
+    assert_eq!(sum(|c| c.timeouts), r.counters.timeouts);
+    assert_eq!(sum(|c| c.spawn_failures), r.counters.spawn_failures);
+}

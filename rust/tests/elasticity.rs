@@ -53,22 +53,22 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, ctx: &str) {
 fn restored_node_reabsorbs_load() {
     let node = 1u32;
     let mut with_restore = cfg(4, 1800.0, 7);
-    with_restore.fleet.failure = Some(NodeFailure {
+    with_restore.fleet.failures = vec![NodeFailure {
         node,
         at: secs(400.0),
-    });
-    with_restore.fleet.restore = Some(NodeRestore {
+    }];
+    with_restore.fleet.restores = vec![NodeRestore {
         node,
         at: secs(800.0),
         cap: None,
-    });
+    }];
     let trace = trace_for(&with_restore);
     let restored = run_experiment(&with_restore, Policy::Mpc, &trace);
     assert_eq!(restored.dropped, 0, "{restored:?}");
     assert_eq!(restored.completed, trace.len());
 
     let mut no_restore = with_restore.clone();
-    no_restore.fleet.restore = None;
+    no_restore.fleet.restores = Vec::new();
     let dark = run_experiment(&no_restore, Policy::Mpc, &trace);
     assert_eq!(dark.completed, trace.len());
 
@@ -106,15 +106,15 @@ fn restored_node_reabsorbs_load() {
 fn restore_with_capacity_override_rebinds_the_reported_cap() {
     let node = 1u32;
     let mut c = cfg(4, 1800.0, 7);
-    c.fleet.failure = Some(NodeFailure {
+    c.fleet.failures = vec![NodeFailure {
         node,
         at: secs(400.0),
-    });
-    c.fleet.restore = Some(NodeRestore {
+    }];
+    c.fleet.restores = vec![NodeRestore {
         node,
         at: secs(800.0),
         cap: Some(8),
-    });
+    }];
     let trace = trace_for(&c);
     let r = run_experiment(&c, Policy::Mpc, &trace);
     assert_eq!(r.dropped, 0, "{r:?}");
@@ -150,17 +150,17 @@ fn restore_with_capacity_override_rebinds_the_reported_cap() {
 #[test]
 fn stale_inflight_events_survive_an_early_rejoin() {
     let mut c = cfg(4, 1200.0, 11);
-    c.fleet.failure = Some(NodeFailure {
+    c.fleet.failures = vec![NodeFailure {
         node: 2,
         at: secs(300.0),
-    });
+    }];
     // restore inside the L_cold = 10.5 s window, so any cold start lost
     // at the drain has its stale Ready land on the rejoined node
-    c.fleet.restore = Some(NodeRestore {
+    c.fleet.restores = vec![NodeRestore {
         node: 2,
         at: secs(305.0),
         cap: None,
-    });
+    }];
     let trace = trace_for(&c);
     for policy in [Policy::OpenWhisk, Policy::Mpc] {
         let r = run_experiment(&c, policy, &trace);
@@ -178,15 +178,15 @@ fn stale_inflight_events_survive_an_early_rejoin() {
 fn migration_moves_warm_capacity_in_the_drain_scenario() {
     let mut c = cfg(4, 1800.0, 7);
     c.fleet.placement = PlacementPolicy::WarmFirst;
-    c.fleet.failure = Some(NodeFailure {
+    c.fleet.failures = vec![NodeFailure {
         node: 1,
         at: secs(400.0),
-    });
-    c.fleet.restore = Some(NodeRestore {
+    }];
+    c.fleet.restores = vec![NodeRestore {
         node: 1,
         at: secs(800.0),
         cap: None,
-    });
+    }];
     c.fleet.migration = MigrationConfig {
         policy: MigrationPolicy::IdleSpread,
         ..Default::default()

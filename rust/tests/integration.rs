@@ -269,10 +269,10 @@ fn node_drain_scenario_completes_all_requests() {
     let mut c = cfg(TraceKind::SyntheticBursty, 1800.0, 31);
     c.fleet.nodes = 4;
     c.fleet.placement = PlacementPolicy::LeastLoaded;
-    c.fleet.failure = Some(NodeFailure {
+    c.fleet.failures = vec![NodeFailure {
         node: 2,
         at: secs(700.0),
-    });
+    }];
     let trace = generate(&SyntheticConfig::default(), c.duration, c.seed);
     for policy in [Policy::OpenWhisk, Policy::IceBreaker, Policy::Mpc] {
         let r = run_experiment(&c, policy, &trace);
@@ -283,7 +283,7 @@ fn node_drain_scenario_completes_all_requests() {
     // gauge series cannot stay identical
     let healthy = {
         let mut h = c.clone();
-        h.fleet.failure = None;
+        h.fleet.failures = Vec::new();
         run_experiment(&h, Policy::OpenWhisk, &trace)
     };
     let drained = run_experiment(&c, Policy::OpenWhisk, &trace);

@@ -102,10 +102,10 @@ fn multi_tenant_fleet_with_drain_completes() {
     let mut c = cfg(TraceKind::SyntheticBursty, 1200.0, 31, 4);
     c.fleet.nodes = 4;
     c.fleet.placement = PlacementPolicy::WarmFirst;
-    c.fleet.failure = Some(mpc_serverless::config::NodeFailure {
+    c.fleet.failures = vec![mpc_serverless::config::NodeFailure {
         node: 2,
         at: secs(500.0),
-    });
+    }];
     let w = TenantWorkload::generate(
         TraceKind::SyntheticBursty,
         c.duration,
