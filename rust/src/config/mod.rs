@@ -677,6 +677,81 @@ impl Default for KeepAliveConfig {
     }
 }
 
+/// Forecast backend for the MPC's demand predictions (`--forecast`).
+/// `Fourier` (the default) is the paper's predictor and reproduces the
+/// pre-zoo system bit for bit; the other fixed backends swap the model
+/// behind the same `Forecaster` trait; `Auto` selects per function
+/// online by rolling WAPE (see `forecast::selector`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForecastBackend {
+    /// Harmonic regression + statistical clipping (Eq. 1-2, legacy).
+    Fourier,
+    /// ARIMA(2,1,2) via Hannan-Rissanen (the Fig. 4 baseline).
+    Arima,
+    /// SPES-style trailing-window quantile (non-parametric).
+    Histogram,
+    /// Attention-inspired episode matching (softmax over past windows).
+    Attn,
+    /// Online per-function selection over the whole zoo.
+    Auto,
+}
+
+impl ForecastBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ForecastBackend::Fourier => "fourier",
+            ForecastBackend::Arima => "arima",
+            ForecastBackend::Histogram => "histogram",
+            ForecastBackend::Attn => "attn",
+            ForecastBackend::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ForecastBackend> {
+        match s {
+            "fourier" | "harmonic" => Some(ForecastBackend::Fourier),
+            "arima" => Some(ForecastBackend::Arima),
+            "histogram" | "hist" => Some(ForecastBackend::Histogram),
+            "attn" | "attention" => Some(ForecastBackend::Attn),
+            "auto" | "zoo" | "selector" => Some(ForecastBackend::Auto),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [ForecastBackend; 5] = [
+        ForecastBackend::Fourier,
+        ForecastBackend::Arima,
+        ForecastBackend::Histogram,
+        ForecastBackend::Attn,
+        ForecastBackend::Auto,
+    ];
+}
+
+/// Forecast-zoo parameters: which backend, plus the online selector's
+/// scoring knobs. The knobs are inert under any fixed backend.
+#[derive(Debug, Clone, Copy)]
+pub struct ForecastConfig {
+    pub backend: ForecastBackend,
+    /// Scored bins kept in each backend's rolling WAPE window.
+    pub score_window: usize,
+    /// Relative margin a challenger must beat the incumbent's rolling
+    /// WAPE by before selection moves (anti-thrash).
+    pub hysteresis: f64,
+    /// Scored bins required before the first switch may happen.
+    pub warmup_bins: usize,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        ForecastConfig {
+            backend: ForecastBackend::Fourier,
+            score_window: 16,
+            hysteresis: 0.1,
+            warmup_bins: 8,
+        }
+    }
+}
+
 /// MPC controller parameters (Sec. III; Table I weights).
 #[derive(Debug, Clone)]
 pub struct ControllerConfig {
@@ -700,6 +775,8 @@ pub struct ControllerConfig {
     /// Container-retention policy + break-even knobs (the keep-alive leg
     /// of the prewarm → dispatch → retain control triangle).
     pub keepalive: KeepAliveConfig,
+    /// Forecast backend + online-selector knobs (`--forecast`).
+    pub forecast: ForecastConfig,
 }
 
 /// MPC objective weights (Table I). Layout mirrors
@@ -793,6 +870,7 @@ impl Default for ControllerConfig {
             // slightly over L_cold — beyond that a cold start wins anyway
             max_shaping_delay: secs(12.0),
             keepalive: KeepAliveConfig::default(),
+            forecast: ForecastConfig::default(),
         }
     }
 }
@@ -916,6 +994,7 @@ impl ExperimentConfig {
             ("keep_alive_s", Json::Num(to_secs(self.platform.keep_alive))),
             ("threads", Json::Num(self.threads as f64)),
             ("chaos", Json::Str(self.chaos.mode.name().into())),
+            ("forecast", Json::Str(self.controller.forecast.backend.name().into())),
         ])
     }
 }
@@ -1274,6 +1353,31 @@ mod tests {
         assert_eq!(ka.idle_cost_per_s, 1.0);
         assert_eq!(ka.cold_cost_weight, 16.0);
         assert_eq!(ka.pressure_weight, 0.0);
+    }
+
+    #[test]
+    fn forecast_backend_parse_and_names_roundtrip() {
+        for b in ForecastBackend::ALL {
+            assert_eq!(ForecastBackend::parse(b.name()), Some(b));
+        }
+        assert_eq!(ForecastBackend::parse("hist"), Some(ForecastBackend::Histogram));
+        assert_eq!(ForecastBackend::parse("attention"), Some(ForecastBackend::Attn));
+        assert_eq!(ForecastBackend::parse("zoo"), Some(ForecastBackend::Auto));
+        assert_eq!(ForecastBackend::parse("harmonic"), Some(ForecastBackend::Fourier));
+        assert_eq!(ForecastBackend::parse("lstm"), None);
+        assert_eq!(ForecastBackend::parse(""), None);
+    }
+
+    #[test]
+    fn forecast_defaults_are_fourier_and_inert() {
+        let fc = ControllerConfig::default().forecast;
+        assert_eq!(fc.backend, ForecastBackend::Fourier);
+        assert_eq!(fc.score_window, 16);
+        assert_eq!(fc.hysteresis, 0.1);
+        assert_eq!(fc.warmup_bins, 8);
+        // the backend name rides in the config JSON envelope
+        let j = ExperimentConfig::default().to_json();
+        assert_eq!(j.path("forecast").unwrap().as_str(), Some("fourier"));
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //!
 //! **Multi-tenant control.** The horizon problem stays aggregate (one
 //! queue/pool state, Eq. 3-18), but the scheduler additionally tracks a
-//! per-function arrival history and runs a per-function Fourier forecast
-//! at each control step. The plan's first-step prewarm budget `x_0` —
+//! per-function arrival history and runs a per-function forecast at
+//! each control step through a pluggable registry slot — the paper's
+//! Fourier predictor by default, any zoo backend or the online selector
+//! under `--forecast` (see [`MpcScheduler::with_forecast`]). The plan's first-step prewarm budget `x_0` —
 //! already fleet-scaled through `w_max` — is then split across functions
 //! proportionally to their predicted demand over the cold-start lead
 //! window, and the dispatcher releases queued requests against *their
@@ -40,10 +42,14 @@ use std::time::Instant;
 
 use crate::cluster::platform::InvokeOutcome;
 use crate::cluster::RequestId;
-use crate::config::{ControllerConfig, KeepAliveConfig, KeepAlivePolicy, Micros, MigrationPolicy};
+use crate::config::{
+    ControllerConfig, ForecastBackend, ForecastConfig, KeepAliveConfig, KeepAlivePolicy, Micros,
+    MigrationPolicy,
+};
 use crate::coordinator::keepalive;
 use crate::coordinator::queue::RequestQueue;
-use crate::coordinator::{Ctx, Scheduler};
+use crate::coordinator::{Ctx, ForecastTelemetry, Scheduler};
+use crate::forecast::selector::{make_backend, AutoSelector};
 use crate::forecast::{Forecaster, FourierForecaster};
 use crate::mpc::{repair, MpcInput, MpcSolver, Plan};
 use crate::util::timeseries::RingBuffer;
@@ -67,11 +73,75 @@ pub fn lead_steps(cold_steps: usize, dt: Micros, l_cold_eff: Micros, dynamic: bo
     cold_steps.max(eff_steps) + 2
 }
 
+/// One slot of the per-function forecaster registry: either a fixed
+/// backend (any zoo model behind the [`Forecaster`] trait) or the
+/// online selector routing through its current best. The controller
+/// never matches on this outside the enum's own methods, so every
+/// forecast-consuming decision — prewarm split, lead-window demand,
+/// adaptive retention horizon — flows through whichever model the slot
+/// currently resolves to.
+enum FnForecaster {
+    Fixed(Box<dyn Forecaster>),
+    Auto(Box<AutoSelector>),
+}
+
+impl FnForecaster {
+    fn forecast(&mut self, history: &[f64], horizon: usize) -> Vec<f64> {
+        match self {
+            FnForecaster::Fixed(f) => f.forecast(history, horizon),
+            FnForecaster::Auto(s) => s.forecast(history, horizon),
+        }
+    }
+
+    /// Selector bookkeeping at bin close (score pendings, maybe switch,
+    /// stage the next one-step predictions); a no-op for fixed backends,
+    /// which is what keeps the seed path byte-identical.
+    fn observe(&mut self, history: &[f64], realized: f64) {
+        if let FnForecaster::Auto(s) = self {
+            s.observe(history, realized);
+        }
+    }
+
+    fn switches(&self) -> u64 {
+        match self {
+            FnForecaster::Fixed(_) => 0,
+            FnForecaster::Auto(s) => s.switches(),
+        }
+    }
+
+    /// The model currently answering forecasts; `fixed_name` is the
+    /// configured backend name (a fixed slot always answers with it).
+    fn model_name(&self, fixed_name: &'static str) -> &'static str {
+        match self {
+            FnForecaster::Fixed(_) => fixed_name,
+            FnForecaster::Auto(s) => s.current_name(),
+        }
+    }
+
+    /// Rolling selector accuracy; structurally zero for fixed backends
+    /// (no scoring loop runs).
+    fn rolling_accuracy_pct(&self) -> f64 {
+        match self {
+            FnForecaster::Fixed(_) => 0.0,
+            FnForecaster::Auto(s) => s.rolling_accuracy_pct(),
+        }
+    }
+}
+
+/// Build the registry slot a [`ForecastConfig`] asks for.
+fn new_fn_forecaster(fc: &ForecastConfig, gamma_clip: f64) -> FnForecaster {
+    if fc.backend == ForecastBackend::Auto {
+        FnForecaster::Auto(Box::new(AutoSelector::new(fc, gamma_clip)))
+    } else {
+        FnForecaster::Fixed(make_backend(fc.backend, gamma_clip))
+    }
+}
+
 /// Per-function demand tracker driving the multi-tenant prewarm split.
 struct TenantDemand {
     history: RingBuffer,
     arrivals_this_interval: u32,
-    forecaster: FourierForecaster,
+    forecaster: FnForecaster,
 }
 
 pub struct MpcScheduler {
@@ -79,7 +149,7 @@ pub struct MpcScheduler {
     queue: RequestQueue,
     history: RingBuffer,
     arrivals_this_interval: u32,
-    forecaster: Box<dyn Forecaster>,
+    forecaster: FnForecaster,
     solver: Box<dyn MpcSolver>,
     warm_start: Vec<f64>,
     x_prev: f64,
@@ -124,6 +194,10 @@ pub struct MpcScheduler {
     /// the recent-regime mean.
     pub stale_discounts: u64,
     last_solve_at: Option<Micros>,
+    /// Backend + selector knobs the registry was configured with (the
+    /// default when constructed directly: Fourier, knobs inert) —
+    /// reported through [`Scheduler::forecast_telemetry`].
+    fcfg: ForecastConfig,
 }
 
 impl MpcScheduler {
@@ -139,7 +213,7 @@ impl MpcScheduler {
             queue: RequestQueue::new(),
             history: RingBuffer::new(window),
             arrivals_this_interval: 0,
-            forecaster,
+            forecaster: FnForecaster::Fixed(forecaster),
             solver,
             warm_start: vec![0.0; 3 * horizon],
             x_prev: 0.0,
@@ -155,6 +229,7 @@ impl MpcScheduler {
             emergency_replans: 0,
             stale_discounts: 0,
             last_solve_at: None,
+            fcfg: ForecastConfig::default(),
         }
     }
 
@@ -198,12 +273,31 @@ impl MpcScheduler {
                 .map(|_| TenantDemand {
                     history: RingBuffer::new(self.cc.window),
                     arrivals_this_interval: 0,
-                    forecaster: FourierForecaster {
+                    forecaster: FnForecaster::Fixed(Box::new(FourierForecaster {
                         gamma_clip: self.cc.gamma_clip,
                         ..Default::default()
-                    },
+                    })),
                 })
                 .collect();
+        }
+        self
+    }
+
+    /// Select the forecast backend for the aggregate horizon problem
+    /// and every slot of the per-function registry (`--forecast`).
+    /// Call *after* [`MpcScheduler::with_functions`] so the registry is
+    /// populated. `Fourier` (the default) keeps the
+    /// constructor-provided forecasters untouched — the seed path, byte
+    /// for byte; `Auto` installs one online selector per slot.
+    pub fn with_forecast(mut self, fc: &ForecastConfig) -> Self {
+        self.fcfg = *fc;
+        if fc.backend == ForecastBackend::Fourier {
+            return self;
+        }
+        let gamma = self.cc.gamma_clip;
+        self.forecaster = new_fn_forecaster(fc, gamma);
+        for t in &mut self.tenants {
+            t.forecaster = new_fn_forecaster(fc, gamma);
         }
         self
     }
@@ -498,7 +592,7 @@ impl MpcScheduler {
     }
 
     /// The adaptive-retention twin of [`MpcScheduler::tenant_shares`]:
-    /// one Fourier forecast per function, feeding *both* the prewarm
+    /// one forecast per function (through its registry slot), feeding *both* the prewarm
     /// split share (identical arithmetic to `tenant_shares`) and the
     /// retention horizon (break-even rule over the same forecast, with
     /// the open interval's arrivals folded into the first step exactly
@@ -545,8 +639,9 @@ impl MpcScheduler {
         (shares, horizons)
     }
 
-    /// Per-function demand over the cold-start lead window (one Fourier
-    /// forecast per function, same lead as IceBreaker's sizing) — the
+    /// Per-function demand over the cold-start lead window (one
+    /// forecast per function through its registry slot, same lead as
+    /// IceBreaker's sizing) — the
     /// shares the plan's first-step prewarm budget `x_0` is split by,
     /// via the largest-remainder method so the budget is conserved
     /// exactly.
@@ -629,12 +724,27 @@ impl Scheduler for MpcScheduler {
     }
 
     fn on_control_tick(&mut self, ctx: &mut Ctx) {
-        // close the interval's arrival bin, then run the control cycle
-        self.history.push(self.arrivals_this_interval as f64);
+        // close the interval's arrival bin, then run the control cycle.
+        // The selector scores only here — emergency replans re-solve on
+        // the same open bin and must not double-count it — and sees the
+        // same padded window the routed forecast consumes.
+        let realized = self.arrivals_this_interval as f64;
+        self.history.push(realized);
         self.arrivals_this_interval = 0;
+        if matches!(self.forecaster, FnForecaster::Auto(_)) {
+            let pad = self.history.recent_mean(self.cc.window);
+            let hist = self.history.to_padded_vec(pad);
+            self.forecaster.observe(&hist, realized);
+        }
         for t in &mut self.tenants {
-            t.history.push(t.arrivals_this_interval as f64);
+            let realized = t.arrivals_this_interval as f64;
+            t.history.push(realized);
             t.arrivals_this_interval = 0;
+            if matches!(t.forecaster, FnForecaster::Auto(_)) {
+                let pad = t.history.recent_mean(self.cc.window);
+                let hist = t.history.to_padded_vec(pad);
+                t.forecaster.observe(&hist, realized);
+            }
         }
         self.replan(ctx);
     }
@@ -648,6 +758,36 @@ impl Scheduler for MpcScheduler {
 
     fn queue_len(&self) -> u32 {
         self.queue.len() as u32
+    }
+
+    fn forecast_telemetry(&self) -> Option<ForecastTelemetry> {
+        let fixed = self.fcfg.backend.name();
+        let per_function = if self.tenants.is_empty() {
+            vec![(
+                0,
+                self.forecaster.model_name(fixed),
+                self.forecaster.rolling_accuracy_pct(),
+            )]
+        } else {
+            self.tenants
+                .iter()
+                .enumerate()
+                .map(|(f, t)| {
+                    (
+                        f as FunctionId,
+                        t.forecaster.model_name(fixed),
+                        t.forecaster.rolling_accuracy_pct(),
+                    )
+                })
+                .collect()
+        };
+        let selector_switches = self.forecaster.switches()
+            + self.tenants.iter().map(|t| t.forecaster.switches()).sum::<u64>();
+        Some(ForecastTelemetry {
+            backend: fixed,
+            selector_switches,
+            per_function,
+        })
     }
 
     fn name(&self) -> &'static str {
@@ -1115,6 +1255,121 @@ mod tests {
         // constant-cost control (cache off): below break-even → floor
         cfg.platform.image = ImageCacheConfig::default();
         assert_eq!(run(&cfg), ka.min);
+    }
+
+    #[test]
+    fn fourier_forecast_config_is_inert_and_reports_structural_zero() {
+        use crate::config::ForecastConfig;
+        let (sched, ..) = make();
+        // aggressive selector knobs under the fourier backend: the
+        // builder must not touch the registry (seed path, byte for byte)
+        let sched = sched.with_forecast(&ForecastConfig {
+            score_window: 2,
+            hysteresis: 0.0,
+            warmup_bins: 1,
+            ..Default::default()
+        });
+        assert!(matches!(sched.forecaster, FnForecaster::Fixed(_)));
+        let t = sched.forecast_telemetry().unwrap();
+        assert_eq!(t.backend, "fourier");
+        assert_eq!(t.selector_switches, 0);
+        assert_eq!(t.per_function, vec![(0, "fourier", 0.0)]);
+    }
+
+    #[test]
+    fn auto_installs_a_selector_per_registry_slot() {
+        use crate::config::{ForecastBackend, ForecastConfig};
+        let cfg = ExperimentConfig::default();
+        let cc = cfg.controller.clone();
+        let fc = ForecastConfig {
+            backend: ForecastBackend::Auto,
+            ..Default::default()
+        };
+        let sched = MpcScheduler::new(
+            cc.clone(),
+            Box::new(FourierForecaster::default()),
+            Box::new(RustSolver::new(Weights::default(), 20, cc.cold_steps)),
+        )
+        .with_functions(3)
+        .with_forecast(&fc);
+        assert!(matches!(sched.forecaster, FnForecaster::Auto(_)));
+        assert_eq!(sched.tenants.len(), 3);
+        for t in &sched.tenants {
+            assert!(matches!(t.forecaster, FnForecaster::Auto(_)));
+        }
+        let tel = sched.forecast_telemetry().unwrap();
+        assert_eq!(tel.backend, "auto");
+        assert_eq!(tel.selector_switches, 0);
+        assert_eq!(tel.per_function.len(), 3);
+        // the selector starts every slot on the zoo's first backend
+        assert!(tel.per_function.iter().all(|&(_, m, _)| m == "fourier"));
+    }
+
+    #[test]
+    fn fixed_nonfourier_backend_swaps_every_slot() {
+        use crate::config::{ForecastBackend, ForecastConfig};
+        let cfg = ExperimentConfig::default();
+        let cc = cfg.controller.clone();
+        let fc = ForecastConfig {
+            backend: ForecastBackend::Histogram,
+            ..Default::default()
+        };
+        let sched = MpcScheduler::new(
+            cc.clone(),
+            Box::new(FourierForecaster::default()),
+            Box::new(RustSolver::new(Weights::default(), 20, cc.cold_steps)),
+        )
+        .with_functions(2)
+        .with_forecast(&fc);
+        let tel = sched.forecast_telemetry().unwrap();
+        assert_eq!(tel.backend, "histogram");
+        assert_eq!(tel.selector_switches, 0, "fixed backends never switch");
+        assert_eq!(
+            tel.per_function,
+            vec![(0, "histogram", 0.0), (1, "histogram", 0.0)]
+        );
+    }
+
+    #[test]
+    fn auto_controller_ticks_deterministically() {
+        use crate::config::{ForecastBackend, ForecastConfig};
+        let run = || {
+            let cfg = ExperimentConfig::default();
+            let cc = cfg.controller.clone();
+            let mut sched = MpcScheduler::new(
+                cc.clone(),
+                Box::new(FourierForecaster::default()),
+                Box::new(RustSolver::new(Weights::default(), 20, cc.cold_steps)),
+            )
+            .with_forecast(&ForecastConfig {
+                backend: ForecastBackend::Auto,
+                warmup_bins: 2,
+                score_window: 4,
+                ..Default::default()
+            });
+            let mut fleet = Fleet::new(&cfg.fleet, &cfg.platform, 7);
+            let mut events = EventQueue::new();
+            let mut rec = Recorder::new(16);
+            for step in 0u64..12 {
+                let mut ctx = Ctx {
+                    now: (step + 1) * 30_000_000,
+                    fleet: &mut fleet,
+                    events: &mut events,
+                    recorder: &mut rec,
+                    cfg: &cfg,
+                };
+                // a square-wave demand bin so the selector has signal
+                sched.arrivals_this_interval = if step % 4 < 2 { 12 } else { 0 };
+                sched.on_control_tick(&mut ctx);
+            }
+            let tel = sched.forecast_telemetry().unwrap();
+            (
+                tel.per_function[0].1,
+                tel.selector_switches,
+                fleet.counters().cold_starts,
+            )
+        };
+        assert_eq!(run(), run());
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //! most of the performance/resource trade-off lives in adapting that
 //! horizon to each function's predicted inter-arrival pattern. This
 //! module derives the horizon each control step from the *same*
-//! lead-window Fourier forecasts the prewarm split already consumes:
+//! lead-window forecasts the prewarm split already consumes — whatever
+//! backend the model zoo routed that function through (Fourier by
+//! default; ARIMA, histogram, attention, or the online `auto` selector
+//! under `--forecast`, see [`crate::forecast::selector`]):
 //!
 //! ```text
 //! keep a warm container of f alive at forecast step k only while

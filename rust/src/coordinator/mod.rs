@@ -216,6 +216,18 @@ impl Ctx<'_> {
     }
 }
 
+/// Forecast-zoo telemetry a policy may expose for the run report: the
+/// configured backend, how often the online selector moved, and the
+/// per-function `(function, current model, rolling accuracy %)` rows.
+/// Under a fixed backend the selector columns are structurally zero
+/// (zero switches, zero accuracy, every row naming the fixed backend).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ForecastTelemetry {
+    pub backend: &'static str,
+    pub selector_switches: u64,
+    pub per_function: Vec<(FunctionId, &'static str, f64)>,
+}
+
 /// A scheduling policy (OpenWhisk default, IceBreaker, MPC).
 pub trait Scheduler {
     /// A request arrived.
@@ -236,6 +248,13 @@ pub trait Scheduler {
     /// Requests currently shaped/held by the policy (not yet dispatched).
     fn queue_len(&self) -> u32 {
         0
+    }
+
+    /// Forecast-zoo telemetry for the run report; None for policies
+    /// without a forecast registry (the runner then keeps the report's
+    /// structural-zero defaults).
+    fn forecast_telemetry(&self) -> Option<ForecastTelemetry> {
+        None
     }
 
     /// Policy name for reports.

@@ -1,0 +1,355 @@
+//! Forecast model zoo sweep (the `forecast-sweep` CLI subcommand): every
+//! backend — fourier, arima, histogram, attn, and the online `auto`
+//! selector — against three demand shapes: the synthetic bursty trace,
+//! the Azure-like trace, and a diurnal (sinusoidal-rate Poisson) trace
+//! the fixed generators don't cover.
+//!
+//! Each cell reports two things: the rolling forecast accuracy of the
+//! backend on the trace's 30 s demand bins (the Fig. 4 protocol,
+//! extended to the zoo), and the end-to-end MPC run driven through that
+//! backend (P99 / cold starts / selector telemetry). Everything except
+//! the wall-clock runtime column is deterministic in `(seed, trace,
+//! backend)` — see the tests here and `tests/forecast_zoo.rs`.
+
+use std::time::Instant;
+
+use crate::config::{
+    secs, ControllerConfig, ExperimentConfig, ForecastBackend, ForecastConfig, Micros, Policy,
+    TraceKind,
+};
+use crate::experiments::fig4::{self, rolling_eval_h, ForecastEval};
+use crate::experiments::runner::run_experiment;
+use crate::forecast::selector::{make_backend, AutoSelector};
+use crate::forecast::{accuracy, Forecaster};
+use crate::metrics::RunReport;
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+use crate::workload::Trace;
+
+/// The demand shapes the sweep covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepTrace {
+    Bursty,
+    Azure,
+    Diurnal,
+}
+
+impl SweepTrace {
+    pub const ALL: [SweepTrace; 3] = [SweepTrace::Bursty, SweepTrace::Azure, SweepTrace::Diurnal];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SweepTrace::Bursty => "bursty",
+            SweepTrace::Azure => "azure",
+            SweepTrace::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// Generate the trace for one sweep row. Bursty and azure reuse the
+/// Fig. 4 generators verbatim; diurnal is local to the sweep.
+pub fn trace_for(trace: SweepTrace, duration: Micros, seed: u64) -> Trace {
+    match trace {
+        SweepTrace::Bursty => fig4::trace_for(TraceKind::SyntheticBursty, duration, seed),
+        SweepTrace::Azure => fig4::trace_for(TraceKind::AzureLike, duration, seed),
+        SweepTrace::Diurnal => diurnal(duration, seed),
+    }
+}
+
+/// Diurnal trace: a Poisson process whose rate follows a compressed
+/// "day" — `base + amp * sin(2π t / period)`, floored above zero. The
+/// smooth periodicity is the regime the Fourier predictor was built
+/// for, which makes this the control trace of the sweep (a backend
+/// that loses to fourier here is not being mis-scored by the selector).
+pub fn diurnal(duration: Micros, seed: u64) -> Trace {
+    // distinct stream from the azure/synthetic generators under equal seeds
+    let mut rng = Rng::new(seed ^ 0x00D1_0BA7);
+    let end = duration as f64 / 1e6;
+    let period = 3600.0; // one "day" per simulated hour
+    let (base, amp) = (6.0, 5.0);
+    let mut arrivals = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        // piecewise evaluation of the inhomogeneous rate at the current
+        // time — fine at these rates, where steps are ≪ the period
+        let rate = (base + amp * (std::f64::consts::TAU * t / period).sin()).max(0.2);
+        t += rng.exp(rate);
+        if t >= end {
+            break;
+        }
+        arrivals.push(secs(t));
+    }
+    Trace::new(arrivals)
+}
+
+/// Shared shape for every cell of a forecast sweep.
+#[derive(Debug, Clone)]
+pub struct SweepParams {
+    pub duration_s: f64,
+    pub seed: u64,
+    /// Forecast history window fed per evaluation (30 s bins).
+    pub window: usize,
+    /// Forecast horizon scored per evaluation (30 s bins).
+    pub horizon: usize,
+}
+
+impl Default for SweepParams {
+    fn default() -> Self {
+        SweepParams {
+            duration_s: 14400.0,
+            seed: 42,
+            window: 120, // matches the controller/artifact forecast window
+            horizon: 24,
+        }
+    }
+}
+
+/// One sweep cell: rolling accuracy + the MPC run for (trace, backend).
+#[derive(Debug, Clone)]
+pub struct ForecastCell {
+    pub trace: SweepTrace,
+    pub backend: ForecastBackend,
+    pub eval: ForecastEval,
+    pub report: RunReport,
+}
+
+/// Experiment config for one cell's MPC run. The diurnal trace has no
+/// `TraceKind`; its cells borrow the synthetic kind for the config (the
+/// runner consumes the explicitly generated trace either way).
+pub fn cell_config(p: &SweepParams, trace: SweepTrace, backend: ForecastBackend) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        trace: match trace {
+            SweepTrace::Azure => TraceKind::AzureLike,
+            SweepTrace::Bursty | SweepTrace::Diurnal => TraceKind::SyntheticBursty,
+        },
+        duration: secs(p.duration_s),
+        seed: p.seed,
+        ..Default::default()
+    };
+    cfg.controller.forecast = ForecastConfig {
+        backend,
+        ..Default::default()
+    };
+    cfg
+}
+
+/// Score one backend on a binned demand series with the Fig. 4 rolling
+/// protocol. Fixed backends go through [`rolling_eval_h`] unchanged;
+/// `auto` additionally sees every realized bin (the selector's scoring
+/// input) before each evaluation point, exactly as the controller
+/// feeds it.
+pub fn eval_backend(
+    backend: ForecastBackend,
+    bins: &[f64],
+    window: usize,
+    horizon: usize,
+    trace_name: &str,
+) -> ForecastEval {
+    let gamma_clip = ControllerConfig::default().gamma_clip;
+    if backend != ForecastBackend::Auto {
+        let mut f = make_backend(backend, gamma_clip);
+        return rolling_eval_h(&mut *f, bins, window, horizon, trace_name);
+    }
+    let fc = ForecastConfig {
+        backend: ForecastBackend::Auto,
+        ..Default::default()
+    };
+    let mut sel = AutoSelector::new(&fc, gamma_clip);
+    let mut preds = Vec::new();
+    let mut actuals = Vec::new();
+    let mut runtime_ns = 0.0;
+    let mut n = 0usize;
+    let stride = (horizon / 2).max(1);
+    let mut fed = 0usize;
+    let mut t = window;
+    while t + horizon <= bins.len() {
+        // catch the selector up on every bin realized since the last
+        // evaluation point, so routing reflects the live scores
+        while fed < t {
+            sel.observe(&bins[..=fed], bins[fed]);
+            fed += 1;
+        }
+        let hist = &bins[t - window..t];
+        let t0 = Instant::now();
+        let p = sel.forecast(hist, horizon);
+        runtime_ns += t0.elapsed().as_nanos() as f64;
+        n += 1;
+        preds.extend_from_slice(&p);
+        actuals.extend_from_slice(&bins[t..t + horizon]);
+        t += stride;
+    }
+    ForecastEval {
+        predictor: sel.name().to_string(),
+        trace: trace_name.to_string(),
+        accuracy_pct: accuracy::accuracy_pct(&preds, &actuals),
+        wape: accuracy::wape(&preds, &actuals),
+        smape: accuracy::smape(&preds, &actuals),
+        rmse: accuracy::rmse(&preds, &actuals),
+        mean_runtime_ms: runtime_ns / n.max(1) as f64 / 1e6,
+        evaluations: n,
+    }
+}
+
+/// Run one (trace, backend) cell: the rolling accuracy eval on the
+/// trace's 30 s bins plus the end-to-end MPC run through the backend.
+pub fn run_cell(p: &SweepParams, trace: SweepTrace, backend: ForecastBackend) -> ForecastCell {
+    let t = trace_for(trace, secs(p.duration_s), p.seed);
+    let bins: Vec<f64> = t.binned(secs(30.0)).iter().map(|&b| b as f64).collect();
+    let eval = eval_backend(backend, &bins, p.window, p.horizon, trace.name());
+    let cfg = cell_config(p, trace, backend);
+    let mut report = run_experiment(&cfg, Policy::Mpc, &t);
+    // the config's TraceKind is a stand-in for the diurnal rows; label
+    // the report with the sweep trace the cell actually ran
+    report.trace = trace.name().to_string();
+    ForecastCell {
+        trace,
+        backend,
+        eval,
+        report,
+    }
+}
+
+/// Sweep every backend over every trace (one shared workload per trace).
+pub fn run_sweep(p: &SweepParams) -> Vec<ForecastCell> {
+    let mut cells = Vec::new();
+    for trace in SweepTrace::ALL {
+        for backend in ForecastBackend::ALL {
+            cells.push(run_cell(p, trace, backend));
+        }
+    }
+    cells
+}
+
+/// Print the sweep table: accuracy columns from the rolling eval, tail
+/// latency and selector telemetry from the MPC run. Every column is
+/// deterministic (the wall-clock runtime column is deliberately
+/// omitted).
+pub fn print_table(cells: &[ForecastCell]) {
+    let mut t = Table::new(&[
+        "trace",
+        "backend",
+        "acc %",
+        "wape",
+        "p99 ms",
+        "cold",
+        "switches",
+        "model",
+    ]);
+    for c in cells {
+        let r = &c.report;
+        let model = match r.per_function.first() {
+            Some(f) => f.forecast_model.clone(),
+            None => "-".to_string(),
+        };
+        t.row(&[
+            c.trace.name().to_string(),
+            c.backend.name().to_string(),
+            format!("{:.1}", c.eval.accuracy_pct),
+            format!("{:.3}", c.eval.wape),
+            format!("{:.0}", r.p99_ms),
+            r.counters.cold_starts.to_string(),
+            r.selector_switches.to_string(),
+            model,
+        ]);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Short enough to keep the grid cheap, long enough for the rolling
+    /// eval: 3600 s = 120 bins against window 60 + horizon 12.
+    fn quick() -> SweepParams {
+        SweepParams {
+            duration_s: 3600.0,
+            seed: 7,
+            window: 60,
+            horizon: 12,
+        }
+    }
+
+    #[test]
+    fn diurnal_trace_is_deterministic_and_periodic() {
+        let a = diurnal(secs(3600.0), 7);
+        let b = diurnal(secs(3600.0), 7);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert_ne!(a.arrivals, diurnal(secs(3600.0), 8).arrivals);
+        assert!(a.duration() <= secs(3600.0));
+        // the rate swings between 1 and 11 req/s over the hour: the
+        // densest minute must clearly dominate the sparsest
+        let bins = a.binned(secs(60.0));
+        let (min, max) = (bins.iter().min().unwrap(), bins.iter().max().unwrap());
+        assert!(max > &(min + 60), "no diurnal swing: min={min} max={max}");
+    }
+
+    #[test]
+    fn a_cell_carries_backend_telemetry_end_to_end() {
+        let cell = run_cell(&quick(), SweepTrace::Diurnal, ForecastBackend::Histogram);
+        assert_eq!(cell.eval.predictor, "histogram");
+        assert_eq!(cell.eval.trace, "diurnal");
+        assert!(cell.eval.evaluations > 0);
+        let r = &cell.report;
+        assert!(r.completed > 0);
+        assert_eq!(r.trace, "diurnal");
+        assert_eq!(r.forecast, "histogram");
+        assert_eq!(r.selector_switches, 0, "fixed backends never switch");
+        assert!(r
+            .per_function
+            .iter()
+            .all(|f| f.forecast_model == "histogram"));
+    }
+
+    #[test]
+    fn sweep_covers_the_grid_and_auto_is_never_worst() {
+        let cells = run_sweep(&quick());
+        assert_eq!(cells.len(), SweepTrace::ALL.len() * ForecastBackend::ALL.len());
+        for trace in SweepTrace::ALL {
+            let row: Vec<&ForecastCell> = cells.iter().filter(|c| c.trace == trace).collect();
+            let auto = row
+                .iter()
+                .find(|c| c.backend == ForecastBackend::Auto)
+                .unwrap();
+            let worst_fixed = row
+                .iter()
+                .filter(|c| c.backend != ForecastBackend::Auto)
+                .map(|c| c.eval.accuracy_pct)
+                .fold(f64::INFINITY, f64::min);
+            // the acceptance bar: online selection may not do worse than
+            // pinning the worst zoo member (same tolerance as Fig. 4)
+            assert!(
+                auto.eval.accuracy_pct >= worst_fixed - 1.0,
+                "{}: auto {:.1}% < worst fixed {:.1}%",
+                trace.name(),
+                auto.eval.accuracy_pct,
+                worst_fixed
+            );
+        }
+    }
+
+    #[test]
+    fn auto_cell_is_deterministic_across_runs() {
+        let p = quick();
+        let a = run_cell(&p, SweepTrace::Bursty, ForecastBackend::Auto);
+        let b = run_cell(&p, SweepTrace::Bursty, ForecastBackend::Auto);
+        assert_eq!(a.eval.accuracy_pct, b.eval.accuracy_pct);
+        assert_eq!(a.eval.wape, b.eval.wape);
+        assert_eq!(a.report.p99_ms, b.report.p99_ms);
+        assert_eq!(a.report.counters.cold_starts, b.report.counters.cold_starts);
+        assert_eq!(a.report.selector_switches, b.report.selector_switches);
+        let models: Vec<&str> = a
+            .report
+            .per_function
+            .iter()
+            .map(|f| f.forecast_model.as_str())
+            .collect();
+        let models_b: Vec<&str> = b
+            .report
+            .per_function
+            .iter()
+            .map(|f| f.forecast_model.as_str())
+            .collect();
+        assert_eq!(models, models_b);
+    }
+}

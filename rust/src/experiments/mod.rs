@@ -10,6 +10,7 @@ pub mod fig1;
 pub mod fig4;
 pub mod fig5_7;
 pub mod fig8;
+pub mod forecast_sweep;
 pub mod keepalive;
 pub mod runner;
 pub mod sharded;

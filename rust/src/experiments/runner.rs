@@ -80,7 +80,10 @@ pub fn make_scheduler(cfg: &ExperimentConfig, policy: Policy) -> Box<dyn Schedul
             // graceful degradation (chaos runs only): floor the live
             // pool bound during storms and discount stale forecasts
             // after flash crowds
-            .with_degradation(cfg.chaos.enabled()),
+            .with_degradation(cfg.chaos.enabled())
+            // forecast-zoo backend selection (a no-op under the default
+            // fourier backend, which keeps the seed path bit-identical)
+            .with_forecast(&cc.forecast),
         ),
     }
 }
@@ -207,6 +210,21 @@ pub fn run_tenant_with_scheduler(
     report.placement = cfg.fleet.placement.name().to_string();
     report.keepalive_policy = cfg.controller.keepalive.policy.name().to_string();
     report.idle_saved_s = to_secs(fleet.idle_saved());
+    // forecast-zoo telemetry: policies with a forecast registry report
+    // the backend, selector activity, and per-function model rows; the
+    // reactive baselines keep the structural defaults (fourier / 0)
+    if let Some(ft) = sched.forecast_telemetry() {
+        report.forecast = ft.backend.to_string();
+        report.selector_switches = ft.selector_switches;
+        for f in &mut report.per_function {
+            if let Some(&(_, model, acc)) =
+                ft.per_function.iter().find(|&&(func, _, _)| func == f.func)
+            {
+                f.forecast_model = model.to_string();
+                f.forecast_accuracy_pct = acc;
+            }
+        }
+    }
     report.per_node = per_node;
     report.set_throughput(events.processed(), wall_secs);
     report

@@ -1,14 +1,22 @@
-//! Forecast error metrics for the Fig. 4 reproduction.
+//! Forecast error metrics for the Fig. 4 reproduction and the online
+//! model selector.
 //!
 //! The paper reports a scalar "accuracy %" (e.g. Fourier 86.2% on Azure).
 //! We define accuracy = 100 x (1 - WAPE) clamped to [0, 100], with
 //! WAPE = sum|pred - actual| / sum|actual| — the standard weighted absolute
 //! percentage error, well-behaved on rate series that touch zero (where
 //! per-point MAPE blows up). sMAPE is also provided for reference.
+//!
+//! Mismatched lengths are clamped to the common prefix rather than
+//! asserted: the online selector scores forecasts against partially
+//! realized windows mid-run, and a length mismatch there must degrade to
+//! "score what overlaps", never panic the simulation.
 
-/// Weighted absolute percentage error in [0, inf).
+/// Weighted absolute percentage error in [0, inf). Extra trailing
+/// entries on either slice are ignored (common-prefix comparison).
 pub fn wape(pred: &[f64], actual: &[f64]) -> f64 {
-    assert_eq!(pred.len(), actual.len());
+    let n = pred.len().min(actual.len());
+    let (pred, actual) = (&pred[..n], &actual[..n]);
     let denom: f64 = actual.iter().map(|a| a.abs()).sum();
     if denom < 1e-12 {
         return if pred.iter().all(|p| p.abs() < 1e-12) {
@@ -25,34 +33,34 @@ pub fn wape(pred: &[f64], actual: &[f64]) -> f64 {
     num / denom
 }
 
-/// Symmetric MAPE in [0, 2].
+/// Symmetric MAPE in [0, 2]. Clamps to the common prefix like [`wape`].
 pub fn smape(pred: &[f64], actual: &[f64]) -> f64 {
-    assert_eq!(pred.len(), actual.len());
-    if pred.is_empty() {
+    let n = pred.len().min(actual.len());
+    if n == 0 {
         return 0.0;
     }
     let mut acc = 0.0;
-    for (p, a) in pred.iter().zip(actual) {
+    for (p, a) in pred[..n].iter().zip(&actual[..n]) {
         let denom = (p.abs() + a.abs()) / 2.0;
         if denom > 1e-12 {
             acc += (p - a).abs() / denom;
         }
     }
-    acc / pred.len() as f64
+    acc / n as f64
 }
 
-/// Root mean squared error.
+/// Root mean squared error. Clamps to the common prefix like [`wape`].
 pub fn rmse(pred: &[f64], actual: &[f64]) -> f64 {
-    assert_eq!(pred.len(), actual.len());
-    if pred.is_empty() {
+    let n = pred.len().min(actual.len());
+    if n == 0 {
         return 0.0;
     }
-    let s: f64 = pred
+    let s: f64 = pred[..n]
         .iter()
-        .zip(actual)
+        .zip(&actual[..n])
         .map(|(p, a)| (p - a).powi(2))
         .sum();
-    (s / pred.len() as f64).sqrt()
+    (s / n as f64).sqrt()
 }
 
 /// The paper's headline number: accuracy % = 100 (1 - WAPE), clamped.
@@ -97,5 +105,40 @@ mod tests {
     #[test]
     fn rmse_known_value() {
         assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn length_mismatch_scores_common_prefix() {
+        // extra trailing entries on either side are ignored, so a
+        // partially realized window scores like its overlap
+        let pred = [11.0, 9.0, 99.0, 7.0];
+        let actual = [10.0, 10.0];
+        assert!((wape(&pred, &actual) - 0.1).abs() < 1e-12);
+        assert_eq!(wape(&actual, &pred), wape(&pred, &actual));
+        assert!((rmse(&[0.0, 0.0, 50.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+        assert!((smape(&[2.0], &[2.0, 100.0]) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_slices_are_benign() {
+        assert_eq!(wape(&[], &[]), 0.0);
+        assert_eq!(smape(&[], &[]), 0.0);
+        assert_eq!(rmse(&[], &[]), 0.0);
+        // empty on one side: no overlap, nothing to score
+        assert_eq!(wape(&[], &[5.0, 6.0]), 0.0);
+        assert_eq!(wape(&[5.0, 6.0], &[]), 0.0);
+        assert_eq!(accuracy_pct(&[], &[]), 100.0);
+    }
+
+    #[test]
+    fn all_zero_actuals_never_panic() {
+        // zero denominator: perfect when pred is also zero, +inf (and a
+        // clamped 0% accuracy) when pred claims load that never arrived
+        let zeros = [0.0; 8];
+        assert_eq!(wape(&zeros, &zeros), 0.0);
+        assert!(wape(&[0.1; 8], &zeros).is_infinite());
+        assert_eq!(accuracy_pct(&[0.1; 8], &zeros), 0.0);
+        assert_eq!(rmse(&zeros, &zeros), 0.0);
+        assert_eq!(smape(&zeros, &zeros), 0.0);
     }
 }

@@ -252,4 +252,42 @@ mod tests {
         let pred = f.forecast(&y, 30);
         assert!(pred.iter().all(|&p| p >= 0.0));
     }
+
+    #[test]
+    fn history_shorter_than_ar_boot_uses_persistence() {
+        // Hannan-Rissanen stage 1 needs n > m + p + q + 2 rows; below
+        // that the fit must decline and the forecast fall back to naive
+        // persistence of the last (differenced) level
+        let f = ArimaForecaster::default();
+        let y: Vec<f64> = (0..8).map(|t| 5.0 + t as f64).collect(); // n=8 < ar_boot=12
+        assert!(f.fit_arma(&y).is_none(), "fit must refuse a short series");
+        let mut f = ArimaForecaster::default();
+        let pred = f.forecast(&y, 6);
+        assert_eq!(pred.len(), 6);
+        // d=1 persistence of a unit-slope ramp continues the ramp
+        for (h, p) in pred.iter().enumerate() {
+            let want = 12.0 + (h + 1) as f64;
+            assert!((p - want).abs() < 1e-9, "h={h}: {p} vs {want}");
+        }
+    }
+
+    #[test]
+    fn zero_variance_series_is_finite_and_constant() {
+        // a zero-variance (constant) series makes every OLS design
+        // matrix singular; the ridge term resolves it to all-zero
+        // coefficients, so the forecast is exactly the series mean —
+        // finite, never NaN
+        let f = ArimaForecaster { d: 0, ..Default::default() };
+        let fit = f.fit_arma(&vec![4.0; 200]).expect("ridge resolves the singular design");
+        assert!(fit.ar.iter().chain(&fit.ma).all(|c| c.abs() < 1e-6), "{fit:?}");
+        for d in [0, 1, 2] {
+            let mut f = ArimaForecaster { d, ..Default::default() };
+            let pred = f.forecast(&vec![4.0; 200], 12);
+            assert_eq!(pred.len(), 12);
+            assert!(pred.iter().all(|p| p.is_finite()), "d={d}: {pred:?}");
+            for p in &pred {
+                assert!((p - 4.0).abs() < 1e-6, "d={d}: {p}");
+            }
+        }
+    }
 }

@@ -1,0 +1,171 @@
+//! Attention-inspired pattern-matching forecaster (arXiv:2504.11338).
+//!
+//! Transformer predictors forecast serverless load by attending over
+//! past subsequences that resemble the present. This backend keeps the
+//! mechanism and drops the learned weights: the query is the trailing
+//! `context` bins; every historical window of the same length is a key
+//! whose following `horizon` bins are its value; attention weights are a
+//! softmax over negative mean squared distance between query and key
+//! (temperature-scaled), and the forecast is the weight-averaged value.
+//! Regime shifts are where this wins — when the recent past matches an
+//! earlier regime better than the global trend, the matched episode's
+//! continuation dominates the average — while pure-parametric models
+//! keep extrapolating the stale fit.
+//!
+//! Cost is O(history × context) per call, comfortably inside the 30 s
+//! control interval for the 120-bin windows the controller keeps.
+
+use crate::forecast::Forecaster;
+
+#[derive(Debug, Clone)]
+pub struct AttnForecaster {
+    /// Query/key length in bins.
+    pub context: usize,
+    /// Softmax temperature on the mean squared distance; lower is
+    /// sharper (closer to nearest-neighbor lookup).
+    pub temperature: f64,
+}
+
+impl Default for AttnForecaster {
+    fn default() -> Self {
+        AttnForecaster {
+            context: 24,
+            temperature: 4.0,
+        }
+    }
+}
+
+impl AttnForecaster {
+    /// Mean squared distance between the query and the key starting at
+    /// `start`.
+    fn key_dist(history: &[f64], start: usize, query: &[f64]) -> f64 {
+        let c = query.len();
+        let mut d = 0.0;
+        for i in 0..c {
+            let e = history[start + i] - query[i];
+            d += e * e;
+        }
+        d / c as f64
+    }
+}
+
+impl Forecaster for AttnForecaster {
+    fn forecast(&mut self, history: &[f64], horizon: usize) -> Vec<f64> {
+        let n = history.len();
+        let c = self.context.max(1);
+        // too little history for even one (key, value) pair: persistence
+        if n < c + 1 {
+            let last = history.last().copied().unwrap_or(0.0).max(0.0);
+            return vec![last; horizon];
+        }
+        let query = &history[n - c..];
+        // keys end strictly before the query starts being its own value:
+        // key at `s` covers [s, s+c), its value is [s+c, s+c+horizon)
+        // clipped to the realized history
+        let last_key = n - c - 1;
+        let mut scores = Vec::with_capacity(last_key + 1);
+        let mut best = f64::NEG_INFINITY;
+        for s in 0..=last_key {
+            let sc = -Self::key_dist(history, s, query) / self.temperature.max(1e-9);
+            best = best.max(sc);
+            scores.push(sc);
+        }
+        // softmax, max-subtracted for stability
+        let mut wsum = 0.0;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - best).exp();
+            wsum += *sc;
+        }
+        let mut out = vec![0.0; horizon];
+        let mut used = vec![0.0; horizon];
+        for (s, w) in scores.iter().enumerate() {
+            for (h, slot) in out.iter_mut().enumerate() {
+                let idx = s + c + h;
+                if idx < n {
+                    *slot += w * history[idx];
+                    used[h] += w;
+                }
+            }
+        }
+        let last = history[n - 1].max(0.0);
+        for (h, slot) in out.iter_mut().enumerate() {
+            // steps no episode reaches fall back to persistence
+            *slot = if used[h] > 1e-12 * wsum.max(1e-12) {
+                (*slot / used[h]).max(0.0)
+            } else {
+                last
+            };
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "attn"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_history_predicts_constant() {
+        let mut f = AttnForecaster::default();
+        let pred = f.forecast(&vec![6.0; 120], 12);
+        for p in pred {
+            assert!((p - 6.0).abs() < 1e-9, "{p}");
+        }
+    }
+
+    #[test]
+    fn short_history_falls_back_to_persistence() {
+        let mut f = AttnForecaster::default();
+        assert_eq!(f.forecast(&[], 3), vec![0.0; 3]);
+        assert_eq!(f.forecast(&[4.0, 8.0], 2), vec![8.0, 8.0]);
+    }
+
+    #[test]
+    fn periodic_pattern_is_continued() {
+        // period-8 square wave over 15 periods: the query matches the
+        // in-phase episodes, so the continuation tracks the next phase
+        let hist: Vec<f64> = (0..120)
+            .map(|t| if (t / 4) % 2 == 0 { 20.0 } else { 2.0 })
+            .collect();
+        let mut f = AttnForecaster {
+            context: 8,
+            temperature: 1.0,
+        };
+        let pred = f.forecast(&hist, 8);
+        for (h, p) in pred.iter().enumerate() {
+            let t = 120 + h;
+            let want = if (t / 4) % 2 == 0 { 20.0 } else { 2.0 };
+            assert!((p - want).abs() < 4.0, "h={h}: {p} vs {want}");
+        }
+    }
+
+    #[test]
+    fn regime_shift_recalls_the_matching_regime() {
+        // an old high-load regime, a long quiet stretch, then the first
+        // bins of the high regime again: attention should recall high
+        let mut hist = vec![30.0; 40];
+        hist.extend(vec![1.0; 60]);
+        hist.extend(vec![30.0; 24]);
+        let mut f = AttnForecaster {
+            context: 12,
+            temperature: 0.5,
+        };
+        let pred = f.forecast(&hist, 4);
+        assert!(pred[0] > 10.0, "stale quiet regime won: {pred:?}");
+    }
+
+    #[test]
+    fn outputs_are_finite_and_nonnegative_on_spiky_input() {
+        let hist: Vec<f64> = (0..200)
+            .map(|t| if t % 31 == 0 { 1e6 } else { 0.0 })
+            .collect();
+        let mut f = AttnForecaster::default();
+        let pred = f.forecast(&hist, 24);
+        assert_eq!(pred.len(), 24);
+        assert!(pred.iter().all(|p| p.is_finite() && *p >= 0.0), "{pred:?}");
+    }
+}

@@ -144,6 +144,11 @@ impl FourierForecaster {
 
 impl Forecaster for FourierForecaster {
     fn forecast(&mut self, history: &[f64], horizon: usize) -> Vec<f64> {
+        // empty window: nothing to fit (the controller always feeds a
+        // padded fixed-shape window, so this only guards direct callers)
+        if history.is_empty() {
+            return vec![0.0; horizon];
+        }
         let raw = self.forecast_raw(history, horizon);
         // Eq. 2: statistical clipping to [0, mean + gamma * std]
         let m = self.recent.min(history.len());

@@ -1,0 +1,127 @@
+//! Histogram rate forecaster (the SPES-style non-parametric backend,
+//! arXiv:2403.17574).
+//!
+//! SPES predicts idle-window durations from an inter-arrival histogram
+//! and provisions at a quantile of that distribution rather than at a
+//! point estimate. Translated to this simulator's per-interval rate
+//! series: keep the trailing `window` realized bin counts as an
+//! empirical distribution and forecast a fixed `quantile` of it for
+//! every horizon step. On sparse/bursty functions — long idle stretches
+//! punctuated by spikes — this is hard to beat: the quantile sits just
+//! above the idle mass, so the controller holds a small warm floor
+//! without chasing every spike, while parametric models (Fourier,
+//! ARIMA) ring or mean-revert.
+//!
+//! The forecast is deliberately flat across the horizon: a histogram
+//! has no phase information, and pretending otherwise only injects
+//! noise into the MPC's terminal steps.
+
+use crate::forecast::Forecaster;
+
+#[derive(Debug, Clone)]
+pub struct HistogramForecaster {
+    /// Trailing bins kept as the empirical distribution.
+    pub window: usize,
+    /// Quantile of the distribution forecast for every step; SPES uses a
+    /// high percentile for its keep-alive bound, but on rate series the
+    /// controller's own clipping handles the tail, so we default just
+    /// above the median.
+    pub quantile: f64,
+}
+
+impl Default for HistogramForecaster {
+    fn default() -> Self {
+        HistogramForecaster {
+            window: 60,
+            quantile: 0.6,
+        }
+    }
+}
+
+impl HistogramForecaster {
+    /// The `quantile` of the trailing `window` samples (nearest-rank on
+    /// the sorted copy). Zero for an empty history.
+    fn level(&self, history: &[f64]) -> f64 {
+        let m = self.window.min(history.len());
+        if m == 0 {
+            return 0.0;
+        }
+        let mut recent: Vec<f64> = history[history.len() - m..].to_vec();
+        recent.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let q = self.quantile.clamp(0.0, 1.0);
+        let idx = ((m - 1) as f64 * q).round() as usize;
+        recent[idx.min(m - 1)].max(0.0)
+    }
+}
+
+impl Forecaster for HistogramForecaster {
+    fn forecast(&mut self, history: &[f64], horizon: usize) -> Vec<f64> {
+        vec![self.level(history); horizon]
+    }
+
+    fn name(&self) -> &'static str {
+        "histogram"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_history_predicts_constant() {
+        let mut f = HistogramForecaster::default();
+        let pred = f.forecast(&vec![9.0; 120], 24);
+        assert_eq!(pred, vec![9.0; 24]);
+    }
+
+    #[test]
+    fn quantile_sits_above_the_idle_mass_on_bursty_series() {
+        // 90% idle bins, 10% spikes of 50: the 0.6 quantile is the idle
+        // level, so the forecast does not chase spikes
+        let hist: Vec<f64> = (0..100)
+            .map(|t| if t % 10 == 0 { 50.0 } else { 0.0 })
+            .collect();
+        let mut f = HistogramForecaster::default();
+        let pred = f.forecast(&hist, 8);
+        assert!(pred.iter().all(|&p| p == 0.0), "{pred:?}");
+        // a high quantile does provision for the spikes
+        let mut hi = HistogramForecaster {
+            quantile: 0.95,
+            ..Default::default()
+        };
+        let pred = hi.forecast(&hist, 8);
+        assert!(pred.iter().all(|&p| p == 50.0), "{pred:?}");
+    }
+
+    #[test]
+    fn empty_and_short_histories_are_benign() {
+        let mut f = HistogramForecaster::default();
+        assert_eq!(f.forecast(&[], 4), vec![0.0; 4]);
+        assert_eq!(f.forecast(&[3.0], 2), vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn window_limits_lookback() {
+        // old regime (100s) outside the window must not leak in
+        let mut hist = vec![100.0; 200];
+        hist.extend(vec![2.0; 60]);
+        let mut f = HistogramForecaster::default();
+        assert_eq!(f.forecast(&hist, 3), vec![2.0; 3]);
+    }
+
+    #[test]
+    fn extreme_quantiles_clamp_to_min_and_max() {
+        let hist = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut lo = HistogramForecaster {
+            window: 5,
+            quantile: 0.0,
+        };
+        let mut hi = HistogramForecaster {
+            window: 5,
+            quantile: 1.0,
+        };
+        assert_eq!(lo.forecast(&hist, 1), vec![1.0]);
+        assert_eq!(hi.forecast(&hist, 1), vec![5.0]);
+    }
+}

@@ -13,6 +13,12 @@
 //! | ARIMA baseline (Fig. 4) | [`arima::ArimaForecaster`], normal equations via [`linalg::solve`] |
 //! | accuracy / WAPE / sMAPE / RMSE (Fig. 4's scores) | [`accuracy`] |
 //!
+//! Beyond the paper's pair, the runtime zoo adds a SPES-style histogram
+//! quantile model ([`histogram::HistogramForecaster`]) and an
+//! attention-inspired pattern matcher ([`attn::AttnForecaster`]), with
+//! [`selector::AutoSelector`] picking per function online by rolling
+//! WAPE (`--forecast auto`).
+//!
 //! The deployed forecast path executes the AOT HLO artifact through
 //! `runtime::modules::ForecastModule`; [`fourier::FourierForecaster`] is
 //! the bit-level Rust mirror used for fast simulation sweeps and
@@ -22,8 +28,11 @@
 
 pub mod accuracy;
 pub mod arima;
+pub mod attn;
 pub mod fourier;
+pub mod histogram;
 pub mod linalg;
+pub mod selector;
 
 /// A rolling-horizon forecaster of per-interval arrival counts.
 pub trait Forecaster {
@@ -36,23 +45,77 @@ pub trait Forecaster {
 }
 
 pub use arima::ArimaForecaster;
+pub use attn::AttnForecaster;
 pub use fourier::FourierForecaster;
+pub use histogram::HistogramForecaster;
+pub use selector::AutoSelector;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn trait_objects_work() {
-        let mut fs: Vec<Box<dyn Forecaster>> = vec![
+    fn zoo() -> Vec<Box<dyn Forecaster>> {
+        vec![
             Box::new(FourierForecaster::default()),
             Box::new(ArimaForecaster::default()),
-        ];
+            Box::new(HistogramForecaster::default()),
+            Box::new(AttnForecaster::default()),
+        ]
+    }
+
+    #[test]
+    fn trait_objects_work() {
+        let mut fs = zoo();
         let hist: Vec<f64> = (0..240).map(|t| 10.0 + (t % 7) as f64).collect();
         for f in fs.iter_mut() {
             let out = f.forecast(&hist, 24);
             assert_eq!(out.len(), 24, "{}", f.name());
             assert!(out.iter().all(|v| v.is_finite()), "{}", f.name());
         }
+    }
+
+    #[test]
+    fn trait_contract_holds_for_every_backend() {
+        // the property satellite: exactly `horizon` values, all finite,
+        // all non-negative after clipping, on adversarial history shapes
+        use crate::prop_assert;
+        use crate::util::prop::prop_check;
+        prop_check("forecaster trait contract", 60, |g| {
+            let shape = g.usize(0, 4);
+            let n = g.usize(0, 260);
+            let hist: Vec<f64> = match shape {
+                0 => vec![0.0; n],                                     // all-zero
+                1 => vec![g.f64(0.0, 50.0); n],                        // constant
+                2 => (0..n)
+                    .map(|t| if t == n / 2 { g.f64(100.0, 1e5) } else { 0.0 })
+                    .collect(),                                        // spike
+                3 => {
+                    let slope = g.f64(0.0, 3.0);
+                    (0..n).map(|t| slope * t as f64).collect()         // ramp
+                }
+                _ => (0..n).map(|_| g.f64(0.0, 200.0)).collect(),      // noise
+            };
+            let horizon = g.usize(1, 48);
+            for f in zoo().iter_mut() {
+                let out = f.forecast(&hist, horizon);
+                prop_assert!(
+                    out.len() == horizon,
+                    "{}: {} values for horizon {horizon} (n={n}, shape={shape})",
+                    f.name(),
+                    out.len()
+                );
+                prop_assert!(
+                    out.iter().all(|v| v.is_finite()),
+                    "{}: non-finite output (n={n}, shape={shape}): {out:?}",
+                    f.name()
+                );
+                prop_assert!(
+                    out.iter().all(|&v| v >= 0.0),
+                    "{}: negative output (n={n}, shape={shape}): {out:?}",
+                    f.name()
+                );
+            }
+            Ok(())
+        });
     }
 }

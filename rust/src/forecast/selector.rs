@@ -1,0 +1,251 @@
+//! Online per-function forecast model selection (`--forecast auto`).
+//!
+//! Each function keeps one instance of every zoo backend. At every
+//! control tick the selector scores each backend's previous one-step
+//! prediction against the bin that actually realized, accumulating a
+//! rolling WAPE (via [`accuracy`]) over the last `score_window` scored
+//! bins, and routes the function's forecasts — prewarm split, lead
+//! window, adaptive keep-alive horizon — through the current-best model.
+//!
+//! Selection is deliberately sticky: a challenger only displaces the
+//! incumbent when its rolling WAPE beats the incumbent's by the relative
+//! `hysteresis` margin, and never before `warmup_bins` bins have been
+//! scored. Ties resolve to the lowest backend index (the zoo order is
+//! fixed), so the whole procedure is a pure function of the realized bin
+//! sequence — deterministic across runs and shard counts.
+
+use std::collections::VecDeque;
+
+use crate::config::{ForecastBackend, ForecastConfig};
+use crate::forecast::{
+    accuracy, ArimaForecaster, AttnForecaster, Forecaster, FourierForecaster, HistogramForecaster,
+};
+
+/// The zoo, in scoring/tie-break order.
+const ZOO: [ForecastBackend; 4] = [
+    ForecastBackend::Fourier,
+    ForecastBackend::Arima,
+    ForecastBackend::Histogram,
+    ForecastBackend::Attn,
+];
+
+/// Construct a boxed instance of a fixed backend. The Fourier instance
+/// carries the controller's clipping γ exactly as the pre-zoo hard-coded
+/// field did, which is what keeps `--forecast fourier` byte-identical.
+pub fn make_backend(backend: ForecastBackend, gamma_clip: f64) -> Box<dyn Forecaster> {
+    match backend {
+        // Auto is handled by AutoSelector; mapping it to the default
+        // backend here keeps this constructor total
+        ForecastBackend::Fourier | ForecastBackend::Auto => Box::new(FourierForecaster {
+            gamma_clip,
+            ..Default::default()
+        }),
+        ForecastBackend::Arima => Box::new(ArimaForecaster::default()),
+        ForecastBackend::Histogram => Box::new(HistogramForecaster::default()),
+        ForecastBackend::Attn => Box::new(AttnForecaster::default()),
+    }
+}
+
+/// Online selector over the full zoo for one function's demand series.
+pub struct AutoSelector {
+    backends: Vec<Box<dyn Forecaster>>,
+    /// Last one-step prediction per backend, scored against the next
+    /// realized bin.
+    pending: Vec<Option<f64>>,
+    /// Rolling (pred, actual) pairs per backend, newest-last.
+    scored: Vec<VecDeque<(f64, f64)>>,
+    current: usize,
+    switches: u64,
+    score_window: usize,
+    hysteresis: f64,
+    warmup_bins: usize,
+}
+
+impl AutoSelector {
+    pub fn new(cfg: &ForecastConfig, gamma_clip: f64) -> Self {
+        AutoSelector {
+            backends: ZOO.iter().map(|&b| make_backend(b, gamma_clip)).collect(),
+            pending: vec![None; ZOO.len()],
+            scored: (0..ZOO.len()).map(|_| VecDeque::new()).collect(),
+            current: 0,
+            switches: 0,
+            score_window: cfg.score_window.max(1),
+            hysteresis: cfg.hysteresis.max(0.0),
+            warmup_bins: cfg.warmup_bins,
+        }
+    }
+
+    /// Rolling WAPE of backend `i` over its scored window.
+    fn score(&self, i: usize) -> f64 {
+        let (preds, actuals): (Vec<f64>, Vec<f64>) = self.scored[i].iter().copied().unzip();
+        accuracy::wape(&preds, &actuals)
+    }
+
+    fn maybe_switch(&mut self) {
+        if self.scored[self.current].len() < self.warmup_bins.max(1) {
+            return;
+        }
+        let scores: Vec<f64> = (0..self.backends.len()).map(|i| self.score(i)).collect();
+        let mut best = 0;
+        for (i, s) in scores.iter().enumerate().skip(1) {
+            if *s < scores[best] {
+                best = i;
+            }
+        }
+        // the challenger must beat the incumbent by the relative margin;
+        // an infinite incumbent WAPE (all-zero window, nonzero preds) is
+        // beaten by any finite challenger
+        if best != self.current && scores[best] < scores[self.current] * (1.0 - self.hysteresis) {
+            self.current = best;
+            self.switches += 1;
+        }
+    }
+
+    /// One control tick worth of bookkeeping. `history` is the demand
+    /// window *after* the just-realized bin was pushed (oldest first,
+    /// newest == `realized`): score every backend's pending one-step
+    /// prediction against `realized`, re-select, then stage each
+    /// backend's next one-step prediction from the updated window.
+    pub fn observe(&mut self, history: &[f64], realized: f64) {
+        for i in 0..self.backends.len() {
+            if let Some(p) = self.pending[i].take() {
+                let w = &mut self.scored[i];
+                w.push_back((p, realized));
+                while w.len() > self.score_window {
+                    w.pop_front();
+                }
+            }
+        }
+        self.maybe_switch();
+        for i in 0..self.backends.len() {
+            self.pending[i] = self.backends[i].forecast(history, 1).first().copied();
+        }
+    }
+
+    /// The currently selected backend.
+    pub fn current_backend(&self) -> ForecastBackend {
+        ZOO[self.current]
+    }
+
+    /// Name of the currently selected backend.
+    pub fn current_name(&self) -> &'static str {
+        self.current_backend().name()
+    }
+
+    /// How many times selection has moved off the incumbent.
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// Rolling accuracy % (100 × (1 − WAPE), clamped) of the current
+    /// backend; 100 before anything has been scored.
+    pub fn rolling_accuracy_pct(&self) -> f64 {
+        let (preds, actuals): (Vec<f64>, Vec<f64>) =
+            self.scored[self.current].iter().copied().unzip();
+        accuracy::accuracy_pct(&preds, &actuals)
+    }
+}
+
+impl Forecaster for AutoSelector {
+    fn forecast(&mut self, history: &[f64], horizon: usize) -> Vec<f64> {
+        self.backends[self.current].forecast(history, horizon)
+    }
+
+    fn name(&self) -> &'static str {
+        "auto"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> ForecastConfig {
+        ForecastConfig {
+            backend: ForecastBackend::Auto,
+            score_window: 8,
+            hysteresis: 0.1,
+            warmup_bins: 4,
+        }
+    }
+
+    /// Drive the selector through a realized series the way the
+    /// controller does: push bin, observe, forecast.
+    fn drive(sel: &mut AutoSelector, series: &[f64]) {
+        let mut hist: Vec<f64> = Vec::new();
+        for &x in series {
+            hist.push(x);
+            sel.observe(&hist, x);
+        }
+    }
+
+    #[test]
+    fn starts_on_fourier_and_never_panics_on_zero_series() {
+        let mut sel = AutoSelector::new(&quick_cfg(), 3.0);
+        assert_eq!(sel.current_name(), "fourier");
+        drive(&mut sel, &vec![0.0; 40]);
+        let out = sel.forecast(&vec![0.0; 40], 6);
+        assert_eq!(out.len(), 6);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn selection_is_deterministic() {
+        let series: Vec<f64> = (0..120)
+            .map(|t| if t % 9 == 0 { 40.0 } else { (t % 5) as f64 })
+            .collect();
+        let mut a = AutoSelector::new(&quick_cfg(), 3.0);
+        let mut b = AutoSelector::new(&quick_cfg(), 3.0);
+        drive(&mut a, &series);
+        drive(&mut b, &series);
+        assert_eq!(a.current_name(), b.current_name());
+        assert_eq!(a.switches(), b.switches());
+        assert_eq!(a.forecast(&series, 12), b.forecast(&series, 12));
+    }
+
+    #[test]
+    fn no_switch_before_warmup() {
+        let mut sel = AutoSelector::new(&quick_cfg(), 3.0);
+        // three scored bins < warmup_bins = 4: selection must not move
+        drive(&mut sel, &[0.0, 50.0, 0.0]);
+        assert_eq!(sel.switches(), 0);
+        assert_eq!(sel.current_name(), "fourier");
+    }
+
+    #[test]
+    fn infinite_hysteresis_pins_the_incumbent() {
+        let cfg = ForecastConfig {
+            hysteresis: 1.0,
+            ..quick_cfg()
+        };
+        let mut sel = AutoSelector::new(&cfg, 3.0);
+        let series: Vec<f64> = (0..200)
+            .map(|t| if t % 7 == 0 { 80.0 } else { 0.0 })
+            .collect();
+        drive(&mut sel, &series);
+        // a challenger must be 100% better, i.e. WAPE 0 while the
+        // incumbent's is positive — the spiky series denies that
+        assert_eq!(sel.switches(), 0);
+        assert_eq!(sel.current_name(), "fourier");
+    }
+
+    #[test]
+    fn rolling_accuracy_is_bounded() {
+        let mut sel = AutoSelector::new(&quick_cfg(), 3.0);
+        assert_eq!(sel.rolling_accuracy_pct(), 100.0); // unscored
+        let series: Vec<f64> = (0..60).map(|t| 10.0 + (t % 4) as f64).collect();
+        drive(&mut sel, &series);
+        let acc = sel.rolling_accuracy_pct();
+        assert!((0.0..=100.0).contains(&acc), "{acc}");
+    }
+
+    #[test]
+    fn make_backend_covers_the_zoo() {
+        for b in ZOO {
+            let mut f = make_backend(b, 3.0);
+            assert_eq!(f.name(), b.name());
+            let out = f.forecast(&vec![5.0; 130], 10);
+            assert_eq!(out.len(), 10);
+        }
+    }
+}

@@ -11,6 +11,7 @@
 //!   cache-sweep       image-cache capacity ladder vs the constant-L_cold baseline
 //!   scenario     run one chaos preset (failure-storm | rolling-restart | flash-crowd) under one policy
 //!   chaos-sweep  every chaos preset x every policy; retry/timeout/drop telemetry
+//!   forecast-sweep    every forecast backend x {bursty, azure, diurnal}; accuracy + MPC tail latency
 //!   bench-throughput  sweep nodes x functions x load, report simulator events/sec (BENCH JSON)
 //!   forecast     Fig. 4 forecast comparison
 //!   overhead     Fig. 8 control overhead (rust mirror + HLO if available)
@@ -21,12 +22,13 @@
 
 use mpc_serverless::config::{
     parse_failure_spec, parse_restore_spec, secs, validate_fault_schedule, ChaosConfig, ChaosMode,
-    ExperimentConfig, FleetConfig, ImageCacheConfig, ImageCacheMode, KeepAliveConfig,
-    KeepAlivePolicy, MigrationConfig, MigrationPolicy, NodeFailure, NodeRestore, PlacementPolicy,
-    Policy, TenantConfig, TraceKind,
+    ExperimentConfig, FleetConfig, ForecastBackend, ForecastConfig, ImageCacheConfig,
+    ImageCacheMode, KeepAliveConfig, KeepAlivePolicy, MigrationConfig, MigrationPolicy,
+    NodeFailure, NodeRestore, PlacementPolicy, Policy, TenantConfig, TraceKind,
 };
 use mpc_serverless::experiments::cache::{self, CacheParams};
 use mpc_serverless::experiments::chaos::{self as chaos_exp, ScenarioParams};
+use mpc_serverless::experiments::forecast_sweep::{self, SweepParams};
 use mpc_serverless::experiments::elasticity::{self, ElasticityParams};
 use mpc_serverless::experiments::keepalive::{self, KeepAliveParams};
 use mpc_serverless::experiments::tenant::run_tenant_matrix;
@@ -51,6 +53,7 @@ fn main() {
         "cache-sweep" => cache_sweep(&rest),
         "scenario" => scenario(&rest),
         "chaos-sweep" => chaos_sweep(&rest),
+        "forecast-sweep" => forecast_sweep_cmd(&rest),
         "bench-throughput" => bench_throughput(&rest),
         "forecast" => forecast(&rest),
         "overhead" => overhead(),
@@ -62,7 +65,7 @@ fn main() {
         }
         "gen-trace" => gen_trace(&rest),
         _ => {
-            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|elasticity-sweep|keepalive-sweep|cache-sweep|scenario|chaos-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
+            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|elasticity-sweep|keepalive-sweep|cache-sweep|scenario|chaos-sweep|forecast-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
                       mpc_serverless::version());
             if cmd == "help" { 0 } else { 2 }
         }
@@ -129,6 +132,10 @@ fn simulate(rest: &[String]) -> i32 {
         .flag("migration", "off", "cross-node rebalancing: off | demand-gap | idle-spread")
         .flag("migration-latency-s", "2", "warm-state transfer latency (seconds)")
         .flag("reclaim-pressure", "0", "memory-pressure weight in the fleet reclaim ranking (0 = off)")
+        .flag("forecast", "fourier", "forecast backend: fourier | arima | histogram | attn | auto (non-fourier needs --policy mpc)")
+        .flag("forecast-window", "16", "auto selector: scored bins kept in each backend's rolling WAPE window")
+        .flag("forecast-hysteresis", "0.1", "auto selector: relative WAPE margin a challenger must beat (anti-thrash)")
+        .flag("forecast-warmup", "8", "auto selector: scored bins required before the first switch")
         .flag("keepalive-policy", "fixed", "container retention: fixed | adaptive (adaptive needs --policy mpc)")
         .flag("keepalive-min-s", "30", "adaptive retention horizon floor (seconds)")
         .flag("keepalive-idle-cost", "1", "idle cost rate in the retention break-even (per container-second)")
@@ -259,6 +266,13 @@ fn simulate(rest: &[String]) -> i32 {
             return 2;
         }
     };
+    let forecast = match parse_forecast_flags(&a, policy) {
+        Ok(fc) => fc,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let image = match parse_image_flags(&a) {
         Ok(ic) => ic,
         Err(e) => {
@@ -340,6 +354,7 @@ fn simulate(rest: &[String]) -> i32 {
     cfg.platform.reclaim_pressure_weight = reclaim_pressure;
     cfg.platform.image = image;
     cfg.controller.keepalive = keepalive;
+    cfg.controller.forecast = forecast;
     cfg.chaos = chaos;
     // --functions 1 takes the untouched legacy path: bit-identical to the
     // pre-tenancy simulator (regression-tested)
@@ -634,6 +649,45 @@ fn parse_keepalive_knobs(a: &Args) -> Result<(f64, f64, f64, f64), String> {
     Ok((min_s, idle_cost, cold_weight, pressure))
 }
 
+/// Parse the `--forecast*` model-zoo flags. A non-default backend routes
+/// the MPC's demand forecasts through the zoo, so — mirroring
+/// `--migration` and `--keepalive-policy` — it must be an error under a
+/// reactive policy, not a silent fourier run masquerading as a zoo
+/// measurement.
+fn parse_forecast_flags(a: &Args, policy: Policy) -> Result<ForecastConfig, String> {
+    let backend = ForecastBackend::parse(a.get("forecast")).ok_or_else(|| {
+        format!(
+            "unknown --forecast '{}' (expected fourier | arima | histogram | attn | auto)",
+            a.get("forecast")
+        )
+    })?;
+    if backend != ForecastBackend::Fourier && policy != Policy::Mpc {
+        return Err(format!(
+            "--forecast {} only actuates under --policy mpc (the model zoo serves the controller's forecasts); use --forecast fourier with --policy {}",
+            backend.name(),
+            policy.name()
+        ));
+    }
+    let score_window = match a.get_u64("forecast-window") {
+        Ok(n) if n >= 1 => n as usize,
+        _ => return Err("--forecast-window must be a positive integer (bins)".into()),
+    };
+    let hysteresis = match a.get_f64("forecast-hysteresis") {
+        Ok(h) if (0.0..=1.0).contains(&h) => h,
+        _ => return Err("--forecast-hysteresis must be within [0, 1]".into()),
+    };
+    let warmup_bins = match a.get_u64("forecast-warmup") {
+        Ok(n) => n as usize,
+        _ => return Err("--forecast-warmup must be a non-negative integer (bins)".into()),
+    };
+    Ok(ForecastConfig {
+        backend,
+        score_window,
+        hysteresis,
+        warmup_bins,
+    })
+}
+
 /// Parse the `--chaos-*` knob flags into a chaos config around the
 /// already-parsed `mode`. The knobs are validated even with chaos off,
 /// so a typo never rides silently into a later `--chaos faults` run.
@@ -774,6 +828,65 @@ fn chaos_sweep(rest: &[String]) -> i32 {
     chaos_exp::print_table(&cells);
     println!("\nretries/timeouts/spawn-fails = chaos counters (structurally zero with --chaos off);");
     println!("dropped = requests whose retry budget was exhausted mid-storm.");
+    0
+}
+
+fn forecast_sweep_cmd(rest: &[String]) -> i32 {
+    let cli = Cli::new(
+        "forecast-sweep",
+        "every forecast backend x {bursty, azure, diurnal}: rolling accuracy + the MPC run it drives",
+    )
+    .flag("duration-s", "14400", "trace duration per cell (seconds)")
+    .flag("seed", "42", "rng seed")
+    .flag("window", "120", "forecast history window per evaluation (30 s bins)")
+    .flag("horizon", "24", "forecast horizon scored per evaluation (30 s bins)");
+    let a = parse_or_exit(&cli, rest);
+    let duration_s = match a.get_f64("duration-s") {
+        Ok(d) if d > 0.0 && d.is_finite() => d,
+        _ => {
+            eprintln!("--duration-s must be a positive number");
+            return 2;
+        }
+    };
+    let window = match a.get_u64("window") {
+        Ok(n) if n >= 2 => n as usize,
+        _ => {
+            eprintln!("--window must be an integer >= 2 (bins)");
+            return 2;
+        }
+    };
+    let horizon = match a.get_u64("horizon") {
+        Ok(n) if n >= 1 => n as usize,
+        _ => {
+            eprintln!("--horizon must be a positive integer (bins)");
+            return 2;
+        }
+    };
+    // the rolling protocol needs at least one full window + horizon of
+    // 30 s bins, or every cell would report zero evaluations
+    let need_s = (window + horizon) as f64 * 30.0;
+    if duration_s < need_s {
+        eprintln!(
+            "--duration-s {duration_s:.0} too short: window {window} + horizon {horizon} bins need >= {need_s:.0} s"
+        );
+        return 2;
+    }
+    let p = SweepParams {
+        duration_s,
+        seed: a.get_u64("seed").unwrap_or(42),
+        window,
+        horizon,
+    };
+    println!(
+        "forecast-sweep: traces=bursty,azure,diurnal backends=fourier,arima,histogram,attn,auto duration={duration_s:.0}s seed={} window={window} horizon={horizon}",
+        p.seed
+    );
+    let cells = forecast_sweep::run_sweep(&p);
+    forecast_sweep::print_table(&cells);
+    println!(
+        "\nacc %/wape = Fig. 4 rolling-horizon scores on the trace's 30 s bins; p99/cold = the MPC run"
+    );
+    println!("routed through the backend; switches/model = the auto selector's telemetry (zero when fixed).");
     0
 }
 

@@ -130,6 +130,15 @@ pub struct FnReport {
     /// function (seconds; 0 under the fixed policy, which records no
     /// trajectory).
     pub mean_horizon_s: f64,
+    /// Forecast model serving this function at the end of the run (set
+    /// by the runner; the configured backend under a fixed backend, the
+    /// selector's final pick under `auto`, `fourier` for directly-built
+    /// reports).
+    pub forecast_model: String,
+    /// The selector's rolling forecast accuracy % for this function at
+    /// the end of the run (0 under any fixed backend — no scoring loop
+    /// runs).
+    pub forecast_accuracy_pct: f64,
 }
 
 /// Aggregated results of one experiment run (one policy, one trace).
@@ -173,6 +182,13 @@ pub struct RunReport {
     /// Mean planned keep-alive horizon across all functions and control
     /// steps (seconds; 0 under the fixed policy).
     pub mean_horizon_s: f64,
+    /// Forecast backend of the run (`fourier` | `arima` | `histogram` |
+    /// `attn` | `auto`; set by the runner, `fourier` for directly-built
+    /// reports).
+    pub forecast: String,
+    /// Total model switches the online selector executed (0 under any
+    /// fixed backend).
+    pub selector_switches: u64,
     pub counters: Counters,
     pub forecast_overhead_ms: f64,
     pub solve_overhead_ms: f64,
@@ -261,6 +277,8 @@ impl RunReport {
                 mean_horizon_s: horizon_by_fn
                     .get(&func)
                     .map_or(0.0, |&(sum, n)| sum / n as f64),
+                forecast_model: "fourier".to_string(),
+                forecast_accuracy_pct: 0.0,
             })
             .collect();
         let mean_warm = if rec.samples().is_empty() {
@@ -293,6 +311,8 @@ impl RunReport {
             keepalive_policy: "fixed".to_string(),
             idle_saved_s: 0.0,
             mean_horizon_s,
+            forecast: "fourier".to_string(),
+            selector_switches: 0,
             counters,
             forecast_overhead_ms: mean(&rec.forecast_ns) / 1e6,
             solve_overhead_ms: mean(&rec.solve_ns) / 1e6,
@@ -354,6 +374,14 @@ impl RunReport {
                 "adaptive_expiries",
                 Json::Num(self.counters.adaptive_expiries as f64),
             ),
+            // forecast-zoo telemetry (`fourier` / 0 under the default
+            // backend, so the default path stays byte-identical to the
+            // seed modulo these constant fields)
+            ("forecast", Json::Str(self.forecast.clone())),
+            (
+                "selector_switches",
+                Json::Num(self.selector_switches as f64),
+            ),
             ("forecast_overhead_ms", Json::Num(self.forecast_overhead_ms)),
             ("solve_overhead_ms", Json::Num(self.solve_overhead_ms)),
             ("events_processed", Json::Num(self.events_processed as f64)),
@@ -394,6 +422,11 @@ impl RunReport {
                                 ("p50_ms", Json::Num(f.p50_ms)),
                                 ("p99_ms", Json::Num(f.p99_ms)),
                                 ("mean_horizon_s", Json::Num(f.mean_horizon_s)),
+                                ("forecast_model", Json::Str(f.forecast_model.clone())),
+                                (
+                                    "forecast_accuracy_pct",
+                                    Json::Num(f.forecast_accuracy_pct),
+                                ),
                             ])
                         })
                         .collect(),
@@ -610,6 +643,41 @@ mod tests {
         assert_eq!(j.path("adaptive_expiries").unwrap().as_f64(), Some(0.0));
         let arr = j.path("per_function").unwrap().as_arr().unwrap();
         assert_eq!(arr[0].path("mean_horizon_s").unwrap().as_f64(), Some(450.0));
+    }
+
+    #[test]
+    fn forecast_telemetry_defaults_are_structurally_fourier() {
+        let mut rec = Recorder::new(1);
+        rec.on_arrival_for(0, secs(0.0), 0);
+        rec.on_dispatch(0, secs(0.0));
+        rec.on_complete(0, secs(1.0));
+        let report = RunReport::from_recorder(
+            "mpc",
+            "unit",
+            secs(60.0),
+            &rec,
+            Counters::default(),
+            &[],
+            &[],
+        );
+        // the runner stamps the backend; directly-built reports are the
+        // seed default (fourier) with zero selector activity
+        assert_eq!(report.forecast, "fourier");
+        assert_eq!(report.selector_switches, 0);
+        assert_eq!(report.per_function[0].forecast_model, "fourier");
+        assert_eq!(report.per_function[0].forecast_accuracy_pct, 0.0);
+        let j = report.to_json();
+        assert_eq!(j.path("forecast").unwrap().as_str(), Some("fourier"));
+        assert_eq!(j.path("selector_switches").unwrap().as_f64(), Some(0.0));
+        let arr = j.path("per_function").unwrap().as_arr().unwrap();
+        assert_eq!(
+            arr[0].path("forecast_model").unwrap().as_str(),
+            Some("fourier")
+        );
+        assert_eq!(
+            arr[0].path("forecast_accuracy_pct").unwrap().as_f64(),
+            Some(0.0)
+        );
     }
 
     #[test]

@@ -524,6 +524,131 @@ fn bench_throughput_accepts_a_threads_list() {
 }
 
 #[test]
+fn simulate_forecast_flag_roundtrips_into_the_report() {
+    // a fixed zoo backend lands in the report with structurally zero
+    // selector telemetry
+    let out = bin()
+        .args([
+            "simulate",
+            "--policy",
+            "mpc",
+            "--trace",
+            "synthetic",
+            "--duration-s",
+            "300",
+            "--seed",
+            "9",
+            "--functions",
+            "2",
+            "--forecast",
+            "histogram",
+        ])
+        .output()
+        .expect("spawn simulate");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let report = Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap();
+    assert_eq!(report.path("forecast").and_then(Json::as_str), Some("histogram"));
+    assert_eq!(report.path("selector_switches").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(report.path("dropped").and_then(Json::as_f64), Some(0.0));
+    let per_fn = report.path("per_function").unwrap().as_arr().unwrap();
+    assert!(per_fn
+        .iter()
+        .all(|f| f.path("forecast_model").and_then(Json::as_str) == Some("histogram")));
+    // the auto selector with its knobs is accepted and tagged
+    let out = bin()
+        .args([
+            "simulate",
+            "--policy",
+            "mpc",
+            "--trace",
+            "synthetic",
+            "--duration-s",
+            "300",
+            "--seed",
+            "9",
+            "--forecast",
+            "auto",
+            "--forecast-window",
+            "8",
+            "--forecast-hysteresis",
+            "0.2",
+            "--forecast-warmup",
+            "4",
+        ])
+        .output()
+        .expect("spawn simulate");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let report = Json::parse(&String::from_utf8(out.stdout).unwrap()).unwrap();
+    assert_eq!(report.path("forecast").and_then(Json::as_str), Some("auto"));
+    assert!(report.path("selector_switches").and_then(Json::as_f64).unwrap() >= 0.0);
+}
+
+#[test]
+fn simulate_rejects_bad_forecast_flags() {
+    // an unknown backend must be an error
+    let out = bin()
+        .args(["simulate", "--forecast", "prophet"])
+        .output()
+        .expect("spawn simulate");
+    assert!(!out.status.success());
+    // the zoo serves the MPC's forecasts only
+    let out = bin()
+        .args(["simulate", "--policy", "openwhisk", "--forecast", "auto"])
+        .output()
+        .expect("spawn simulate");
+    assert!(!out.status.success());
+    // selector knobs out of range
+    for args in [
+        vec!["simulate", "--forecast", "auto", "--forecast-window", "0"],
+        vec!["simulate", "--forecast", "auto", "--forecast-hysteresis", "1.5"],
+        vec!["simulate", "--forecast", "auto", "--forecast-warmup", "nope"],
+    ] {
+        let out = bin().args(&args).output().expect("spawn simulate");
+        assert!(!out.status.success(), "{args:?} should be rejected");
+    }
+}
+
+#[test]
+fn forecast_sweep_runs_end_to_end() {
+    let out = bin()
+        .args([
+            "forecast-sweep",
+            "--duration-s",
+            "1200",
+            "--seed",
+            "9",
+            "--window",
+            "24",
+            "--horizon",
+            "8",
+        ])
+        .output()
+        .expect("spawn forecast-sweep");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8(out.stdout).unwrap();
+    // the envelope line pins the grid; every trace and backend shows up
+    assert!(
+        text.contains("forecast-sweep: traces=bursty,azure,diurnal backends=fourier,arima,histogram,attn,auto"),
+        "{text}"
+    );
+    for needle in ["bursty", "azure", "diurnal", "fourier", "arima", "histogram", "attn", "auto", "switches"] {
+        assert!(text.contains(needle), "missing {needle}: {text}");
+    }
+    // a duration too short for the rolling protocol is rejected up front
+    let out = bin()
+        .args(["forecast-sweep", "--duration-s", "100"])
+        .output()
+        .expect("spawn forecast-sweep");
+    assert!(!out.status.success());
+    // a degenerate window is rejected
+    let out = bin()
+        .args(["forecast-sweep", "--window", "1"])
+        .output()
+        .expect("spawn forecast-sweep");
+    assert!(!out.status.success());
+}
+
+#[test]
 fn fleet_sweep_runs_end_to_end() {
     let out = bin()
         .args([

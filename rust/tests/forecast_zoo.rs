@@ -1,0 +1,213 @@
+//! Forecast model zoo integration tests: the `--forecast fourier`
+//! bit-identical regression that keeps every published figure valid
+//! (mirroring the keepalive/tenant inertness suites), the `auto`
+//! selector's determinism — across repeated runs and across event-loop
+//! shard counts — and the structural silence of the selector telemetry
+//! under every fixed backend.
+
+use mpc_serverless::config::{
+    secs, ExperimentConfig, ForecastBackend, ForecastConfig, Policy, TenantConfig, TraceKind,
+};
+use mpc_serverless::experiments::{run_experiment, run_tenant};
+use mpc_serverless::metrics::RunReport;
+use mpc_serverless::workload::TenantWorkload;
+
+fn cfg(kind: TraceKind, duration_s: f64, seed: u64, functions: u32) -> ExperimentConfig {
+    ExperimentConfig {
+        trace: kind,
+        duration: secs(duration_s),
+        seed,
+        tenancy: TenantConfig {
+            functions,
+            zipf_s: 1.1,
+        },
+        ..Default::default()
+    }
+}
+
+/// The full JSON surface with the only nondeterministic fields zeroed —
+/// the simulator's own wall clock and the measured control-loop
+/// overheads are host-timing artifacts; every simulated quantity must
+/// reproduce byte for byte.
+fn canonical_json(mut r: RunReport) -> String {
+    r.wall_clock_ms = 0.0;
+    r.events_per_sec = 0.0;
+    r.forecast_overhead_ms = 0.0;
+    r.solve_overhead_ms = 0.0;
+    r.to_json().to_string()
+}
+
+/// Selector knobs at deliberately aggressive values: under the fourier
+/// backend every one of them must be completely inert.
+fn weird_knobs() -> ForecastConfig {
+    ForecastConfig {
+        backend: ForecastBackend::Fourier,
+        score_window: 2,
+        hysteresis: 0.0,
+        warmup_bins: 0,
+    }
+}
+
+/// The headline regression: `--forecast fourier` (the default) plus
+/// aggressive selector knobs reproduces the seed-path `RunReport` JSON
+/// byte-for-byte. Pinned at `--nodes 1` (the legacy shape) and
+/// `--nodes 4 --functions 8` (the contended fleet), per the pattern of
+/// the keepalive/tenant inertness tests.
+#[test]
+fn forecast_fourier_is_bit_identical() {
+    // --nodes 1, single-tenant
+    {
+        let base = cfg(TraceKind::SyntheticBursty, 1200.0, 23, 1);
+        let trace =
+            mpc_serverless::experiments::fig4::trace_for(base.trace, base.duration, base.seed);
+        let mut knobs = base.clone();
+        knobs.controller.forecast = weird_knobs();
+        let a = run_experiment(&base, Policy::Mpc, &trace);
+        let b = run_experiment(&knobs, Policy::Mpc, &trace);
+        assert_eq!(
+            canonical_json(a),
+            canonical_json(b),
+            "fourier backend must ignore the selector knobs (--nodes 1)"
+        );
+    }
+    // --nodes 4 --functions 8
+    {
+        let mut base = cfg(TraceKind::SyntheticBursty, 1200.0, 23, 8);
+        base.fleet.nodes = 4;
+        let w = TenantWorkload::generate(
+            base.trace,
+            base.duration,
+            base.seed,
+            8,
+            base.tenancy.zipf_s,
+            &base.platform,
+        );
+        let mut knobs = base.clone();
+        knobs.controller.forecast = weird_knobs();
+        let a = run_tenant(&base, Policy::Mpc, &w);
+        let b = run_tenant(&knobs, Policy::Mpc, &w);
+        assert_eq!(
+            canonical_json(a),
+            canonical_json(b),
+            "fourier backend must ignore the selector knobs (--nodes 4 --functions 8)"
+        );
+    }
+}
+
+fn with_backend(c: &ExperimentConfig, backend: ForecastBackend) -> ExperimentConfig {
+    let mut a = c.clone();
+    a.controller.forecast.backend = backend;
+    a
+}
+
+/// A fixed-backend run carries structurally zero selector telemetry:
+/// zero switches, zero rolling accuracy, every per-function row naming
+/// the configured backend.
+#[test]
+fn fixed_backends_report_structurally_zero_selector_telemetry() {
+    let c = cfg(TraceKind::SyntheticBursty, 900.0, 7, 4);
+    let w = TenantWorkload::generate(c.trace, c.duration, c.seed, 4, 1.1, &c.platform);
+    for backend in [
+        ForecastBackend::Fourier,
+        ForecastBackend::Arima,
+        ForecastBackend::Histogram,
+        ForecastBackend::Attn,
+    ] {
+        let r = run_tenant(&with_backend(&c, backend), Policy::Mpc, &w);
+        assert_eq!(r.forecast, backend.name());
+        assert_eq!(r.selector_switches, 0, "{}: fixed backends never switch", backend.name());
+        assert!(!r.per_function.is_empty());
+        for f in &r.per_function {
+            assert_eq!(f.forecast_model, backend.name(), "fn {}", f.func);
+            assert_eq!(f.forecast_accuracy_pct, 0.0, "fn {}", f.func);
+        }
+    }
+}
+
+/// The reactive baselines have no forecast registry: their reports keep
+/// the structural defaults whatever the config says.
+#[test]
+fn reactive_policies_keep_the_default_forecast_surface() {
+    let c = cfg(TraceKind::SyntheticBursty, 900.0, 7, 1);
+    let trace = mpc_serverless::experiments::fig4::trace_for(c.trace, c.duration, c.seed);
+    let r = run_experiment(&c, Policy::OpenWhisk, &trace);
+    assert_eq!(r.forecast, "fourier");
+    assert_eq!(r.selector_switches, 0);
+    assert!(r.per_function.iter().all(|f| f.forecast_model == "fourier"));
+}
+
+/// `--forecast auto` is deterministic: repeated runs on the same
+/// workload reproduce the full canonical JSON surface — including the
+/// selector's switch count and per-function model rows — byte for byte.
+#[test]
+fn auto_selector_is_self_deterministic() {
+    let c = with_backend(
+        &cfg(TraceKind::SyntheticBursty, 1800.0, 11, 4),
+        ForecastBackend::Auto,
+    );
+    let w = TenantWorkload::generate(c.trace, c.duration, c.seed, 4, 1.1, &c.platform);
+    let a = run_tenant(&c, Policy::Mpc, &w);
+    let b = run_tenant(&c, Policy::Mpc, &w);
+    assert_eq!(a.forecast, "auto");
+    assert_eq!(
+        canonical_json(a),
+        canonical_json(b),
+        "auto selection must be a pure function of the realized bins"
+    );
+}
+
+/// The selector's scoring loop rides the control tick, which is a
+/// global event: sharded execution must reproduce the sequential run
+/// byte for byte, switches and all.
+#[test]
+fn auto_selector_is_identical_under_threads() {
+    let mut base = with_backend(
+        &cfg(TraceKind::SyntheticBursty, 1800.0, 11, 8),
+        ForecastBackend::Auto,
+    );
+    base.fleet.nodes = 4;
+    let w = TenantWorkload::generate(base.trace, base.duration, base.seed, 8, 1.1, &base.platform);
+    let seq = run_tenant(&base, Policy::Mpc, &w);
+    let mut sharded = base.clone();
+    sharded.threads = 2;
+    let par = run_tenant(&sharded, Policy::Mpc, &w);
+    // the threads field is stamped into the report; compare the rest
+    let mut seq_canon = seq.clone();
+    seq_canon.threads = 0;
+    let mut par_canon = par.clone();
+    par_canon.threads = 0;
+    assert_eq!(
+        canonical_json(seq_canon),
+        canonical_json(par_canon),
+        "--threads 2 must not perturb auto selection"
+    );
+    assert_eq!(seq.forecast, "auto");
+}
+
+/// The auto path keeps the run healthy: same completion set as the
+/// fourier seed path on the same workload, with the telemetry naming a
+/// zoo member per function.
+#[test]
+fn auto_run_completes_and_names_zoo_members() {
+    let c = cfg(TraceKind::SyntheticBursty, 1800.0, 3, 4);
+    let w = TenantWorkload::generate(c.trace, c.duration, c.seed, 4, 1.1, &c.platform);
+    let fourier = run_tenant(&c, Policy::Mpc, &w);
+    let auto = run_tenant(&with_backend(&c, ForecastBackend::Auto), Policy::Mpc, &w);
+    assert_eq!(auto.dropped, 0);
+    assert_eq!(auto.completed, fourier.completed);
+    let zoo = ["fourier", "arima", "histogram", "attn"];
+    for f in &auto.per_function {
+        assert!(
+            zoo.contains(&f.forecast_model.as_str()),
+            "fn {} routed through unknown model '{}'",
+            f.func,
+            f.forecast_model
+        );
+        assert!(
+            (0.0..=100.0).contains(&f.forecast_accuracy_pct),
+            "fn {} accuracy {} out of range",
+            f.func,
+            f.forecast_accuracy_pct
+        );
+    }
+}
