@@ -126,6 +126,10 @@ impl ChaosEngine {
         if *n > self.cfg.max_retries {
             return None;
         }
+        // clamp the exponent so `--chaos-max-retries ≥ 64` can't drive
+        // `1u64 << shift` into undefined-shift territory (shift ≥ 64
+        // wraps to a zero/garbage backoff); past the clamp the
+        // saturating multiply pins the schedule at u64::MAX
         let shift = (*n - 1).min(62) as u32;
         Some(self.cfg.retry_backoff.saturating_mul(1u64 << shift))
     }
@@ -275,6 +279,44 @@ mod tests {
         assert_eq!(e.retry_decision(9), None, "budget exhausted on the 4th fault");
         // other requests carry their own budgets
         assert_eq!(e.retry_decision(10), Some(secs(1.0)));
+    }
+
+    #[test]
+    fn retry_backoff_saturates_at_the_shift_boundary() {
+        // --chaos-max-retries ≥ 64 must never wrap `1u64 << shift` into a
+        // zero/garbage backoff: the shift clamps at 62, so the schedule
+        // is monotone non-decreasing across the boundary and beyond
+        let reg = registry(1);
+        let cfg = ChaosConfig {
+            mode: ChaosMode::Faults,
+            max_retries: 100,
+            retry_backoff: 1, // 1 µs base keeps the raw shifts visible
+            ..Default::default()
+        };
+        let mut e = ChaosEngine::new(cfg, 1, &reg);
+        let mut prev = 0u64;
+        for attempt in 1..=100u32 {
+            let b = e.retry_decision(7).expect("inside the budget");
+            assert!(b > 0, "backoff wrapped to zero at attempt {attempt}");
+            assert!(b >= prev, "backoff regressed at attempt {attempt}");
+            prev = b;
+        }
+        assert_eq!(prev, 1u64 << 62, "clamped shift from attempt 63 on");
+        assert_eq!(e.retry_decision(7), None, "then the budget exhausts");
+        // with a realistic base the product overflows instead: the
+        // saturating multiply pins it at u64::MAX rather than wrapping
+        let cfg = ChaosConfig {
+            mode: ChaosMode::Faults,
+            max_retries: 70,
+            retry_backoff: secs(1.0),
+            ..Default::default()
+        };
+        let mut e = ChaosEngine::new(cfg, 1, &reg);
+        let mut last = 0u64;
+        for _ in 0..70 {
+            last = e.retry_decision(8).expect("inside the budget");
+        }
+        assert_eq!(last, u64::MAX, "saturated, not wrapped");
     }
 
     #[test]

@@ -2289,7 +2289,7 @@ mod tests {
             for _ in 0..steps {
                 now += g.u64(1, 2_000_000);
                 let func = g.u64(0, (nf - 1) as u64) as FunctionId;
-                match g.usize(0, 13) {
+                match g.usize(0, 14) {
                     0 => {
                         req += 1;
                         match p.invoke_for(req, func, now) {
@@ -2443,6 +2443,30 @@ mod tests {
                                 p.override_capacity(g.usize(1, 10) as u32);
                             }
                         }
+                    }
+                    13 => {
+                        // survival release (the slot-survival policy's
+                        // actuation shape): install a short live horizon,
+                        // then immediately sweep — the expired set must
+                        // equal the brute-force scan under that horizon,
+                        // and later keep-alive checks must consult it
+                        let h = g.u64(1, 30_000_000);
+                        p.set_keepalive_override(func, Some(h));
+                        let mut want: Vec<ContainerId> = p
+                            .containers
+                            .values()
+                            .filter(|c| {
+                                c.is_idle() && c.func == func && c.idle_for(now) >= h
+                            })
+                            .map(|c| c.id)
+                            .collect();
+                        want.sort_unstable();
+                        let mut got = p.expire_idle_older_than(func, h, now);
+                        got.sort_unstable();
+                        prop_assert!(
+                            got == want,
+                            "survival release {got:?} != scan {want:?} (h={h})"
+                        );
                     }
                     _ => {
                         // keep-alive probe on an arbitrary (possibly gone)

@@ -752,6 +752,38 @@ impl Default for ForecastConfig {
     }
 }
 
+/// Slot-survival estimator parameters (`--policy survival`; the
+/// per-container lifecycle rival from arXiv:2604.05465). The estimator
+/// keeps a sliding window of each function's observed inter-arrival
+/// gaps and releases an idle container once the empirical probability
+/// that its function arrives again within the break-even window —
+/// `cold_cost_weight × L_cold(f) / idle_cost_per_s` seconds, the same
+/// economics the retention planner uses — drops below `threshold`.
+/// All knobs are inert under every other policy.
+#[derive(Debug, Clone, Copy)]
+pub struct SurvivalConfig {
+    /// Trailing inter-arrival gaps kept per function (the sliding-window
+    /// empirical survival distribution).
+    pub window: usize,
+    /// Release once the conditional reuse probability over the next
+    /// break-even window drops below this (in `[0, 1]`; `0` never
+    /// releases early, `> 1` always releases at the floor).
+    pub threshold: f64,
+    /// Gap samples required before the estimator overrides a function's
+    /// profile keep-alive (cold history ⇒ keep the platform default).
+    pub min_samples: usize,
+}
+
+impl Default for SurvivalConfig {
+    fn default() -> Self {
+        SurvivalConfig {
+            window: 64,
+            threshold: 0.5,
+            min_samples: 8,
+        }
+    }
+}
+
 /// MPC controller parameters (Sec. III; Table I weights).
 #[derive(Debug, Clone)]
 pub struct ControllerConfig {
@@ -777,6 +809,9 @@ pub struct ControllerConfig {
     pub keepalive: KeepAliveConfig,
     /// Forecast backend + online-selector knobs (`--forecast`).
     pub forecast: ForecastConfig,
+    /// Slot-survival estimator knobs (`--policy survival`); inert under
+    /// every other policy.
+    pub survival: SurvivalConfig,
 }
 
 /// MPC objective weights (Table I). Layout mirrors
@@ -871,6 +906,7 @@ impl Default for ControllerConfig {
             max_shaping_delay: secs(12.0),
             keepalive: KeepAliveConfig::default(),
             forecast: ForecastConfig::default(),
+            survival: SurvivalConfig::default(),
         }
     }
 }
@@ -884,6 +920,10 @@ pub enum Policy {
     IceBreaker,
     /// This paper's MPC scheduler.
     Mpc,
+    /// Slot-survival lifecycle control (arXiv:2604.05465): reactive
+    /// dispatch plus per-container retention/release driven by empirical
+    /// inter-arrival survival probabilities.
+    Survival,
 }
 
 impl Policy {
@@ -892,6 +932,7 @@ impl Policy {
             Policy::OpenWhisk => "openwhisk",
             Policy::IceBreaker => "icebreaker",
             Policy::Mpc => "mpc",
+            Policy::Survival => "survival",
         }
     }
 
@@ -900,11 +941,17 @@ impl Policy {
             "openwhisk" | "default" => Some(Policy::OpenWhisk),
             "icebreaker" => Some(Policy::IceBreaker),
             "mpc" | "mpc-scheduler" => Some(Policy::Mpc),
+            "survival" | "slot-survival" => Some(Policy::Survival),
             _ => None,
         }
     }
 
-    pub const ALL: [Policy; 3] = [Policy::OpenWhisk, Policy::IceBreaker, Policy::Mpc];
+    pub const ALL: [Policy; 4] = [
+        Policy::OpenWhisk,
+        Policy::IceBreaker,
+        Policy::Mpc,
+        Policy::Survival,
+    ];
 }
 
 /// Workload selection for experiments.
@@ -1057,6 +1104,22 @@ mod tests {
         assert_eq!(Policy::parse("default"), Some(Policy::OpenWhisk));
         assert_eq!(Policy::parse("nope"), None);
         assert_eq!(TraceKind::parse("bursty"), Some(TraceKind::SyntheticBursty));
+    }
+
+    #[test]
+    fn policy_parse_and_names_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::parse(p.name()), Some(p));
+        }
+        assert_eq!(Policy::parse("slot-survival"), Some(Policy::Survival));
+    }
+
+    #[test]
+    fn survival_defaults_are_inert_shaped() {
+        let sv = ControllerConfig::default().survival;
+        assert_eq!(sv.window, 64);
+        assert_eq!(sv.threshold, 0.5);
+        assert_eq!(sv.min_samples, 8);
     }
 
     #[test]

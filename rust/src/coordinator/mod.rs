@@ -11,6 +11,7 @@
 pub mod controller;
 pub mod keepalive;
 pub mod queue;
+pub mod survival;
 
 use crate::cluster::container::ContainerId;
 use crate::cluster::fleet::{Fleet, NodeId};
@@ -228,7 +229,18 @@ pub struct ForecastTelemetry {
     pub per_function: Vec<(FunctionId, &'static str, f64)>,
 }
 
-/// A scheduling policy (OpenWhisk default, IceBreaker, MPC).
+/// Slot-survival telemetry a policy may expose for the run report:
+/// containers released early by the survival rule, decisions that kept
+/// the full profile window, and the mean at-age-zero reuse probability
+/// across decisions. Structurally zero for every other policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SurvivalTelemetry {
+    pub releases: u64,
+    pub retained: u64,
+    pub mean_survival: f64,
+}
+
+/// A scheduling policy (OpenWhisk default, IceBreaker, MPC, survival).
 pub trait Scheduler {
     /// A request arrived.
     fn on_arrival(&mut self, req: RequestId, ctx: &mut Ctx);
@@ -254,6 +266,13 @@ pub trait Scheduler {
     /// without a forecast registry (the runner then keeps the report's
     /// structural-zero defaults).
     fn forecast_telemetry(&self) -> Option<ForecastTelemetry> {
+        None
+    }
+
+    /// Slot-survival telemetry for the run report; None for policies
+    /// without a survival estimator (the runner then keeps the report's
+    /// structural-zero defaults).
+    fn survival_telemetry(&self) -> Option<SurvivalTelemetry> {
         None
     }
 

@@ -33,7 +33,9 @@ impl MatrixResult {
         let r = match which {
             Policy::IceBreaker => &self.icebreaker,
             Policy::Mpc => &self.mpc,
-            Policy::OpenWhisk => &self.openwhisk,
+            // the Fig. 5-7 matrix is the paper's three-policy grid; any
+            // policy outside it reads as the baseline (zero improvement)
+            Policy::OpenWhisk | Policy::Survival => &self.openwhisk,
         };
         let b = &self.openwhisk;
         let imp = RunReport::improvement_pct;

@@ -14,6 +14,7 @@ pub mod forecast_sweep;
 pub mod keepalive;
 pub mod runner;
 pub mod sharded;
+pub mod survival;
 pub mod tenant;
 pub mod throughput;
 

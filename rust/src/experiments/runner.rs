@@ -15,6 +15,7 @@ use crate::cluster::fleet::Fleet;
 use crate::cluster::platform::{CompleteOutcome, KeepAliveVerdict, ReadyOutcome};
 use crate::config::{secs, to_secs, ExperimentConfig, Micros, Policy};
 use crate::coordinator::controller::MpcScheduler;
+use crate::coordinator::survival::SurvivalScheduler;
 use crate::coordinator::{Ctx, Ev, Scheduler};
 use crate::forecast::FourierForecaster;
 use crate::metrics::{Recorder, RunReport};
@@ -85,6 +86,9 @@ pub fn make_scheduler(cfg: &ExperimentConfig, policy: Policy) -> Box<dyn Schedul
             // fourier backend, which keeps the seed path bit-identical)
             .with_forecast(&cc.forecast),
         ),
+        // slot-survival lifecycle control: reactive dispatch, per-container
+        // retention from empirical inter-arrival survival estimates
+        Policy::Survival => Box::new(SurvivalScheduler::new(cc.clone()).with_functions(functions)),
     }
 }
 
@@ -224,6 +228,17 @@ pub fn run_tenant_with_scheduler(
                 f.forecast_accuracy_pct = acc;
             }
         }
+    }
+    // slot-survival telemetry: the survival policy reports its release /
+    // retain decisions and mean reuse probability, and labels the
+    // retention column with its own policy name (it actuates through the
+    // same live-horizon path as the adaptive planner); everything else
+    // keeps the structural zeros
+    if let Some(st) = sched.survival_telemetry() {
+        report.keepalive_policy = sched.name().to_string();
+        report.survival_releases = st.releases;
+        report.survival_retained = st.retained;
+        report.survival_mean_p = st.mean_survival;
     }
     report.per_node = per_node;
     report.set_throughput(events.processed(), wall_secs);

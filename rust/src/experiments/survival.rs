@@ -1,0 +1,232 @@
+//! Survival-frontier sweep (the `survival-frontier` CLI subcommand): the
+//! three-way policy comparison the ROADMAP's direction 4 asks for — the
+//! paper's MPC against the slot-survival lifecycle policy
+//! (arXiv:2604.05465) and the IceBreaker baseline, on the same
+//! resource-time vs P99 frontier the keep-alive sweep measures.
+//!
+//! The question each scenario answers: how much of the MPC's frontier
+//! win comes from *fleet-level planning* (forecast-driven prewarm +
+//! shaping) versus *per-container lifecycle control* (survival-driven
+//! release)? Survival carries no prewarm and no shaping, so the gap
+//! between its row and the MPC's is the value of planning, while the gap
+//! to IceBreaker is the value of conditional retention over a fixed
+//! utility window.
+
+use crate::config::{secs, ExperimentConfig, FleetConfig, Policy, SurvivalConfig, TenantConfig};
+use crate::experiments::keepalive::{KeepAliveScenario, DEFAULT_SCENARIOS};
+use crate::experiments::runner::run_tenant;
+use crate::metrics::RunReport;
+use crate::util::bench::Table;
+use crate::workload::TenantWorkload;
+
+/// The three-way frontier, in output order: the paper's controller, the
+/// survival rival, the reactive baseline.
+pub const POLICIES: [Policy; 3] = [Policy::Mpc, Policy::Survival, Policy::IceBreaker];
+
+/// The shared scenario grid — the same bursty/azure/zipf acceptance
+/// scenarios the keep-alive sweep runs, so the two frontiers compose.
+pub const SCENARIOS: [KeepAliveScenario; 3] = DEFAULT_SCENARIOS;
+
+/// Shared knobs for every cell of a survival-frontier sweep.
+#[derive(Debug, Clone)]
+pub struct SurvivalParams {
+    pub duration_s: f64,
+    pub seed: u64,
+    pub nodes: u32,
+    pub zipf_s: f64,
+    /// Estimator knobs (`--survival-*`); inert in the mpc/icebreaker
+    /// cells, which is exactly what the byte-identity tests pin.
+    pub survival: SurvivalConfig,
+}
+
+impl Default for SurvivalParams {
+    fn default() -> Self {
+        SurvivalParams {
+            duration_s: 3600.0,
+            seed: 42,
+            nodes: 1,
+            zipf_s: 1.1,
+            survival: SurvivalConfig::default(),
+        }
+    }
+}
+
+/// One sweep cell: (scenario, scheduling policy).
+#[derive(Debug, Clone)]
+pub struct SurvivalCell {
+    pub scenario: &'static str,
+    pub policy: Policy,
+    pub report: RunReport,
+}
+
+/// Experiment config for one cell. The survival knobs are threaded into
+/// every cell — the non-survival policies must not read them.
+pub fn cell_config(p: &SurvivalParams, sc: &KeepAliveScenario) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig {
+        trace: sc.trace,
+        fleet: FleetConfig {
+            nodes: p.nodes,
+            ..Default::default()
+        },
+        tenancy: TenantConfig {
+            functions: sc.functions,
+            zipf_s: p.zipf_s,
+        },
+        duration: secs(p.duration_s),
+        seed: p.seed,
+        ..Default::default()
+    };
+    cfg.controller.survival = p.survival;
+    cfg
+}
+
+/// Run every scenario under every frontier policy. One workload is
+/// generated per scenario and shared across its three cells (seeded from
+/// the config alone), so rows differ only by policy. Cells come back
+/// scenario-major in [`POLICIES`] order.
+pub fn run_sweep(p: &SurvivalParams, scenarios: &[KeepAliveScenario]) -> Vec<SurvivalCell> {
+    let mut cells = Vec::with_capacity(scenarios.len() * POLICIES.len());
+    for sc in scenarios {
+        let cfg = cell_config(p, sc);
+        let workload = TenantWorkload::generate(
+            sc.trace,
+            cfg.duration,
+            p.seed,
+            sc.functions,
+            p.zipf_s,
+            &cfg.platform,
+        );
+        for policy in POLICIES {
+            cells.push(SurvivalCell {
+                scenario: sc.name,
+                policy,
+                report: run_tenant(&cfg, policy, &workload),
+            });
+        }
+    }
+    cells
+}
+
+/// Print the sweep table plus the per-scenario frontier verdicts:
+/// survival judged against both the MPC (the planning gap) and
+/// IceBreaker (the retention gap).
+pub fn print_table(cells: &[SurvivalCell]) {
+    let mut t = Table::new(&[
+        "scenario",
+        "policy",
+        "p50 ms",
+        "p99 ms",
+        "cold %",
+        "idle s",
+        "keep-alive s",
+        "releases",
+        "retained",
+        "mean p",
+    ]);
+    for c in cells {
+        let r = &c.report;
+        let cold_pct = if r.completed > 0 {
+            100.0 * r.cold_requests as f64 / r.completed as f64
+        } else {
+            0.0
+        };
+        t.row(&[
+            c.scenario.to_string(),
+            c.policy.name().to_string(),
+            format!("{:.0}", r.p50_ms),
+            format!("{:.0}", r.p99_ms),
+            format!("{cold_pct:.1}"),
+            format!("{:.0}", r.idle_total_s),
+            format!("{:.0}", r.keepalive_total_s),
+            r.survival_releases.to_string(),
+            r.survival_retained.to_string(),
+            format!("{:.2}", r.survival_mean_p),
+        ]);
+    }
+    t.print();
+    // frontier verdicts, scenario by scenario (cells are scenario-major
+    // [mpc, survival, icebreaker] triples)
+    for tri in cells.chunks(POLICIES.len()) {
+        let [mpc, surv, ib] = tri else { continue };
+        let vs = |base: &SurvivalCell| {
+            let idle_pct = 100.0 * (surv.report.idle_total_s - base.report.idle_total_s)
+                / base.report.idle_total_s.max(1e-9);
+            let p99 = surv.report.p99_ms - base.report.p99_ms;
+            format!("idle {idle_pct:+.1}%, P99 {p99:+.0} ms")
+        };
+        println!(
+            "{}: survival vs mpc: {} | vs icebreaker: {}",
+            mpc.scenario,
+            vs(mpc),
+            vs(ib)
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick() -> SurvivalParams {
+        SurvivalParams {
+            duration_s: 600.0,
+            seed: 5,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cell_config_threads_the_estimator_knobs() {
+        let p = SurvivalParams {
+            survival: SurvivalConfig {
+                window: 32,
+                threshold: 0.25,
+                min_samples: 4,
+            },
+            ..quick()
+        };
+        let cfg = cell_config(&p, &SCENARIOS[1]);
+        assert_eq!(cfg.controller.survival.window, 32);
+        assert_eq!(cfg.controller.survival.threshold, 0.25);
+        assert_eq!(cfg.controller.survival.min_samples, 4);
+        assert_eq!(cfg.tenancy.functions, 8);
+    }
+
+    #[test]
+    fn sweep_emits_policy_triples_per_scenario() {
+        let cells = run_sweep(&quick(), &SCENARIOS[..1]);
+        assert_eq!(cells.len(), 3);
+        assert_eq!(cells[0].policy, Policy::Mpc);
+        assert_eq!(cells[1].policy, Policy::Survival);
+        assert_eq!(cells[2].policy, Policy::IceBreaker);
+        for c in &cells {
+            assert_eq!(c.report.dropped, 0, "{:?}", c.policy);
+            assert_eq!(c.report.policy, c.policy.name());
+        }
+        // survival telemetry is structurally zero off-policy and labels
+        // the retention column on-policy
+        assert_eq!(cells[1].report.keepalive_policy, "survival");
+        for c in [&cells[0], &cells[2]] {
+            assert_eq!(c.report.survival_releases, 0);
+            assert_eq!(c.report.survival_retained, 0);
+            assert_eq!(c.report.survival_mean_p, 0.0);
+        }
+        // enough bursty traffic flows that the estimator actually decided:
+        // every decision lands a horizon sample and a p(0) observation
+        assert!(cells[1].report.mean_horizon_s > 0.0);
+        assert!(cells[1].report.survival_mean_p > 0.0);
+        print_table(&cells); // table rendering must not panic
+    }
+
+    #[test]
+    fn sweep_is_deterministic_in_its_params() {
+        let a = run_sweep(&quick(), &SCENARIOS[..1]);
+        let b = run_sweep(&quick(), &SCENARIOS[..1]);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.report.mean_ms, y.report.mean_ms);
+            assert_eq!(x.report.p99_ms, y.report.p99_ms);
+            assert_eq!(x.report.survival_releases, y.report.survival_releases);
+            assert_eq!(x.report.survival_mean_p, y.report.survival_mean_p);
+        }
+    }
+}

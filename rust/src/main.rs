@@ -8,6 +8,7 @@
 //!   tenant-sweep run every policy on one multi-tenant workload, per-function P50/P99
 //!   elasticity-sweep  drain → rejoin scenario swept across migration policies
 //!   keepalive-sweep   fixed vs adaptive retention; resource-time vs P99 frontier
+//!   survival-frontier mpc vs survival vs icebreaker; three-way resource-time vs P99 frontier
 //!   cache-sweep       image-cache capacity ladder vs the constant-L_cold baseline
 //!   scenario     run one chaos preset (failure-storm | rolling-restart | flash-crowd) under one policy
 //!   chaos-sweep  every chaos preset x every policy; retry/timeout/drop telemetry
@@ -24,13 +25,14 @@ use mpc_serverless::config::{
     parse_failure_spec, parse_restore_spec, secs, validate_fault_schedule, ChaosConfig, ChaosMode,
     ExperimentConfig, FleetConfig, ForecastBackend, ForecastConfig, ImageCacheConfig,
     ImageCacheMode, KeepAliveConfig, KeepAlivePolicy, MigrationConfig, MigrationPolicy,
-    NodeFailure, NodeRestore, PlacementPolicy, Policy, TenantConfig, TraceKind,
+    NodeFailure, NodeRestore, PlacementPolicy, Policy, SurvivalConfig, TenantConfig, TraceKind,
 };
 use mpc_serverless::experiments::cache::{self, CacheParams};
 use mpc_serverless::experiments::chaos::{self as chaos_exp, ScenarioParams};
 use mpc_serverless::experiments::forecast_sweep::{self, SweepParams};
 use mpc_serverless::experiments::elasticity::{self, ElasticityParams};
 use mpc_serverless::experiments::keepalive::{self, KeepAliveParams};
+use mpc_serverless::experiments::survival::{self as survival_exp, SurvivalParams};
 use mpc_serverless::experiments::tenant::run_tenant_matrix;
 use mpc_serverless::experiments::{fig1, fig4, fig5_7, fig8, run_experiment, run_tenant};
 use mpc_serverless::util::bench::Table;
@@ -50,6 +52,7 @@ fn main() {
         "tenant-sweep" => tenant_sweep(&rest),
         "elasticity-sweep" => elasticity_sweep(&rest),
         "keepalive-sweep" => keepalive_sweep(&rest),
+        "survival-frontier" => survival_frontier(&rest),
         "cache-sweep" => cache_sweep(&rest),
         "scenario" => scenario(&rest),
         "chaos-sweep" => chaos_sweep(&rest),
@@ -65,7 +68,7 @@ fn main() {
         }
         "gen-trace" => gen_trace(&rest),
         _ => {
-            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|elasticity-sweep|keepalive-sweep|cache-sweep|scenario|chaos-sweep|forecast-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
+            eprintln!("mpc-serverless {}\n\nUSAGE: mpc-serverless <simulate|matrix|fleet-sweep|tenant-sweep|elasticity-sweep|keepalive-sweep|survival-frontier|cache-sweep|scenario|chaos-sweep|forecast-sweep|bench-throughput|forecast|overhead|fig1|gen-trace> [flags]\nRun a subcommand with --help for flags.",
                       mpc_serverless::version());
             if cmd == "help" { 0 } else { 2 }
         }
@@ -75,7 +78,7 @@ fn main() {
 
 fn common_cli(name: &str, about: &str) -> Cli {
     Cli::new(name, about)
-        .flag("policy", "mpc", "openwhisk | icebreaker | mpc")
+        .flag("policy", "mpc", "openwhisk | icebreaker | mpc | survival")
         .flag("trace", "synthetic", "azure | synthetic")
         .flag("duration-s", "3600", "experiment duration (seconds)")
         .flag("seed", "42", "rng seed")
@@ -141,6 +144,9 @@ fn simulate(rest: &[String]) -> i32 {
         .flag("keepalive-idle-cost", "1", "idle cost rate in the retention break-even (per container-second)")
         .flag("keepalive-cold-weight", "16", "cold-start cost weight (x L_cold) in the retention break-even")
         .flag("keepalive-pressure", "0", "memory-pressure shrink weight on adaptive horizons (0 = off)")
+        .flag("survival-window", "64", "survival estimator: trailing inter-arrival gaps kept per function")
+        .flag("survival-threshold", "0.5", "release below this reuse probability over the break-even window")
+        .flag("survival-min-samples", "8", "gaps required before survival overrides the profile keep-alive")
         .flag("image-cache", "off", "per-node image/layer cache: off | lru (dynamic per-node L_cold)")
         .flag("image-cache-mib", "2048", "per-node layer store capacity (MiB) for --image-cache lru")
         .flag("image-bandwidth-mibps", "100", "registry pull bandwidth (MiB/s) for missing layers")
@@ -230,11 +236,15 @@ fn simulate(rest: &[String]) -> i32 {
     };
     // a migration policy that can never actuate must be an error, not a
     // silent no-op run masquerading as a rebalancing measurement: the
-    // pass runs from the MPC control loop (it consumes the controller's
-    // per-function forecasts), so reactive policies never migrate
-    if migration_policy != MigrationPolicy::Off && policy != Policy::Mpc {
+    // pass needs a control loop feeding it per-function demand — the
+    // MPC's lead-window forecasts or the survival policy's
+    // survival-weighted arrival rates; the other reactive policies run
+    // no such loop and never migrate
+    if migration_policy != MigrationPolicy::Off
+        && !matches!(policy, Policy::Mpc | Policy::Survival)
+    {
         eprintln!(
-            "--migration {} only actuates under --policy mpc (the rebalancing pass runs from the MPC control loop); use --migration off with --policy {}",
+            "--migration {} only actuates under --policy mpc or survival (the rebalancing pass consumes a control-loop demand estimate); use --migration off with --policy {}",
             migration_policy.name(),
             policy.name()
         );
@@ -273,6 +283,13 @@ fn simulate(rest: &[String]) -> i32 {
             return 2;
         }
     };
+    let survival = match parse_survival_knobs(&a) {
+        Ok(sv) => sv,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let image = match parse_image_flags(&a) {
         Ok(ic) => ic,
         Err(e) => {
@@ -297,7 +314,10 @@ fn simulate(rest: &[String]) -> i32 {
     let zipf_s = match parse_skew(a.get("skew")) {
         Some(s) => s,
         None => {
-            eprintln!("bad --skew '{}' (expected zipf:<s> or uniform)", a.get("skew"));
+            eprintln!(
+                "bad --skew '{}' (expected zipf:<s> with 0 <= s <= 64, or uniform)",
+                a.get("skew")
+            );
             return 2;
         }
     };
@@ -355,6 +375,7 @@ fn simulate(rest: &[String]) -> i32 {
     cfg.platform.image = image;
     cfg.controller.keepalive = keepalive;
     cfg.controller.forecast = forecast;
+    cfg.controller.survival = survival;
     cfg.chaos = chaos;
     // --functions 1 takes the untouched legacy path: bit-identical to the
     // pre-tenancy simulator (regression-tested)
@@ -425,7 +446,10 @@ fn tenant_sweep(rest: &[String]) -> i32 {
     let zipf_s = match parse_skew(a.get("skew")) {
         Some(s) => s,
         None => {
-            eprintln!("bad --skew '{}' (expected zipf:<s> or uniform)", a.get("skew"));
+            eprintln!(
+                "bad --skew '{}' (expected zipf:<s> with 0 <= s <= 64, or uniform)",
+                a.get("skew")
+            );
             return 2;
         }
     };
@@ -647,6 +671,31 @@ fn parse_keepalive_knobs(a: &Args) -> Result<(f64, f64, f64, f64), String> {
         _ => return Err("--keepalive-pressure must be a non-negative number".into()),
     };
     Ok((min_s, idle_cost, cold_weight, pressure))
+}
+
+/// Validate the three `--survival-*` estimator knobs. Unlike
+/// `--keepalive-policy adaptive` or `--forecast`, these carry no policy
+/// gate: they are structurally inert under every policy but `survival`
+/// (the differential tests pin byte-identity with the knobs set), so a
+/// knobs-without-policy run is harmless rather than misleading.
+fn parse_survival_knobs(a: &Args) -> Result<SurvivalConfig, String> {
+    let window = match a.get_u64("survival-window") {
+        Ok(n) if n >= 1 => n as usize,
+        _ => return Err("--survival-window must be a positive integer (gaps)".into()),
+    };
+    let threshold = match a.get_f64("survival-threshold") {
+        Ok(t) if t >= 0.0 && t.is_finite() => t,
+        _ => return Err("--survival-threshold must be a finite non-negative number".into()),
+    };
+    let min_samples = match a.get_u64("survival-min-samples") {
+        Ok(n) if n >= 1 => n as usize,
+        _ => return Err("--survival-min-samples must be a positive integer (gaps)".into()),
+    };
+    Ok(SurvivalConfig {
+        window,
+        threshold,
+        min_samples,
+    })
 }
 
 /// Parse the `--forecast*` model-zoo flags. A non-default backend routes
@@ -987,7 +1036,10 @@ fn keepalive_sweep(rest: &[String]) -> i32 {
     let zipf_s = match parse_skew(a.get("skew")) {
         Some(s) => s,
         None => {
-            eprintln!("bad --skew '{}' (expected zipf:<s> or uniform)", a.get("skew"));
+            eprintln!(
+                "bad --skew '{}' (expected zipf:<s> with 0 <= s <= 64, or uniform)",
+                a.get("skew")
+            );
             return 2;
         }
     };
@@ -1040,6 +1092,92 @@ fn keepalive_sweep(rest: &[String]) -> i32 {
     0
 }
 
+fn survival_frontier(rest: &[String]) -> i32 {
+    let cli = Cli::new(
+        "survival-frontier",
+        "mpc vs survival vs icebreaker across bursty/azure/zipf scenarios; three-way resource-time vs P99 frontier",
+    )
+    .flag("duration-s", "3600", "experiment duration (seconds)")
+    .flag("seed", "42", "rng seed")
+    .flag("nodes", "1", "invoker node count")
+    .flag("functions", "8", "functions in the multi-tenant scenarios")
+    .flag("skew", "zipf:1.1", "function popularity: zipf:<s> | uniform")
+    .flag("survival-window", "64", "survival estimator: trailing inter-arrival gaps kept per function")
+    .flag("survival-threshold", "0.5", "release below this reuse probability over the break-even window")
+    .flag("survival-min-samples", "8", "gaps required before survival overrides the profile keep-alive");
+    let a = parse_or_exit(&cli, rest);
+    let nodes = match a.get_u64("nodes") {
+        Ok(n) if n >= 1 => n as u32,
+        _ => {
+            eprintln!("--nodes must be at least 1");
+            return 2;
+        }
+    };
+    let functions = match a.get_u64("functions") {
+        Ok(n) if n >= 1 => n as u32,
+        _ => {
+            eprintln!("--functions must be a positive integer");
+            return 2;
+        }
+    };
+    let zipf_s = match parse_skew(a.get("skew")) {
+        Some(s) => s,
+        None => {
+            eprintln!(
+                "bad --skew '{}' (expected zipf:<s> with 0 <= s <= 64, or uniform)",
+                a.get("skew")
+            );
+            return 2;
+        }
+    };
+    let survival = match parse_survival_knobs(&a) {
+        Ok(sv) => sv,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let params = SurvivalParams {
+        duration_s: a.get_f64("duration-s").unwrap_or(3600.0),
+        seed: a.get_u64("seed").unwrap_or(42),
+        nodes,
+        zipf_s,
+        survival,
+    };
+    // the shared acceptance scenarios, with the multi-tenant cells at the
+    // requested function count (mirrors keepalive-sweep)
+    let scenarios = [
+        survival_exp::SCENARIOS[0],
+        keepalive::KeepAliveScenario {
+            functions,
+            ..survival_exp::SCENARIOS[1]
+        },
+        keepalive::KeepAliveScenario {
+            functions,
+            ..survival_exp::SCENARIOS[2]
+        },
+    ];
+    println!(
+        "survival-frontier: policies=mpc,survival,icebreaker nodes={} functions={} skew={} window={} threshold={} min-samples={}",
+        nodes,
+        functions,
+        a.get("skew"),
+        survival.window,
+        survival.threshold,
+        survival.min_samples
+    );
+    let cells = survival_exp::run_sweep(&params, &scenarios);
+    survival_exp::print_table(&cells);
+    println!(
+        "\nsurvival rows: releases = containers expired early by the survival rule, retained = full-window"
+    );
+    println!(
+        "decisions, mean p = mean at-age-zero reuse probability; the survival-vs-mpc gap is the value of"
+    );
+    println!("fleet-level planning, the survival-vs-icebreaker gap the value of conditional retention.");
+    0
+}
+
 fn cache_sweep(rest: &[String]) -> i32 {
     let cli = Cli::new(
         "cache-sweep",
@@ -1079,7 +1217,10 @@ fn cache_sweep(rest: &[String]) -> i32 {
     let zipf_s = match parse_skew(a.get("skew")) {
         Some(s) => s,
         None => {
-            eprintln!("bad --skew '{}' (expected zipf:<s> or uniform)", a.get("skew"));
+            eprintln!(
+                "bad --skew '{}' (expected zipf:<s> with 0 <= s <= 64, or uniform)",
+                a.get("skew")
+            );
             return 2;
         }
     };

@@ -182,6 +182,15 @@ pub struct RunReport {
     /// Mean planned keep-alive horizon across all functions and control
     /// steps (seconds; 0 under the fixed policy).
     pub mean_horizon_s: f64,
+    /// Containers released early by the slot-survival rule (set by the
+    /// runner under `--policy survival`; structurally 0 elsewhere).
+    pub survival_releases: u64,
+    /// Survival decisions that kept the full profile window (0 under
+    /// every other policy).
+    pub survival_retained: u64,
+    /// Mean at-age-zero reuse probability across survival decisions (0
+    /// under every other policy).
+    pub survival_mean_p: f64,
     /// Forecast backend of the run (`fourier` | `arima` | `histogram` |
     /// `attn` | `auto`; set by the runner, `fourier` for directly-built
     /// reports).
@@ -311,6 +320,9 @@ impl RunReport {
             keepalive_policy: "fixed".to_string(),
             idle_saved_s: 0.0,
             mean_horizon_s,
+            survival_releases: 0,
+            survival_retained: 0,
+            survival_mean_p: 0.0,
             forecast: "fourier".to_string(),
             selector_switches: 0,
             counters,
@@ -374,6 +386,17 @@ impl RunReport {
                 "adaptive_expiries",
                 Json::Num(self.counters.adaptive_expiries as f64),
             ),
+            // slot-survival telemetry (structural zeros under every
+            // policy but `survival`, so same-binary byte-identity holds)
+            (
+                "survival_releases",
+                Json::Num(self.survival_releases as f64),
+            ),
+            (
+                "survival_retained",
+                Json::Num(self.survival_retained as f64),
+            ),
+            ("survival_mean_p", Json::Num(self.survival_mean_p)),
             // forecast-zoo telemetry (`fourier` / 0 under the default
             // backend, so the default path stays byte-identical to the
             // seed modulo these constant fields)

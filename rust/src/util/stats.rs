@@ -68,8 +68,10 @@ impl Summary {
             return 0.0;
         }
         if !self.sorted {
-            self.samples
-                .sort_unstable_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+            // total_cmp: a NaN-bearing sample set (degenerate latency from
+            // a chaos run) must not abort mid-report — NaNs sort to the
+            // top and surface as a NaN percentile instead of a panic
+            self.samples.sort_unstable_by(f64::total_cmp);
             self.sorted = true;
         }
         let p = p.clamp(0.0, 100.0);
@@ -226,6 +228,20 @@ mod tests {
         let mut s = Summary::new();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        // total_cmp sorts NaN above every finite value: low percentiles
+        // stay meaningful, the top percentile reads NaN, nothing aborts
+        let mut s = Summary::from_slice(&[3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert!(s.percentile(100.0).is_nan());
+        // a sorted-order probe below the NaN tail is still exact
+        assert_eq!(s.percentile(100.0 / 3.0), 2.0);
+        // all-NaN degenerates to NaN percentiles, not a panic
+        let mut all = Summary::from_slice(&[f64::NAN, f64::NAN]);
+        assert!(all.percentile(50.0).is_nan());
     }
 
     #[test]

@@ -229,7 +229,9 @@ pub fn split_budget(shares: &[f64], total: u32) -> Vec<u32> {
         .enumerate()
         .map(|(i, q)| (q - q.floor(), i))
         .collect();
-    frac.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    // total_cmp: NaN quotas (degenerate shares driving 0/0 upstream) must
+    // tie-break deterministically instead of panicking mid-generate
+    frac.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
     for k in 0..(total - assigned) as usize {
         out[frac[k % frac.len()].1] += 1;
     }
@@ -394,13 +396,23 @@ fn base_trace(kind: TraceKind, duration: Micros, seed: u64) -> Trace {
     }
 }
 
-/// Parse a CLI skew spec: `uniform` or `zipf:<s>` with `s >= 0`.
+/// Largest accepted Zipf exponent. Real workload skews sit well below
+/// this; beyond it `rank.powf(-s)` underflows so hard that shares stop
+/// being meaningfully distinct (and far past it, mixed over/underflow in
+/// the normalization can produce 0/0 = NaN shares), so the CLI rejects
+/// the spec up front instead of generating a degenerate workload.
+pub const MAX_ZIPF_S: f64 = 64.0;
+
+/// Parse a CLI skew spec: `uniform` or `zipf:<s>` with
+/// `0 <= s <= MAX_ZIPF_S`. `None` (a structured CLI error upstream) for
+/// anything else — including NaN, infinite, negative, or huge exponents
+/// that would drive the share normalization degenerate.
 pub fn parse_skew(s: &str) -> Option<f64> {
     if s == "uniform" {
         return Some(0.0);
     }
     let v: f64 = s.strip_prefix("zipf:")?.parse().ok()?;
-    (v >= 0.0 && v.is_finite()).then_some(v)
+    (v >= 0.0 && v <= MAX_ZIPF_S).then_some(v)
 }
 
 #[cfg(test)]
@@ -612,5 +624,27 @@ mod tests {
         assert_eq!(parse_skew("zipf:-1"), None);
         assert_eq!(parse_skew("zipf:"), None);
         assert_eq!(parse_skew("pareto:2"), None);
+        // degenerate exponents are a structured CLI error, not a panic
+        // further down in share normalization
+        assert_eq!(parse_skew("zipf:64"), Some(MAX_ZIPF_S));
+        assert_eq!(parse_skew("zipf:64.5"), None);
+        assert_eq!(parse_skew("zipf:1e300"), None);
+        assert_eq!(parse_skew("zipf:inf"), None);
+        assert_eq!(parse_skew("zipf:nan"), None);
+    }
+
+    #[test]
+    fn split_budget_survives_degenerate_shares() {
+        // NaN shares are sanitized by the max(0.0) clamp (f64::max takes
+        // the non-NaN operand) — the budget lands on the real shares
+        assert_eq!(split_budget(&[f64::NAN, 1.0, 1.0], 10), vec![0, 5, 5]);
+        // an *infinite* share is the panic path the old partial_cmp hit:
+        // sum = inf, so its quota is inf/inf = NaN and reaches the
+        // largest-remainder sort. total_cmp orders it; the budget still
+        // sums exactly and nothing aborts.
+        let out = split_budget(&[f64::INFINITY, 1.0], 10);
+        assert_eq!(out.iter().sum::<u32>(), 10);
+        // all-NaN clamps to all-zero: whole budget to function 0
+        assert_eq!(split_budget(&[f64::NAN, f64::NAN], 7), vec![7, 0]);
     }
 }

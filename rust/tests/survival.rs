@@ -1,0 +1,217 @@
+//! Slot-survival policy integration tests: the differential regression
+//! (every pre-existing policy reproduces its `RunReport` JSON byte for
+//! byte with the survival knobs set — they are inert off-policy), the
+//! survival policy's own determinism across repeated runs and
+//! `--threads 2`, and the release-credit conservation law tying the
+//! scheduler's release counter to the platform's expiry accounting.
+
+use mpc_serverless::config::{
+    secs, ExperimentConfig, Policy, SurvivalConfig, TenantConfig, TraceKind,
+};
+use mpc_serverless::experiments::{run_experiment, run_tenant};
+use mpc_serverless::metrics::RunReport;
+use mpc_serverless::workload::TenantWorkload;
+
+fn cfg(kind: TraceKind, duration_s: f64, seed: u64, functions: u32) -> ExperimentConfig {
+    ExperimentConfig {
+        trace: kind,
+        duration: secs(duration_s),
+        seed,
+        tenancy: TenantConfig {
+            functions,
+            zipf_s: 1.1,
+        },
+        ..Default::default()
+    }
+}
+
+/// The full JSON surface with the only nondeterministic fields zeroed —
+/// the simulator's own wall clock and the measured control-loop
+/// overheads are host-timing artifacts; every simulated quantity must
+/// reproduce byte for byte.
+fn canonical_json(mut r: RunReport) -> String {
+    r.wall_clock_ms = 0.0;
+    r.events_per_sec = 0.0;
+    r.forecast_overhead_ms = 0.0;
+    r.solve_overhead_ms = 0.0;
+    r.to_json().to_string()
+}
+
+/// `canonical_json` with the thread count also normalized, for
+/// cross-thread-count byte-identity (the report records the requested
+/// `--threads`, which legitimately differs).
+fn canonical_json_any_threads(mut r: RunReport) -> String {
+    r.threads = 1;
+    canonical_json(r)
+}
+
+/// Aggressive off-default estimator knobs for the inertness checks.
+fn weird_knobs() -> SurvivalConfig {
+    SurvivalConfig {
+        window: 3,
+        threshold: 0.99,
+        min_samples: 1,
+    }
+}
+
+/// The differential regression the acceptance criteria name: every
+/// pre-existing policy must reproduce its `RunReport` JSON byte for byte
+/// with the survival knobs set, at `--nodes 1` and at
+/// `--nodes 4 --functions 8`.
+#[test]
+fn survival_knobs_are_inert_under_other_policies() {
+    for policy in [Policy::OpenWhisk, Policy::IceBreaker, Policy::Mpc] {
+        // --nodes 1, single-tenant
+        {
+            let base = cfg(TraceKind::SyntheticBursty, 1200.0, 23, 1);
+            let trace =
+                mpc_serverless::experiments::fig4::trace_for(base.trace, base.duration, base.seed);
+            let mut knobs = base.clone();
+            knobs.controller.survival = weird_knobs();
+            let a = run_experiment(&base, policy, &trace);
+            let b = run_experiment(&knobs, policy, &trace);
+            assert_eq!(
+                canonical_json(a),
+                canonical_json(b),
+                "{policy:?} must ignore the survival knobs (--nodes 1)"
+            );
+        }
+        // --nodes 4 --functions 8
+        {
+            let mut base = cfg(TraceKind::SyntheticBursty, 1200.0, 23, 8);
+            base.fleet.nodes = 4;
+            let w = TenantWorkload::generate(
+                base.trace,
+                base.duration,
+                base.seed,
+                8,
+                base.tenancy.zipf_s,
+                &base.platform,
+            );
+            let mut knobs = base.clone();
+            knobs.controller.survival = weird_knobs();
+            let a = run_tenant(&base, policy, &w);
+            let b = run_tenant(&knobs, policy, &w);
+            assert_eq!(
+                canonical_json(a),
+                canonical_json(b),
+                "{policy:?} must ignore the survival knobs (--nodes 4 --functions 8)"
+            );
+        }
+    }
+}
+
+/// Off-policy runs carry no survival telemetry at all — the new report
+/// surface is structurally zero on the seed path.
+#[test]
+fn other_policies_report_structural_survival_zeros() {
+    let c = cfg(TraceKind::SyntheticBursty, 900.0, 7, 1);
+    let trace = mpc_serverless::experiments::fig4::trace_for(c.trace, c.duration, c.seed);
+    for policy in [Policy::OpenWhisk, Policy::IceBreaker, Policy::Mpc] {
+        let r = run_experiment(&c, policy, &trace);
+        assert_eq!(r.survival_releases, 0, "{policy:?}");
+        assert_eq!(r.survival_retained, 0, "{policy:?}");
+        assert_eq!(r.survival_mean_p, 0.0, "{policy:?}");
+        assert_ne!(r.keepalive_policy, "survival", "{policy:?}");
+    }
+}
+
+/// Survival runs are deterministic: repeated runs reproduce the full
+/// JSON surface, and `--threads 2` is byte-identical to `--threads 1`
+/// (the sharded event loop's contract extends to the new policy).
+#[test]
+fn survival_is_deterministic_across_runs_and_threads() {
+    // single-tenant
+    {
+        let c = cfg(TraceKind::SyntheticBursty, 1200.0, 23, 1);
+        let trace = mpc_serverless::experiments::fig4::trace_for(c.trace, c.duration, c.seed);
+        let a = run_experiment(&c, Policy::Survival, &trace);
+        let b = run_experiment(&c, Policy::Survival, &trace);
+        assert_eq!(canonical_json(a), canonical_json(b));
+    }
+    // multi-node multi-tenant, across thread counts
+    {
+        let mut c = cfg(TraceKind::AzureLike, 1200.0, 23, 8);
+        c.fleet.nodes = 4;
+        let w = TenantWorkload::generate(
+            c.trace,
+            c.duration,
+            c.seed,
+            8,
+            c.tenancy.zipf_s,
+            &c.platform,
+        );
+        let one = run_tenant(&c, Policy::Survival, &w);
+        let mut threaded = c.clone();
+        threaded.threads = 2;
+        let two = run_tenant(&threaded, Policy::Survival, &w);
+        assert_eq!(two.threads, 2);
+        assert_eq!(
+            canonical_json_any_threads(one),
+            canonical_json_any_threads(two),
+            "survival must be bit-identical across --threads"
+        );
+    }
+}
+
+/// Release-credit conservation: every survival release is an
+/// earlier-than-profile expiry through the shared retention actuator, so
+/// the scheduler's release counter must equal the platform's
+/// adaptive-expiry counter exactly — and releases must come with idle
+/// seconds credited as saved.
+#[test]
+fn survival_releases_conserve_expiry_credits() {
+    let c = cfg(TraceKind::SyntheticBursty, 3600.0, 3, 1);
+    let trace = mpc_serverless::experiments::fig4::trace_for(c.trace, c.duration, c.seed);
+    let r = run_experiment(&c, Policy::Survival, &trace);
+    assert_eq!(r.dropped, 0);
+    assert_eq!(r.keepalive_policy, "survival");
+    assert_eq!(
+        r.survival_releases, r.counters.adaptive_expiries,
+        "scheduler releases out of sync with platform expiries"
+    );
+    assert!(
+        r.survival_releases > 0,
+        "the bursty gaps should trigger at least one survival release"
+    );
+    assert_eq!(r.idle_saved_s > 0.0, r.survival_releases > 0);
+    // the estimator actually ran: decisions recorded a probability and a
+    // horizon trajectory bounded by floor and profile window
+    assert!(r.survival_mean_p > 0.0 && r.survival_mean_p <= 1.0);
+    let min_s = c.controller.keepalive.min as f64 / 1e6;
+    let max_s = c.platform.keep_alive as f64 / 1e6;
+    assert!(
+        r.mean_horizon_s >= min_s && r.mean_horizon_s <= max_s,
+        "mean horizon {} outside [{min_s}, {max_s}]",
+        r.mean_horizon_s
+    );
+}
+
+/// Threshold extremes bracket the retention behavior: an unbeatable
+/// threshold (always release at the floor) must spend strictly less idle
+/// resource-time than an always-retain threshold of zero, on the same
+/// workload, with no requests lost either way.
+#[test]
+fn threshold_extremes_order_idle_resource_time() {
+    let c = cfg(TraceKind::SyntheticBursty, 3600.0, 3, 1);
+    let trace = mpc_serverless::experiments::fig4::trace_for(c.trace, c.duration, c.seed);
+    let mut eager = c.clone();
+    eager.controller.survival.threshold = 1.1; // p <= 1 always fails it
+    let mut never = c.clone();
+    never.controller.survival.threshold = 0.0; // p < 0 is impossible
+    let e = run_experiment(&eager, Policy::Survival, &trace);
+    let n = run_experiment(&never, Policy::Survival, &trace);
+    assert_eq!(e.dropped, 0);
+    assert_eq!(n.dropped, 0);
+    assert_eq!(e.completed, n.completed);
+    assert!(
+        e.idle_total_s < n.idle_total_s,
+        "eager-release idle {} !< never-release idle {}",
+        e.idle_total_s,
+        n.idle_total_s
+    );
+    assert!(e.survival_releases > 0);
+    // never-release keeps every decision at the retain side
+    assert_eq!(n.survival_releases, 0);
+    assert!(n.survival_retained > 0);
+}
